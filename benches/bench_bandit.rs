@@ -1,0 +1,44 @@
+//! Engine-overhead benches: successive elimination on synthetic arms.
+//! Measures the coordinator loop itself (no distance/impurity work), i.e.
+//! the L3 overhead floor per elimination round.
+
+use adaptive_sampling::bandit::streams::{successive_elimination_streams, GaussianArms};
+use adaptive_sampling::bandit::{successive_elimination, BanditConfig, MeanArms, Sampling};
+use adaptive_sampling::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for &(n_arms, ref_len) in &[(100usize, 10_000usize), (1_000, 10_000)] {
+        b.bench(&format!("engine/mean_arms n={n_arms} ref={ref_len}"), || {
+            let mut arms = MeanArms::new(n_arms, ref_len, |a: usize, j: usize| {
+                (a as f64) + ((j % 13) as f64 - 6.0) / 13.0
+            });
+            let cfg = BanditConfig { batch_size: 100, ..Default::default() };
+            let r = successive_elimination(&mut arms, &cfg);
+            std::hint::black_box(r.best[0]);
+        });
+    }
+
+    b.bench("engine/permutation_mode n=500 ref=5000", || {
+        let mut arms = MeanArms::new(500, 5_000, |a: usize, j: usize| {
+            (a as f64) * 0.01 + ((j * 31) % 17) as f64 / 17.0
+        });
+        let cfg = BanditConfig {
+            batch_size: 100,
+            sampling: Sampling::Permutation,
+            ..Default::default()
+        };
+        let r = successive_elimination(&mut arms, &cfg);
+        std::hint::black_box(r.n_used);
+    });
+
+    b.bench("engine/streams 16 gaussian arms", || {
+        let mut arms = GaussianArms {
+            mus: (0..16).map(|i| i as f64 * 0.5).collect(),
+            sigmas: vec![1.0; 16],
+        };
+        let r = successive_elimination_streams(&mut arms, 0.01, 7, 1_000_000);
+        std::hint::black_box(r.best);
+    });
+}

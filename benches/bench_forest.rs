@@ -1,0 +1,76 @@
+//! Chapter 3 benches (Tables 3.1/3.2's cost axis): single node splits
+//! (exact vs MABSplit) and whole-forest training.
+
+use adaptive_sampling::data::tabular::{make_classification, make_regression};
+use adaptive_sampling::forest::ensemble::{Forest, ForestConfig, ForestKind};
+use adaptive_sampling::forest::histogram::{BinEdges, ClassHistogram, Impurity};
+use adaptive_sampling::forest::split::{
+    feature_ranges, make_edges, solve_exactly, solve_mab, SplitContext,
+};
+use adaptive_sampling::forest::tree::Solver;
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::util::bench::Bencher;
+use adaptive_sampling::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Histogram insertion: the unit operation the paper budgets.
+    let c = OpCounter::new();
+    let mut h = ClassHistogram::new(BinEdges::equal_width(0.0, 1.0, 10), 10);
+    let mut rng = Rng::new(2);
+    let vals: Vec<f32> = (0..1024).map(|_| rng.f32()).collect();
+    b.bench("hist/insert x1024", || {
+        for (i, &v) in vals.iter().enumerate() {
+            h.insert(v, i % 10, &c);
+        }
+        std::hint::black_box(h.total);
+    });
+    b.bench("hist/gini scan T=10 K=10", || {
+        std::hint::black_box(h.scan_thresholds(Impurity::Gini).len());
+    });
+
+    // Single node split, n = 20k.
+    let ds = make_classification(20_000, 12, 1, 2, 2.5, 7);
+    let rows: Vec<usize> = (0..ds.x.n).collect();
+    let features: Vec<usize> = (0..12).collect();
+    let ranges = feature_ranges(&ds);
+    static C1: OpCounter = OpCounter::new();
+    static C2: OpCounter = OpCounter::new();
+    let make_ctx = |c: &'static OpCounter| {
+        let mut rng = Rng::new(1);
+        SplitContext {
+            ds: &ds,
+            rows: &rows,
+            features: &features,
+            edges: make_edges(&features, &ranges, 10, false, &mut rng),
+            impurity: Impurity::Gini,
+            counter: c,
+        }
+    };
+    b.bench("split/exact n=20k m=12", || {
+        std::hint::black_box(solve_exactly(&make_ctx(&C1)).unwrap().feature);
+    });
+    b.bench("split/MABSplit n=20k m=12", || {
+        std::hint::black_box(solve_mab(&make_ctx(&C2), 100, 0.01, 3).unwrap().feature);
+    });
+
+    // Whole-forest training (classification + regression).
+    let dsr = make_regression(8_000, 10, 3, 0.5, 9);
+    for (name, solver) in [("exact", Solver::Exact), ("mab", Solver::mab())] {
+        b.bench(&format!("forest/RF-{name} classification n=20k"), || {
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
+            cfg.n_trees = 2;
+            cfg.max_depth = 4;
+            std::hint::black_box(Forest::fit(&ds, &cfg, &c).trees.len());
+        });
+        b.bench(&format!("forest/RF-{name} regression n=8k"), || {
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
+            cfg.n_trees = 2;
+            cfg.max_depth = 4;
+            std::hint::black_box(Forest::fit(&dsr, &cfg, &c).trees.len());
+        });
+    }
+}

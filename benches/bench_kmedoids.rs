@@ -1,0 +1,56 @@
+//! Chapter 2 end-to-end benches (Fig 2.1–2.3's cost axis): full
+//! BUILD+SWAP runs per algorithm at a fixed n, plus the distance-metric
+//! hot loops that dominate (98% of BanditPAM wall-clock per §2.5.2).
+
+use adaptive_sampling::data::distance::{cosine, l1, l2, Metric};
+use adaptive_sampling::data::synthetic::mnist_like_d;
+use adaptive_sampling::data::VecPointSet;
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
+use adaptive_sampling::kmedoids::baselines::{clarans, voronoi};
+use adaptive_sampling::kmedoids::pam::{pam, SwapMode};
+use adaptive_sampling::kmedoids::KmConfig;
+use adaptive_sampling::util::bench::Bencher;
+use adaptive_sampling::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Distance kernels (the per-pull cost).
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+    let y: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+    b.bench("dist/l2 d=784", || {
+        std::hint::black_box(l2(&x, &y));
+    });
+    b.bench("dist/l1 d=784", || {
+        std::hint::black_box(l1(&x, &y));
+    });
+    b.bench("dist/cosine d=784", || {
+        std::hint::black_box(cosine(&x, &y));
+    });
+
+    // Full clustering runs, n = 400 (kept small: each iteration is a
+    // complete BUILD+SWAP pipeline).
+    let n = 400;
+    let mat = mnist_like_d(n, 96, 3);
+    let cfg = KmConfig::new(3);
+
+    b.bench("kmedoids/PAM(FastPAM1) n=400", || {
+        let ps = VecPointSet::new(mat.clone(), Metric::L2);
+        std::hint::black_box(pam(&ps, &cfg, SwapMode::FastPam1).loss);
+    });
+    b.bench("kmedoids/BanditPAM n=400", || {
+        let ps = VecPointSet::new(mat.clone(), Metric::L2);
+        let mut bcfg = BanditPamConfig::new(3);
+        bcfg.km = cfg.clone();
+        std::hint::black_box(bandit_pam(&ps, &bcfg).loss);
+    });
+    b.bench("kmedoids/CLARANS n=400", || {
+        let ps = VecPointSet::new(mat.clone(), Metric::L2);
+        std::hint::black_box(clarans(&ps, &cfg, 1, 30).loss);
+    });
+    b.bench("kmedoids/Voronoi n=400", || {
+        let ps = VecPointSet::new(mat.clone(), Metric::L2);
+        std::hint::black_box(voronoi(&ps, &cfg, 20).loss);
+    });
+}

@@ -1,0 +1,55 @@
+//! Chapter 4 benches (Fig 4.2/4.3's cost axis): per-query work for every
+//! MIPS algorithm at fixed (n, d), plus the pull-loop hot path.
+
+use adaptive_sampling::data::synthetic::normal_custom;
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig, SampleStrategy};
+use adaptive_sampling::mips::baselines::{BoundedME, GreedyMips, LshMips, PcaMips};
+use adaptive_sampling::mips::{dot_ip, naive_mips};
+use adaptive_sampling::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let (atoms, queries) = normal_custom(200, 8_000, 4, 5);
+    let q = queries.row(0);
+
+    // The pull-loop unit: one full inner product for reference.
+    b.bench("mips/full dot d=8000", || {
+        std::hint::black_box(dot_ip(atoms.row(0), q));
+    });
+
+    b.bench("mips/naive n=200 d=8000", || {
+        let c = OpCounter::new();
+        std::hint::black_box(naive_mips(&atoms, q, 1, &c)[0]);
+    });
+    b.bench("mips/BanditMIPS n=200 d=8000", || {
+        let c = OpCounter::new();
+        std::hint::black_box(bandit_mips(&atoms, q, &BanditMipsConfig::default(), &c).atoms[0]);
+    });
+    b.bench("mips/BanditMIPS-alpha n=200 d=8000", || {
+        let c = OpCounter::new();
+        let cfg = BanditMipsConfig { strategy: SampleStrategy::Alpha, ..Default::default() };
+        std::hint::black_box(bandit_mips(&atoms, q, &cfg, &c).atoms[0]);
+    });
+    b.bench("mips/BoundedME n=200 d=8000", || {
+        let c = OpCounter::new();
+        std::hint::black_box(BoundedME { samples_per_round: 64 }.query(&atoms, q, 1, &c, 3)[0]);
+    });
+
+    // Index-based baselines: build once, bench the query path.
+    let greedy = GreedyMips::build(&atoms, 200);
+    b.bench("mips/Greedy-MIPS query (budget=200)", || {
+        let c = OpCounter::new();
+        std::hint::black_box(greedy.query(&atoms, q, 1, &c)[0]);
+    });
+    let lsh = LshMips::build(&atoms, 8, 8, 1);
+    b.bench("mips/LSH-MIPS query (8x8)", || {
+        let c = OpCounter::new();
+        std::hint::black_box(lsh.query(&atoms, q, 1, &c)[0]);
+    });
+    let pca = PcaMips::build(&atoms, 8, 16, 1);
+    b.bench("mips/PCA-MIPS query (r=8)", || {
+        let c = OpCounter::new();
+        std::hint::black_box(pca.query(&atoms, q, 1, &c)[0]);
+    });
+}

@@ -1,0 +1,84 @@
+//! PJRT runtime benches: artifact execute round-trips — the L3↔XLA
+//! boundary cost the serving coordinator pays per batched call.
+//! Skipped (with a message) when `make artifacts` hasn't been run.
+
+use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::util::bench::Bencher;
+use adaptive_sampling::util::rng::Rng;
+
+fn main() {
+    let dir = ArtifactStore::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("[skip] no artifacts at {} — run `make artifacts`", dir.display());
+        return;
+    }
+    let store = ArtifactStore::load(&dir).expect("artifact store");
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(4);
+
+    // mips_scores: the serving rescore path (512×1024 matvec).
+    {
+        let meta = store.meta("mips_scores_n512_d1024").unwrap().clone();
+        let (n, d) = (meta.params[0][0], meta.params[0][1]);
+        let atoms: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        b.bench("pjrt/mips_scores 512x1024", || {
+            let out = store.exec_f32("mips_scores_n512_d1024", &[&atoms, &q]).unwrap();
+            std::hint::black_box(out[0][0]);
+        });
+    }
+
+    // mips_pulls: one engine round's batched pulls.
+    {
+        let meta = store.meta("mips_pulls_n512_b64").unwrap().clone();
+        let (n, bsz) = (meta.params[0][0], meta.params[0][1]);
+        let v: Vec<f32> = (0..n * bsz).map(|_| rng.f32()).collect();
+        let qc: Vec<f32> = (0..bsz).map(|_| rng.f32()).collect();
+        b.bench("pjrt/mips_pulls 512x64", || {
+            let out = store.exec_f32("mips_pulls_n512_b64", &[&v, &qc]).unwrap();
+            std::hint::black_box(out[0][0]);
+        });
+    }
+
+    // bpam_build: one BanditPAM BUILD tile (64 candidates × 256 refs).
+    {
+        let meta = store.meta("bpam_build_t64_r256_d784").unwrap().clone();
+        let (t, d) = (meta.params[0][0], meta.params[0][1]);
+        let r = meta.params[1][0];
+        let cand: Vec<f32> = (0..t * d).map(|_| rng.f32()).collect();
+        let refs: Vec<f32> = (0..r * d).map(|_| rng.f32()).collect();
+        let d1: Vec<f32> = (0..r).map(|_| rng.f32() * 5.0).collect();
+        b.bench("pjrt/bpam_build 64x256 d=784", || {
+            let out = store
+                .exec_f32("bpam_build_t64_r256_d784", &[&cand, &refs, &d1])
+                .unwrap();
+            std::hint::black_box(out[0][0]);
+        });
+        // native comparison (same tile, scalar loop)
+        b.bench("native/bpam_build 64x256 d=784", || {
+            let mut acc = 0f32;
+            for ti in 0..t {
+                for ri in 0..r {
+                    let dist = adaptive_sampling::data::distance::l2(
+                        &cand[ti * d..(ti + 1) * d],
+                        &refs[ri * d..(ri + 1) * d],
+                    ) as f32;
+                    acc += (dist - d1[ri]).min(0.0);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    // mabsplit histogram + gini.
+    {
+        let bins: Vec<f32> = (0..256).map(|i| (i % 16) as f32).collect();
+        let labels: Vec<f32> = (0..256).map(|i| (i % 7) as f32).collect();
+        b.bench("pjrt/mabsplit_hist 256->16x16", || {
+            let out = store
+                .exec_f32("mabsplit_hist_b256_t16_k16", &[&bins, &labels])
+                .unwrap();
+            std::hint::black_box(out[1][0]);
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Matching Pursuit on the SimpleSong dataset (§C.5): decompose an audio
+//! signal into note atoms, with BanditMIPS solving each inner MIPS
+//! problem — per-iteration complexity independent of the signal length.
+//!
+//! ```bash
+//! cargo run --release --example matching_pursuit
+//! ```
+
+use adaptive_sampling::data::synthetic::simple_song;
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::BanditMipsConfig;
+use adaptive_sampling::mips::matching_pursuit::{matching_pursuit, MipsBackend};
+
+const NOTES: [&str; 6] = ["C4", "E4", "G4", "C5", "E5", "G5"];
+
+fn main() {
+    // 2 intervals (A: C4-E4-G4 weighted 1:2:3, B: G4-C5-E5 weighted
+    // 3:2.5:1.5) at 44.1 kHz; extra decoy atoms at random frequencies.
+    let (atoms, song) = simple_song(1, 0.1, 10, 3);
+    println!(
+        "SimpleSong: d = {} samples, {} atoms ({} true notes + {} decoys)\n",
+        song.len(),
+        atoms.n,
+        NOTES.len(),
+        atoms.n - NOTES.len()
+    );
+
+    for (name, backend) in [
+        ("naive MIPS", MipsBackend::Naive),
+        (
+            "BanditMIPS",
+            MipsBackend::Bandit(BanditMipsConfig { batch_size: 256, ..Default::default() }),
+        ),
+    ] {
+        let c = OpCounter::new();
+        let r = matching_pursuit(&atoms, &song, 6, &backend, &c);
+        println!("--- {name} ---");
+        for (i, comp) in r.components.iter().enumerate() {
+            let label = if comp.atom < NOTES.len() {
+                NOTES[comp.atom].to_string()
+            } else {
+                format!("decoy#{}", comp.atom)
+            };
+            println!(
+                "  iter {}: picked {:<8} coefficient {:+.3}  residual {:.4}",
+                i + 1,
+                label,
+                comp.coefficient,
+                r.relative_residuals[i]
+            );
+        }
+        println!(
+            "  total coordinate multiplications: {} ({:.1}x naive per-iteration cost)\n",
+            r.samples,
+            r.samples as f64 / (6.0 * (atoms.n * atoms.d) as f64)
+        );
+    }
+    println!("both backends should recover the chord notes (G4 first — weight 3 in both intervals).");
+}

@@ -1,0 +1,122 @@
+//! END-TO-END serving driver: the full three-layer stack on a real small
+//! workload.
+//!
+//! Loads the AOT artifact bundle (L1 Pallas kernels inside L2 JAX graphs,
+//! lowered to HLO text by `make artifacts`), starts the L3 coordinator
+//! (dynamic batcher + worker pool + PJRT service thread), serves batched
+//! MovieLens-like recommendation queries with BanditMIPS, canary-validates
+//! against the PJRT exact rescore, and reports latency percentiles,
+//! throughput, per-query sample complexity, and recall@1 vs ground truth.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mips_server
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::data::synthetic::lowrank_like;
+use adaptive_sampling::metrics::{LatencyRecorder, OpCounter};
+use adaptive_sampling::mips::naive_mips;
+use adaptive_sampling::runtime::service::PjrtHandle;
+use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::util::rng::Rng;
+
+fn main() {
+    // Atom matrix sized exactly to the mips_scores artifact.
+    let (n, d) = (512usize, 1024usize);
+    let items = Arc::new(lowrank_like(n, d, 15, 7));
+    let n_queries = 400;
+
+    // Queries: user taste vectors correlated with the item factors
+    // (lowrank rows + noise), the recommendation-serving shape.
+    let mut rng = Rng::new(99);
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|_| {
+            let base = items.row(rng.below(n));
+            base.iter().map(|&v| v + 0.3 * rng.normal() as f32).collect()
+        })
+        .collect();
+
+    // Ground truth for recall accounting.
+    let truth: Vec<usize> = queries
+        .iter()
+        .map(|q| {
+            let c = OpCounter::new();
+            naive_mips(&items, q, 1, &c)[0]
+        })
+        .collect();
+
+    let dir = ArtifactStore::default_dir();
+    let backend = match PjrtHandle::start(&dir) {
+        Ok(handle) => {
+            println!("PJRT artifacts loaded from {} ({:?})", dir.display(), handle.names());
+            Backend::Hybrid { store: handle, entry: "mips_scores_n512_d1024".into() }
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e:#}); run `make artifacts`. Using native backend.");
+            Backend::NativeBandit
+        }
+    };
+
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 16,
+        batch_timeout_us: 300,
+        k: 1,
+        delta: 1e-3,
+        warm_coords: 64,
+        validate_every: 20,
+        ..Default::default()
+    };
+    println!("starting MIPS server: {cfg:?}\n");
+    let server = MipsServer::start(items.clone(), cfg, backend);
+
+    // Paced closed-loop load: submit in windows of `inflight` so latency
+    // reflects service time + bounded queueing, not a 400-deep backlog.
+    let inflight = 32;
+    let t0 = std::time::Instant::now();
+    let mut lat = LatencyRecorder::new();
+    let mut hits = 0usize;
+    let mut total_samples = 0u64;
+    let mut canary_ok = 0usize;
+    let mut canary_total = 0usize;
+    for (chunk_q, chunk_t) in queries.chunks(inflight).zip(truth.chunks(inflight)) {
+        let receivers: Vec<_> = chunk_q.iter().map(|q| server.submit(q.clone())).collect();
+        for (rx, &want) in receivers.into_iter().zip(chunk_t) {
+            let resp = rx.recv().expect("response");
+            lat.record(resp.latency);
+            total_samples += resp.samples;
+            if resp.top_atoms.first() == Some(&want) {
+                hits += 1;
+            }
+            if let Some(ok) = resp.validated {
+                canary_total += 1;
+                canary_ok += ok as usize;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("served {n_queries} queries in {wall:.2}s ({:.0} qps)", n_queries as f64 / wall);
+    println!("latency: {}", lat.summary());
+    println!(
+        "recall@1 vs exact: {:.3} ({hits}/{n_queries})",
+        hits as f64 / n_queries as f64
+    );
+    println!(
+        "mean samples/query: {:.0} (naive = {}; adaptive saving {:.1}x)",
+        total_samples as f64 / n_queries as f64,
+        n * d,
+        (n * d) as f64 / (total_samples as f64 / n_queries as f64)
+    );
+    if canary_total > 0 {
+        println!("PJRT canary validation: {canary_ok}/{canary_total} agreements");
+    }
+    println!(
+        "dispatcher batches: {}",
+        server.stats.batches.load(Ordering::Relaxed)
+    );
+    server.shutdown();
+}

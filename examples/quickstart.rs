@@ -1,0 +1,76 @@
+//! Quickstart: the three adaptive-sampling algorithms in one sitting.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use adaptive_sampling::data::distance::Metric;
+use adaptive_sampling::data::synthetic::{mnist_like_d, normal_custom};
+use adaptive_sampling::data::tabular::mnist_classification;
+use adaptive_sampling::data::{PointSet, VecPointSet};
+use adaptive_sampling::forest::ensemble::{Forest, ForestConfig, ForestKind};
+use adaptive_sampling::forest::tree::Solver;
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
+use adaptive_sampling::kmedoids::pam::{pam, SwapMode};
+use adaptive_sampling::kmedoids::KmConfig;
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
+use adaptive_sampling::mips::naive_mips;
+
+fn main() {
+    println!("=== 1. BanditPAM: k-medoids with O(n log n) distance calls ===");
+    let ps = VecPointSet::new(mnist_like_d(1500, 96, 1), Metric::L2);
+    let cfg = KmConfig::new(4);
+
+    ps.counter().reset();
+    let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+    let exact_calls = ps.counter().get();
+
+    ps.counter().reset();
+    let mut bcfg = BanditPamConfig::new(4);
+    bcfg.km = cfg;
+    let bandit = bandit_pam(&ps, &bcfg);
+    let bandit_calls = ps.counter().get();
+
+    println!("  PAM/FastPAM1: loss {:.2}, {} distance calls", exact.loss, exact_calls);
+    println!(
+        "  BanditPAM:    loss {:.2}, {} distance calls ({:.1}x fewer), same medoids: {}",
+        bandit.loss,
+        bandit_calls,
+        exact_calls as f64 / bandit_calls as f64,
+        exact.medoids == bandit.medoids
+    );
+
+    println!("\n=== 2. MABSplit: forest training with O(1)-in-n node splits ===");
+    let ds = mnist_classification(20_000, 196, 2);
+    let (train, test) = ds.split(0.25, 3);
+    for (name, solver) in [("exact   ", Solver::Exact), ("MABSplit", Solver::mab())] {
+        let c = OpCounter::new();
+        let mut fcfg = ForestConfig::new(ForestKind::RandomForest, solver);
+        fcfg.n_trees = 5;
+        let t0 = std::time::Instant::now();
+        let f = Forest::fit(&train, &fcfg, &c);
+        println!(
+            "  RF + {name}: accuracy {:.3}, {:>9} histogram insertions, {:.2}s",
+            f.accuracy(&test),
+            c.get(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    println!("\n=== 3. BanditMIPS: maximum inner product search, O(1) in d ===");
+    let (atoms, queries) = normal_custom(100, 20_000, 1, 5);
+    let c = OpCounter::new();
+    let truth = naive_mips(&atoms, queries.row(0), 1, &c);
+    let naive_cost = c.get();
+    let c = OpCounter::new();
+    let ans = bandit_mips(&atoms, queries.row(0), &BanditMipsConfig::default(), &c);
+    println!("  naive:      atom {} with {} multiplications", truth[0], naive_cost);
+    println!(
+        "  BanditMIPS: atom {} with {} multiplications ({:.0}x fewer), agree: {}",
+        ans.atoms[0],
+        ans.samples,
+        naive_cost as f64 / ans.samples as f64,
+        ans.atoms[0] == truth[0]
+    );
+}

@@ -1,0 +1,112 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text -> artifacts/ for the Rust runtime.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Each entry point is lowered at a small menu of fixed shapes (PJRT
+executables are shape-specialized); the Rust ArtifactStore pads the last
+batch up to the nearest menu shape. A manifest.json records every
+artifact's entry name, parameter shapes and output arity — the runtime's
+source of truth.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """The artifact menu: (name, fn, example_args)."""
+    menu = []
+
+    # Chapter 2: BanditPAM pulls. Tiles sized for the experiment sweeps
+    # (MNIST-like D=784, scRNA-like D=256). T×R tiles divide the Pallas
+    # block sizes (32|8, 128).
+    menu.append(("bpam_build_t64_r256_d784", model.banditpam_build_g,
+                 (f32(64, 784), f32(256, 784), f32(256))))
+    menu.append(("bpam_swap_t64_r256_d784", model.banditpam_swap_g,
+                 (f32(64, 784), f32(256, 784), f32(256), f32(256), f32(256))))
+    menu.append(("pairwise_l2_t64_r256_d784", model.pairwise_distances_l2,
+                 (f32(64, 784), f32(256, 784))))
+    menu.append(("pairwise_l1_t32_r256_d256", model.pairwise_distances_l1,
+                 (f32(32, 256), f32(256, 256))))
+
+    # Chapter 4: BanditMIPS pulls + serving rescore.
+    menu.append(("mips_pulls_n512_b64", model.mips_pull_means,
+                 (f32(512, 64), f32(64))))
+    menu.append(("mips_pulls_n512_b128", model.mips_pull_means,
+                 (f32(512, 128), f32(128))))
+    menu.append(("mips_scores_n512_d1024", model.mips_full_scores,
+                 (f32(512, 1024), f32(1024))))
+
+    # Chapter 3: MABSplit histogram + Gini scan.
+    hist = functools.partial(model.mabsplit_hist_gini, t_bins=16, k_classes=16)
+    menu.append(("mabsplit_hist_b256_t16_k16", hist, (f32(256), f32(256))))
+
+    return menu
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        # Execute once for the manifest's expected output shapes.
+        outs = jax.jit(fn)(*[jnp.zeros(a.shape, a.dtype) for a in example])
+        manifest[name] = {
+            "file": fname,
+            "params": [list(a.shape) for a in example],
+            "outputs": [list(o.shape) for o in outs],
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"params {[list(a.shape) for a in example]}")
+
+    # manifest.txt: line-oriented twin of manifest.json for the Rust
+    # runtime (the offline image has no serde/JSON crate):
+    #   <name> <file> params=<s0>;<s1>;... outputs=<o0>;...   with each
+    #   shape as dims joined by 'x' (scalar/1-d: just the dim).
+    lines = []
+    for name in sorted(manifest):
+        e = manifest[name]
+        params = ";".join("x".join(str(d) for d in p) for p in e["params"])
+        outs = ";".join("x".join(str(d) for d in o) for o in e["outputs"])
+        lines.append(f"{name} {e['file']} params={params} outputs={outs}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel for Chapter 3: MABSplit histogram accumulation.
+
+A batch insert is expressed MXU-style as a one-hot × one-hot matmul:
+counts[T, K] = onehot(bins)[B, T]ᵀ @ onehot(labels)[B, K]. Bin/label ids
+arrive float-encoded (the AOT interchange keeps every parameter f32).
+The Gini scan over thresholds stays in plain jnp at L2 — it is O(T·K)
+and not a hot-spot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(t_bins: int, k_classes: int, bins_ref, labels_ref, o_ref):
+    bins = bins_ref[...]  # [1, B] float-encoded bin ids
+    labels = labels_ref[...]  # [1, B]
+    bt = jnp.arange(t_bins, dtype=jnp.float32)
+    kt = jnp.arange(k_classes, dtype=jnp.float32)
+    bins_oh = (bins.T == bt[None, :]).astype(jnp.float32)  # [B, T]
+    labels_oh = (labels.T == kt[None, :]).astype(jnp.float32)  # [B, K]
+    o_ref[...] = jnp.dot(bins_oh.T, labels_oh, preferred_element_type=jnp.float32)
+
+
+def hist_counts(bin_idx, label_idx, t_bins: int, k_classes: int):
+    """Histogram class counts. bin_idx [B], label_idx [B] -> [T, K]."""
+    b = bin_idx.shape[0]
+    kernel = functools.partial(_hist_kernel, t_bins, k_classes)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t_bins, k_classes), jnp.float32),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_bins, k_classes), lambda i: (0, 0)),
+        interpret=True,
+    )(bin_idx.reshape(1, b), label_idx.reshape(1, b))

@@ -1,0 +1,63 @@
+"""L1 Pallas kernels for Chapter 4: batched BanditMIPS arm pulls and the
+exact-rescore matvec used by the serving coordinator.
+
+The pull kernel computes partial inner products for all surviving atoms at
+once: atoms' gathered coordinate values [N, B] times the query's gathered
+values [B]. Tiled over N; B (a coordinate batch, ≤ a few hundred) fits in
+one VMEM block. The rescore kernel is a plain [N, D] @ [D] matvec tiled
+over N with D streamed per tile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PULL_TILE_N = 128
+SCORE_TILE_N = 64
+
+
+def _pulls_kernel(v_ref, q_ref, o_ref):
+    # v: [BN, B], q: [1, B] -> o: [BN, 1]  (partial sums per atom)
+    v = v_ref[...]
+    q = q_ref[...]
+    o_ref[...] = jnp.dot(v, q.T, preferred_element_type=jnp.float32)
+
+
+def mips_pulls(v_coords, q_coords):
+    """Partial inner products. v_coords [N, B], q_coords [B] -> [N]."""
+    n, b = v_coords.shape
+    bn = min(PULL_TILE_N, n)
+    assert n % bn == 0, f"N={n} must divide tile {bn}; pad upstream"
+    q2 = q_coords.reshape(1, b)
+    out = pl.pallas_call(
+        _pulls_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(v_coords, q2)
+    return out[:, 0]
+
+
+def mips_scores(atoms, q):
+    """Exact inner products. atoms [N, D], q [D] -> [N]."""
+    n, d = atoms.shape
+    bn = min(SCORE_TILE_N, n)
+    assert n % bn == 0, f"N={n} must divide tile {bn}; pad upstream"
+    q2 = q.reshape(1, d)
+    out = pl.pallas_call(
+        _pulls_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(atoms, q2)
+    return out[:, 0]

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only. pytest sweeps shapes/dtypes (hypothesis)
+and asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_l2sq(targets, refs):
+    """Squared euclidean distances. targets [T, D], refs [R, D] -> [T, R]."""
+    tt = jnp.sum(targets * targets, axis=1, keepdims=True)
+    rr = jnp.sum(refs * refs, axis=1, keepdims=True).T
+    return tt + rr - 2.0 * targets @ refs.T
+
+
+def pairwise_l1(targets, refs):
+    """Manhattan distances. targets [T, D], refs [R, D] -> [T, R]."""
+    return jnp.sum(jnp.abs(targets[:, None, :] - refs[None, :, :]), axis=-1)
+
+
+def pairwise_cosine(targets, refs, eps=1e-20):
+    """Cosine distances (1 - cos). targets [T, D], refs [R, D] -> [T, R]."""
+    dots = targets @ refs.T
+    tn = jnp.sqrt(jnp.sum(targets * targets, axis=1, keepdims=True))
+    rn = jnp.sqrt(jnp.sum(refs * refs, axis=1, keepdims=True)).T
+    return 1.0 - dots / jnp.maximum(tn * rn, eps)
+
+
+def build_step_g(cand, refs, d1):
+    """BanditPAM BUILD pulls (Eq. 2.5): g_x(j) = (d(x, x_j) - d1_j) ∧ 0.
+
+    cand [T, D], refs [R, D], d1 [R] -> g [T, R]  (l2 metric).
+    """
+    dist = jnp.sqrt(jnp.maximum(pairwise_l2sq(cand, refs), 0.0))
+    return jnp.minimum(dist - d1[None, :], 0.0)
+
+
+def mips_pulls(v_coords, q_coords):
+    """BanditMIPS batched arm pulls: per-atom partial sums.
+
+    v_coords [N, B] (atom values at the sampled coordinates),
+    q_coords [B] -> [N] partial inner products.
+    """
+    return v_coords @ q_coords
+
+
+def mips_scores(atoms, q):
+    """Exact inner products. atoms [N, D], q [D] -> [N]."""
+    return atoms @ q
+
+
+def hist_counts(bin_idx, label_idx, t_bins, k_classes):
+    """MABSplit histogram update as a one-hot matmul.
+
+    bin_idx [B] (float-encoded integers), label_idx [B] -> counts [T, K].
+    """
+    bins_oh = (bin_idx[:, None] == jnp.arange(t_bins, dtype=bin_idx.dtype)[None, :]).astype(
+        jnp.float32
+    )
+    labels_oh = (
+        label_idx[:, None] == jnp.arange(k_classes, dtype=label_idx.dtype)[None, :]
+    ).astype(jnp.float32)
+    return bins_oh.T @ labels_oh
+
+
+def gini_from_counts(counts):
+    """Weighted child Gini impurity per threshold from cumulative counts.
+
+    counts [T, K] -> [T-1] weighted impurities (threshold after bin t).
+    """
+    total = jnp.maximum(jnp.sum(counts), 1e-12)
+    left = jnp.cumsum(counts, axis=0)[:-1]  # [T-1, K]
+    right = jnp.sum(counts, axis=0)[None, :] - left
+
+    def side(c):
+        n = jnp.sum(c, axis=1, keepdims=True)
+        p = c / jnp.maximum(n, 1e-12)
+        g = 1.0 - jnp.sum(p * p, axis=1, keepdims=True)
+        return (n / total) * jnp.where(n > 0, g, 0.0)
+
+    return (side(left) + side(right))[:, 0]

@@ -1,0 +1,85 @@
+"""L2 — the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Each entry point composes the L1 Pallas kernels into the exact batched
+computation one adaptive-sampling round needs, so a single HLO round trip
+serves a whole engine iteration:
+
+* ``banditpam_build_g``  — BUILD arm pulls for a candidate tile against a
+  reference batch (distances fused with the (d − d1) ∧ 0 transform);
+* ``banditpam_swap_g``   — SWAP arm pulls with the FastPAM1 cache terms;
+* ``mips_pull_means``    — BanditMIPS partial means for surviving atoms;
+* ``mips_full_scores``   — exact rescore (serving fallback / final check);
+* ``mabsplit_hist_gini`` — histogram accumulation + per-threshold Gini.
+
+Python here runs ONLY at build time: aot.py lowers these with fixed shapes
+to ``artifacts/*.hlo.txt`` which rust/src/runtime loads and executes.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import impurity, mips, pairwise
+
+
+def banditpam_build_g(cand, refs, d1):
+    """BUILD-step pulls (Eq. 2.5): g[t, r] = (l2(cand_t, ref_r) − d1_r) ∧ 0.
+
+    cand [T, D], refs [R, D], d1 [R] -> ([T, R],)
+    """
+    dist = pairwise.pairwise_l2(cand, refs)
+    return (jnp.minimum(dist - d1[None, :], 0.0),)
+
+
+def banditpam_swap_g(cand, refs, d1, d2, nearest_is_mi):
+    """SWAP-step pulls for ONE medoid index (Eq. A.1 rewritten):
+    g[t, r] = min(dist[t, r], w_r) − d1_r with w_r = d2_r when the ref's
+    nearest medoid is the one being replaced, else d1_r.
+
+    cand [T, D], refs [R, D], d1 [R], d2 [R], nearest_is_mi [R] (0/1 f32).
+    """
+    dist = pairwise.pairwise_l2(cand, refs)
+    w = nearest_is_mi * d2 + (1.0 - nearest_is_mi) * d1
+    return (jnp.minimum(dist, w[None, :]) - d1[None, :],)
+
+
+def pairwise_distances_l2(targets, refs):
+    """Plain distance tile for the coordinator's generic use. -> ([T, R],)"""
+    return (pairwise.pairwise_l2(targets, refs),)
+
+
+def pairwise_distances_l1(targets, refs):
+    return (pairwise.pairwise_l1(targets, refs),)
+
+
+def mips_pull_means(v_coords, q_coords):
+    """Per-atom partial means over a coordinate batch.
+
+    v_coords [N, B], q_coords [B] -> ([N],)
+    """
+    b = q_coords.shape[0]
+    return (mips.mips_pulls(v_coords, q_coords) / float(b),)
+
+
+def mips_full_scores(atoms, q):
+    """Exact inner products for final rescoring. atoms [N, D], q [D] -> ([N],)"""
+    return (mips.mips_scores(atoms, q),)
+
+
+def mabsplit_hist_gini(bin_idx, label_idx, *, t_bins: int, k_classes: int):
+    """One histogram batch insert + the per-threshold weighted Gini scan.
+
+    bin_idx [B], label_idx [B] (float-encoded ids)
+    -> (counts [T, K], gini [T-1])
+    """
+    counts = impurity.hist_counts(bin_idx, label_idx, t_bins, k_classes)
+    total = jnp.maximum(jnp.sum(counts), 1e-12)
+    left = jnp.cumsum(counts, axis=0)[:-1]
+    right = jnp.sum(counts, axis=0)[None, :] - left
+
+    def side(c):
+        n = jnp.sum(c, axis=1, keepdims=True)
+        p = c / jnp.maximum(n, 1e-12)
+        g = 1.0 - jnp.sum(p * p, axis=1, keepdims=True)
+        return (n / total) * jnp.where(n > 0, g, 0.0)
+
+    gini = (side(left) + side(right))[:, 0]
+    return (counts, gini)

@@ -1,0 +1,136 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (tile-aligned and remainder-free, as the AOT
+contract requires) and values; every Pallas kernel must match its pure-jnp
+oracle to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import impurity, mips, pairwise, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---- pairwise -------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t_tiles=st.integers(1, 3),
+    r_tiles=st.integers(1, 3),
+    d=st.sampled_from([8, 64, 784]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_l2sq_matches_ref(t_tiles, r_tiles, d, seed):
+    rng = np.random.default_rng(seed)
+    t = rand(rng, 32 * t_tiles, d)
+    r = rand(rng, 128 * r_tiles, d)
+    got = pairwise.pairwise_l2sq(t, r)
+    want = ref.pairwise_l2sq(t, r)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t_tiles=st.integers(1, 2),
+    r_tiles=st.integers(1, 2),
+    d=st.sampled_from([16, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_l1_matches_ref(t_tiles, r_tiles, d, seed):
+    rng = np.random.default_rng(seed)
+    t = rand(rng, 8 * t_tiles, d)
+    r = rand(rng, 128 * r_tiles, d)
+    got = pairwise.pairwise_l1(t, r)
+    want = ref.pairwise_l1(t, r)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([32, 200]))
+def test_pairwise_cosine_matches_ref(seed, d):
+    rng = np.random.default_rng(seed)
+    t = rand(rng, 32, d) + 0.1
+    r = rand(rng, 128, d) + 0.1
+    got = pairwise.pairwise_cosine(t, r)
+    want = ref.pairwise_cosine(t, r)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_pairwise_l2_zero_self_distance():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 32, 64)
+    d = pairwise.pairwise_l2(x, jnp.tile(x, (4, 1)))
+    diag = jnp.array([d[i, i] for i in range(32)])
+    np.testing.assert_allclose(diag, np.zeros(32), atol=2e-2)
+
+
+def test_pairwise_rejects_misaligned_shapes():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        pairwise.pairwise_l2sq(rand(rng, 33, 8), rand(rng, 128, 8))
+
+
+# ---- mips -----------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    b=st.sampled_from([16, 64, 100, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mips_pulls_matches_ref(n_tiles, b, seed):
+    rng = np.random.default_rng(seed)
+    v = rand(rng, 128 * n_tiles, b)
+    q = rand(rng, b)
+    got = mips.mips_pulls(v, q)
+    want = ref.mips_pulls(v, q)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([64, 512, 1024]))
+def test_mips_scores_matches_ref(seed, d):
+    rng = np.random.default_rng(seed)
+    atoms = rand(rng, 256, d)
+    q = rand(rng, d)
+    got = mips.mips_scores(atoms, q)
+    want = ref.mips_scores(atoms, q)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-2)
+
+
+# ---- impurity ---------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([32, 256]),
+    t_bins=st.integers(2, 16),
+    k=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hist_counts_matches_ref(b, t_bins, k, seed):
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, t_bins, b).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, k, b).astype(np.float32))
+    got = impurity.hist_counts(bins, labels, t_bins, k)
+    want = ref.hist_counts(bins, labels, t_bins, k)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    assert float(jnp.sum(got)) == b  # every point lands in one cell
+
+
+def test_gini_from_counts_perfect_split():
+    counts = jnp.array([[10.0, 0.0], [10.0, 0.0], [0.0, 10.0], [0.0, 10.0]])
+    g = ref.gini_from_counts(counts)
+    assert g.shape == (3,)
+    assert float(g[1]) < 1e-6  # threshold after bin 1 is pure
+    assert float(g[0]) > 0.1

@@ -1,0 +1,56 @@
+"""L2 graph checks: shapes, semantics, and agreement with scalar math."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_build_g_matches_oracle():
+    rng = np.random.default_rng(3)
+    cand = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    refs = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))
+    d1 = jnp.asarray(np.abs(rng.standard_normal(128)).astype(np.float32) * 5)
+    (g,) = model.banditpam_build_g(cand, refs, d1)
+    want = ref.build_step_g(cand, refs, d1)
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-3)
+    assert (np.asarray(g) <= 1e-6).all()  # g is clamped at 0
+
+
+def test_swap_g_uses_d2_only_for_matching_medoid():
+    rng = np.random.default_rng(4)
+    cand = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    refs = jnp.asarray(rng.standard_normal((128, 16)).astype(np.float32))
+    d1 = jnp.full((128,), 0.5, jnp.float32)
+    d2 = jnp.full((128,), 9.0, jnp.float32)
+    all_mine = jnp.ones((128,), jnp.float32)
+    none_mine = jnp.zeros((128,), jnp.float32)
+    (g_mine,) = model.banditpam_swap_g(cand, refs, d1, d2, all_mine)
+    (g_other,) = model.banditpam_swap_g(cand, refs, d1, d2, none_mine)
+    # With w = d1 the pull can never be positive; with w = d2 it can be.
+    assert (np.asarray(g_other) <= 1e-6).all()
+    assert (np.asarray(g_mine) >= np.asarray(g_other) - 1e-6).all()
+
+
+def test_mips_pull_means_scale():
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    (means,) = model.mips_pull_means(v, q)
+    want = np.asarray(v) @ np.asarray(q) / 64.0
+    np.testing.assert_allclose(means, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mabsplit_hist_gini_shapes_and_purity():
+    # bins 0..7 with labels equal to bin parity: threshold anywhere keeps
+    # classes mixed EXCEPT the parity structure; just verify shapes + a
+    # pure split detected when bins separate labels.
+    b = 256
+    bins = jnp.asarray((np.arange(b) % 8).astype(np.float32))
+    labels = jnp.asarray((np.arange(b) % 8 >= 4).astype(np.float32))
+    counts, gini = model.mabsplit_hist_gini(bins, labels, t_bins=16, k_classes=16)
+    assert counts.shape == (16, 16)
+    assert gini.shape == (15,)
+    # threshold after bin 3 separates labels perfectly
+    assert float(gini[3]) < 1e-6

@@ -1,0 +1,470 @@
+//! The thesis' core engine: fixed-confidence best-arm identification by
+//! batched successive elimination with UCB-style confidence intervals
+//! (Algorithms 1 and 2 of the dissertation).
+//!
+//! All three chapters instantiate the same loop:
+//!
+//! | Chapter | arms | reference pool | pull |
+//! |---|---|---|---|
+//! | 2 (BanditPAM)  | candidate medoids / swaps | data points | g_x(x_j) |
+//! | 3 (MABSplit)   | (feature, threshold) pairs | data points | impurity contribution |
+//! | 4 (BanditMIPS) | atoms | coordinates | q_J · v_iJ |
+//!
+//! The engine *minimizes* the arm objective (BanditMIPS negates). Arms
+//! share each sampled reference batch — the batched structure of
+//! Algorithm 2 — and when the sample budget reaches the pool size the
+//! surviving arms are evaluated exactly (the "exact fallback" that makes
+//! every bandit algorithm here no worse than ~2× the naive solver).
+
+pub mod streams;
+
+use crate::util::rng::Rng;
+
+/// How reference batches are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// I.i.d. with replacement — the theory's sampling model.
+    WithReplacement,
+    /// Fresh without-replacement draw per batch (may repeat across
+    /// batches).
+    WithoutReplacement,
+    /// One fixed random permutation consumed slice by slice — the released
+    /// BanditPAM/MABSplit implementations' mode (§3.3.2): when the budget
+    /// reaches the pool size every survivor's estimate is *exact*, so the
+    /// exact fallback costs nothing extra.
+    Permutation,
+}
+
+/// Engine configuration (δ and batch size B of Algorithms 2–4).
+#[derive(Clone, Debug)]
+pub struct BanditConfig {
+    /// Error probability δ. The paper uses δ = 1/(1000·|S_tar|) for
+    /// BanditPAM and δ = 10⁻² .. 10⁻³ elsewhere.
+    pub delta: f64,
+    /// Batch size B (paper: 100).
+    pub batch_size: usize,
+    /// Reference-batch sampling mode.
+    pub sampling: Sampling,
+    /// Stop eliminating once this many arms survive (1 for best-arm;
+    /// k for the k-MIPS / top-k variants).
+    pub keep: usize,
+    /// RNG seed for batch sampling.
+    pub seed: u64,
+}
+
+impl Default for BanditConfig {
+    fn default() -> Self {
+        BanditConfig {
+            delta: 1e-3,
+            batch_size: 100,
+            sampling: Sampling::WithReplacement,
+            keep: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// An adaptive-sampling arm set: the problem-specific half of Algorithm 2.
+///
+/// The engine drives: sample batch → `observe_batch` → read `estimate` /
+/// `ci` → eliminate. Implementations own all per-arm state (running sums,
+/// histograms, σ̂ estimates) and must count their fundamental operation on
+/// an [`crate::metrics::OpCounter`].
+pub trait AdaptiveArms {
+    /// Number of arms |S_tar|.
+    fn n_arms(&self) -> usize;
+
+    /// Size of the reference pool |S_ref| (data points / coordinates).
+    fn ref_len(&self) -> usize;
+
+    /// Incorporate a batch of reference indices for each surviving arm.
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]);
+
+    /// Current point estimate μ̂ for an arm (lower = better).
+    fn estimate(&self, arm: usize) -> f64;
+
+    /// Confidence-interval half-width C for an arm after `n_used` samples
+    /// at error probability `delta`.
+    fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64;
+
+    /// Exact objective μ for an arm (the fallback path). Implementations
+    /// must count the full evaluation cost.
+    fn exact(&mut self, arm: usize) -> f64;
+
+    /// Draw the next reference batch. Default: uniform i.i.d. with
+    /// replacement (the theory's sampling model).
+    fn sample_batch(&mut self, rng: &mut Rng, b: usize, sampling: Sampling) -> Vec<usize> {
+        let n = self.ref_len();
+        match sampling {
+            Sampling::WithReplacement => rng.sample_with_replacement(n, b.min(n)),
+            Sampling::WithoutReplacement | Sampling::Permutation => {
+                rng.sample_without_replacement(n, b.min(n))
+            }
+        }
+    }
+
+    /// The fixed reference order used in [`Sampling::Permutation`] mode.
+    /// Default: a uniform random shuffle. Implementations may front-load
+    /// preferred references (warm-start caches, BanditMIPS-α's sorted
+    /// query coordinates) — coverage-exactness holds for any permutation.
+    fn permutation(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..self.ref_len()).collect();
+        rng.shuffle(&mut p);
+        p
+    }
+}
+
+/// Outcome of one successive-elimination run.
+#[derive(Clone, Debug)]
+pub struct BestArmResult {
+    /// Surviving arms, best (smallest estimate) first.
+    pub best: Vec<usize>,
+    /// Reference samples consumed by the adaptive phase (n_used).
+    pub n_used: usize,
+    /// Arms still alive when the loop ended (before exact fallback).
+    pub survivors_at_end: usize,
+    /// Whether the exact fallback ran.
+    pub exact_fallback: bool,
+    /// Number of elimination rounds executed.
+    pub rounds: usize,
+}
+
+/// Batched successive elimination (Algorithm 2 / 3 / 4 of the thesis).
+///
+/// Maintains the surviving set; each round draws a shared batch, updates
+/// estimates, and removes every arm whose lower confidence bound exceeds
+/// the smallest upper confidence bound. Terminates when `cfg.keep` arms
+/// survive or the sample budget reaches the pool size, at which point the
+/// survivors are resolved exactly.
+pub fn successive_elimination<A: AdaptiveArms>(
+    arms: &mut A,
+    cfg: &BanditConfig,
+) -> BestArmResult {
+    let n_arms = arms.n_arms();
+    assert!(n_arms > 0, "no arms");
+    assert!(cfg.keep >= 1);
+    let ref_len = arms.ref_len();
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut alive: Vec<usize> = (0..n_arms).collect();
+    let mut n_used = 0usize;
+    let mut rounds = 0usize;
+
+    // Permutation mode: one fixed order (arm-set-chosen), consumed in
+    // slices.
+    let perm: Option<Vec<usize>> = if cfg.sampling == Sampling::Permutation {
+        let p = arms.permutation(&mut rng);
+        debug_assert_eq!(p.len(), ref_len);
+        Some(p)
+    } else {
+        None
+    };
+
+    // The paper's loop stops once the sample budget reaches |S_ref|.
+    while n_used < ref_len && alive.len() > cfg.keep {
+        let b = cfg.batch_size.min(ref_len - n_used);
+        let batch = match &perm {
+            Some(p) => p[n_used..n_used + b].to_vec(),
+            None => arms.sample_batch(&mut rng, b, cfg.sampling),
+        };
+        arms.observe_batch(&alive, &batch);
+        n_used += batch.len();
+        rounds += 1;
+
+        // Elimination rule: keep x with  μ̂_x - C_x <= min_y (μ̂_y + C_y).
+        let mut min_ucb = f64::INFINITY;
+        for &a in &alive {
+            let ucb = arms.estimate(a) + arms.ci(a, n_used, cfg.delta);
+            if ucb < min_ucb {
+                min_ucb = ucb;
+            }
+        }
+        let (mut kept, mut dropped): (Vec<usize>, Vec<usize>) = alive
+            .iter()
+            .partition(|&&a| arms.estimate(a) - arms.ci(a, n_used, cfg.delta) <= min_ucb);
+        // One round may eliminate past `keep`; refill with the best of the
+        // dropped arms so top-k requests always return k arms.
+        if kept.len() < cfg.keep {
+            dropped.sort_by(|&x, &y| {
+                arms.estimate(x)
+                    .partial_cmp(&arms.estimate(y))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            kept.extend(dropped.into_iter().take(cfg.keep - kept.len()));
+        }
+        alive = kept;
+        debug_assert!(!alive.is_empty(), "eliminated every arm");
+    }
+
+    let survivors_at_end = alive.len();
+    // Permutation sampling with a fully-consumed pool: every survivor saw
+    // each reference exactly once, so its running mean *is* the exact
+    // objective — no fallback computation needed.
+    let estimates_exact = cfg.sampling == Sampling::Permutation && n_used >= ref_len;
+    let exact_fallback = alive.len() > cfg.keep && !estimates_exact;
+    let mut scored: Vec<(f64, usize)> = if exact_fallback {
+        // Budget exhausted with >keep survivors: compute survivors exactly.
+        alive.iter().map(|&a| (arms.exact(a), a)).collect()
+    } else {
+        alive.iter().map(|&a| (arms.estimate(a), a)).collect()
+    };
+    scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap_or(std::cmp::Ordering::Equal));
+    let best: Vec<usize> = scored.iter().map(|&(_, a)| a).take(cfg.keep.max(1)).collect();
+
+    BestArmResult { best, n_used, survivors_at_end, exact_fallback, rounds }
+}
+
+/// A ready-made [`AdaptiveArms`] for objectives of the form
+/// μ_x = mean over the reference pool of g(x, j): keeps running mean and
+/// per-arm σ̂ (estimated from the first observed batch, as §2.3.2), with
+/// Hoeffding CIs  C_x = σ̂_x · sqrt(2·ln(1/δ') / n_used).
+///
+/// BanditPAM's BUILD/SWAP and the plain BanditMIPS both reduce to this.
+pub struct MeanArms<F: FnMut(usize, usize) -> f64> {
+    /// g(arm, ref_index) — must do its own op-counting.
+    pub g: F,
+    pub n_arms: usize,
+    pub ref_len: usize,
+    sum: Vec<f64>,
+    count: Vec<u64>,
+    sigma: Vec<f64>,
+    sigma_ready: bool,
+    /// Fixed σ override (BanditMIPS's bounded-rating σ); None → estimate.
+    pub fixed_sigma: Option<f64>,
+}
+
+impl<F: FnMut(usize, usize) -> f64> MeanArms<F> {
+    pub fn new(n_arms: usize, ref_len: usize, g: F) -> Self {
+        MeanArms {
+            g,
+            n_arms,
+            ref_len,
+            sum: vec![0.0; n_arms],
+            count: vec![0; n_arms],
+            sigma: vec![1.0; n_arms],
+            sigma_ready: false,
+            fixed_sigma: None,
+        }
+    }
+
+    pub fn with_fixed_sigma(mut self, sigma: f64) -> Self {
+        self.fixed_sigma = Some(sigma);
+        self
+    }
+
+    pub fn sigma(&self, arm: usize) -> f64 {
+        self.fixed_sigma.unwrap_or(self.sigma[arm])
+    }
+}
+
+impl<F: FnMut(usize, usize) -> f64> AdaptiveArms for MeanArms<F> {
+    fn n_arms(&self) -> usize {
+        self.n_arms
+    }
+
+    fn ref_len(&self) -> usize {
+        self.ref_len
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
+        let estimate_sigma = !self.sigma_ready && self.fixed_sigma.is_none();
+        for &a in arms {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for &j in batch {
+                let v = (self.g)(a, j);
+                s += v;
+                s2 += v * v;
+            }
+            self.sum[a] += s;
+            self.count[a] += batch.len() as u64;
+            if estimate_sigma && !batch.is_empty() {
+                let m = s / batch.len() as f64;
+                let var = (s2 / batch.len() as f64 - m * m).max(0.0);
+                // Floor keeps CIs honest when the first batch happens to be
+                // constant (e.g. all-background MNIST pixels).
+                self.sigma[a] = var.sqrt().max(1e-9);
+            }
+        }
+        if estimate_sigma {
+            self.sigma_ready = true;
+        }
+    }
+
+    fn estimate(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            f64::INFINITY
+        } else {
+            self.sum[arm] / self.count[arm] as f64
+        }
+    }
+
+    fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
+        if self.count[arm] == 0 {
+            return f64::INFINITY;
+        }
+        let n = n_used.max(1) as f64;
+        self.sigma(arm) * (2.0 * (1.0 / delta).ln() / n).sqrt()
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.ref_len {
+            s += (self.g)(arm, j);
+        }
+        s / self.ref_len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    /// Deterministic arms where g(a, j) has mean exactly `mus[a]`:
+    /// g = mu_a + zero-mean perturbation depending on j.
+    fn make_arms(mus: Vec<f64>, noise: f64, ref_len: usize) -> MeanArms<impl FnMut(usize, usize) -> f64> {
+        let n = mus.len();
+        MeanArms::new(n, ref_len, move |a: usize, j: usize| {
+            // zero-mean over j in [0, ref_len): alternating +/- noise
+            let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+            mus[a] + sign * noise * ((j % 7) as f64 / 7.0)
+        })
+    }
+
+    #[test]
+    fn finds_clear_best_arm() {
+        let mus = vec![5.0, 3.0, 1.0, 4.0, 2.0];
+        let mut arms = make_arms(mus, 0.5, 10_000);
+        let cfg = BanditConfig { delta: 1e-3, batch_size: 64, ..Default::default() };
+        let r = successive_elimination(&mut arms, &cfg);
+        assert_eq!(r.best[0], 2);
+        assert!(r.n_used < 10_000, "should not exhaust budget; used {}", r.n_used);
+    }
+
+    #[test]
+    fn identical_arms_trigger_exact_fallback() {
+        let mus = vec![1.0; 8];
+        let mut arms = make_arms(mus, 0.5, 2_000);
+        let cfg = BanditConfig { delta: 1e-4, batch_size: 100, ..Default::default() };
+        let r = successive_elimination(&mut arms, &cfg);
+        assert!(r.exact_fallback, "identical arms must fall back to exact");
+        assert_eq!(r.best.len(), 1);
+    }
+
+    #[test]
+    fn keep_k_returns_k_sorted() {
+        let mus = vec![5.0, 3.0, 1.0, 4.0, 2.0, 6.0, 7.0];
+        let mut arms = make_arms(mus, 0.2, 50_000);
+        let cfg = BanditConfig { keep: 3, batch_size: 64, ..Default::default() };
+        let r = successive_elimination(&mut arms, &cfg);
+        assert_eq!(r.best, vec![2, 4, 1]);
+    }
+
+    #[test]
+    fn single_arm_trivial() {
+        let mut arms = make_arms(vec![1.0], 0.1, 100);
+        let r = successive_elimination(&mut arms, &BanditConfig::default());
+        assert_eq!(r.best, vec![0]);
+        assert_eq!(r.n_used, 0, "no sampling needed for a single arm");
+    }
+
+    #[test]
+    fn harder_gaps_use_more_samples() {
+        let easy = {
+            let mut arms = make_arms(vec![0.0, 10.0, 10.0, 10.0], 1.0, 1_000_000);
+            successive_elimination(&mut arms, &BanditConfig { batch_size: 32, ..Default::default() })
+                .n_used
+        };
+        let hard = {
+            let mut arms = make_arms(vec![0.0, 0.05, 10.0, 10.0], 1.0, 1_000_000);
+            successive_elimination(&mut arms, &BanditConfig { batch_size: 32, ..Default::default() })
+                .n_used
+        };
+        assert!(hard >= easy, "hard {hard} < easy {easy}");
+    }
+
+    #[test]
+    fn prop_best_arm_correct_with_noise() {
+        // Property: with honest sub-Gaussian noise and δ=1e-3, the engine
+        // returns the true argmin in the overwhelming majority of cases.
+        let mut failures = 0;
+        let cases = 40;
+        prop_check(0xAB, cases, |r| {
+            let n_arms = 2 + r.below(8);
+            let best = r.below(n_arms);
+            let mut mus: Vec<f64> = (0..n_arms).map(|_| 1.0 + r.f64() * 4.0).collect();
+            mus[best] = 0.0;
+            (mus, best, r.next_u64())
+        }, |case| {
+            let (mus, best, seed) = case.clone();
+            let ref_len = 200_000;
+            let mut noise_rng = Rng::new(seed);
+            // pre-draw noise per reference index so g is a function
+            let noise: Vec<f64> = (0..1024).map(|_| noise_rng.normal()).collect();
+            let mut arms = MeanArms::new(mus.len(), ref_len, move |a, j| {
+                mus[a] + noise[(j * 31 + a * 7) % 1024]
+            });
+            let cfg = BanditConfig { delta: 1e-3, batch_size: 100, seed, ..Default::default() };
+            let r = successive_elimination(&mut arms, &cfg);
+            if r.best[0] != best {
+                failures += 1;
+            }
+            Ok(())
+        });
+        assert!(failures <= 2, "{failures}/{cases} wrong best arms");
+    }
+
+    #[test]
+    fn prop_sample_complexity_bounded_by_pool() {
+        prop_check(0xCD, 30, |r| (2 + r.below(10), 100 + r.below(2000), r.next_u64()), |&(n_arms, ref_len, seed)| {
+            let mut arms = MeanArms::new(n_arms, ref_len, move |a, j| {
+                ((a * 37 + j * 11) % 101) as f64 / 101.0
+            });
+            let cfg = BanditConfig { seed, ..Default::default() };
+            let r = successive_elimination(&mut arms, &cfg);
+            if r.n_used > ref_len {
+                return Err(format!("n_used {} > ref_len {}", r.n_used, ref_len));
+            }
+            if r.best.is_empty() || r.best[0] >= n_arms {
+                return Err("invalid best arm".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_keep_never_exceeds_survivors() {
+        prop_check(0xEF, 25, |r| (1 + r.below(5), 3 + r.below(8), r.next_u64()), |&(keep, n_arms, seed)| {
+            let keep = keep.min(n_arms);
+            let mut arms = MeanArms::new(n_arms, 5_000, move |a, j| {
+                a as f64 + ((j % 13) as f64 - 6.0) / 13.0
+            });
+            let cfg = BanditConfig { keep, seed, batch_size: 50, ..Default::default() };
+            let r = successive_elimination(&mut arms, &cfg);
+            if r.best.len() != keep {
+                return Err(format!("got {} arms, wanted {keep}", r.best.len()));
+            }
+            // sorted best-first
+            for w in r.best.windows(2) {
+                // arms have means equal to their index here
+                if w[0] > w[1] {
+                    return Err(format!("not sorted: {:?}", r.best));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_zero_like_behaviour_degrades_to_exact() {
+        // Tiny delta → huge CIs → no elimination → exact fallback, which is
+        // the "never worse than naive (×2)" guarantee.
+        let mus = vec![1.0, 1.01, 0.99, 1.02];
+        let mut arms = make_arms(mus, 2.0, 500);
+        let cfg = BanditConfig { delta: 1e-30, batch_size: 100, ..Default::default() };
+        let r = successive_elimination(&mut arms, &cfg);
+        assert!(r.exact_fallback);
+        assert_eq!(r.best[0], 2);
+    }
+}

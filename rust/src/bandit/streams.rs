@@ -1,0 +1,171 @@
+//! Algorithm 1 of the thesis: successive elimination over *stochastic
+//! reward streams* — the textbook casino setting of Chapter 1, where each
+//! arm pull draws a fresh i.i.d. sample (no finite reference pool).
+//!
+//! Chapters 2–4 use the finite-pool variant in [`crate::bandit`]; this
+//! module exists to validate the theory (Theorem 2's sample-complexity
+//! shape) and to benchmark pure engine overhead.
+
+use crate::util::rng::Rng;
+
+/// A stochastic arm: each pull returns an i.i.d. sample.
+pub trait RewardStream {
+    fn n_arms(&self) -> usize;
+    fn pull(&mut self, arm: usize, rng: &mut Rng) -> f64;
+    /// Sub-Gaussian parameter σ_i for arm i.
+    fn sigma(&self, arm: usize) -> f64;
+}
+
+/// Gaussian test-bed arms with known means.
+pub struct GaussianArms {
+    pub mus: Vec<f64>,
+    pub sigmas: Vec<f64>,
+}
+
+impl RewardStream for GaussianArms {
+    fn n_arms(&self) -> usize {
+        self.mus.len()
+    }
+
+    fn pull(&mut self, arm: usize, rng: &mut Rng) -> f64 {
+        rng.normal_ms(self.mus[arm], self.sigmas[arm])
+    }
+
+    fn sigma(&self, arm: usize) -> f64 {
+        self.sigmas[arm]
+    }
+}
+
+/// Result of a fixed-confidence best-arm run (maximization, as Ch. 1).
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    pub best: usize,
+    pub total_pulls: u64,
+    pub pulls_per_arm: Vec<u64>,
+    pub rounds: usize,
+}
+
+/// Algorithm 1 (Successive Elimination): pull every surviving arm once per
+/// round; eliminate arm i when  μ̂_i + C_i < max_y (μ̂_y − C_y)… written in
+/// the thesis as removing arms that can no longer be the argmax. The CI
+/// schedule is  C_i(t) = σ_i · sqrt(2·ln(4 n t² / δ) / t).
+pub fn successive_elimination_streams<S: RewardStream>(
+    arms: &mut S,
+    delta: f64,
+    seed: u64,
+    max_pulls_per_arm: u64,
+) -> StreamResult {
+    let n = arms.n_arms();
+    assert!(n > 0);
+    let mut rng = Rng::new(seed);
+    let mut alive: Vec<usize> = (0..n).collect();
+    let mut mean = vec![0f64; n];
+    let mut pulls = vec![0u64; n];
+    let mut rounds = 0usize;
+
+    while alive.len() > 1 {
+        rounds += 1;
+        for &i in &alive {
+            let x = arms.pull(i, &mut rng);
+            let t = pulls[i] as f64;
+            mean[i] = (t * mean[i] + x) / (t + 1.0);
+            pulls[i] += 1;
+        }
+        let t = pulls[alive[0]] as f64;
+        let ci = |i: usize| {
+            arms.sigma(i) * (2.0 * (4.0 * n as f64 * t * t / delta).ln() / t).sqrt()
+        };
+        // Maximization: eliminate i when ucb_i < max lcb.
+        let max_lcb = alive
+            .iter()
+            .map(|&i| mean[i] - ci(i))
+            .fold(f64::NEG_INFINITY, f64::max);
+        alive.retain(|&i| mean[i] + ci(i) >= max_lcb);
+        debug_assert!(!alive.is_empty());
+        if pulls[alive[0]] >= max_pulls_per_arm {
+            break;
+        }
+    }
+
+    // If the cap hit with several survivors, return the empirical best.
+    let best = *alive
+        .iter()
+        .max_by(|&&a, &&b| mean[a].partial_cmp(&mean[b]).unwrap())
+        .unwrap();
+    StreamResult {
+        best,
+        total_pulls: pulls.iter().sum(),
+        pulls_per_arm: pulls,
+        rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn identifies_best_gaussian_arm() {
+        let mut arms = GaussianArms {
+            mus: vec![0.0, 0.5, 1.0, 0.2],
+            sigmas: vec![1.0; 4],
+        };
+        let r = successive_elimination_streams(&mut arms, 0.01, 1, 2_000_000);
+        assert_eq!(r.best, 2);
+    }
+
+    #[test]
+    fn easy_gaps_need_fewer_pulls_than_hard() {
+        let run = |gap: f64, seed: u64| {
+            let mut arms = GaussianArms {
+                mus: vec![0.0, gap],
+                sigmas: vec![1.0; 2],
+            };
+            successive_elimination_streams(&mut arms, 0.01, seed, 50_000_000).total_pulls
+        };
+        // Average over seeds to smooth randomness.
+        let easy: u64 = (0..5).map(|s| run(2.0, s)).sum();
+        let hard: u64 = (0..5).map(|s| run(0.2, s)).sum();
+        assert!(
+            hard > 10 * easy,
+            "Δ=0.2 should cost ≫ Δ=2.0 (theory: 100×): easy={easy} hard={hard}"
+        );
+    }
+
+    #[test]
+    fn suboptimal_arms_eliminated_early() {
+        let mut arms = GaussianArms {
+            mus: vec![5.0, 0.0, 0.1, 0.2],
+            sigmas: vec![0.5; 4],
+        };
+        let r = successive_elimination_streams(&mut arms, 0.01, 3, 10_000_000);
+        assert_eq!(r.best, 0);
+        // the clearly-bad arms must have far fewer pulls than the winner
+        assert!(r.pulls_per_arm[1] < r.pulls_per_arm[0]);
+    }
+
+    #[test]
+    fn prop_correctness_rate_matches_delta() {
+        // With δ=0.05 the error rate over random instances should be well
+        // under 20% (union-bound slack means it's usually ~0).
+        let mut wrong = 0;
+        let cases = 30;
+        prop_check(77, cases, |r| {
+            let n = 2 + r.below(6);
+            let best = r.below(n);
+            let mut mus: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+            mus[best] += 1.0;
+            (mus, best, r.next_u64())
+        }, |case| {
+            let (mus, best, seed) = case.clone();
+            let mut arms = GaussianArms { sigmas: vec![1.0; mus.len()], mus };
+            let r = successive_elimination_streams(&mut arms, 0.05, seed, 5_000_000);
+            if r.best != best {
+                wrong += 1;
+            }
+            Ok(())
+        });
+        assert!(wrong <= 3, "{wrong}/{cases} incorrect identifications");
+    }
+}

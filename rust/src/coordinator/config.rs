@@ -1,0 +1,158 @@
+//! Server configuration + a minimal TOML-subset parser (the offline image
+//! has no `toml` crate). Supported syntax: `[section]` headers, `key =
+//! value` with string / integer / float / bool values, `#` comments.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed configuration: section → key → raw value string.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    pub sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::new();
+        sections.entry(current.clone()).or_default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[') {
+                let sec = sec
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unclosed section", ln + 1))?;
+                current = sec.trim().to_string();
+                sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let v = v.trim().trim_matches('"').to_string();
+                sections
+                    .get_mut(&current)
+                    .unwrap()
+                    .insert(k.trim().to_string(), v);
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`: {raw}", ln + 1);
+            }
+        }
+        Ok(ConfigFile { sections })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("{section}.{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("{section}.{key}: {e}")),
+        }
+    }
+}
+
+/// Runtime configuration of the MIPS server.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Dynamic batcher: dispatch when this many requests are queued…
+    pub max_batch: usize,
+    /// …or when the oldest has waited this long.
+    pub batch_timeout_us: u64,
+    /// Top-k atoms per query.
+    pub k: usize,
+    /// Error probability δ for the bandit backends.
+    pub delta: f64,
+    /// Warm-start coordinate cache size shared within a batch.
+    pub warm_coords: usize,
+    /// Hybrid backend: PJRT-validate every Nth query (0 = never).
+    pub validate_every: usize,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            max_batch: 16,
+            batch_timeout_us: 500,
+            k: 1,
+            delta: 1e-3,
+            warm_coords: 64,
+            validate_every: 16,
+            seed: 0x5E17E,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a TOML-subset file's `[server]` section.
+    pub fn from_file(path: &std::path::Path) -> Result<ServerConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = ConfigFile::parse(&text)?;
+        let d = ServerConfig::default();
+        Ok(ServerConfig {
+            workers: cfg.get_usize("server", "workers", d.workers)?,
+            max_batch: cfg.get_usize("server", "max_batch", d.max_batch)?,
+            batch_timeout_us: cfg.get_usize("server", "batch_timeout_us", d.batch_timeout_us as usize)? as u64,
+            k: cfg.get_usize("server", "k", d.k)?,
+            delta: cfg.get_f64("server", "delta", d.delta)?,
+            warm_coords: cfg.get_usize("server", "warm_coords", d.warm_coords)?,
+            validate_every: cfg.get_usize("server", "validate_every", d.validate_every)?,
+            seed: cfg.get_usize("server", "seed", d.seed as usize)? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let text = r#"
+# serving config
+[server]
+workers = 8
+delta = 0.01   # error rate
+name = "mips"
+
+[other]
+flag = true
+"#;
+        let c = ConfigFile::parse(text).unwrap();
+        assert_eq!(c.get("server", "workers"), Some("8"));
+        assert_eq!(c.get("server", "name"), Some("mips"));
+        assert_eq!(c.get("other", "flag"), Some("true"));
+        assert_eq!(c.get_usize("server", "workers", 1).unwrap(), 8);
+        assert!((c.get_f64("server", "delta", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        assert_eq!(c.get_usize("server", "missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigFile::parse("not a kv line\n").is_err());
+        assert!(ConfigFile::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn server_config_from_file() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("as_server_cfg_test.toml");
+        std::fs::write(&p, "[server]\nworkers = 2\nk = 5\n").unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.k, 5);
+        assert_eq!(c.max_batch, ServerConfig::default().max_batch);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 serving coordinator: a batched MIPS query service.
+//!
+//! The thesis motivates BanditMIPS with recommendation serving; this
+//! module is the system a downstream team would actually deploy around
+//! it (vLLM-router-style): a request queue, a dynamic batcher (size- or
+//! timeout-triggered), a router that picks the per-query algorithm, a
+//! worker pool, and latency/recall accounting. Compute backends:
+//!
+//! * `NativeBandit` — BanditMIPS in-process (adaptive, O(1)-in-d);
+//! * `PjrtExact`    — the AOT `mips_scores_*` executable (full rescore on
+//!   the XLA CPU backend; the batch path Python authored, Rust executes);
+//! * `Hybrid`       — BanditMIPS natively, but every `validate_every`-th
+//!   query also rescored via PJRT and recall-checked (canary validation).
+//!
+//! std::thread + channels (the offline image carries no tokio); the
+//! public API is synchronous handles with per-request response channels.
+
+pub mod config;
+pub mod server;
+
+pub use config::ServerConfig;
+pub use server::{Backend, MipsServer, QueryResponse, ServerStats};

@@ -1,0 +1,351 @@
+//! The MIPS serving loop: dispatcher (dynamic batcher) + worker pool.
+//!
+//! Life of a request: `submit()` enqueues (query, response-sender) →
+//! the dispatcher groups requests into batches (size- or age-triggered) →
+//! a worker claims the batch, samples the shared warm-start coordinate
+//! cache (§4.3.1), answers each query via the configured backend, and
+//! replies on the per-request channel. Latency is measured submit→reply.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::config::ServerConfig;
+use crate::data::Matrix;
+use crate::metrics::OpCounter;
+use crate::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use crate::runtime::service::PjrtHandle;
+use crate::util::rng::Rng;
+
+/// Which compute backend answers queries.
+#[derive(Clone)]
+pub enum Backend {
+    /// BanditMIPS in-process.
+    NativeBandit,
+    /// Full rescore through the AOT PJRT executable named here.
+    PjrtExact { store: PjrtHandle, entry: String },
+    /// BanditMIPS natively + periodic PJRT canary validation.
+    Hybrid { store: PjrtHandle, entry: String },
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::NativeBandit => write!(f, "NativeBandit"),
+            Backend::PjrtExact { entry, .. } => write!(f, "PjrtExact({entry})"),
+            Backend::Hybrid { entry, .. } => write!(f, "Hybrid({entry})"),
+        }
+    }
+}
+
+/// A completed query.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub top_atoms: Vec<usize>,
+    pub latency: Duration,
+    /// Coordinate multiplications spent on this query.
+    pub samples: u64,
+    /// Set when a Hybrid canary check ran: did BanditMIPS agree with the
+    /// PJRT exact rescore?
+    pub validated: Option<bool>,
+}
+
+struct Request {
+    query: Vec<f32>,
+    submitted: Instant,
+    respond: Sender<QueryResponse>,
+}
+
+/// Aggregate counters exposed by [`MipsServer::stats`].
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub validations: AtomicU64,
+    pub validation_failures: AtomicU64,
+    pub samples: OpCounter,
+}
+
+/// A running MIPS server.
+pub struct MipsServer {
+    tx: Option<Sender<Request>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl MipsServer {
+    /// Start the server over an atom matrix.
+    pub fn start(atoms: Arc<Matrix>, cfg: ServerConfig, backend: Backend) -> MipsServer {
+        let (tx, rx) = channel::<Request>();
+        let (btx, brx) = channel::<Vec<Request>>();
+        let brx = Arc::new(Mutex::new(brx));
+        let stats = Arc::new(ServerStats::default());
+
+        // Dispatcher: dynamic batching by size or age.
+        let max_batch = cfg.max_batch.max(1);
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let dstats = stats.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                let wait = if pending.is_empty() {
+                    Duration::from_millis(50)
+                } else {
+                    timeout
+                        .checked_sub(pending[0].submitted.elapsed())
+                        .unwrap_or(Duration::ZERO)
+                };
+                match rx.recv_timeout(wait) {
+                    Ok(req) => {
+                        pending.push(req);
+                        if pending.len() >= max_batch {
+                            dstats.batches.fetch_add(1, Ordering::Relaxed);
+                            let _ = btx.send(std::mem::take(&mut pending));
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if !pending.is_empty() {
+                            dstats.batches.fetch_add(1, Ordering::Relaxed);
+                            let _ = btx.send(std::mem::take(&mut pending));
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        if !pending.is_empty() {
+                            let _ = btx.send(std::mem::take(&mut pending));
+                        }
+                        break;
+                    }
+                }
+            }
+        });
+
+        // Workers.
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let brx = brx.clone();
+            let atoms = atoms.clone();
+            let backend = backend.clone();
+            let cfg = cfg.clone();
+            let wstats = stats.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37));
+                loop {
+                    let batch = {
+                        let guard = brx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    serve_batch(&atoms, &cfg, &backend, batch, &mut rng, &wstats);
+                }
+            }));
+        }
+
+        MipsServer { tx: Some(tx), dispatcher: Some(dispatcher), workers, stats }
+    }
+
+    /// Submit a query; returns the response receiver.
+    pub fn submit(&self, query: Vec<f32>) -> Receiver<QueryResponse> {
+        let (rtx, rrx) = channel();
+        let req = Request { query, submitted: Instant::now(), respond: rtx };
+        self.tx.as_ref().expect("server running").send(req).expect("dispatcher alive");
+        rrx
+    }
+
+    /// Graceful shutdown: drain, then join all threads.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_batch(
+    atoms: &Matrix,
+    cfg: &ServerConfig,
+    backend: &Backend,
+    batch: Vec<Request>,
+    rng: &mut Rng,
+    stats: &ServerStats,
+) {
+    // Shared warm-start coordinate cache for the batch (§4.3.1).
+    let warm = if cfg.warm_coords > 0 && batch.len() > 1 {
+        rng.sample_without_replacement(atoms.d, cfg.warm_coords.min(atoms.d))
+    } else {
+        Vec::new()
+    };
+    for req in batch {
+        let served = stats.served.fetch_add(1, Ordering::Relaxed);
+        // Per-request counter: the global one is shared across workers, so
+        // window deltas would overcount under concurrency.
+        let local = OpCounter::new();
+        let (top, validated) =
+            answer(atoms, cfg, backend, &req.query, &warm, served, &local, stats, rng);
+        stats.samples.add(local.get());
+        let _ = req.respond.send(QueryResponse {
+            top_atoms: top,
+            latency: req.submitted.elapsed(),
+            samples: local.get(),
+            validated,
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn answer(
+    atoms: &Matrix,
+    cfg: &ServerConfig,
+    backend: &Backend,
+    query: &[f32],
+    warm: &[usize],
+    serial: u64,
+    counter: &OpCounter,
+    stats: &ServerStats,
+    rng: &mut Rng,
+) -> (Vec<usize>, Option<bool>) {
+    let bandit_cfg = BanditMipsConfig {
+        delta: cfg.delta,
+        batch_size: 64,
+        strategy: SampleStrategy::Uniform,
+        sigma: None,
+        k: cfg.k,
+        seed: cfg.seed ^ serial ^ rng.next_u64(),
+    };
+    match backend {
+        Backend::NativeBandit => {
+            let ans = bandit_mips_warm(atoms, query, &bandit_cfg, counter, warm);
+            (ans.atoms, None)
+        }
+        Backend::PjrtExact { store, entry } => {
+            (pjrt_exact(atoms, store, entry, query, cfg.k, counter, stats), None)
+        }
+        Backend::Hybrid { store, entry } => {
+            let ans = bandit_mips_warm(atoms, query, &bandit_cfg, counter, warm);
+            let validated = if cfg.validate_every > 0 && serial % cfg.validate_every as u64 == 0 {
+                stats.validations.fetch_add(1, Ordering::Relaxed);
+                let exact = pjrt_exact(atoms, store, entry, query, cfg.k, counter, stats);
+                let ok = !exact.is_empty() && ans.atoms.first() == exact.first();
+                if !ok {
+                    stats.validation_failures.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(ok)
+            } else {
+                None
+            };
+            (ans.atoms, validated)
+        }
+    }
+}
+
+/// Full rescore through the PJRT executable: pads the atom matrix (once
+/// per call; the serving example sizes atoms to the artifact exactly) and
+/// takes the top-k of the returned scores.
+#[allow(clippy::too_many_arguments)]
+fn pjrt_exact(
+    atoms: &Matrix,
+    store: &PjrtHandle,
+    entry: &str,
+    query: &[f32],
+    k: usize,
+    counter: &OpCounter,
+    _stats: &ServerStats,
+) -> Vec<usize> {
+    let Some(meta) = store.meta(entry) else { return Vec::new() };
+    let (an, ad) = (meta.params[0][0], meta.params[0][1]);
+    if atoms.d != ad || atoms.n > an || query.len() != ad {
+        return Vec::new(); // shape mismatch: the router shouldn't send us here
+    }
+    counter.add((atoms.n * atoms.d) as u64);
+    let padded;
+    let data: &[f32] = if atoms.n == an {
+        &atoms.data
+    } else {
+        padded = crate::runtime::pad_to(&atoms.data, atoms.n, ad, an, 0.0);
+        &padded
+    };
+    let Ok(out) = store.exec_f32(entry, &[data, query]) else { return Vec::new() };
+    let scores = &out[0];
+    let mut idx: Vec<usize> = (0..atoms.n).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::lowrank_like;
+    use crate::mips::naive_mips;
+
+    fn atoms() -> Arc<Matrix> {
+        Arc::new(lowrank_like(128, 512, 8, 77))
+    }
+
+    #[test]
+    fn native_server_answers_correctly() {
+        let atoms = atoms();
+        let cfg = ServerConfig { workers: 2, max_batch: 4, ..Default::default() };
+        let server = MipsServer::start(atoms.clone(), cfg, Backend::NativeBandit);
+        let mut rng = Rng::new(5);
+        let mut receivers = Vec::new();
+        let mut queries = Vec::new();
+        for _ in 0..12 {
+            let q: Vec<f32> = (0..atoms.d).map(|_| rng.f32() * 5.0).collect();
+            receivers.push(server.submit(q.clone()));
+            queries.push(q);
+        }
+        let mut correct = 0;
+        for (rx, q) in receivers.into_iter().zip(&queries) {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            let c = OpCounter::new();
+            let truth = naive_mips(&atoms, q, 1, &c);
+            if resp.top_atoms.first() == truth.first() {
+                correct += 1;
+            }
+            assert!(resp.samples > 0);
+        }
+        assert!(correct >= 10, "only {correct}/12 correct");
+        assert_eq!(server.stats.served.load(Ordering::Relaxed), 12);
+        assert!(server.stats.batches.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batcher_groups_requests() {
+        let atoms = atoms();
+        let cfg = ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout_us: 100_000,
+            ..Default::default()
+        };
+        let server = MipsServer::start(atoms.clone(), cfg, Backend::NativeBandit);
+        let mut rng = Rng::new(9);
+        let receivers: Vec<_> = (0..16)
+            .map(|_| {
+                let q: Vec<f32> = (0..atoms.d).map(|_| rng.f32()).collect();
+                server.submit(q)
+            })
+            .collect();
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        }
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        assert!(batches <= 8, "expected batching, got {batches} batches for 16 queries");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let atoms = atoms();
+        let server =
+            MipsServer::start(atoms, ServerConfig::default(), Backend::NativeBandit);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,188 @@
+//! Vector distance metrics used throughout Chapter 2: l1, l2, cosine.
+//! `d` need not be a metric for k-medoids (the thesis stresses this); we
+//! nevertheless only ship honest dissimilarities here. Hot loops are
+//! written in a fixed-lane form that autovectorizes.
+
+/// Supported vector dissimilarities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    L1,
+    L2,
+    Cosine,
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Metric::L1 => write!(f, "l1"),
+            Metric::L2 => write!(f, "l2"),
+            Metric::Cosine => write!(f, "cosine"),
+        }
+    }
+}
+
+impl Metric {
+    /// Evaluate the dissimilarity between two equal-length vectors.
+    #[inline]
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        match self {
+            Metric::L1 => l1(a, b),
+            Metric::L2 => l2(a, b),
+            Metric::Cosine => cosine(a, b),
+        }
+    }
+}
+
+const LANES: usize = 8;
+
+macro_rules! lane_reduce {
+    ($a:expr, $b:expr, $op:expr) => {{
+        let a = $a;
+        let b = $b;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc = [0f32; LANES];
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                acc[l] += $op(a[i + l], b[i + l]);
+            }
+        }
+        let mut s = 0f64;
+        for l in 0..LANES {
+            s += acc[l] as f64;
+        }
+        for i in chunks * LANES..n {
+            s += $op(a[i], b[i]) as f64;
+        }
+        s
+    }};
+}
+
+/// Manhattan distance.
+#[inline]
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    lane_reduce!(a, b, |x: f32, y: f32| (x - y).abs())
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn l2(a: &[f32], b: &[f32]) -> f64 {
+    lane_reduce!(a, b, |x: f32, y: f32| {
+        let d = x - y;
+        d * d
+    })
+    .sqrt()
+}
+
+/// Squared Euclidean distance (no sqrt), for callers that only compare.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f64 {
+    lane_reduce!(a, b, |x: f32, y: f32| {
+        let d = x - y;
+        d * d
+    })
+}
+
+/// Cosine distance: 1 - cos(a, b). Zero vectors get distance 1.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut dacc = [0f32; LANES];
+    let mut aacc = [0f32; LANES];
+    let mut bacc = [0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            dacc[l] += a[i + l] * b[i + l];
+            aacc[l] += a[i + l] * a[i + l];
+            bacc[l] += b[i + l] * b[i + l];
+        }
+    }
+    let (mut d, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for l in 0..LANES {
+        d += dacc[l] as f64;
+        na += aacc[l] as f64;
+        nb += bacc[l] as f64;
+    }
+    for i in chunks * LANES..n {
+        d += (a[i] * b[i]) as f64;
+        na += (a[i] * a[i]) as f64;
+        nb += (b[i] * b[i]) as f64;
+    }
+    let denom = (na.sqrt() * nb.sqrt()).max(1e-20);
+    // Clamp away float rounding: cos similarity lives in [-1, 1].
+    (1.0 - d / denom).clamp(0.0, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_l1(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum()
+    }
+
+    fn naive_l2(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn metrics_match_naive_across_lengths() {
+        let mut r = Rng::new(31);
+        for len in [1usize, 2, 7, 8, 9, 100, 784] {
+            let a: Vec<f32> = (0..len).map(|_| r.f32() * 2.0 - 1.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.f32() * 2.0 - 1.0).collect();
+            assert!((l1(&a, &b) - naive_l1(&a, &b)).abs() < 1e-4);
+            assert!((l2(&a, &b) - naive_l2(&a, &b)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn l2_of_345_triangle() {
+        assert!((l2(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_extremes() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        let c = [2.0f32, 0.0];
+        let d = [-1.0f32, 0.0];
+        assert!((cosine(&a, &b) - 1.0).abs() < 1e-9); // orthogonal
+        assert!(cosine(&a, &c).abs() < 1e-9); // parallel
+        assert!((cosine(&a, &d) - 2.0).abs() < 1e-9); // antiparallel
+    }
+
+    #[test]
+    fn distances_symmetric_nonnegative() {
+        let mut r = Rng::new(33);
+        for _ in 0..50 {
+            let len = 1 + r.below(50);
+            let a: Vec<f32> = (0..len).map(|_| r.f32() - 0.5).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.f32() - 0.5).collect();
+            for m in [Metric::L1, Metric::L2, Metric::Cosine] {
+                let dab = m.eval(&a, &b);
+                let dba = m.eval(&b, &a);
+                assert!(dab >= -1e-12, "{m} negative");
+                assert!((dab - dba).abs() < 1e-9, "{m} asymmetric");
+                assert!(m.eval(&a, &a) < 1e-6, "{m} self-distance");
+            }
+        }
+    }
+
+    #[test]
+    fn l2_sq_consistent() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 8.0];
+        assert!((l2_sq(&a, &b) - l2(&a, &b).powi(2)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,178 @@
+//! Dataset substrate: dense matrices, distance metrics, labeled tabular
+//! data, random program trees (HOC4-like), and the synthetic generators
+//! that stand in for the thesis' evaluation datasets (see DESIGN.md
+//! §Substitutions for the paper-asset → generator mapping).
+
+pub mod distance;
+pub mod synthetic;
+pub mod tabular;
+pub mod trees;
+
+use std::sync::Arc;
+
+use crate::data::distance::Metric;
+use crate::metrics::OpCounter;
+
+/// A dense row-major matrix of `n` points in `d` dimensions.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Matrix { data: vec![0.0; n * d], n, d }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let n = rows.len();
+        let d = if n == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(n * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(&r);
+        }
+        Matrix { data, n, d }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Subsample rows by index (copies).
+    pub fn take_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), self.d);
+        for (r, &i) in idx.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Truncate columns to the first `d2`.
+    pub fn take_cols(&self, d2: usize) -> Matrix {
+        assert!(d2 <= self.d);
+        let mut m = Matrix::zeros(self.n, d2);
+        for i in 0..self.n {
+            m.row_mut(i).copy_from_slice(&self.row(i)[..d2]);
+        }
+        m
+    }
+}
+
+/// Anything the k-medoids algorithms can cluster: a finite set of points
+/// with a (possibly expensive, possibly non-metric) dissimilarity.
+/// Implementations must count every dissimilarity evaluation on their
+/// [`OpCounter`] — that count is the paper's sample-complexity metric.
+pub trait PointSet: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Dissimilarity between points `i` and `j` (counted).
+    fn dist(&self, i: usize, j: usize) -> f64;
+    /// The distance-evaluation counter.
+    fn counter(&self) -> &OpCounter;
+}
+
+/// A dense vector dataset with a [`Metric`].
+pub struct VecPointSet {
+    pub mat: Arc<Matrix>,
+    pub metric: Metric,
+    counter: OpCounter,
+}
+
+impl VecPointSet {
+    pub fn new(mat: Matrix, metric: Metric) -> Self {
+        VecPointSet { mat: Arc::new(mat), metric, counter: OpCounter::new() }
+    }
+}
+
+impl PointSet for VecPointSet {
+    fn len(&self) -> usize {
+        self.mat.n
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.counter.incr();
+        self.metric.eval(self.mat.row(i), self.mat.row(j))
+    }
+
+    fn counter(&self) -> &OpCounter {
+        &self.counter
+    }
+}
+
+/// A labeled dataset for supervised learning (Ch. 3).
+#[derive(Clone, Debug)]
+pub struct LabeledDataset {
+    pub x: Matrix,
+    /// Class index for classification; value for regression.
+    pub y: Vec<f32>,
+    pub n_classes: usize, // 0 for regression
+}
+
+impl LabeledDataset {
+    pub fn is_regression(&self) -> bool {
+        self.n_classes == 0
+    }
+
+    pub fn take_rows(&self, idx: &[usize]) -> LabeledDataset {
+        LabeledDataset {
+            x: self.x.take_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Deterministic train/test split by shuffled indices.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (LabeledDataset, LabeledDataset) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut idx: Vec<usize> = (0..self.x.n).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((self.x.n as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.take_rows(train_idx), self.take_rows(test_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_rows_and_subsets() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        let s = m.take_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+        let c = m.take_cols(1);
+        assert_eq!(c.row(2), &[5.0]);
+    }
+
+    #[test]
+    fn vec_pointset_counts() {
+        let m = Matrix::from_rows(vec![vec![0.0, 0.0], vec![3.0, 4.0]]);
+        let ps = VecPointSet::new(m, Metric::L2);
+        assert!((ps.dist(0, 1) - 5.0).abs() < 1e-6);
+        assert_eq!(ps.counter().get(), 1);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let x = Matrix::from_rows((0..100).map(|i| vec![i as f32]).collect());
+        let y = (0..100).map(|i| (i % 2) as f32).collect();
+        let ds = LabeledDataset { x, y, n_classes: 2 };
+        let (tr, te) = ds.split(0.2, 1);
+        assert_eq!(tr.x.n, 80);
+        assert_eq!(te.x.n, 20);
+    }
+}

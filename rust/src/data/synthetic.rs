@@ -1,0 +1,403 @@
+//! Synthetic stand-ins for the thesis' evaluation datasets.
+//!
+//! The real corpora (MNIST, 10x PBMC scRNA-seq, Netflix Prize, MovieLens,
+//! Sift-1M, CryptoPairs) are not available on this image; each generator
+//! below reproduces the *statistical property the algorithm's complexity
+//! depends on* — the mapping and the argument for behavioural equivalence
+//! live in DESIGN.md §Substitutions.
+
+use crate::data::Matrix;
+use crate::util::linalg::pca;
+use crate::util::rng::Rng;
+
+/// MNIST-like: mixture of 10 anisotropic Gaussian "digit" clusters in
+/// d=784, marginals clipped to [0,1], ~80% of mass near zero (pixels are
+/// mostly background). Drives Fig 2.1(a), 2.2, 2.3(a), MABSplit tables.
+pub fn mnist_like(n: usize, seed: u64) -> Matrix {
+    mnist_like_d(n, 784, seed)
+}
+
+/// MNIST-like with an explicit dimension (scaling sweeps subsample d).
+pub fn mnist_like_d(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let k = 10;
+    let mut m = Matrix::zeros(n, d);
+    let centers = digit_templates(k, d, seed);
+    let (weights, noise_scales) = class_heterogeneity(k, seed);
+    for i in 0..n {
+        let c = rng.weighted_index(&weights);
+        let row = m.row_mut(i);
+        let nz = noise_scales[c];
+        for j in 0..d {
+            let base = centers[c * d + j];
+            let noise = rng.normal() * nz;
+            let stretch = 1.0 + 0.3 * rng.normal().tanh(); // anisotropy
+            let v = (base as f64) * stretch + noise;
+            row[j] = v.clamp(0.0, 1.0) as f32;
+        }
+    }
+    m
+}
+
+/// Class frequency + noise heterogeneity: real digit classes differ in
+/// prevalence and compactness ('1' is common and tight; '8' diffuse).
+/// This spreads the candidate-medoid arm means — the sub-Gaussian μ_x
+/// distribution §2.4 assumes; perfectly symmetric clusters would tie all
+/// arms and push BanditPAM toward its O(n²) worst case.
+pub(crate) fn class_heterogeneity(k: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut hrng = Rng::new(seed ^ 0x4E7E);
+    let weights: Vec<f64> = (0..k).map(|c| 1.0 / ((c + 1) as f64).powf(0.7)).collect();
+    let noise: Vec<f64> = (0..k).map(|_| 0.04 + 0.12 * hrng.f64()).collect();
+    (weights, noise)
+}
+
+/// Shared "digit" templates: sparse active pixel sets per class plus a
+/// few strongly class-specific *signature* pixels. Real MNIST pixels vary
+/// enormously in how class-discriminative they are — the heterogeneity
+/// both BanditPAM's sigma spread (Fig A.1) and MABSplit's split-gap
+/// structure (Theorem 5) depend on.
+pub(crate) fn digit_templates(k: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut centers = vec![0f32; k * d];
+    // Border mask: ~35% of pixels are dead for EVERY class, like the
+    // always-background border of real MNIST. Dead features are what let
+    // MABSplit stop paying for whole histograms early.
+    let mut brng = Rng::new(seed ^ 0xB0DE);
+    let border: Vec<bool> = (0..d).map(|_| brng.bernoulli(0.35)).collect();
+    for c in 0..k {
+        let mut crng = Rng::new(seed ^ (0xC0FFEE + c as u64));
+        let active = d / 8 + crng.below(d / 8 + 1);
+        for _ in 0..active {
+            let j = crng.below(d);
+            if !border[j] {
+                centers[c * d + j] = (0.35 + 0.45 * crng.f64()) as f32;
+            }
+        }
+        // signature pixels: near-unique to this class, high intensity
+        for s in 0..(d / 32).max(3) {
+            let j = (c * (d / k) + (s * 13) % (d / k)) % d;
+            if !border[j] {
+                centers[c * d + j] = (0.85 + 0.15 * crng.f64()) as f32;
+            }
+        }
+    }
+    centers
+}
+
+/// scRNA-seq-like: overdispersed negative-binomial gene counts with k
+/// latent cell types and library-size variation, log1p-transformed.
+/// Used with l1 distance (Fig 2.3(b)).
+pub fn scrna_like(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let k = 8;
+    // Per-type expression profiles: most genes off, some marker genes hot.
+    let mut profiles = vec![0f64; k * d];
+    for c in 0..k {
+        let mut crng = Rng::new(seed ^ (0xBEEF + c as u64));
+        for j in 0..d {
+            profiles[c * d + j] = if crng.bernoulli(0.08) {
+                1.0 + 9.0 * crng.f64() // marker gene mean expression
+            } else {
+                0.05 + 0.2 * crng.f64()
+            };
+        }
+    }
+    let mut m = Matrix::zeros(n, d);
+    for i in 0..n {
+        let c = rng.below(k);
+        let lib = (0.5 + rng.f64()) * 1.2; // library size factor
+        let row = m.row_mut(i);
+        for j in 0..d {
+            let mu = profiles[c * d + j] * lib;
+            let count = rng.neg_binomial(mu.max(1e-3), 2.0);
+            row[j] = ((count as f64) + 1.0).ln() as f32; // log1p
+        }
+    }
+    m
+}
+
+/// scRNA-PCA-like (Appendix A.1.3): the scRNA-like data projected onto its
+/// top-10 principal components — the *violated-assumption* regime where
+/// arm means concentrate and BanditPAM's scaling degrades to ~n^1.2.
+pub fn scrna_pca_like(n: usize, seed: u64) -> Matrix {
+    let raw = scrna_like(n, 256, seed);
+    let (_, proj) = pca(&raw.data, raw.n, raw.d, 10, seed ^ 0xACE);
+    Matrix { data: proj, n, d: 10 }
+}
+
+/// NORMAL_CUSTOM (§C.2.1): per-atom latent mean θ_i ~ N(0,1); coordinates
+/// i.i.d. N(θ_i, 1). Gaps Δ_i do not depend on d — BanditMIPS's O(1)
+/// regime. Returns (atoms [n x d], queries [q x d]).
+pub fn normal_custom(n: usize, d: usize, n_queries: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let mut atoms = Matrix::zeros(n, d);
+    for i in 0..n {
+        let theta = rng.normal();
+        let row = atoms.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.normal_ms(theta, 1.0) as f32;
+        }
+    }
+    let mut queries = Matrix::zeros(n_queries, d);
+    for i in 0..n_queries {
+        let theta = rng.normal();
+        let row = queries.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.normal_ms(theta, 1.0) as f32;
+        }
+    }
+    (atoms, queries)
+}
+
+/// CORRELATED_NORMAL_CUSTOM (§C.2.1): query q with latent mean θ; atom i
+/// is w_i·q + noise with w_i ~ N(0,1) — atoms correlated with the query.
+pub fn correlated_normal_custom(
+    n: usize,
+    d: usize,
+    n_queries: usize,
+    seed: u64,
+) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let theta = rng.normal();
+    let q0: Vec<f32> = (0..d).map(|_| rng.normal_ms(theta, 1.0) as f32).collect();
+    let mut atoms = Matrix::zeros(n, d);
+    for i in 0..n {
+        let w = rng.normal();
+        let row = atoms.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (w * q0[j] as f64 + 0.3 * rng.normal()) as f32;
+        }
+    }
+    let mut queries = Matrix::zeros(n_queries, d);
+    for i in 0..n_queries {
+        let row = queries.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (q0[j] as f64 + 0.1 * rng.normal()) as f32;
+        }
+        let _ = i;
+    }
+    (atoms, queries)
+}
+
+/// Netflix-like / MovieLens-like: low-rank rating structure. Item vectors
+/// U·V^T row slices with entries pushed into [0,5] — reproducing bounded
+/// coordinate products (the σ=(b²−a²)/4 sub-Gaussian regime §4.3.2).
+pub fn lowrank_like(
+    n_items: usize,
+    d_users: usize,
+    rank: usize,
+    seed: u64,
+) -> Matrix {
+    let mut rng = Rng::new(seed);
+    // item factors [n x r], user factors [d x r]
+    let fi: Vec<f64> = (0..n_items * rank).map(|_| rng.normal() * 0.8).collect();
+    let fu: Vec<f64> = (0..d_users * rank).map(|_| rng.normal() * 0.8).collect();
+    let mut m = Matrix::zeros(n_items, d_users);
+    for i in 0..n_items {
+        let row = m.row_mut(i);
+        for (u, v) in row.iter_mut().enumerate() {
+            let mut s = 2.5; // rating baseline
+            for r in 0..rank {
+                s += fi[i * rank + r] * fu[u * rank + r];
+            }
+            s += 0.3 * rng.normal();
+            *v = s.clamp(0.0, 5.0) as f32;
+        }
+    }
+    m
+}
+
+/// Sift-1M-like / CryptoPairs-like: the latent-variable model of §4.4 —
+/// atom i's coordinates are i.i.d. draws around a fixed μ_i, so Δ is
+/// independent of d even at d = 10^6. `scale` mimics the raw magnitude of
+/// the source data (SIFT descriptors ~[0,255]; crypto prices large).
+pub fn highdim_like(n: usize, d: usize, scale: f64, seed: u64) -> (Matrix, Matrix) {
+    // Per-atom sub-streams keep each atom's latent mean μ_i *identical
+    // across d*, so sweeping d changes only the sample count per arm, not
+    // the problem's gap structure — the property Figs 4.1/4.4 rely on.
+    let mut atoms = Matrix::zeros(n, d);
+    for i in 0..n {
+        let mut arng = Rng::new(seed ^ (0xA70A * (i as u64 + 1)));
+        let mu = arng.f64() * scale;
+        let row = atoms.row_mut(i);
+        for v in row.iter_mut() {
+            *v = (mu + 0.15 * scale * arng.normal()).max(0.0) as f32;
+        }
+    }
+    let mut q = Matrix::zeros(1, d);
+    let mut qrng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    let qmu = qrng.f64() * scale;
+    for v in q.row_mut(0).iter_mut() {
+        *v = (qmu + 0.15 * scale * qrng.normal()).max(0.0) as f32;
+    }
+    (atoms, q)
+}
+
+/// SymmetricNormal (§C.6): every atom's coordinates i.i.d. from the *same*
+/// N(0,1) — gaps shrink as 1/√d and BanditMIPS degrades to O(d).
+pub fn symmetric_normal(n: usize, d: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let mut atoms = Matrix::zeros(n, d);
+    for i in 0..n {
+        for v in atoms.row_mut(i).iter_mut() {
+            *v = rng.normal() as f32;
+        }
+    }
+    let mut q = Matrix::zeros(1, d);
+    for v in q.row_mut(0).iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    (atoms, q)
+}
+
+/// SimpleSong (§C.5.1, Table C.1): 44.1 kHz audio; the song alternates
+/// 1-minute A intervals (C4-E4-G4 chord) and B intervals (G4-C5-E5 chord)
+/// with note weights 1:2:3 : 3:2.5:1.5; atoms are unit-amplitude note
+/// waves. Returns (atoms, song). `seconds_per_interval` shrinks the
+/// interval from the paper's 60 s to keep d manageable.
+pub fn simple_song(
+    repeats: usize,
+    seconds_per_interval: f64,
+    extra_notes: usize,
+    seed: u64,
+) -> (Matrix, Vec<f32>) {
+    const SR: f64 = 44_100.0;
+    let note_freqs = [256.0, 330.0, 392.0, 512.0, 660.0, 784.0]; // C4 E4 G4 C5 E5 G5
+    let a_weights = [1.0, 2.0, 3.0, 0.0, 0.0, 0.0];
+    let b_weights = [0.0, 0.0, 3.0, 2.5, 1.5, 0.0]; // G4-C5-E5
+    let interval_len = (SR * seconds_per_interval) as usize;
+    let d = 2 * repeats * interval_len;
+
+    let mut song = vec![0f32; d];
+    for t in 0..d {
+        let interval = t / interval_len;
+        let weights = if interval % 2 == 0 { &a_weights } else { &b_weights };
+        let time = t as f64 / SR;
+        let mut s = 0.0;
+        for (w, f) in weights.iter().zip(&note_freqs) {
+            s += w * (2.0 * std::f64::consts::PI * f * time).sin();
+        }
+        song[t] = s as f32;
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut freqs: Vec<f64> = note_freqs.to_vec();
+    for _ in 0..extra_notes {
+        freqs.push(100.0 + 900.0 * rng.f64());
+    }
+    let mut atoms = Matrix::zeros(freqs.len(), d);
+    for (i, f) in freqs.iter().enumerate() {
+        let row = atoms.row_mut(i);
+        for (t, v) in row.iter_mut().enumerate() {
+            *v = (2.0 * std::f64::consts::PI * f * (t as f64 / SR)).sin() as f32;
+        }
+    }
+    (atoms, song)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_in_unit_box() {
+        let m = mnist_like_d(50, 100, 1);
+        assert_eq!((m.n, m.d), (50, 100));
+        assert!(m.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // non-degenerate
+        let nz = m.data.iter().filter(|&&v| v > 0.0).count();
+        assert!(nz > 100);
+    }
+
+    #[test]
+    fn scrna_like_nonneg_sparseish() {
+        let m = scrna_like(40, 200, 2);
+        assert!(m.data.iter().all(|&v| v >= 0.0));
+        let zeros = m.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > m.data.len() / 10, "expected sparse-ish counts");
+    }
+
+    #[test]
+    fn scrna_pca_has_10_dims() {
+        let m = scrna_pca_like(30, 3);
+        assert_eq!(m.d, 10);
+        assert_eq!(m.n, 30);
+    }
+
+    #[test]
+    fn normal_custom_gap_stable_in_d() {
+        // The defining property: normalized-inner-product gaps do not shrink
+        // with d. Compare best-vs-2nd gap at d=200 vs d=2000.
+        let gap = |d: usize| {
+            let (atoms, q) = normal_custom(50, d, 1, 9);
+            let mut mus: Vec<f64> = (0..50)
+                .map(|i| {
+                    let mut s = 0f64;
+                    for j in 0..d {
+                        s += (atoms.row(i)[j] * q.row(0)[j]) as f64;
+                    }
+                    s / d as f64
+                })
+                .collect();
+            mus.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            mus[0] - mus[1]
+        };
+        let g_small = gap(200);
+        let g_large = gap(2000);
+        assert!(g_large > 0.2 * g_small, "gap collapsed: {g_small} -> {g_large}");
+    }
+
+    #[test]
+    fn symmetric_normal_gap_shrinks_in_d() {
+        let gap = |d: usize| {
+            let (atoms, q) = symmetric_normal(50, d, 11);
+            let mut mus: Vec<f64> = (0..50)
+                .map(|i| {
+                    let mut s = 0f64;
+                    for j in 0..d {
+                        s += (atoms.row(i)[j] * q.row(0)[j]) as f64;
+                    }
+                    s / d as f64
+                })
+                .collect();
+            mus.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            mus[0] - mus[24] // robust spread rather than top-2 noise
+        };
+        let g_small = gap(100);
+        let g_large = gap(10_000);
+        assert!(
+            g_large < 0.5 * g_small,
+            "symmetric gaps should shrink: {g_small} -> {g_large}"
+        );
+    }
+
+    #[test]
+    fn lowrank_ratings_bounded() {
+        let m = lowrank_like(20, 100, 5, 13);
+        assert!(m.data.iter().all(|&v| (0.0..=5.0).contains(&v)));
+    }
+
+    #[test]
+    fn simple_song_best_atom_is_g4() {
+        // G4 has weight 3 in both intervals — it is the MIPS answer.
+        let (atoms, song) = simple_song(1, 0.05, 4, 17);
+        let d = song.len();
+        let mut best = (0usize, f64::MIN);
+        for i in 0..atoms.n {
+            let mut s = 0f64;
+            for t in 0..d {
+                s += (atoms.row(i)[t] * song[t]) as f64;
+            }
+            if s > best.1 {
+                best = (i, s);
+            }
+        }
+        assert_eq!(best.0, 2, "expected G4 (index 2) to maximize inner product");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = mnist_like_d(10, 50, 99);
+        let b = mnist_like_d(10, 50, 99);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,283 @@
+//! Labeled tabular generators for Chapter 3 (MABSplit) — stand-ins for
+//! MNIST / APS-Scania / Covertype (classification) and Beijing Air-Quality
+//! / SGEMM (regression), plus scikit-learn-style `make_classification` /
+//! `make_regression` used by the feature-stability experiments (Table 3.5).
+
+use crate::data::{LabeledDataset, Matrix};
+use crate::util::rng::Rng;
+
+/// scikit-learn-style classification generator: `n_informative` features
+/// carry class-dependent Gaussian signal placed at random vertices of a
+/// hypercube; the rest are noise. (Table 3.5 "Random Classification".)
+pub fn make_classification(
+    n: usize,
+    n_features: usize,
+    n_informative: usize,
+    n_classes: usize,
+    class_sep: f64,
+    seed: u64,
+) -> LabeledDataset {
+    assert!(n_informative <= n_features);
+    let mut rng = Rng::new(seed);
+    // Class centroids at distinct random vertices of the informative
+    // hypercube — distinctness guarantees every class pair is separable
+    // along at least one informative feature.
+    let mut centroids = vec![0f64; n_classes * n_informative];
+    let mut used: Vec<Vec<bool>> = Vec::new();
+    for cls in 0..n_classes {
+        let vertex = loop {
+            let v: Vec<bool> = (0..n_informative).map(|_| rng.bernoulli(0.5)).collect();
+            if !used.contains(&v) || used.len() >= (1usize << n_informative.min(20)) {
+                break v;
+            }
+        };
+        for (j, &b) in vertex.iter().enumerate() {
+            centroids[cls * n_informative + j] = if b { class_sep } else { -class_sep };
+        }
+        used.push(vertex);
+    }
+    // Fixed random positions of informative features among all features —
+    // shuffled so importance-stability has something to find.
+    let mut feat_idx: Vec<usize> = (0..n_features).collect();
+    rng.shuffle(&mut feat_idx);
+    let informative: Vec<usize> = feat_idx[..n_informative].to_vec();
+
+    let mut x = Matrix::zeros(n, n_features);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let c = rng.below(n_classes);
+        y[i] = c as f32;
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32; // noise base
+        }
+        for (k, &j) in informative.iter().enumerate() {
+            row[j] = (centroids[c * n_informative + k] + rng.normal()) as f32;
+        }
+    }
+    LabeledDataset { x, y, n_classes }
+}
+
+/// scikit-learn-style regression generator: y = X_informative · w + noise.
+/// (Table 3.5 "Random Regression" and Appendix B.2 "Random Linear Model".)
+pub fn make_regression(
+    n: usize,
+    n_features: usize,
+    n_informative: usize,
+    noise: f64,
+    seed: u64,
+) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let mut feat_idx: Vec<usize> = (0..n_features).collect();
+    rng.shuffle(&mut feat_idx);
+    let informative: Vec<usize> = feat_idx[..n_informative].to_vec();
+    let w: Vec<f64> = (0..n_informative).map(|_| 10.0 * (rng.f64() + 0.1)).collect();
+
+    let mut x = Matrix::zeros(n, n_features);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let mut t = 0f64;
+        for (k, &j) in informative.iter().enumerate() {
+            t += w[k] * row[j] as f64;
+        }
+        y[i] = (t + noise * rng.normal()) as f32;
+    }
+    LabeledDataset { x, y, n_classes: 0 }
+}
+
+/// MNIST-like classification: the Ch.2 image generator with the cluster
+/// index as the digit label.
+pub fn mnist_classification(n: usize, d: usize, seed: u64) -> LabeledDataset {
+    // Same digit templates as data::synthetic::mnist_like_d, plus labels.
+    let mut rng = Rng::new(seed);
+    let k = 10;
+    let centers = crate::data::synthetic::digit_templates(k, d, seed);
+    let (weights, noise_scales) = crate::data::synthetic::class_heterogeneity(k, seed);
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let c = rng.weighted_index(&weights);
+        y[i] = c as f32;
+        let row = x.row_mut(i);
+        let nz = noise_scales[c];
+        for j in 0..d {
+            let base = centers[c * d + j];
+            let noise = rng.normal() * nz;
+            let stretch = 1.0 + 0.3 * rng.normal().tanh();
+            row[j] = ((base as f64) * stretch + noise).clamp(0.0, 1.0) as f32;
+        }
+    }
+    LabeledDataset { x, y, n_classes: k }
+}
+
+/// APS-Scania-like: heavily imbalanced binary failure prediction (the real
+/// set is ~1.7% positive) with a handful of strongly predictive sensor
+/// aggregates among many weak ones. Easy high-accuracy regime (the paper
+/// reports 0.985 for everything).
+pub fn aps_like(n: usize, n_features: usize, seed: u64) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::zeros(n, n_features);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let pos = rng.bernoulli(0.02);
+        y[i] = pos as u8 as f32;
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = (rng.exp(1.0)) as f32; // skewed sensor histogram counts
+        }
+        if pos {
+            for j in 0..6.min(n_features) {
+                row[j] += (4.0 + rng.normal()) as f32;
+            }
+        }
+    }
+    LabeledDataset { x, y, n_classes: 2 }
+}
+
+/// Covertype-like: 7-class forest cover prediction from cartographic
+/// variables — a few continuous informative features plus one-hot-ish
+/// soil-type blocks; classes overlap (paper accuracy ≈ 0.5–0.68).
+pub fn covtype_like(n: usize, seed: u64) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let n_cont = 10;
+    let n_onehot = 44;
+    let d = n_cont + n_onehot;
+    let k = 7;
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let c = rng.below(k);
+        y[i] = c as f32;
+        let row = x.row_mut(i);
+        // continuous: elevation-style signals moderately separated by
+        // class (paper-era covtype accuracy sits around 0.5-0.68)
+        for (j, v) in row.iter_mut().take(n_cont).enumerate() {
+            let sep = 1.4 * ((c as f64) - (k as f64) / 2.0) / k as f64 * ((j % 3) as f64 + 1.0);
+            *v = (sep + rng.normal()) as f32;
+        }
+        // one-hot soil type correlated with class but noisy
+        let soil = (c * 6 + rng.below(12)) % n_onehot;
+        row[n_cont + soil] = 1.0;
+    }
+    LabeledDataset { x, y, n_classes: k }
+}
+
+/// Beijing-Air-Quality-like regression: pollution level from 18 weather /
+/// station features with seasonal structure + noise.
+pub fn airquality_like(n: usize, seed: u64) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let d = 18;
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let row = x.row_mut(i);
+        let season = rng.f64() * std::f64::consts::TAU;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = ((season + j as f64).sin() + 0.5 * rng.normal()) as f32;
+        }
+        let temp = row[0] as f64;
+        let wind = row[1] as f64;
+        let dew = row[2] as f64;
+        y[i] = (60.0 + 40.0 * temp - 25.0 * wind + 15.0 * dew * temp
+            + 12.0 * rng.normal()) as f32;
+    }
+    LabeledDataset { x, y, n_classes: 0 }
+}
+
+/// SGEMM-like regression: GPU kernel runtime from 14 tuning parameters —
+/// multiplicative interactions, heavy right tail (runtimes).
+pub fn sgemm_like(n: usize, seed: u64) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let d = 14;
+    let levels = [16.0f32, 32.0, 64.0, 128.0];
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = *rng.choose(&levels);
+        }
+        let work = (row[0] * row[1]) as f64;
+        let tile_penalty = (row[2] as f64 - 64.0).abs() / 64.0;
+        y[i] = (work / 40.0 * (1.0 + tile_penalty) * (1.0 + 0.1 * rng.normal().abs()))
+            as f32;
+    }
+    LabeledDataset { x, y, n_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_labels_in_range() {
+        let ds = make_classification(200, 20, 5, 3, 1.5, 1);
+        assert_eq!(ds.n_classes, 3);
+        assert!(ds.y.iter().all(|&y| y < 3.0 && y >= 0.0 && y.fract() == 0.0));
+    }
+
+    #[test]
+    fn classification_is_learnable() {
+        // Informative features separate classes: 1-NN on 20 points should
+        // beat chance comfortably.
+        let ds = make_classification(400, 10, 8, 2, 2.5, 2);
+        let (train, test) = ds.split(0.25, 3);
+        let mut correct = 0;
+        for i in 0..test.x.n {
+            let mut best = (f64::MAX, 0f32);
+            for j in 0..train.x.n {
+                let d = crate::data::distance::l2(test.x.row(i), train.x.row(j));
+                if d < best.0 {
+                    best = (d, train.y[j]);
+                }
+            }
+            if best.1 == test.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.x.n as f64;
+        assert!(acc > 0.75, "1-NN accuracy only {acc}");
+    }
+
+    #[test]
+    fn regression_signal_dominates_noise() {
+        let ds = make_regression(500, 12, 4, 0.5, 4);
+        let var_y = crate::util::stats::std_dev(
+            &ds.y.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(var_y > 5.0, "labels nearly constant: {var_y}");
+    }
+
+    #[test]
+    fn aps_like_imbalanced() {
+        let ds = aps_like(5000, 30, 5);
+        let pos = ds.y.iter().filter(|&&y| y == 1.0).count();
+        let frac = pos as f64 / 5000.0;
+        assert!(frac > 0.005 && frac < 0.06, "positive fraction {frac}");
+    }
+
+    #[test]
+    fn covtype_has_7_classes() {
+        let ds = covtype_like(700, 6);
+        let mut seen = std::collections::HashSet::new();
+        for &y in &ds.y {
+            seen.insert(y as usize);
+        }
+        assert_eq!(seen.len(), 7);
+        assert_eq!(ds.x.d, 54);
+    }
+
+    #[test]
+    fn regression_generators_shapes() {
+        let a = airquality_like(100, 7);
+        assert_eq!(a.x.d, 18);
+        assert!(a.is_regression());
+        let s = sgemm_like(100, 8);
+        assert_eq!(s.x.d, 14);
+        assert!(s.y.iter().all(|&v| v > 0.0));
+    }
+}

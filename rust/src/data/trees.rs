@@ -1,0 +1,381 @@
+//! Random program trees + tree edit distance — the HOC4 substitute.
+//!
+//! The thesis clusters Code.org "Hour of Code 4" abstract syntax trees
+//! under the Zhang–Shasha tree edit distance. We build (a) a generator of
+//! random ASTs from a toy block-programming grammar with a skewed
+//! popularity distribution (real student submissions cluster around a few
+//! canonical solutions plus noise), and (b) an exact Zhang–Shasha
+//! ordered-tree edit distance. Both exercise the "expensive, exotic
+//! metric" code path that motivates k-medoids over k-means.
+
+use crate::metrics::OpCounter;
+use crate::util::rng::Rng;
+
+/// Block-programming AST node labels (a toy HOC-like grammar).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Label {
+    Program,
+    Repeat,
+    IfPath,
+    MoveForward,
+    TurnLeft,
+    TurnRight,
+}
+
+pub const LABELS: [Label; 6] = [
+    Label::Program,
+    Label::Repeat,
+    Label::IfPath,
+    Label::MoveForward,
+    Label::TurnLeft,
+    Label::TurnRight,
+];
+
+/// An ordered, labeled tree stored as (label, children) nodes.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub label: Label,
+    pub children: Vec<Tree>,
+}
+
+impl Tree {
+    pub fn leaf(label: Label) -> Tree {
+        Tree { label, children: Vec::new() }
+    }
+
+    pub fn size(&self) -> usize {
+        1 + self.children.iter().map(Tree::size).sum::<usize>()
+    }
+
+    pub fn depth(&self) -> usize {
+        1 + self.children.iter().map(Tree::depth).max().unwrap_or(0)
+    }
+}
+
+/// Generate a random student-like program: a canonical solution (chosen
+/// among a few archetypes) perturbed by `edits` random mutations.
+pub fn random_program(rng: &mut Rng, archetype: usize, edits: usize) -> Tree {
+    let mut t = canonical(archetype % N_ARCHETYPES);
+    for _ in 0..edits {
+        mutate(&mut t, rng);
+    }
+    t
+}
+
+pub const N_ARCHETYPES: usize = 4;
+
+fn canonical(which: usize) -> Tree {
+    let mv = || Tree::leaf(Label::MoveForward);
+    let tl = || Tree::leaf(Label::TurnLeft);
+    let tr = || Tree::leaf(Label::TurnRight);
+    match which {
+        0 => Tree {
+            label: Label::Program,
+            children: vec![Tree { label: Label::Repeat, children: vec![mv(), tl()] }],
+        },
+        1 => Tree {
+            label: Label::Program,
+            children: vec![mv(), mv(), tr(), mv()],
+        },
+        2 => Tree {
+            label: Label::Program,
+            children: vec![Tree {
+                label: Label::Repeat,
+                children: vec![Tree { label: Label::IfPath, children: vec![mv(), tr()] }, tl()],
+            }],
+        },
+        _ => Tree {
+            label: Label::Program,
+            children: vec![
+                Tree { label: Label::Repeat, children: vec![mv()] },
+                Tree { label: Label::Repeat, children: vec![tl(), mv(), tr()] },
+            ],
+        },
+    }
+}
+
+/// Apply one random structural mutation (insert / delete / relabel).
+fn mutate(t: &mut Tree, rng: &mut Rng) {
+    let n = t.size();
+    let target = rng.below(n);
+    mutate_at(t, target, rng, &mut 0);
+}
+
+fn mutate_at(t: &mut Tree, target: usize, rng: &mut Rng, seen: &mut usize) -> bool {
+    if *seen == target {
+        match rng.below(3) {
+            0 => {
+                // insert a random leaf child at a random position
+                let pos = rng.below(t.children.len() + 1);
+                let lab = *rng.choose(&LABELS[3..]);
+                t.children.insert(pos, Tree::leaf(lab));
+            }
+            1 => {
+                // delete a child (splice grandchildren up), if any
+                if !t.children.is_empty() {
+                    let pos = rng.below(t.children.len());
+                    let removed = t.children.remove(pos);
+                    for (k, gc) in removed.children.into_iter().enumerate() {
+                        t.children.insert(pos + k, gc);
+                    }
+                }
+            }
+            _ => {
+                // relabel (keep Program at the root for well-formedness)
+                if t.label != Label::Program {
+                    t.label = *rng.choose(&LABELS[1..]);
+                }
+            }
+        }
+        return true;
+    }
+    *seen += 1;
+    for c in t.children.iter_mut() {
+        if mutate_at(c, target, rng, seen) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Zhang–Shasha ordered tree edit distance (exact, O(|T1||T2| * depth terms)).
+// ---------------------------------------------------------------------------
+
+struct ZsIndex {
+    labels: Vec<Label>,
+    lmld: Vec<usize>,    // left-most leaf descendant per postorder node
+    keyroots: Vec<usize>,
+}
+
+fn zs_index(t: &Tree) -> ZsIndex {
+    let mut labels = Vec::new();
+    let mut lmld = Vec::new();
+    fn walk(t: &Tree, labels: &mut Vec<Label>, lmld: &mut Vec<usize>) -> usize {
+        let mut first_leaf = usize::MAX;
+        for c in &t.children {
+            let f = walk(c, labels, lmld);
+            if first_leaf == usize::MAX {
+                first_leaf = f;
+            }
+        }
+        let my_index = labels.len();
+        if first_leaf == usize::MAX {
+            first_leaf = my_index;
+        }
+        labels.push(t.label);
+        lmld.push(first_leaf);
+        first_leaf
+    }
+    walk(t, &mut labels, &mut lmld);
+    let n = labels.len();
+    // keyroots: nodes with no parent sharing their left-most leaf — i.e. the
+    // highest node for each distinct lmld value.
+    let mut last_for = std::collections::HashMap::new();
+    for i in 0..n {
+        last_for.insert(lmld[i], i);
+    }
+    let mut keyroots: Vec<usize> = last_for.values().cloned().collect();
+    keyroots.sort_unstable();
+    ZsIndex { labels, lmld, keyroots }
+}
+
+/// Exact tree edit distance with unit costs (insert=delete=relabel=1).
+pub fn tree_edit_distance(a: &Tree, b: &Tree) -> f64 {
+    let ia = zs_index(a);
+    let ib = zs_index(b);
+    let (m, n) = (ia.labels.len(), ib.labels.len());
+    let mut td = vec![0f64; m * n];
+
+    let mut fd = vec![0f64; (m + 1) * (n + 1)]; // scratch forest-distance
+    for &kr1 in &ia.keyroots {
+        for &kr2 in &ib.keyroots {
+            let l1 = ia.lmld[kr1];
+            let l2 = ib.lmld[kr2];
+            let w = kr2 + 2 - l2; // columns l2-1..=kr2 mapped to 0..w
+            // Row r = i+1-l1 in [0, kr1+1-l1], col c = j+1-l2: fd[r][c] is
+            // the distance between forests T1[l1..=i] and T2[l2..=j].
+            let rows = kr1 + 2 - l1;
+            for r in 0..rows {
+                fd[r * w] = r as f64;
+            }
+            for c in 0..w {
+                fd[c] = c as f64;
+            }
+            for i in l1..=kr1 {
+                for j in l2..=kr2 {
+                    let r = i + 1 - l1;
+                    let c = j + 1 - l2;
+                    if ia.lmld[i] == l1 && ib.lmld[j] == l2 {
+                        let relabel = if ia.labels[i] == ib.labels[j] { 0.0 } else { 1.0 };
+                        let v = (fd[(r - 1) * w + c] + 1.0)
+                            .min(fd[r * w + (c - 1)] + 1.0)
+                            .min(fd[(r - 1) * w + (c - 1)] + relabel);
+                        fd[r * w + c] = v;
+                        td[i * n + j] = v;
+                    } else {
+                        let ri = ia.lmld[i] - l1; // row index of forest up to lmld(i)-1
+                        let cj = ib.lmld[j] - l2;
+                        let v = (fd[(r - 1) * w + c] + 1.0)
+                            .min(fd[r * w + (c - 1)] + 1.0)
+                            .min(fd[ri * w + cj] + td[i * n + j]);
+                        fd[r * w + c] = v;
+                    }
+                }
+            }
+        }
+    }
+    td[(m - 1) * n + (n - 1)]
+}
+
+/// A point set over trees under edit distance (counts evaluations).
+pub struct TreePointSet {
+    pub trees: Vec<Tree>,
+    counter: OpCounter,
+}
+
+impl TreePointSet {
+    pub fn new(trees: Vec<Tree>) -> Self {
+        TreePointSet { trees, counter: OpCounter::new() }
+    }
+
+    /// HOC4-like corpus: `n` student programs drawn from skewed archetype
+    /// popularity (Zipf-ish) with geometric-ish edit counts.
+    pub fn hoc4_like(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let weights = [8.0, 4.0, 2.0, 1.0];
+        let trees = (0..n)
+            .map(|_| {
+                let arch = rng.weighted_index(&weights);
+                let edits = {
+                    // geometric-ish: most students are close to canonical
+                    let mut e = 0;
+                    while e < 12 && rng.bernoulli(0.55) {
+                        e += 1;
+                    }
+                    e
+                };
+                random_program(&mut rng, arch, edits)
+            })
+            .collect();
+        TreePointSet::new(trees)
+    }
+}
+
+impl crate::data::PointSet for TreePointSet {
+    fn len(&self) -> usize {
+        self.trees.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.counter.incr();
+        tree_edit_distance(&self.trees[i], &self.trees[j])
+    }
+
+    fn counter(&self) -> &OpCounter {
+        &self.counter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(label: Label, children: Vec<Tree>) -> Tree {
+        Tree { label, children }
+    }
+
+    #[test]
+    fn identical_trees_distance_zero() {
+        let a = canonical(0);
+        assert_eq!(tree_edit_distance(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn single_relabel_costs_one() {
+        let a = t(Label::Program, vec![Tree::leaf(Label::MoveForward)]);
+        let b = t(Label::Program, vec![Tree::leaf(Label::TurnLeft)]);
+        assert_eq!(tree_edit_distance(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn single_insert_costs_one() {
+        let a = t(Label::Program, vec![Tree::leaf(Label::MoveForward)]);
+        let b = t(
+            Label::Program,
+            vec![Tree::leaf(Label::MoveForward), Tree::leaf(Label::TurnLeft)],
+        );
+        assert_eq!(tree_edit_distance(&a, &b), 1.0);
+        assert_eq!(tree_edit_distance(&b, &a), 1.0); // symmetric for unit costs
+    }
+
+    #[test]
+    fn leaf_vs_chain() {
+        // root(a) vs root(a -> b -> c): insert two nodes.
+        let a = Tree::leaf(Label::Program);
+        let b = t(
+            Label::Program,
+            vec![t(Label::Repeat, vec![Tree::leaf(Label::MoveForward)])],
+        );
+        assert_eq!(tree_edit_distance(&a, &b), 2.0);
+    }
+
+    #[test]
+    fn triangle_inequality_sampled() {
+        // Unit-cost tree edit distance is a metric; spot-check triangle
+        // inequality on random programs.
+        let mut rng = Rng::new(41);
+        let trees: Vec<Tree> = (0..12)
+            .map(|i| {
+                let e = rng.below(5);
+                random_program(&mut rng, i % 4, e)
+            })
+            .collect();
+        for i in 0..trees.len() {
+            for j in 0..trees.len() {
+                for k in 0..trees.len() {
+                    let dij = tree_edit_distance(&trees[i], &trees[j]);
+                    let dik = tree_edit_distance(&trees[i], &trees[k]);
+                    let dkj = tree_edit_distance(&trees[k], &trees[j]);
+                    assert!(
+                        dij <= dik + dkj + 1e-9,
+                        "triangle violated: {dij} > {dik} + {dkj}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distance_bounded_by_sizes() {
+        let mut rng = Rng::new(43);
+        for _ in 0..30 {
+            let (a1, e1) = (rng.below(4), rng.below(8));
+            let a = random_program(&mut rng, a1, e1);
+            let (a2, e2) = (rng.below(4), rng.below(8));
+            let b = random_program(&mut rng, a2, e2);
+            let d = tree_edit_distance(&a, &b);
+            assert!(d <= (a.size() + b.size()) as f64);
+            assert!(d >= (a.size() as f64 - b.size() as f64).abs());
+        }
+    }
+
+    #[test]
+    fn hoc4_like_generates_varied_corpus() {
+        let ps = TreePointSet::hoc4_like(50, 7);
+        assert_eq!(ps.trees.len(), 50);
+        let sizes: std::collections::HashSet<usize> =
+            ps.trees.iter().map(|t| t.size()).collect();
+        assert!(sizes.len() > 3, "degenerate corpus");
+    }
+
+    #[test]
+    fn mutation_preserves_root() {
+        let mut rng = Rng::new(47);
+        for _ in 0..100 {
+            let arch = rng.below(4);
+            let p = random_program(&mut rng, arch, 6);
+            assert_eq!(p.label, Label::Program);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Chapter 3 experiments: Tables 3.1–3.5 and Appendix B.2/B.4/B.8.
+
+use std::time::Instant;
+
+use crate::data::tabular::{
+    airquality_like, aps_like, covtype_like, make_classification, make_regression,
+    mnist_classification, sgemm_like,
+};
+use crate::data::LabeledDataset;
+use crate::forest::ensemble::{Forest, ForestConfig, ForestKind};
+use crate::forest::importance::{stability_experiment, ImportanceKind};
+use crate::forest::split::{feature_ranges, make_edges, solve_mab, SplitContext};
+use crate::forest::tree::Solver;
+use crate::forest::Impurity;
+use crate::metrics::OpCounter;
+use crate::util::rng::Rng;
+use crate::util::stats::fmt_mean_ci;
+use crate::util::table::Table;
+
+const KINDS: [(&str, ForestKind); 3] = [
+    ("RF", ForestKind::RandomForest),
+    ("ExtraTrees", ForestKind::ExtraTrees),
+    ("RP", ForestKind::RandomPatches),
+];
+
+fn fit_eval(
+    ds: &LabeledDataset,
+    kind: ForestKind,
+    solver: Solver,
+    n_trees: usize,
+    max_depth: usize,
+    budget: Option<u64>,
+    seed: u64,
+) -> (f64, u64, f64, usize, usize) {
+    let (train, test) = ds.split(0.2, seed);
+    let c = OpCounter::new();
+    let mut cfg = ForestConfig::new(kind, solver);
+    cfg.n_trees = n_trees;
+    cfg.max_depth = max_depth;
+    cfg.budget = budget;
+    cfg.seed = seed;
+    let t0 = Instant::now();
+    let f = Forest::fit(&train, &cfg, &c);
+    let secs = t0.elapsed().as_secs_f64();
+    let metric = if ds.is_regression() { f.mse(&test) } else { f.accuracy(&test) };
+    let splits: usize = f.trees.iter().map(|t| t.nodes_split).sum();
+    (secs, c.get(), metric, f.trees.len(), splits)
+}
+
+/// Table 3.1: classification — wall-clock, insertions, accuracy, ±MABSplit.
+pub fn tab3_1(seed: u64) {
+    let datasets: Vec<(&str, LabeledDataset)> = vec![
+        ("MNIST-like (N=6000)", mnist_classification(6000, 196, seed)),
+        ("APS-like (N=24000)", aps_like(24000, 60, seed)),
+        ("Covertype-like (N=20000)", covtype_like(20000, seed)),
+    ];
+    for (name, ds) in &datasets {
+        println!("--- {name} ---");
+        let mut table = Table::new(&["Model", "Train time (s)", "Insertions", "Test accuracy"]);
+        for (kname, kind) in KINDS {
+            for (sname, solver) in [("", Solver::Exact), (" + MABSplit", Solver::mab())] {
+                let mut times = Vec::new();
+                let mut ins = Vec::new();
+                let mut accs = Vec::new();
+                for t in 0..3u64 {
+                    let (secs, i, acc, _, _) =
+                        fit_eval(ds, kind, solver, 5, 5, None, seed ^ (t * 31 + 1));
+                    times.push(secs);
+                    ins.push(i as f64);
+                    accs.push(acc);
+                }
+                table.row(&[
+                    format!("{kname}{sname}"),
+                    fmt_mean_ci(&times),
+                    format!("{:.3e}", crate::util::stats::mean(&ins)),
+                    fmt_mean_ci(&accs),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("tab3.1_{}", name.split(' ').next().unwrap())).ok();
+    }
+    println!("paper shape: MABSplit cuts insertions 10-100x at comparable accuracy.");
+}
+
+/// Table 3.2: regression — wall-clock + test MSE, ±MABSplit.
+pub fn tab3_2(seed: u64) {
+    let datasets: Vec<(&str, LabeledDataset)> = vec![
+        ("AirQuality-like (N=20000)", airquality_like(20000, seed)),
+        ("SGEMM-like (N=12000)", sgemm_like(12000, seed)),
+    ];
+    for (name, ds) in &datasets {
+        println!("--- {name} ---");
+        let mut table = Table::new(&["Model", "Train time (s)", "Insertions", "Test MSE"]);
+        for (kname, kind) in KINDS {
+            for (sname, solver) in [("", Solver::Exact), (" + MABSplit", Solver::mab())] {
+                let mut times = Vec::new();
+                let mut ins = Vec::new();
+                let mut mses = Vec::new();
+                for t in 0..3u64 {
+                    let (secs, i, mse, _, _) =
+                        fit_eval(ds, kind, solver, 5, 4, None, seed ^ (t * 37 + 5));
+                    times.push(secs);
+                    ins.push(i as f64);
+                    mses.push(mse);
+                }
+                table.row(&[
+                    format!("{kname}{sname}"),
+                    fmt_mean_ci(&times),
+                    format!("{:.3e}", crate::util::stats::mean(&ins)),
+                    fmt_mean_ci(&mses),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("tab3.2_{}", name.split('-').next().unwrap())).ok();
+    }
+    println!("paper shape: ~2x faster regression training at equal MSE.");
+}
+
+/// Table 3.3: classification under a fixed insertion budget.
+pub fn tab3_3(seed: u64) {
+    let datasets: Vec<(&str, LabeledDataset, u64)> = vec![
+        ("MNIST-like", mnist_classification(6000, 196, seed), 6_000 * 14 * 3),
+        ("APS-like", aps_like(6000, 60, seed), 6_000 * 8 * 2),
+        ("Covertype-like", covtype_like(20000, seed), 20_000 * 7 * 2),
+    ];
+    for (name, ds, budget) in &datasets {
+        println!("--- {name} (budget {budget}) ---");
+        let mut table = Table::new(&["Model", "Splits built", "Trees", "Test accuracy"]);
+        for (kname, kind) in KINDS {
+            for (sname, solver) in [("", Solver::Exact), (" + MABSplit", Solver::mab())] {
+                let mut trees = Vec::new();
+                let mut accs = Vec::new();
+                let mut splits_v = Vec::new();
+                for t in 0..3u64 {
+                    let (_, _, acc, ntrees, splits) =
+                        fit_eval(ds, kind, solver, 100, 5, Some(*budget), seed ^ (t * 41 + 3));
+                    trees.push(ntrees as f64);
+                    accs.push(acc);
+                    splits_v.push(splits as f64);
+                }
+                table.row(&[
+                    format!("{kname}{sname}"),
+                    fmt_mean_ci(&splits_v),
+                    fmt_mean_ci(&trees),
+                    fmt_mean_ci(&accs),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("tab3.3_{name}")).ok();
+    }
+    println!("paper shape: MABSplit affords many more trees under the same budget → higher accuracy.");
+}
+
+/// Table 3.4: regression under a fixed insertion budget.
+pub fn tab3_4(seed: u64) {
+    let datasets: Vec<(&str, LabeledDataset, u64)> = vec![
+        ("AirQuality-like", airquality_like(20000, seed), 20_000 * 5 * 2),
+        ("SGEMM-like", sgemm_like(12000, seed), 12_000 * 4 * 2),
+    ];
+    for (name, ds, budget) in &datasets {
+        println!("--- {name} (budget {budget}) ---");
+        let mut table = Table::new(&["Model", "Splits built", "Trees", "Test MSE"]);
+        for (kname, kind) in KINDS {
+            for (sname, solver) in [("", Solver::Exact), (" + MABSplit", Solver::mab())] {
+                let mut trees = Vec::new();
+                let mut mses = Vec::new();
+                let mut splits_v = Vec::new();
+                for t in 0..3u64 {
+                    let (_, _, mse, ntrees, splits) =
+                        fit_eval(ds, kind, solver, 100, 4, Some(*budget), seed ^ (t * 43 + 9));
+                    trees.push(ntrees as f64);
+                    mses.push(mse);
+                    splits_v.push(splits as f64);
+                }
+                table.row(&[
+                    format!("{kname}{sname}"),
+                    fmt_mean_ci(&splits_v),
+                    fmt_mean_ci(&trees),
+                    fmt_mean_ci(&mses),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("tab3.4_{name}")).ok();
+    }
+    println!("paper shape: more trees under budget → lower MSE with MABSplit.");
+}
+
+/// Table 3.5: feature-selection stability under a fixed budget.
+pub fn tab3_5(seed: u64) {
+    let mut table = Table::new(&["Importance model", "Metric", "Dataset", "Stability"]);
+    let cls = make_classification(6000, 40, 5, 2, 2.5, seed);
+    let reg = make_regression(6000, 40, 5, 1.0, seed ^ 1);
+    for (dname, ds) in [("Random Classification", &cls), ("Random Regression", &reg)] {
+        let budget = Some(6_000u64 * 6 * 3);
+        for (mname, kind) in [("MDI", ImportanceKind::Mdi), ("Permutation", ImportanceKind::Permutation)] {
+            for (sname, solver) in [("RF", Solver::Exact), ("RF + MABSplit", Solver::mab())] {
+                let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
+                cfg.n_trees = 60;
+                cfg.max_depth = 4;
+                cfg.budget = budget;
+                cfg.seed = seed;
+                let s = stability_experiment(ds, &cfg, kind, 5, 4);
+                table.row(&[
+                    sname.to_string(),
+                    mname.to_string(),
+                    dname.to_string(),
+                    format!("{s:.3}"),
+                ]);
+            }
+        }
+    }
+    table.print();
+    table.write_csv("tab3.5").ok();
+    println!("paper shape: MABSplit-budget forests select features more stably.");
+}
+
+/// Fig B.4: the small-n crossover — exact wins below ~1k points.
+pub fn fig_b4(seed: u64) {
+    let mut table = Table::new(&["n", "exact insertions", "MABSplit insertions", "winner"]);
+    for &n in &[250usize, 500, 1000, 2000, 4000, 8000] {
+        let ds = mnist_classification(n, 196, seed ^ n as u64);
+        let ex = fit_eval(&ds, ForestKind::RandomForest, Solver::Exact, 3, 4, None, seed);
+        let mb = fit_eval(&ds, ForestKind::RandomForest, Solver::mab(), 3, 4, None, seed);
+        table.row(&[
+            n.to_string(),
+            ex.1.to_string(),
+            mb.1.to_string(),
+            if mb.1 < ex.1 { "MABSplit" } else { "exact" }.to_string(),
+        ]);
+    }
+    table.print();
+    table.write_csv("figB.4").ok();
+    println!("paper: crossover at ≈1.1k points; exact wins below, MABSplit above.");
+}
+
+/// Table B.2-like: deep-tree wall-clock, exact vs MABSplit.
+pub fn tab_b2(seed: u64) {
+    let ds = mnist_classification(12000, 196, seed);
+    let mut table = Table::new(&["Model", "Train time (s)", "Test accuracy"]);
+    for (name, solver) in [("Histogram tree (exact)", Solver::Exact), ("Histogram tree (MABSplit)", Solver::mab())] {
+        let (secs, _, acc, _, _) =
+            fit_eval(&ds, ForestKind::RandomForest, solver, 1, 8, None, seed);
+        table.row(&[name.to_string(), format!("{secs:.3}"), format!("{acc:.3}")]);
+    }
+    table.print();
+    table.write_csv("tabB.2").ok();
+    println!("paper: MABSplit ~4-10x faster at comparable accuracy on deep trees.");
+}
+
+/// Appendix B.2: single-split insertions are flat in n.
+pub fn app_b2(seed: u64) {
+    let mut table = Table::new(&["n", "MABSplit insertions (single split)", "exact n*m"]);
+    for &n in &[5_000usize, 10_000, 20_000, 40_000] {
+        // One dominant informative feature: split-quality gaps are then
+        // n-independent (the paper's B.2 regime). With several *equally*
+        // informative features the arms tie and MABSplit rightly degrades
+        // toward O(n) — that worst case is figC.5's analogue, not B.2's.
+        let ds = make_classification(n, 12, 1, 2, 2.5, seed);
+        let rows: Vec<usize> = (0..n).collect();
+        let features: Vec<usize> = (0..12).collect();
+        let ranges = feature_ranges(&ds);
+        let mut rng = Rng::new(seed);
+        let edges = make_edges(&features, &ranges, 10, false, &mut rng);
+        let c = OpCounter::new();
+        let ctx = SplitContext {
+            ds: &ds,
+            rows: &rows,
+            features: &features,
+            edges,
+            impurity: Impurity::Gini,
+            counter: &c,
+        };
+        let _ = solve_mab(&ctx, 100, 0.01, seed).unwrap();
+        table.row(&[n.to_string(), c.get().to_string(), (n * 12).to_string()]);
+    }
+    table.print();
+    table.write_csv("appB.2").ok();
+    println!("paper: MABSplit's per-split complexity does not grow with n (O(1) in n).");
+}

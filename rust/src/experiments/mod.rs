@@ -1,0 +1,83 @@
+//! Experiment harnesses: one per table/figure of the thesis' evaluation.
+//!
+//! `repro exp <id>` runs one (see DESIGN.md's index for the id ↔ artifact
+//! mapping); `repro exp all` runs the suite. Every harness prints a table
+//! shaped like the paper's and writes `results/<id>.csv`. Scales are
+//! chosen so the whole suite finishes in minutes on a laptop while
+//! preserving the paper's *shape*: who wins, the scaling slopes, where
+//! crossovers fall.
+
+pub mod ablations;
+pub mod ch2;
+pub mod ch3;
+pub mod ch4;
+
+/// Registry of experiment ids → (description, runner).
+pub fn registry() -> Vec<(&'static str, &'static str, fn(u64))> {
+    vec![
+        ("fig2.1a", "clustering loss vs PAM (BanditPAM/CLARANS/Voronoi/CLARA)", ch2::fig2_1a as fn(u64)),
+        ("fig2.1b", "BanditPAM dist calls/iter vs n — HOC4-like tree edit, k=2", ch2::fig2_1b),
+        ("fig2.2", "BanditPAM calls/iter vs n — MNIST-like l2, k=5 & k=10", ch2::fig2_2),
+        ("fig2.3", "BanditPAM calls/iter vs n — cosine & scRNA-like l1", ch2::fig2_3),
+        ("figA.1", "sigma_x quartiles across BUILD steps", ch2::fig_a1),
+        ("figA.2", "true arm-mean distribution, first BUILD step", ch2::fig_a2),
+        ("figA.5", "scRNA-PCA-like violated-assumption scaling", ch2::fig_a5),
+        ("tab3.1", "forest training: time/insertions/accuracy ± MABSplit", ch3::tab3_1),
+        ("tab3.2", "regression forests: time/MSE ± MABSplit", ch3::tab3_2),
+        ("tab3.3", "fixed budget: trees + accuracy (classification)", ch3::tab3_3),
+        ("tab3.4", "fixed budget: trees + MSE (regression)", ch3::tab3_4),
+        ("tab3.5", "feature-stability under budget (MDI/permutation)", ch3::tab3_5),
+        ("figB.4", "small-n crossover for MABSplit", ch3::fig_b4),
+        ("tabB.2", "deep-tree wall-clock: exact vs MABSplit", ch3::tab_b2),
+        ("appB.2", "single-split insertions flat in n", ch3::app_b2),
+        ("fig4.1", "BanditMIPS sample complexity vs d (4 datasets)", ch4::fig4_1),
+        ("fig4.2", "all MIPS algorithms vs d", ch4::fig4_2),
+        ("fig4.3", "accuracy-vs-speedup tradeoff (precision@1)", ch4::fig4_3),
+        ("fig4.4", "O(1)-in-d on Sift-1M-like / CryptoPairs-like", ch4::fig4_4),
+        ("figC.1", "precision@5 tradeoff", ch4::fig_c1),
+        ("figC.2", "precision@10 tradeoff", ch4::fig_c2),
+        ("figC.3", "Bucket_AE: scaling with n and d", ch4::fig_c3),
+        ("figC.4", "Matching Pursuit on SimpleSong: naive vs BanditMIPS", ch4::fig_c4),
+        ("figC.5", "SymmetricNormal worst case: O(d) fallback", ch4::fig_c5),
+        ("ablation", "design-choice ablations: sampling mode, sigma source, B, delta", ablations::ablation),
+    ]
+}
+
+/// Run one experiment id (or "all").
+pub fn run(id: &str, seed: u64) -> bool {
+    let reg = registry();
+    if id == "all" {
+        for (name, desc, f) in &reg {
+            println!("\n================ {name} — {desc} ================");
+            f(seed);
+        }
+        return true;
+    }
+    for (name, desc, f) in &reg {
+        if *name == id {
+            println!("================ {name} — {desc} ================");
+            f(seed);
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_ids_unique() {
+        let reg = super::registry();
+        let mut names: Vec<&str> = reg.iter().map(|(n, _, _)| *n).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total);
+        assert!(total >= 24, "expected full experiment coverage, got {total}");
+    }
+
+    #[test]
+    fn unknown_id_reports_false() {
+        assert!(!super::run("nope", 1));
+    }
+}

@@ -1,0 +1,320 @@
+//! Forest ensembles: Random Forest, ExtraTrees, Random Patches — each
+//! trainable with the exact node-splitter or MABSplit (Tables 3.1–3.4),
+//! with optional shared insertion budgets (the fixed-budget experiments).
+
+use crate::data::LabeledDataset;
+use crate::forest::histogram::Impurity;
+use crate::forest::split::feature_ranges;
+use crate::forest::tree::{Budget, DecisionTree, Solver, TreeConfig};
+use crate::metrics::OpCounter;
+use crate::util::rng::Rng;
+
+/// Which ensemble variant (§3.5 "Baseline Models").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForestKind {
+    /// Bootstrap rows; √M features per node split.
+    RandomForest,
+    /// Like RF but random histogram bin edges; in regression all features
+    /// are considered at each split.
+    ExtraTrees,
+    /// One fixed row/feature subsample (α_n, α_f) for the whole forest.
+    RandomPatches,
+}
+
+/// Forest configuration.
+#[derive(Clone, Debug)]
+pub struct ForestConfig {
+    pub kind: ForestKind,
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_impurity_decrease: f64,
+    pub t_bins: usize,
+    pub solver: Solver,
+    pub impurity: Impurity,
+    /// Random Patches fractions.
+    pub alpha_n: f64,
+    pub alpha_f: f64,
+    /// Insertion budget for the fixed-budget experiments (None = off).
+    pub budget: Option<u64>,
+    pub seed: u64,
+}
+
+impl ForestConfig {
+    pub fn new(kind: ForestKind, solver: Solver) -> Self {
+        ForestConfig {
+            kind,
+            n_trees: 5,
+            max_depth: 5,
+            min_impurity_decrease: 0.005,
+            t_bins: 10,
+            solver,
+            impurity: Impurity::Gini,
+            alpha_n: 0.7,
+            alpha_f: 0.85,
+            budget: None,
+            seed: 42,
+        }
+    }
+}
+
+/// A trained forest.
+pub struct Forest {
+    pub trees: Vec<DecisionTree>,
+    pub n_classes: usize,
+    /// Histogram insertions consumed during training.
+    pub insertions: u64,
+    /// Trees that completed training before the budget ran out.
+    pub completed_trees: usize,
+}
+
+impl Forest {
+    /// Train a forest; `counter` records histogram insertions.
+    pub fn fit(ds: &LabeledDataset, cfg: &ForestConfig, counter: &OpCounter) -> Forest {
+        let before = counter.get();
+        let mut rng = Rng::new(cfg.seed);
+        let regression = ds.is_regression();
+        let m_total = ds.x.d;
+
+        // Random Patches: one fixed row/feature subsample for the forest.
+        let (patch_rows, feature_pool): (Vec<usize>, Vec<usize>) = match cfg.kind {
+            ForestKind::RandomPatches => {
+                let nr = ((ds.x.n as f64) * cfg.alpha_n).round().max(1.0) as usize;
+                let nf = ((m_total as f64) * cfg.alpha_f).round().max(1.0) as usize;
+                (
+                    rng.sample_without_replacement(ds.x.n, nr.min(ds.x.n)),
+                    rng.sample_without_replacement(m_total, nf.min(m_total)),
+                )
+            }
+            _ => ((0..ds.x.n).collect(), (0..m_total).collect()),
+        };
+
+        // Features per node: √M for classification; ExtraTrees regression
+        // uses all features (§3.5).
+        let m_node = if regression && cfg.kind == ForestKind::ExtraTrees {
+            feature_pool.len()
+        } else {
+            ((feature_pool.len() as f64).sqrt().round() as usize).clamp(1, feature_pool.len())
+        };
+
+        let tree_cfg = TreeConfig {
+            max_depth: cfg.max_depth,
+            min_samples_split: 4,
+            min_impurity_decrease: cfg.min_impurity_decrease,
+            t_bins: if cfg.kind == ForestKind::ExtraTrees && !regression {
+                ((m_total as f64).sqrt().round() as usize).max(2)
+            } else {
+                cfg.t_bins
+            },
+            features_per_node: m_node,
+            random_edges: cfg.kind == ForestKind::ExtraTrees,
+            solver: cfg.solver,
+            impurity: if regression { Impurity::Mse } else { cfg.impurity },
+        };
+        let ranges = feature_ranges(ds);
+        let budget = Budget { counter, limit: cfg.budget.map(|b| before + b) };
+
+        let mut trees = Vec::new();
+        let mut completed = 0usize;
+        for t in 0..cfg.n_trees {
+            if budget.remaining() == 0 {
+                break;
+            }
+            let before_tree = budget.remaining();
+            // Bootstrap sample (RF & ExtraTrees here both bootstrap rows;
+            // Random Patches uses its fixed patch).
+            let rows: Vec<usize> = match cfg.kind {
+                ForestKind::RandomPatches => patch_rows.clone(),
+                _ => {
+                    let n = ds.x.n;
+                    (0..n).map(|_| rng.below(n)).collect()
+                }
+            };
+            let mut trng = rng.fork(t as u64);
+            let tree = DecisionTree::fit(ds, &rows, &tree_cfg, &ranges, &budget, &feature_pool, &mut trng);
+            // A tree "completed" if the budget didn't interrupt it: either
+            // budget still has room, or the tree stopped for its own
+            // reasons (we approximate: room remains for another split).
+            let ran_out = budget.remaining() == 0 && before_tree > 0;
+            if !ran_out {
+                completed += 1;
+            }
+            let splits = tree.nodes_split;
+            trees.push(tree);
+            // Budget exhausted — or too depleted to afford even one split
+            // (a zero-split tree under a budget): stop, don't spin out
+            // stump-only trees forever.
+            if budget.remaining() == 0 || (cfg.budget.is_some() && splits == 0) {
+                break;
+            }
+        }
+
+        Forest {
+            trees,
+            n_classes: ds.n_classes,
+            insertions: counter.get() - before,
+            completed_trees: completed,
+        }
+    }
+
+    /// Soft-vote class probabilities / mean prediction for one row.
+    pub fn predict_row(&self, x: &[f32]) -> Vec<f32> {
+        let width = if self.n_classes == 0 { 1 } else { self.n_classes };
+        let mut acc = vec![0f32; width];
+        if self.trees.is_empty() {
+            return acc;
+        }
+        for t in &self.trees {
+            let p = t.predict_row(x);
+            for (a, &v) in acc.iter_mut().zip(p) {
+                *a += v;
+            }
+        }
+        let k = self.trees.len() as f32;
+        acc.iter_mut().for_each(|a| *a /= k);
+        acc
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, ds: &LabeledDataset) -> f64 {
+        assert!(self.n_classes > 0);
+        let mut correct = 0usize;
+        for i in 0..ds.x.n {
+            let p = self.predict_row(ds.x.row(i));
+            let pred = p
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            if pred == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.x.n.max(1) as f64
+    }
+
+    /// Regression MSE on a dataset.
+    pub fn mse(&self, ds: &LabeledDataset) -> f64 {
+        assert_eq!(self.n_classes, 0);
+        let mut s = 0.0;
+        for i in 0..ds.x.n {
+            let p = self.predict_row(ds.x.row(i))[0] as f64;
+            let e = p - ds.y[i] as f64;
+            s += e * e;
+        }
+        s / ds.x.n.max(1) as f64
+    }
+
+    /// Mean Decrease in Impurity feature importances, normalized to sum 1.
+    pub fn mdi_importances(&self, n_features: usize) -> Vec<f64> {
+        let mut acc = vec![0f64; n_features];
+        for t in &self.trees {
+            t.accumulate_mdi(&mut acc);
+        }
+        let total: f64 = acc.iter().sum();
+        if total > 0.0 {
+            acc.iter_mut().for_each(|a| *a /= total);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tabular::{make_classification, make_regression};
+
+    #[test]
+    fn rf_beats_single_tree_noise() {
+        let ds = make_classification(2500, 12, 5, 3, 1.6, 31);
+        let (train, test) = ds.split(0.3, 1);
+        let c = OpCounter::new();
+        let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::Exact);
+        cfg.n_trees = 8;
+        let f = Forest::fit(&train, &cfg, &c);
+        let acc = f.accuracy(&test);
+        assert!(acc > 0.6, "forest accuracy {acc}");
+        assert!(f.insertions > 0);
+    }
+
+    #[test]
+    fn mabsplit_forest_similar_accuracy_fewer_insertions() {
+        let ds = make_classification(6000, 16, 5, 2, 2.0, 32);
+        let (train, test) = ds.split(0.25, 2);
+        let mut results = Vec::new();
+        for solver in [Solver::Exact, Solver::mab()] {
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
+            cfg.n_trees = 4;
+            let f = Forest::fit(&train, &cfg, &c);
+            results.push((f.accuracy(&test), c.get()));
+        }
+        let (acc_e, ins_e) = results[0];
+        let (acc_m, ins_m) = results[1];
+        assert!(acc_m > acc_e - 0.05, "mab acc {acc_m} vs exact {acc_e}");
+        assert!(ins_m < ins_e, "mab insertions {ins_m} ≥ exact {ins_e}");
+    }
+
+    #[test]
+    fn all_kinds_train_classification_and_regression() {
+        let dsc = make_classification(800, 10, 4, 2, 2.0, 33);
+        let dsr = make_regression(800, 8, 3, 0.5, 34);
+        for kind in [ForestKind::RandomForest, ForestKind::ExtraTrees, ForestKind::RandomPatches] {
+            for solver in [Solver::Exact, Solver::mab()] {
+                let c = OpCounter::new();
+                let mut cfg = ForestConfig::new(kind, solver);
+                cfg.n_trees = 2;
+                let f = Forest::fit(&dsc, &cfg, &c);
+                assert!(!f.trees.is_empty(), "{kind:?} classification");
+                let acc = f.accuracy(&dsc);
+                assert!(acc > 0.5, "{kind:?}/{solver:?} acc {acc}");
+
+                let c = OpCounter::new();
+                let f = Forest::fit(&dsr, &cfg, &c);
+                assert!(!f.trees.is_empty(), "{kind:?} regression");
+                let _ = f.mse(&dsr);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_budget_mabsplit_trains_more_trees() {
+        // Table 3.3's mechanism: same insertion budget, more trees.
+        let ds = make_classification(8000, 16, 10, 2, 2.0, 35);
+        let budget = 8_000 * 8; // two exact √16=4-feature root splits' worth
+        let count_trees = |solver: Solver| {
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
+            cfg.n_trees = 50;
+            cfg.budget = Some(budget as u64);
+            let f = Forest::fit(&ds, &cfg, &c);
+            // The budget is checked before each split and spent during it,
+            // so the overshoot is bounded by one node's full scan (n·m) —
+            // the same semantics as the paper's implementation.
+            assert!(
+                c.get() <= budget as u64 + (8000 * 4) as u64,
+                "budget exceeded: {}",
+                c.get()
+            );
+            f.trees.iter().map(|t| t.nodes_split).sum::<usize>()
+        };
+        let exact_splits = count_trees(Solver::Exact);
+        let mab_splits = count_trees(Solver::mab());
+        assert!(
+            mab_splits > exact_splits,
+            "MABSplit should afford more splits: {mab_splits} vs {exact_splits}"
+        );
+    }
+
+    #[test]
+    fn empty_budget_yields_no_splits() {
+        let ds = make_classification(500, 8, 3, 2, 2.0, 36);
+        let c = OpCounter::new();
+        let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::Exact);
+        cfg.budget = Some(0);
+        let f = Forest::fit(&ds, &cfg, &c);
+        assert_eq!(c.get(), 0);
+        let total_splits: usize = f.trees.iter().map(|t| t.nodes_split).sum();
+        assert_eq!(total_splits, 0);
+    }
+}

@@ -1,0 +1,443 @@
+//! Feature histograms and impurity metrics — the substrate of Chapter 3.
+//!
+//! Node-splitting in modern tree learners (XGBoost/LightGBM-style, §3.2)
+//! bins each feature into `T` bins and only considers bin edges as
+//! thresholds. A histogram accumulates either per-class counts
+//! (classification) or (count, Σy, Σy²) moments (regression); both
+//! support O(T·K) best-threshold scans via prefix sums. Every insertion is
+//! counted — "number of histogram insertions" is the paper's budget and
+//! complexity metric (Tables 3.1–3.5).
+
+use crate::metrics::OpCounter;
+
+/// Impurity criterion (Eq. 3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Impurity {
+    Gini,
+    Entropy,
+    /// Mean squared error (regression).
+    Mse,
+}
+
+/// Gini impurity of a class-count vector.
+pub fn gini(counts: &[f64], total: f64) -> f64 {
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for &c in counts {
+        let p = c / total;
+        s += p * p;
+    }
+    1.0 - s
+}
+
+/// Entropy (bits) of a class-count vector.
+pub fn entropy(counts: &[f64], total: f64) -> f64 {
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0.0 {
+            let p = c / total;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Bin-edge layout for one feature.
+#[derive(Clone, Debug)]
+pub struct BinEdges {
+    /// `T+1` ascending edges; bin i covers [edges[i], edges[i+1]).
+    pub edges: Vec<f32>,
+}
+
+impl BinEdges {
+    /// Equal-width bins over [lo, hi] (RF / Random Patches; §3.2).
+    pub fn equal_width(lo: f32, hi: f32, t: usize) -> Self {
+        assert!(t >= 1);
+        let span = (hi - lo).max(1e-12);
+        let edges = (0..=t)
+            .map(|i| lo + span * (i as f32) / (t as f32))
+            .collect();
+        BinEdges { edges }
+    }
+
+    /// Random edges uniform over [lo, hi] (ExtraTrees; §3.5 baselines).
+    pub fn random(lo: f32, hi: f32, t: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let span = (hi - lo).max(1e-12);
+        let mut inner: Vec<f32> = (0..t.saturating_sub(1))
+            .map(|_| lo + span * rng.f32())
+            .collect();
+        inner.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut edges = Vec::with_capacity(t + 1);
+        edges.push(lo);
+        edges.extend(inner);
+        edges.push(hi + span * 1e-6);
+        BinEdges { edges }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.edges.len() - 1
+    }
+
+    /// Bin index for a value. Equal-width layout is O(1) (direct index);
+    /// uneven layouts binary-search (O(log T)) — exactly the trade-off
+    /// discussed in §3.5.2.
+    #[inline]
+    pub fn bin_of(&self, v: f32) -> usize {
+        let t = self.n_bins();
+        let lo = self.edges[0];
+        let hi = self.edges[t];
+        if v <= lo {
+            return 0;
+        }
+        if v >= hi {
+            return t - 1;
+        }
+        // Direct index assuming equal width; verify and fall back to
+        // binary search for uneven (ExtraTrees) layouts.
+        let guess = (((v - lo) / (hi - lo)) * t as f32) as usize;
+        let guess = guess.min(t - 1);
+        if self.edges[guess] <= v && v < self.edges[guess + 1] {
+            return guess;
+        }
+        // Binary search: find rightmost edge ≤ v.
+        match self.edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+            Ok(i) => i.min(t - 1),
+            Err(i) => i.saturating_sub(1).min(t - 1),
+        }
+    }
+}
+
+/// A classification histogram: per-bin per-class counts.
+#[derive(Clone, Debug)]
+pub struct ClassHistogram {
+    pub edges: BinEdges,
+    pub k: usize,
+    /// counts[bin * k + class]
+    pub counts: Vec<f64>,
+    pub total: f64,
+}
+
+impl ClassHistogram {
+    pub fn new(edges: BinEdges, k: usize) -> Self {
+        let t = edges.n_bins();
+        ClassHistogram { edges, k, counts: vec![0.0; t * k], total: 0.0 }
+    }
+
+    /// Insert one (value, class) pair. Counted.
+    #[inline]
+    pub fn insert(&mut self, v: f32, class: usize, counter: &OpCounter) {
+        counter.incr();
+        let b = self.edges.bin_of(v);
+        self.counts[b * self.k + class] += 1.0;
+        self.total += 1.0;
+    }
+
+    /// Weighted-impurity objective μ_ft (Eq. 3.3, normalized by total) and
+    /// its delta-method standard error (§B.3) for *every* threshold in one
+    /// prefix-sum scan. Threshold index t means "split after bin t"
+    /// (t ∈ 0..T−1). Returns (mu, se) pairs.
+    pub fn scan_thresholds(&self, imp: Impurity) -> Vec<(f64, f64)> {
+        let t_bins = self.edges.n_bins();
+        let k = self.k;
+        let n = self.total;
+        let mut out = Vec::with_capacity(t_bins.saturating_sub(1));
+        if n <= 0.0 {
+            out.resize(t_bins.saturating_sub(1), (f64::INFINITY, f64::INFINITY));
+            return out;
+        }
+        // Totals per class.
+        let mut tot = vec![0.0; k];
+        for b in 0..t_bins {
+            for c in 0..k {
+                tot[c] += self.counts[b * k + c];
+            }
+        }
+        let mut left = vec![0.0; k];
+        #[allow(unused_assignments)]
+        let mut left_n;
+        for t in 0..t_bins.saturating_sub(1) {
+            for c in 0..k {
+                left[c] += self.counts[t * k + c];
+            }
+            left_n = left.iter().sum();
+            let right_n = n - left_n;
+            let mut right = vec![0.0; k];
+            for c in 0..k {
+                right[c] = tot[c] - left[c];
+            }
+            let (wl, wr) = (left_n / n, right_n / n);
+            let mu = match imp {
+                Impurity::Gini => wl * gini(&left, left_n) + wr * gini(&right, right_n),
+                Impurity::Entropy => {
+                    wl * entropy(&left, left_n) + wr * entropy(&right, right_n)
+                }
+                Impurity::Mse => unreachable!("Mse on classification histogram"),
+            };
+            let se = delta_method_se(imp, &left, left_n, &right, right_n, n);
+            out.push((mu, se));
+        }
+        out
+    }
+}
+
+/// Delta-method standard error of the plug-in weighted impurity (§B.3):
+/// Var ≈ (1/n)·[Σ q·g² − (Σ q·g)²] with q the joint (side, class)
+/// proportions and g = ∂μ/∂q.
+fn delta_method_se(
+    imp: Impurity,
+    left: &[f64],
+    left_n: f64,
+    right: &[f64],
+    right_n: f64,
+    n: f64,
+) -> f64 {
+    if n <= 1.0 {
+        return f64::INFINITY;
+    }
+    let mut e_g2 = 0.0;
+    let mut e_g = 0.0;
+    let mut side = |counts: &[f64], side_n: f64| {
+        if side_n <= 0.0 {
+            return;
+        }
+        let w = side_n / n;
+        match imp {
+            Impurity::Gini => {
+                // μ_side = w − Σ_k q²/w ;  ∂/∂q_k = 1 − 2p_k + Σ_j p_j²
+                let s2: f64 = counts.iter().map(|&c| (c / side_n) * (c / side_n)).sum();
+                for &c in counts {
+                    let q = c / n;
+                    let p = c / side_n;
+                    let g = 1.0 - 2.0 * p + s2;
+                    e_g2 += q * g * g;
+                    e_g += q * g;
+                }
+            }
+            Impurity::Entropy => {
+                // ∂/∂q_k = −log2(p_k)
+                for &c in counts {
+                    if c > 0.0 {
+                        let q = c / n;
+                        let p = c / side_n;
+                        let g = -(p.log2());
+                        e_g2 += q * g * g;
+                        e_g += q * g;
+                    }
+                }
+            }
+            Impurity::Mse => unreachable!(),
+        }
+        let _ = w;
+    };
+    side(left, left_n);
+    side(right, right_n);
+    ((e_g2 - e_g * e_g).max(0.0) / n).sqrt()
+}
+
+/// A regression histogram: per-bin (count, Σy, Σy²).
+#[derive(Clone, Debug)]
+pub struct MomentHistogram {
+    pub edges: BinEdges,
+    /// moments[bin] = (count, sum, sumsq)
+    pub moments: Vec<(f64, f64, f64)>,
+    pub total: f64,
+}
+
+impl MomentHistogram {
+    pub fn new(edges: BinEdges) -> Self {
+        let t = edges.n_bins();
+        MomentHistogram { edges, moments: vec![(0.0, 0.0, 0.0); t], total: 0.0 }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: f32, y: f64, counter: &OpCounter) {
+        counter.incr();
+        let b = self.edges.bin_of(v);
+        let m = &mut self.moments[b];
+        m.0 += 1.0;
+        m.1 += y;
+        m.2 += y * y;
+        self.total += 1.0;
+    }
+
+    /// Weighted child MSE for every threshold + a CI scale: the standard
+    /// error of the weighted-variance plug-in, approximated by
+    /// √(Var̂(y)·2/n) per §B.3's "derived similarly" remark.
+    pub fn scan_thresholds(&self) -> Vec<(f64, f64)> {
+        let t_bins = self.edges.n_bins();
+        let n = self.total;
+        let mut out = Vec::with_capacity(t_bins.saturating_sub(1));
+        if n <= 0.0 {
+            out.resize(t_bins.saturating_sub(1), (f64::INFINITY, f64::INFINITY));
+            return out;
+        }
+        let (mut tn, mut ts, mut tq) = (0.0, 0.0, 0.0);
+        for &(c, s, q) in &self.moments {
+            tn += c;
+            ts += s;
+            tq += q;
+        }
+        let var_y = (tq / n - (ts / n) * (ts / n)).max(0.0);
+        let (mut ln, mut ls, mut lq) = (0.0, 0.0, 0.0);
+        for t in 0..t_bins.saturating_sub(1) {
+            let (c, s, q) = self.moments[t];
+            ln += c;
+            ls += s;
+            lq += q;
+            let rn = tn - ln;
+            let rs = ts - ls;
+            let rq = tq - lq;
+            let child_sse = |cn: f64, cs: f64, cq: f64| {
+                if cn <= 0.0 {
+                    0.0
+                } else {
+                    (cq - cs * cs / cn).max(0.0)
+                }
+            };
+            // μ = weighted child variance = (SSE_L + SSE_R) / n.
+            let mu = (child_sse(ln, ls, lq) + child_sse(rn, rs, rq)) / n;
+            let se = (var_y * 2.0 / n).sqrt() * var_y.sqrt().max(1.0);
+            out.push((mu, se));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gini_entropy_extremes() {
+        assert!((gini(&[10.0, 0.0], 10.0) - 0.0).abs() < 1e-12);
+        assert!((gini(&[5.0, 5.0], 10.0) - 0.5).abs() < 1e-12);
+        assert!((entropy(&[5.0, 5.0], 10.0) - 1.0).abs() < 1e-12);
+        assert!(entropy(&[10.0, 0.0], 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_width_bin_of() {
+        let e = BinEdges::equal_width(0.0, 10.0, 5);
+        assert_eq!(e.bin_of(-1.0), 0);
+        assert_eq!(e.bin_of(0.0), 0);
+        assert_eq!(e.bin_of(3.9), 1);
+        assert_eq!(e.bin_of(9.9), 4);
+        assert_eq!(e.bin_of(10.0), 4);
+        assert_eq!(e.bin_of(99.0), 4);
+    }
+
+    #[test]
+    fn random_edges_sorted_and_cover() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let e = BinEdges::random(-2.0, 7.0, 8, &mut rng);
+            assert_eq!(e.n_bins(), 8);
+            for w in e.edges.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            for v in [-2.0f32, 0.0, 3.3, 6.999] {
+                let b = e.bin_of(v);
+                assert!(b < 8);
+                assert!(e.edges[b] <= v || b == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_split_has_zero_impurity() {
+        // Class 0 in bins 0-1, class 1 in bins 2-3: threshold after bin 1
+        // separates perfectly.
+        let mut h = ClassHistogram::new(BinEdges::equal_width(0.0, 4.0, 4), 2);
+        let c = OpCounter::new();
+        for _ in 0..10 {
+            h.insert(0.5, 0, &c);
+            h.insert(1.5, 0, &c);
+            h.insert(2.5, 1, &c);
+            h.insert(3.5, 1, &c);
+        }
+        assert_eq!(c.get(), 40);
+        let scan = h.scan_thresholds(Impurity::Gini);
+        assert_eq!(scan.len(), 3);
+        let best = scan
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        assert_eq!(best.0, 1, "perfect threshold after bin 1");
+        assert!(best.1 .0.abs() < 1e-12, "impurity should be 0");
+        // mixed thresholds are worse
+        assert!(scan[0].0 > 0.1);
+    }
+
+    #[test]
+    fn se_shrinks_with_n() {
+        let c = OpCounter::new();
+        let mut small = ClassHistogram::new(BinEdges::equal_width(0.0, 1.0, 4), 2);
+        let mut large = ClassHistogram::new(BinEdges::equal_width(0.0, 1.0, 4), 2);
+        let mut rng = Rng::new(9);
+        for i in 0..40 {
+            small.insert(rng.f32(), i % 2, &c);
+        }
+        let mut rng = Rng::new(9);
+        for i in 0..4000 {
+            large.insert(rng.f32(), i % 2, &c);
+        }
+        let s = small.scan_thresholds(Impurity::Gini)[1].1;
+        let l = large.scan_thresholds(Impurity::Gini)[1].1;
+        assert!(l < s, "SE must shrink with n: {s} -> {l}");
+        assert!(l < 0.05);
+    }
+
+    #[test]
+    fn mse_scan_finds_step_function() {
+        // y = 0 below 0.5, y = 10 above: best threshold in the middle.
+        let c = OpCounter::new();
+        let mut h = MomentHistogram::new(BinEdges::equal_width(0.0, 1.0, 10));
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let x = rng.f32();
+            let y = if x < 0.5 { 0.0 } else { 10.0 };
+            h.insert(x, y, &c);
+        }
+        let scan = h.scan_thresholds();
+        let best = scan
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .unwrap();
+        assert_eq!(best.0, 4, "threshold after bin 4 (= x < 0.5)");
+        assert!(best.1 .0 < 0.1);
+    }
+
+    #[test]
+    fn entropy_scan_matches_gini_ranking_roughly() {
+        let c = OpCounter::new();
+        let mut h = ClassHistogram::new(BinEdges::equal_width(0.0, 1.0, 6), 3);
+        let mut rng = Rng::new(11);
+        for _ in 0..600 {
+            let x = rng.f32();
+            let class = if x < 0.33 { 0 } else if x < 0.66 { 1 } else { 2 };
+            h.insert(x, class, &c);
+        }
+        let g = h.scan_thresholds(Impurity::Gini);
+        let e = h.scan_thresholds(Impurity::Entropy);
+        let argmin = |v: &Vec<(f64, f64)>| {
+            v.iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+                .unwrap()
+                .0
+        };
+        // Both should pick a boundary threshold (bin edge near .33 or .66).
+        let bg = argmin(&g);
+        let be = argmin(&e);
+        assert!(bg == 1 || bg == 3, "gini picked {bg}");
+        assert!(be == 1 || be == 3, "entropy picked {be}");
+    }
+}

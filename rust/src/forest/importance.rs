@@ -1,0 +1,170 @@
+//! Feature-importance computation and stability scoring (Table 3.5).
+//!
+//! Two importance models, as in the paper: Mean Decrease in Impurity
+//! (MDI, accumulated during training) and Permutation Feature Importance
+//! (accuracy/MSE drop when a feature column is shuffled on held-out
+//! data). Stability is measured across independently-trained forests as
+//! the mean pairwise overlap of their top-k feature sets — the standard
+//! stability index the paper cites [130].
+
+use crate::data::LabeledDataset;
+use crate::forest::ensemble::{Forest, ForestConfig};
+use crate::metrics::OpCounter;
+use crate::util::rng::Rng;
+
+/// Permutation importance of every feature on `eval` data: the drop in
+/// accuracy (classification) / rise in MSE (regression) when that
+/// feature's column is shuffled. `repeats` shuffles are averaged.
+pub fn permutation_importance(
+    forest: &Forest,
+    eval: &LabeledDataset,
+    repeats: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let base = score(forest, eval);
+    let mut rng = Rng::new(seed);
+    let mut imp = vec![0f64; eval.x.d];
+    for f in 0..eval.x.d {
+        let mut total = 0.0;
+        for _ in 0..repeats {
+            let mut shuffled = eval.clone();
+            // Shuffle column f.
+            let mut col: Vec<f32> = (0..eval.x.n).map(|i| eval.x.row(i)[f]).collect();
+            rng.shuffle(&mut col);
+            for i in 0..eval.x.n {
+                shuffled.x.row_mut(i)[f] = col[i];
+            }
+            total += base - score(forest, &shuffled);
+        }
+        imp[f] = total / repeats as f64;
+    }
+    imp
+}
+
+/// Higher-is-better score: accuracy for classification, −MSE for
+/// regression.
+fn score(forest: &Forest, ds: &LabeledDataset) -> f64 {
+    if ds.is_regression() {
+        -forest.mse(ds)
+    } else {
+        forest.accuracy(ds)
+    }
+}
+
+/// Indices of the top-k features by importance. Features with
+/// non-positive importance are excluded — padding the set with
+/// deterministic zero-importance ties would fake stability.
+pub fn top_k(importances: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importances.len()).collect();
+    idx.sort_by(|&a, &b| importances[b].partial_cmp(&importances[a]).unwrap());
+    idx.truncate(k);
+    idx.retain(|&i| importances[i] > 0.0);
+    idx
+}
+
+/// Mean pairwise stability of top-k feature sets across runs: the
+/// Kuncheva-style consistency index reduces to average overlap fraction
+/// corrected for chance; we report the widely-used mean Jaccard overlap.
+pub fn stability(top_sets: &[Vec<usize>]) -> f64 {
+    if top_sets.len() < 2 {
+        return 1.0;
+    }
+    let mut total = 0.0;
+    let mut pairs = 0usize;
+    for i in 0..top_sets.len() {
+        for j in (i + 1)..top_sets.len() {
+            let a: std::collections::HashSet<_> = top_sets[i].iter().collect();
+            let b: std::collections::HashSet<_> = top_sets[j].iter().collect();
+            let inter = a.intersection(&b).count() as f64;
+            let union = a.union(&b).count() as f64;
+            total += if union > 0.0 { inter / union } else { 1.0 };
+            pairs += 1;
+        }
+    }
+    total / pairs as f64
+}
+
+/// Importance-computation mode for the stability experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImportanceKind {
+    Mdi,
+    Permutation,
+}
+
+/// Train `runs` forests (different seeds) under the configured budget and
+/// return the stability of their top-k feature selections.
+pub fn stability_experiment(
+    ds: &LabeledDataset,
+    base_cfg: &ForestConfig,
+    kind: ImportanceKind,
+    k: usize,
+    runs: usize,
+) -> f64 {
+    let (train, eval) = ds.split(0.25, base_cfg.seed ^ 0xFEA7);
+    let mut tops = Vec::new();
+    for run in 0..runs {
+        let mut cfg = base_cfg.clone();
+        cfg.seed = base_cfg.seed.wrapping_add(1_000_003 * run as u64 + 17);
+        let c = OpCounter::new();
+        let f = Forest::fit(&train, &cfg, &c);
+        let imp = match kind {
+            ImportanceKind::Mdi => f.mdi_importances(train.x.d),
+            ImportanceKind::Permutation => permutation_importance(&f, &eval, 2, cfg.seed),
+        };
+        tops.push(top_k(&imp, k));
+    }
+    stability(&tops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tabular::make_classification;
+    use crate::forest::ensemble::ForestKind;
+    use crate::forest::tree::Solver;
+
+    #[test]
+    fn top_k_orders_correctly() {
+        let imp = [0.1, 0.5, 0.0, 0.4];
+        assert_eq!(top_k(&imp, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn stability_extremes() {
+        let same = vec![vec![0, 1, 2], vec![0, 1, 2], vec![2, 1, 0]];
+        assert!((stability(&same) - 1.0).abs() < 1e-12);
+        let disjoint = vec![vec![0, 1], vec![2, 3]];
+        assert_eq!(stability(&disjoint), 0.0);
+    }
+
+    #[test]
+    fn permutation_importance_finds_signal() {
+        let ds = make_classification(2000, 8, 2, 2, 3.0, 41);
+        let (train, eval) = ds.split(0.3, 1);
+        let c = OpCounter::new();
+        let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::Exact);
+        cfg.n_trees = 6;
+        cfg.max_depth = 4;
+        let f = Forest::fit(&train, &cfg, &c);
+        let imp = permutation_importance(&f, &eval, 3, 7);
+        // the max-importance feature must carry genuinely positive signal
+        let best = imp.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(best > 0.01, "no feature shows permutation signal: {imp:?}");
+    }
+
+    #[test]
+    fn stability_pipeline_recovers_informative_features() {
+        // Functional check of the Table 3.5 pipeline: with an ample budget
+        // and several trees, MDI top-k selection over k = n_informative
+        // features is reasonably stable across seeds. (The quantitative
+        // exact-vs-MABSplit comparison under tight budgets is an
+        // experiment — `repro exp tab3.5` — not a unit test.)
+        let ds = make_classification(3000, 12, 3, 2, 3.0, 43);
+        let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+        cfg.n_trees = 10;
+        cfg.max_depth = 4;
+        let s = stability_experiment(&ds, &cfg, ImportanceKind::Mdi, 3, 3);
+        assert!((0.0..=1.0).contains(&s));
+        assert!(s > 0.4, "MDI stability unexpectedly low: {s}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Chapter 3 — faster forest training via MABSplit.
+//!
+//! * [`histogram`] — binned feature statistics + Gini/entropy/MSE
+//!   impurities with delta-method confidence intervals (§3.3.1, §B.3);
+//! * [`split`] — the exact brute-force node splitter and MABSplit
+//!   (Algorithm 3) on the shared bandit engine;
+//! * [`tree`] — a histogram decision tree parameterized by solver;
+//! * [`ensemble`] — Random Forest / ExtraTrees / Random Patches, with
+//!   optional fixed insertion budgets (Tables 3.3–3.4);
+//! * [`importance`] — MDI + permutation importances and the top-k
+//!   feature-stability score (Table 3.5).
+//!
+//! The *only* difference between a baseline model and its "+ MABSplit"
+//! variant is the node-splitting subroutine — exactly the paper's
+//! experimental control (§3.5).
+
+pub mod ensemble;
+pub mod histogram;
+pub mod importance;
+pub mod split;
+pub mod tree;
+
+pub use ensemble::{Forest, ForestConfig, ForestKind};
+pub use histogram::Impurity;
+pub use split::{solve_exactly, solve_mab, Split, SplitContext};
+pub use tree::{DecisionTree, Solver, TreeConfig};

@@ -1,0 +1,404 @@
+//! A histogram decision tree with pluggable node-splitting solver
+//! (exact or MABSplit) — the single-tree substrate for every Chapter 3
+//! model (RF / ExtraTrees / Random Patches are ensembles of these).
+
+use crate::data::LabeledDataset;
+use crate::forest::histogram::{gini, Impurity};
+use crate::forest::split::{make_edges, solve_exactly, solve_mab, Split, SplitContext};
+use crate::metrics::OpCounter;
+use crate::util::rng::Rng;
+
+/// Which node-splitting subroutine to use (the ONLY difference between a
+/// baseline model and its +MABSplit variant — §3.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    Exact,
+    MabSplit { batch_size: usize, delta_x1000: u32 },
+}
+
+impl Solver {
+    pub fn mab() -> Self {
+        Solver::MabSplit { batch_size: 100, delta_x1000: 10 } // δ = 0.01
+    }
+
+    fn delta(&self) -> f64 {
+        match self {
+            Solver::Exact => 0.0,
+            Solver::MabSplit { delta_x1000, .. } => *delta_x1000 as f64 / 1000.0,
+        }
+    }
+}
+
+/// Tree-level hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Minimum impurity decrease required to split (paper: 0.005).
+    pub min_impurity_decrease: f64,
+    /// Number of histogram bins T per feature.
+    pub t_bins: usize,
+    /// Features sampled per node (√M for RF classification).
+    pub features_per_node: usize,
+    /// ExtraTrees-style random (non-equal-width) bin edges.
+    pub random_edges: bool,
+    pub solver: Solver,
+    pub impurity: Impurity,
+}
+
+/// One tree node.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Leaf {
+        /// Class probabilities (classification) or [mean] (regression).
+        value: Vec<f32>,
+        n: usize,
+    },
+    Internal {
+        feature: usize,
+        threshold: f32,
+        /// Impurity decrease achieved (for MDI importances).
+        gain: f64,
+        n: usize,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// A trained decision tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    pub root: Node,
+    pub n_classes: usize,
+    pub nodes_split: usize,
+}
+
+/// A shared, optional insertion budget (Tables 3.3–3.5). `None` = unlimited.
+pub struct Budget<'a> {
+    pub counter: &'a OpCounter,
+    pub limit: Option<u64>,
+}
+
+impl<'a> Budget<'a> {
+    pub fn remaining(&self) -> u64 {
+        match self.limit {
+            None => u64::MAX,
+            Some(l) => l.saturating_sub(self.counter.get()),
+        }
+    }
+}
+
+impl DecisionTree {
+    /// Fit a tree on `rows` of `ds`. `ranges` are global per-feature
+    /// (min,max); the budget is shared across the whole forest.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        ds: &LabeledDataset,
+        rows: &[usize],
+        cfg: &TreeConfig,
+        ranges: &[(f32, f32)],
+        budget: &Budget,
+        feature_pool: &[usize],
+        rng: &mut Rng,
+    ) -> DecisionTree {
+        let mut nodes_split = 0usize;
+        let root = build_node(ds, rows, cfg, ranges, budget, feature_pool, rng, 0, &mut nodes_split);
+        DecisionTree { root, n_classes: ds.n_classes, nodes_split }
+    }
+
+    /// Per-example prediction: class-probability vector or [mean].
+    pub fn predict_row(&self, x: &[f32]) -> &[f32] {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { value, .. } => return value,
+                Node::Internal { feature, threshold, left, right, .. } => {
+                    node = if x[*feature] < *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    /// Accumulate impurity-decrease MDI contributions into `acc`.
+    pub fn accumulate_mdi(&self, acc: &mut [f64]) {
+        fn walk(node: &Node, acc: &mut [f64], n_root: f64) {
+            if let Node::Internal { feature, gain, n, left, right, .. } = node {
+                acc[*feature] += gain * (*n as f64) / n_root;
+                walk(left, acc, n_root);
+                walk(right, acc, n_root);
+            }
+        }
+        let n_root = match &self.root {
+            Node::Leaf { n, .. } => *n as f64,
+            Node::Internal { n, .. } => *n as f64,
+        };
+        walk(&self.root, acc, n_root.max(1.0));
+    }
+}
+
+fn leaf_value(ds: &LabeledDataset, rows: &[usize]) -> Vec<f32> {
+    if ds.is_regression() {
+        let mean = if rows.is_empty() {
+            0.0
+        } else {
+            rows.iter().map(|&r| ds.y[r] as f64).sum::<f64>() / rows.len() as f64
+        };
+        vec![mean as f32]
+    } else {
+        let mut probs = vec![0f32; ds.n_classes];
+        for &r in rows {
+            probs[ds.y[r] as usize] += 1.0;
+        }
+        let total: f32 = probs.iter().sum();
+        if total > 0.0 {
+            probs.iter_mut().for_each(|p| *p /= total);
+        }
+        probs
+    }
+}
+
+fn node_impurity(ds: &LabeledDataset, rows: &[usize], imp: Impurity) -> f64 {
+    if ds.is_regression() {
+        let n = rows.len() as f64;
+        if n == 0.0 {
+            return 0.0;
+        }
+        let s: f64 = rows.iter().map(|&r| ds.y[r] as f64).sum();
+        let q: f64 = rows.iter().map(|&r| (ds.y[r] as f64).powi(2)).sum();
+        (q / n - (s / n) * (s / n)).max(0.0)
+    } else {
+        let mut counts = vec![0f64; ds.n_classes];
+        for &r in rows {
+            counts[ds.y[r] as usize] += 1.0;
+        }
+        match imp {
+            Impurity::Gini => gini(&counts, rows.len() as f64),
+            Impurity::Entropy => crate::forest::histogram::entropy(&counts, rows.len() as f64),
+            Impurity::Mse => unreachable!(),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_node(
+    ds: &LabeledDataset,
+    rows: &[usize],
+    cfg: &TreeConfig,
+    ranges: &[(f32, f32)],
+    budget: &Budget,
+    feature_pool: &[usize],
+    rng: &mut Rng,
+    depth: usize,
+    nodes_split: &mut usize,
+) -> Node {
+    let n = rows.len();
+    let make_leaf = |rows: &[usize]| Node::Leaf { value: leaf_value(ds, rows), n: rows.len() };
+
+    if depth >= cfg.max_depth || n < cfg.min_samples_split {
+        return make_leaf(rows);
+    }
+    let parent_imp = node_impurity(ds, rows, cfg.impurity);
+    if parent_imp <= 1e-12 {
+        return make_leaf(rows); // pure node
+    }
+    // Budget check: a split needs at least ~n·m more insertions for the
+    // exact solver / at least one batch for MABSplit.
+    let m = cfg.features_per_node.min(feature_pool.len()).max(1);
+    let needed = match cfg.solver {
+        Solver::Exact => (n * m) as u64,
+        Solver::MabSplit { batch_size, .. } => (batch_size * m) as u64,
+    };
+    if budget.remaining() < needed {
+        return make_leaf(rows);
+    }
+
+    // Feature subsample for this node.
+    let chosen = rng.sample_without_replacement(feature_pool.len(), m);
+    let features: Vec<usize> = chosen.iter().map(|&i| feature_pool[i]).collect();
+    let edges = make_edges(&features, ranges, cfg.t_bins, cfg.random_edges, rng);
+    let ctx = SplitContext {
+        ds,
+        rows,
+        features: &features,
+        edges,
+        impurity: cfg.impurity,
+        counter: budget.counter,
+    };
+    let split: Option<Split> = match cfg.solver {
+        Solver::Exact => solve_exactly(&ctx),
+        Solver::MabSplit { batch_size, .. } => {
+            // Small-node crossover (Fig B.4): below a few batches of data
+            // the adaptive machinery costs more wall-clock than it saves —
+            // fall back to the exact scan (identical output).
+            if n < 4 * batch_size {
+                solve_exactly(&ctx)
+            } else {
+                solve_mab(&ctx, batch_size, cfg.solver.delta(), rng.next_u64())
+            }
+        }
+    };
+    let Some(split) = split else { return make_leaf(rows) };
+    let gain = parent_imp - split.child_impurity;
+    if gain < cfg.min_impurity_decrease {
+        return make_leaf(rows);
+    }
+
+    let (left_rows, right_rows): (Vec<usize>, Vec<usize>) = rows
+        .iter()
+        .partition(|&&r| ds.x.row(r)[split.feature] < split.threshold);
+    if left_rows.is_empty() || right_rows.is_empty() {
+        return make_leaf(rows);
+    }
+    *nodes_split += 1;
+    let left = build_node(ds, &left_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    let right = build_node(ds, &right_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    Node::Internal {
+        feature: split.feature,
+        threshold: split.threshold,
+        gain,
+        n,
+        left: Box::new(left),
+        right: Box::new(right),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tabular::{make_classification, make_regression};
+    use crate::forest::split::feature_ranges;
+
+    fn cfg(solver: Solver, regression: bool) -> TreeConfig {
+        TreeConfig {
+            max_depth: 6,
+            min_samples_split: 4,
+            min_impurity_decrease: 0.005,
+            t_bins: 10,
+            features_per_node: 8,
+            random_edges: false,
+            solver,
+            impurity: if regression { Impurity::Mse } else { Impurity::Gini },
+        }
+    }
+
+    fn accuracy(tree: &DecisionTree, ds: &LabeledDataset) -> f64 {
+        let mut correct = 0;
+        for i in 0..ds.x.n {
+            let probs = tree.predict_row(ds.x.row(i));
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.x.n as f64
+    }
+
+    #[test]
+    fn tree_learns_classification() {
+        let ds = make_classification(1500, 8, 4, 2, 2.0, 21);
+        let (train, test) = ds.split(0.25, 1);
+        let rows: Vec<usize> = (0..train.x.n).collect();
+        let pool: Vec<usize> = (0..train.x.d).collect();
+        let ranges = feature_ranges(&train);
+        let c = OpCounter::new();
+        let b = Budget { counter: &c, limit: None };
+        let mut rng = Rng::new(7);
+        let tree = DecisionTree::fit(&train, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let acc = accuracy(&tree, &test);
+        assert!(acc > 0.8, "exact-tree accuracy {acc}");
+    }
+
+    #[test]
+    fn mab_tree_matches_exact_accuracy() {
+        let ds = make_classification(4000, 10, 4, 2, 2.0, 22);
+        let (train, test) = ds.split(0.25, 2);
+        let rows: Vec<usize> = (0..train.x.n).collect();
+        let pool: Vec<usize> = (0..train.x.d).collect();
+        let ranges = feature_ranges(&train);
+        let mut accs = Vec::new();
+        let mut insertions = Vec::new();
+        for solver in [Solver::Exact, Solver::mab()] {
+            let c = OpCounter::new();
+            let b = Budget { counter: &c, limit: None };
+            let mut rng = Rng::new(7);
+            let tree =
+                DecisionTree::fit(&train, &rows, &cfg(solver, false), &ranges, &b, &pool, &mut rng);
+            accs.push(accuracy(&tree, &test));
+            insertions.push(c.get());
+        }
+        assert!(accs[1] > accs[0] - 0.05, "mab {} vs exact {}", accs[1], accs[0]);
+        assert!(
+            insertions[1] < insertions[0],
+            "MABSplit insertions {} ≥ exact {}",
+            insertions[1],
+            insertions[0]
+        );
+    }
+
+    #[test]
+    fn regression_tree_reduces_mse() {
+        let ds = make_regression(2000, 6, 2, 1.0, 23);
+        let (train, test) = ds.split(0.25, 3);
+        let rows: Vec<usize> = (0..train.x.n).collect();
+        let pool: Vec<usize> = (0..train.x.d).collect();
+        let ranges = feature_ranges(&train);
+        let c = OpCounter::new();
+        let b = Budget { counter: &c, limit: None };
+        let mut rng = Rng::new(9);
+        let tree = DecisionTree::fit(&train, &rows, &cfg(Solver::mab(), true), &ranges, &b, &pool, &mut rng);
+        let mse: f64 = (0..test.x.n)
+            .map(|i| {
+                let p = tree.predict_row(test.x.row(i))[0] as f64;
+                (p - test.y[i] as f64).powi(2)
+            })
+            .sum::<f64>()
+            / test.x.n as f64;
+        let var: f64 = {
+            let ys: Vec<f64> = test.y.iter().map(|&v| v as f64).collect();
+            let m = crate::util::stats::mean(&ys);
+            ys.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / ys.len() as f64
+        };
+        assert!(mse < 0.7 * var, "tree mse {mse} vs label var {var}");
+    }
+
+    #[test]
+    fn budget_limits_splits() {
+        let ds = make_classification(2000, 8, 4, 2, 2.0, 24);
+        let rows: Vec<usize> = (0..ds.x.n).collect();
+        let pool: Vec<usize> = (0..ds.x.d).collect();
+        let ranges = feature_ranges(&ds);
+        let c = OpCounter::new();
+        let b = Budget { counter: &c, limit: Some(2000 * 8) }; // one exact split's worth
+        let mut rng = Rng::new(5);
+        let tree = DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        assert!(tree.nodes_split <= 1, "budget must stop after ~1 exact split");
+        assert!(c.get() <= 2000 * 8 + 1);
+    }
+
+    #[test]
+    fn mdi_flags_informative_features() {
+        let ds = make_classification(3000, 10, 2, 2, 3.0, 25);
+        let rows: Vec<usize> = (0..ds.x.n).collect();
+        let pool: Vec<usize> = (0..ds.x.d).collect();
+        let ranges = feature_ranges(&ds);
+        let c = OpCounter::new();
+        let b = Budget { counter: &c, limit: None };
+        let mut rng = Rng::new(11);
+        let tree = DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let mut mdi = vec![0f64; ds.x.d];
+        tree.accumulate_mdi(&mut mdi);
+        // The top-importance feature should be one that the tree actually
+        // split on with real gain.
+        let top = mdi
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!(*top.1 > 0.0);
+    }
+}

@@ -1,0 +1,465 @@
+//! BanditPAM (Algorithm 2 applied to PAM): each BUILD assignment and each
+//! SWAP search is a fixed-confidence best-arm identification problem run
+//! on the shared engine, with per-arm σ̂ re-estimated every call (§2.3.2)
+//! and the FastPAM1 distance-sharing optimization in the SWAP arms
+//! (§A.1.1): one d(x, x_j) evaluation serves all k swap arms of x.
+
+use super::{KmConfig, KmResult, MedoidCache};
+use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, Sampling};
+use crate::data::PointSet;
+
+/// BanditPAM tuning knobs (paper defaults: B = 100, δ = 1/(1000·|S_tar|)).
+#[derive(Clone, Debug)]
+pub struct BanditPamConfig {
+    pub km: KmConfig,
+    pub batch_size: usize,
+    /// δ numerator: δ = delta_scale / |S_tar|. Paper: 1/1000 ⇒ 0.001.
+    pub delta_scale: f64,
+}
+
+impl BanditPamConfig {
+    pub fn new(k: usize) -> Self {
+        BanditPamConfig { km: KmConfig::new(k), batch_size: 100, delta_scale: 1e-3 }
+    }
+}
+
+/// Extended result: BanditPAM also reports per-BUILD-step σ̂ snapshots
+/// (Fig. A.1) and the first BUILD step's exact arm means (Fig. A.2) when
+/// requested via [`bandit_pam_instrumented`].
+#[derive(Clone, Debug)]
+pub struct BanditPamStats {
+    /// For each BUILD step: the σ̂_x of all surviving-at-start arms.
+    pub build_sigmas: Vec<Vec<f64>>,
+}
+
+/// Run BanditPAM.
+pub fn bandit_pam<P: PointSet + ?Sized>(ps: &P, cfg: &BanditPamConfig) -> KmResult {
+    bandit_pam_instrumented(ps, cfg).0
+}
+
+/// Run BanditPAM and return instrumentation alongside the result.
+pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
+    ps: &P,
+    cfg: &BanditPamConfig,
+) -> (KmResult, BanditPamStats) {
+    let before = ps.counter().get();
+    let n = ps.len();
+    let k = cfg.km.k;
+    assert!(k >= 1 && k <= n);
+    let mut stats = BanditPamStats { build_sigmas: Vec::new() };
+
+    // ---------------- BUILD ----------------
+    let mut medoids: Vec<usize> = Vec::with_capacity(k);
+    let mut d1 = vec![f64::INFINITY; n];
+    for step in 0..k {
+        let candidates: Vec<usize> = (0..n).filter(|x| !medoids.contains(x)).collect();
+        let first = step == 0;
+        let mut arms = BuildArms {
+            ps,
+            d1: &d1,
+            candidates: &candidates,
+            first,
+            sum: vec![0.0; candidates.len()],
+            sum2: vec![0.0; candidates.len()],
+            count: vec![0; candidates.len()],
+        };
+        let bcfg = BanditConfig {
+            delta: cfg.delta_scale / candidates.len() as f64,
+            batch_size: cfg.batch_size,
+            sampling: Sampling::Permutation,
+            keep: 1,
+            seed: cfg.km.seed ^ (0xB111D + step as u64),
+        };
+        let r = successive_elimination(&mut arms, &bcfg);
+        stats.build_sigmas.push(
+            (0..candidates.len()).map(|a| arms.sigma(a)).collect(),
+        );
+        let m = candidates[r.best[0]];
+        medoids.push(m);
+        for j in 0..n {
+            let d = ps.dist(m, j);
+            if d < d1[j] {
+                d1[j] = d;
+            }
+        }
+    }
+
+    // ---------------- SWAP ----------------
+    let mut swaps = 0usize;
+    for it in 0..cfg.km.max_swaps {
+        let cache = MedoidCache::compute(ps, &medoids);
+        let candidates: Vec<usize> = (0..n).filter(|x| !medoids.contains(x)).collect();
+        let n_arms = candidates.len() * k;
+        let mut arms = SwapArms {
+            ps,
+            cache: &cache,
+            candidates: &candidates,
+            k,
+            sum: vec![0.0; n_arms],
+            sum2: vec![0.0; n_arms],
+            count: vec![0; n_arms],
+            exact_rows: std::collections::HashMap::new(),
+        };
+        let bcfg = BanditConfig {
+            delta: cfg.delta_scale / n_arms as f64,
+            batch_size: cfg.batch_size,
+            sampling: Sampling::Permutation,
+            keep: 1,
+            seed: cfg.km.seed ^ (0x50A9 + it as u64),
+        };
+        let r = successive_elimination(&mut arms, &bcfg);
+        let best = r.best[0];
+        // Exact improvement check for the chosen swap (n distance calls):
+        // mirrors PAM's convergence criterion.
+        let delta = arms.exact(best) ;
+        if delta >= -1e-12 {
+            break;
+        }
+        let (xi, mi) = (best / k, best % k);
+        medoids[mi] = candidates[xi];
+        swaps += 1;
+    }
+
+    let mut sorted = medoids;
+    sorted.sort_unstable();
+    let cache = MedoidCache::compute(ps, &sorted);
+    let dist_calls = ps.counter().get() - before;
+    (
+        KmResult {
+            loss: cache.loss(),
+            medoids: sorted,
+            swaps_performed: swaps,
+            dist_calls,
+            dist_calls_per_iter: dist_calls as f64 / (swaps + 1) as f64,
+        },
+        stats,
+    )
+}
+
+/// BUILD arms (Eq. 2.5): one arm per candidate medoid x, reference pool =
+/// all points, g_x(j) = (d(x,x_j) − d₁(j)) ∧ 0, or plain d(x,x_j) for the
+/// first medoid.
+struct BuildArms<'a, P: PointSet + ?Sized> {
+    ps: &'a P,
+    d1: &'a [f64],
+    candidates: &'a [usize],
+    first: bool,
+    sum: Vec<f64>,
+    sum2: Vec<f64>,
+    count: Vec<u64>,
+}
+
+impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
+    /// Running per-arm sigma estimate (re-estimated continuously; §2.3.2).
+    fn sigma(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            return 1.0;
+        }
+        let c = self.count[arm] as f64;
+        let m = self.sum[arm] / c;
+        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(1e-9)
+    }
+}
+
+impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
+    #[inline]
+    fn g(&self, arm: usize, j: usize) -> f64 {
+        let x = self.candidates[arm];
+        let d = self.ps.dist(x, j);
+        if self.first {
+            d
+        } else {
+            (d - self.d1[j]).min(0.0)
+        }
+    }
+}
+
+impl<'a, P: PointSet + ?Sized> AdaptiveArms for BuildArms<'a, P> {
+    fn n_arms(&self) -> usize {
+        self.candidates.len()
+    }
+
+    fn ref_len(&self) -> usize {
+        self.ps.len()
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
+        for &a in arms {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for &j in batch {
+                let v = self.g(a, j);
+                s += v;
+                s2 += v * v;
+            }
+            self.sum[a] += s;
+            self.sum2[a] += s2;
+            self.count[a] += batch.len() as u64;
+        }
+    }
+
+    fn estimate(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            f64::INFINITY
+        } else {
+            self.sum[arm] / self.count[arm] as f64
+        }
+    }
+
+    fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
+        if self.count[arm] == 0 {
+            return f64::INFINITY;
+        }
+        // Paper's Algorithm 2, line 8: C_x = sigma_x * sqrt(log(1/delta) / n).
+        self.sigma(arm) * ((1.0 / delta).ln() / n_used.max(1) as f64).sqrt()
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let n = self.ps.len();
+        let mut s = 0.0;
+        for j in 0..n {
+            s += self.g(arm, j);
+        }
+        s / n as f64
+    }
+}
+
+/// SWAP arms (Eq. 2.6 with the FastPAM1 rewrite, Eq. A.1): arm (x, m_i)
+/// indexed as `xi * k + mi`; a batch evaluates d(x, x_j) once per (x, j)
+/// and updates all k arms of x — the O(k) saving of §A.1.1.
+struct SwapArms<'a, P: PointSet + ?Sized> {
+    ps: &'a P,
+    cache: &'a MedoidCache,
+    candidates: &'a [usize],
+    k: usize,
+    sum: Vec<f64>,
+    sum2: Vec<f64>,
+    count: Vec<u64>,
+    /// Memoized full distance rows for the exact fallback: the k arms of a
+    /// candidate x share one row (FastPAM1 sharing applies there too).
+    exact_rows: std::collections::HashMap<usize, Vec<f64>>,
+}
+
+impl<'a, P: PointSet + ?Sized> SwapArms<'a, P> {
+    /// Running per-arm sigma estimate (re-estimated continuously; §2.3.2).
+    fn sigma(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            return 1.0;
+        }
+        let c = self.count[arm] as f64;
+        let m = self.sum[arm] / c;
+        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(1e-9)
+    }
+
+    /// g for swap (x, mi) at reference j, given the precomputed d(x, x_j).
+    #[inline]
+    fn g_from_d(&self, mi: usize, j: usize, dxj: f64) -> f64 {
+        let without = if self.cache.nearest[j] == mi {
+            self.cache.d2[j]
+        } else {
+            self.cache.d1[j]
+        };
+        dxj.min(without) - self.cache.d1[j]
+    }
+}
+
+impl<'a, P: PointSet + ?Sized> AdaptiveArms for SwapArms<'a, P> {
+    fn n_arms(&self) -> usize {
+        self.candidates.len() * self.k
+    }
+
+    fn ref_len(&self) -> usize {
+        self.ps.len()
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
+        // `arms` is ordered, so arms sharing a candidate x are contiguous.
+        let mut i = 0;
+        while i < arms.len() {
+            let xi = arms[i] / self.k;
+            let mut run_end = i;
+            while run_end < arms.len() && arms[run_end] / self.k == xi {
+                run_end += 1;
+            }
+            let x = self.candidates[xi];
+            let group = &arms[i..run_end];
+            // Per-arm accumulators for this batch.
+            let mut s = vec![0.0; group.len()];
+            let mut s2 = vec![0.0; group.len()];
+            for &j in batch {
+                let dxj = self.ps.dist(x, j); // ONE distance call for all k arms
+                for (gi, &a) in group.iter().enumerate() {
+                    let mi = a % self.k;
+                    let v = self.g_from_d(mi, j, dxj);
+                    s[gi] += v;
+                    s2[gi] += v * v;
+                }
+            }
+            for (gi, &a) in group.iter().enumerate() {
+                self.sum[a] += s[gi];
+                self.sum2[a] += s2[gi];
+                self.count[a] += batch.len() as u64;
+            }
+            i = run_end;
+        }
+    }
+
+    fn estimate(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            f64::INFINITY
+        } else {
+            self.sum[arm] / self.count[arm] as f64
+        }
+    }
+
+    fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
+        if self.count[arm] == 0 {
+            return f64::INFINITY;
+        }
+        // Paper's Algorithm 2, line 8: C_x = sigma_x * sqrt(log(1/delta) / n).
+        self.sigma(arm) * ((1.0 / delta).ln() / n_used.max(1) as f64).sqrt()
+    }
+
+    fn exact(&mut self, arm: usize) -> f64 {
+        let (xi, mi) = (arm / self.k, arm % self.k);
+        let n = self.ps.len();
+        if !self.exact_rows.contains_key(&xi) {
+            let x = self.candidates[xi];
+            let row: Vec<f64> = (0..n).map(|j| self.ps.dist(x, j)).collect();
+            self.exact_rows.insert(xi, row);
+        }
+        let row = &self.exact_rows[&xi];
+        let mut s = 0.0;
+        for j in 0..n {
+            s += self.g_from_d(mi, j, row[j]);
+        }
+        s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distance::Metric;
+    use crate::data::synthetic::{mnist_like_d, scrna_like};
+    use crate::data::{Matrix, VecPointSet};
+    use crate::kmedoids::pam::{pam, SwapMode};
+
+    #[test]
+    fn banditpam_matches_pam_on_line() {
+        let rows = vec![
+            vec![0.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![10.0],
+            vec![11.0],
+            vec![12.0],
+        ];
+        let ps = VecPointSet::new(Matrix::from_rows(rows), Metric::L2);
+        let r = bandit_pam(&ps, &BanditPamConfig::new(2));
+        assert_eq!(r.medoids, vec![1, 4]);
+    }
+
+    #[test]
+    fn banditpam_agrees_with_pam_small_gaussian() {
+        // The central claim: same medoids as PAM w.h.p. Tight δ on small n.
+        let mut agree = 0;
+        let trials = 6;
+        for seed in 0..trials {
+            let m = mnist_like_d(120, 30, seed);
+            let ps = VecPointSet::new(m, Metric::L2);
+            let cfg = KmConfig { k: 3, max_swaps: 16, seed };
+            let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+            let mut bcfg = BanditPamConfig::new(3);
+            bcfg.km = cfg.clone();
+            bcfg.batch_size = 40;
+            let bandit = bandit_pam(&ps, &bcfg);
+            if exact.medoids == bandit.medoids {
+                agree += 1;
+            } else {
+                // When trajectories diverge the losses must still be close
+                // (distinct local minima of equal quality are possible).
+                assert!(
+                    bandit.loss <= exact.loss * 1.05,
+                    "seed {seed}: bandit loss {} ≫ exact {}",
+                    bandit.loss,
+                    exact.loss
+                );
+            }
+        }
+        assert!(agree >= trials - 1, "only {agree}/{trials} exact agreements");
+    }
+
+    #[test]
+    fn banditpam_l1_scrna_like() {
+        let m = scrna_like(100, 40, 5);
+        let ps = VecPointSet::new(m, Metric::L1);
+        let cfg = KmConfig { k: 4, max_swaps: 20, seed: 5 };
+        let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+        let mut bcfg = BanditPamConfig::new(4);
+        bcfg.km = cfg;
+        let bandit = bandit_pam(&ps, &bcfg);
+        assert!(bandit.loss <= exact.loss * 1.05);
+    }
+
+    #[test]
+    fn banditpam_fewer_calls_at_scale() {
+        // At n = 600 BanditPAM should already beat the quadratic scan on
+        // distance evaluations for the BUILD+SWAP pipeline.
+        let n = 600;
+        let m = mnist_like_d(n, 50, 11);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let cfg = KmConfig { k: 3, max_swaps: 6, seed: 1 };
+
+        ps.counter().reset();
+        let _ = pam(&ps, &cfg, SwapMode::FastPam1);
+        let exact_calls = ps.counter().get();
+
+        ps.counter().reset();
+        let mut bcfg = BanditPamConfig::new(3);
+        bcfg.km = cfg;
+        let _ = bandit_pam(&ps, &bcfg);
+        let bandit_calls = ps.counter().get();
+
+        // At n=600 the bandit already beats the quadratic scan; the margin
+        // widens with n (the scaling experiments measure the slopes).
+        assert!(
+            bandit_calls < exact_calls,
+            "bandit {bandit_calls} vs exact {exact_calls}"
+        );
+    }
+
+    #[test]
+    fn instrumentation_reports_sigmas_per_build_step() {
+        let m = mnist_like_d(80, 20, 2);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let (_, stats) = bandit_pam_instrumented(&ps, &BanditPamConfig::new(3));
+        assert_eq!(stats.build_sigmas.len(), 3);
+        // Paper Fig A.1: σ̂ drops sharply after the first medoid exists.
+        let med = |xs: &Vec<f64>| crate::util::stats::quantile(xs, 0.5);
+        assert!(
+            med(&stats.build_sigmas[1]) < med(&stats.build_sigmas[0]),
+            "σ̂ should shrink after first assignment"
+        );
+    }
+
+    #[test]
+    fn k1_is_exact_medoid() {
+        // k=1: BanditPAM must find the true 1-medoid of a small set.
+        let m = mnist_like_d(60, 10, 7);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let r = bandit_pam(&ps, &BanditPamConfig::new(1));
+        // brute force 1-medoid
+        let mut best = (f64::INFINITY, usize::MAX);
+        for x in 0..ps.len() {
+            let mut s = 0.0;
+            for j in 0..ps.len() {
+                s += ps.dist(x, j);
+            }
+            if s < best.0 {
+                best = (s, x);
+            }
+        }
+        assert_eq!(r.medoids, vec![best.1]);
+    }
+}

@@ -1,0 +1,247 @@
+//! Quality-sacrificing randomized k-medoids baselines of Fig. 2.1(a):
+//! CLARANS (Ng & Han), Voronoi iteration ("k-means-style" alternation,
+//! Park & Jun), and CLARA (PAM on subsamples, Kaufman & Rousseeuw).
+//! These trade clustering loss for speed — the thesis shows they land
+//! noticeably above PAM's loss while BanditPAM matches it exactly.
+
+use super::{loss, KmConfig, KmResult, MedoidCache};
+use crate::data::PointSet;
+use crate::kmedoids::pam::{pam, SwapMode};
+use crate::util::rng::Rng;
+
+/// CLARANS: randomized local search over the swap graph. `num_local`
+/// restarts; from each start, up to `max_neighbors` random swap proposals
+/// are tried, accepting any improvement and resetting the counter.
+pub fn clarans<P: PointSet + ?Sized>(
+    ps: &P,
+    cfg: &KmConfig,
+    num_local: usize,
+    max_neighbors: usize,
+) -> KmResult {
+    let before = ps.counter().get();
+    let n = ps.len();
+    let k = cfg.k;
+    let mut rng = Rng::new(cfg.seed);
+    let mut best_medoids: Vec<usize> = Vec::new();
+    let mut best_loss = f64::INFINITY;
+    let mut total_swaps = 0usize;
+
+    for _restart in 0..num_local {
+        let mut medoids = rng.sample_without_replacement(n, k);
+        let mut cur_loss = loss(ps, &medoids);
+        let mut tries = 0;
+        while tries < max_neighbors {
+            // Random neighbor: swap one random medoid with one random
+            // non-medoid.
+            let mi = rng.below(k);
+            let mut x = rng.below(n);
+            while medoids.contains(&x) {
+                x = rng.below(n);
+            }
+            let old = medoids[mi];
+            medoids[mi] = x;
+            let new_loss = loss(ps, &medoids);
+            if new_loss < cur_loss - 1e-12 {
+                cur_loss = new_loss;
+                total_swaps += 1;
+                tries = 0;
+            } else {
+                medoids[mi] = old;
+                tries += 1;
+            }
+        }
+        if cur_loss < best_loss {
+            best_loss = cur_loss;
+            best_medoids = medoids.clone();
+        }
+    }
+
+    best_medoids.sort_unstable();
+    let dist_calls = ps.counter().get() - before;
+    KmResult {
+        loss: best_loss,
+        medoids: best_medoids,
+        swaps_performed: total_swaps,
+        dist_calls,
+        dist_calls_per_iter: dist_calls as f64 / (total_swaps + 1) as f64,
+    }
+}
+
+/// Voronoi iteration (Park & Jun / "k-medoids the k-means way"):
+/// alternate (1) assign points to the nearest medoid, (2) recompute each
+/// cluster's medoid exactly. Converges to a local optimum that is often
+/// worse than PAM's (cluster-local moves only).
+pub fn voronoi<P: PointSet + ?Sized>(ps: &P, cfg: &KmConfig, max_iters: usize) -> KmResult {
+    let before = ps.counter().get();
+    let n = ps.len();
+    let k = cfg.k;
+    let mut rng = Rng::new(cfg.seed);
+    let mut medoids = rng.sample_without_replacement(n, k);
+    let mut iters = 0usize;
+
+    for _ in 0..max_iters {
+        iters += 1;
+        // Assign.
+        let cache = MedoidCache::compute(ps, &medoids);
+        // Recompute medoid of each cluster.
+        let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for j in 0..n {
+            clusters[cache.nearest[j]].push(j);
+        }
+        let mut changed = false;
+        for (ci, cluster) in clusters.iter().enumerate() {
+            if cluster.is_empty() {
+                continue;
+            }
+            let mut best = (f64::INFINITY, medoids[ci]);
+            for &cand in cluster {
+                let mut s = 0.0;
+                for &j in cluster {
+                    s += ps.dist(cand, j);
+                }
+                if s < best.0 {
+                    best = (s, cand);
+                }
+            }
+            if best.1 != medoids[ci] {
+                medoids[ci] = best.1;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    medoids.sort_unstable();
+    let final_loss = loss(ps, &medoids);
+    let dist_calls = ps.counter().get() - before;
+    KmResult {
+        loss: final_loss,
+        medoids,
+        swaps_performed: iters,
+        dist_calls,
+        dist_calls_per_iter: dist_calls as f64 / iters.max(1) as f64,
+    }
+}
+
+/// CLARA: run PAM on `n_samples` random subsets of size `sample_size`
+/// (classically 40 + 2k) and keep the subset solution with the best
+/// *full-data* loss.
+pub fn clara<P: PointSet + ?Sized>(
+    ps: &P,
+    cfg: &KmConfig,
+    n_samples: usize,
+    sample_size: usize,
+) -> KmResult {
+    let before = ps.counter().get();
+    let n = ps.len();
+    let mut rng = Rng::new(cfg.seed);
+    let mut best_medoids: Vec<usize> = Vec::new();
+    let mut best_loss = f64::INFINITY;
+
+    for _ in 0..n_samples {
+        let sample = rng.sample_without_replacement(n, sample_size.min(n));
+        let sub = SubsetPointSet { inner: ps, idx: &sample };
+        let sub_res = pam(&sub, &KmConfig { k: cfg.k, max_swaps: cfg.max_swaps, seed: cfg.seed }, SwapMode::FastPam1);
+        let medoids: Vec<usize> = sub_res.medoids.iter().map(|&i| sample[i]).collect();
+        let l = loss(ps, &medoids);
+        if l < best_loss {
+            best_loss = l;
+            best_medoids = medoids;
+        }
+    }
+
+    best_medoids.sort_unstable();
+    let dist_calls = ps.counter().get() - before;
+    KmResult {
+        loss: best_loss,
+        medoids: best_medoids,
+        swaps_performed: n_samples,
+        dist_calls,
+        dist_calls_per_iter: dist_calls as f64 / n_samples.max(1) as f64,
+    }
+}
+
+/// A view of a PointSet restricted to a subset of indices (for CLARA).
+struct SubsetPointSet<'a, P: PointSet + ?Sized> {
+    inner: &'a P,
+    idx: &'a [usize],
+}
+
+impl<'a, P: PointSet + ?Sized> PointSet for SubsetPointSet<'a, P> {
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.inner.dist(self.idx[i], self.idx[j])
+    }
+
+    fn counter(&self) -> &crate::metrics::OpCounter {
+        self.inner.counter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distance::Metric;
+    use crate::data::synthetic::mnist_like_d;
+    use crate::data::{Matrix, VecPointSet};
+
+    fn line_clusters() -> VecPointSet {
+        let rows = vec![
+            vec![0.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![10.0],
+            vec![11.0],
+            vec![12.0],
+        ];
+        VecPointSet::new(Matrix::from_rows(rows), Metric::L2)
+    }
+
+    #[test]
+    fn clarans_finds_good_solution_on_easy_data() {
+        let ps = line_clusters();
+        let r = clarans(&ps, &KmConfig::new(2), 3, 30);
+        assert!((r.loss - 4.0).abs() < 1e-9, "loss {}", r.loss);
+    }
+
+    #[test]
+    fn voronoi_converges() {
+        let ps = line_clusters();
+        let r = voronoi(&ps, &KmConfig::new(2), 50);
+        assert!(r.loss <= 8.0, "voronoi loss {} unreasonable", r.loss);
+        assert!(r.swaps_performed < 50, "should converge before cap");
+    }
+
+    #[test]
+    fn clara_close_to_pam_on_small_data() {
+        let m = mnist_like_d(100, 10, 3);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let cfg = KmConfig::new(3);
+        let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+        let cl = clara(&ps, &cfg, 4, 50);
+        assert!(cl.loss >= exact.loss - 1e-9, "CLARA can't beat PAM's optimum");
+        assert!(cl.loss <= exact.loss * 1.5, "CLARA loss {} way off {}", cl.loss, exact.loss);
+    }
+
+    #[test]
+    fn baselines_never_beat_pam_materially() {
+        // Fig 2.1(a)'s ordering: PAM ≤ {CLARANS, Voronoi} on average.
+        let mut pam_wins = 0;
+        for seed in 0..4 {
+            let m = mnist_like_d(80, 10, seed);
+            let ps = VecPointSet::new(m, Metric::L2);
+            let cfg = KmConfig { k: 3, max_swaps: 12, seed };
+            let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+            let v = voronoi(&ps, &cfg, 30);
+            if exact.loss <= v.loss + 1e-9 {
+                pam_wins += 1;
+            }
+        }
+        assert!(pam_wins >= 3, "PAM should dominate Voronoi ({pam_wins}/4)");
+    }
+}

@@ -1,0 +1,156 @@
+//! Chapter 2 — k-medoids clustering.
+//!
+//! Implements the full comparison set of the thesis' evaluation:
+//! * [`pam`] — exact Partitioning Around Medoids (BUILD + SWAP), plus the
+//!   FastPAM1 variant (identical output, O(k) cheaper SWAP scan);
+//! * [`banditpam`] — the paper's contribution: each BUILD/SWAP search run
+//!   as a best-arm identification problem on the shared engine;
+//! * [`baselines`] — CLARANS, Voronoi iteration, CLARA (quality-sacrificing
+//!   randomized baselines of Fig 2.1(a)).
+//!
+//! Every algorithm works over any [`crate::data::PointSet`] — dense
+//! vectors under l1/l2/cosine or program trees under edit distance — and
+//! reports the number of distance evaluations, the paper's complexity
+//! metric.
+
+pub mod banditpam;
+pub mod baselines;
+pub mod pam;
+
+use crate::data::PointSet;
+
+/// Common configuration for all k-medoids solvers.
+#[derive(Clone, Debug)]
+pub struct KmConfig {
+    pub k: usize,
+    /// Hard cap T on SWAP iterations (Remark 1 of §2.4; empirically O(k)).
+    pub max_swaps: usize,
+    pub seed: u64,
+}
+
+impl KmConfig {
+    pub fn new(k: usize) -> Self {
+        KmConfig { k, max_swaps: 4 * k + 4, seed: 42 }
+    }
+}
+
+/// Result common to every solver.
+#[derive(Clone, Debug)]
+pub struct KmResult {
+    /// Selected medoid indices (sorted).
+    pub medoids: Vec<usize>,
+    /// Final loss L(M) = Σ_j min_m d(m, x_j)  (Eq. 2.1).
+    pub loss: f64,
+    /// SWAP iterations actually performed.
+    pub swaps_performed: usize,
+    /// Total distance evaluations.
+    pub dist_calls: u64,
+    /// Distance evaluations divided by (swaps + 1) — the paper's
+    /// "per iteration" normalization (§2.5.2).
+    pub dist_calls_per_iter: f64,
+}
+
+/// Exact clustering loss (Eq. 2.1). Counts its distance evaluations.
+pub fn loss<P: PointSet + ?Sized>(ps: &P, medoids: &[usize]) -> f64 {
+    let n = ps.len();
+    let mut total = 0.0;
+    for j in 0..n {
+        let mut best = f64::INFINITY;
+        for &m in medoids {
+            let d = ps.dist(m, j);
+            if d < best {
+                best = d;
+            }
+        }
+        total += best;
+    }
+    total
+}
+
+/// Cached nearest / second-nearest medoid distances for every point —
+/// the d₁/d₂ cache both PAM and BanditPAM maintain (§2.2.1, §A.1.1).
+#[derive(Clone, Debug)]
+pub struct MedoidCache {
+    /// Index *into the medoid list* of each point's nearest medoid.
+    pub nearest: Vec<usize>,
+    /// Distance to nearest medoid (d₁).
+    pub d1: Vec<f64>,
+    /// Distance to second-nearest medoid (d₂; ∞ when k = 1).
+    pub d2: Vec<f64>,
+}
+
+impl MedoidCache {
+    /// Build the cache with k·n distance evaluations.
+    pub fn compute<P: PointSet + ?Sized>(ps: &P, medoids: &[usize]) -> Self {
+        let n = ps.len();
+        let mut nearest = vec![usize::MAX; n];
+        let mut d1 = vec![f64::INFINITY; n];
+        let mut d2 = vec![f64::INFINITY; n];
+        for j in 0..n {
+            for (mi, &m) in medoids.iter().enumerate() {
+                let d = ps.dist(m, j);
+                if d < d1[j] {
+                    d2[j] = d1[j];
+                    d1[j] = d;
+                    nearest[j] = mi;
+                } else if d < d2[j] {
+                    d2[j] = d;
+                }
+            }
+        }
+        MedoidCache { nearest, d1, d2 }
+    }
+
+    /// Total loss from the cache.
+    pub fn loss(&self) -> f64 {
+        self.d1.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distance::Metric;
+    use crate::data::{Matrix, VecPointSet};
+
+    fn tiny() -> VecPointSet {
+        // Two obvious clusters on a line: {0,1,2} and {10,11,12}.
+        let rows = vec![
+            vec![0.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![10.0],
+            vec![11.0],
+            vec![12.0],
+        ];
+        VecPointSet::new(Matrix::from_rows(rows), Metric::L2)
+    }
+
+    #[test]
+    fn loss_of_true_medoids() {
+        let ps = tiny();
+        // medoids 1 and 4 (the centers): loss = 1+0+1 + 1+0+1 = 4
+        assert!((loss(&ps, &[1, 4]) - 4.0).abs() < 1e-9);
+        // worse medoids cost more
+        assert!(loss(&ps, &[0, 3]) > 4.0);
+    }
+
+    #[test]
+    fn cache_matches_direct_loss() {
+        let ps = tiny();
+        let cache = MedoidCache::compute(&ps, &[1, 4]);
+        assert!((cache.loss() - loss(&ps, &[1, 4])).abs() < 1e-9);
+        assert_eq!(cache.nearest[0], 0);
+        assert_eq!(cache.nearest[5], 1);
+        // d2 of point 0 is distance to medoid 4 = 11
+        assert!((cache.d2[0] - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_counts_distance_calls() {
+        let ps = tiny();
+        ps.counter().reset();
+        let _ = loss(&ps, &[1, 4]);
+        assert_eq!(ps.counter().get(), 12); // 6 points × 2 medoids
+    }
+}

@@ -1,0 +1,253 @@
+//! Exact PAM (Kaufman & Rousseeuw) and the FastPAM1 variant.
+//!
+//! PAM is the quality gold standard the thesis tracks: BanditPAM's claim
+//! is *identical output* with O(n log n) instead of O(n²) distance
+//! evaluations per iteration. Both the naive SWAP scan (O(k n²)) and the
+//! FastPAM1 single-pass scan (O(n²), same output — §A.1.1) are here; the
+//! BUILD step is shared.
+
+use super::{KmConfig, KmResult, MedoidCache};
+use crate::data::PointSet;
+
+/// Which SWAP scan to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Evaluate all k(n−k) swaps independently: O(k n²) per iteration.
+    Naive,
+    /// FastPAM1: one pass over reference points computes all k deltas for
+    /// each candidate x simultaneously — O(n²) per iteration, same output.
+    FastPam1,
+}
+
+/// Run PAM: greedy BUILD then repeated best-swap SWAP until no
+/// improvement or `cfg.max_swaps`.
+pub fn pam<P: PointSet + ?Sized>(ps: &P, cfg: &KmConfig, mode: SwapMode) -> KmResult {
+    let before = ps.counter().get();
+    let medoids = build(ps, cfg.k);
+    let (medoids, swaps) = swap_until_converged(ps, medoids, cfg.max_swaps, mode);
+    let mut sorted = medoids.clone();
+    sorted.sort_unstable();
+    let cache = MedoidCache::compute(ps, &sorted);
+    let dist_calls = ps.counter().get() - before;
+    KmResult {
+        loss: cache.loss(),
+        medoids: sorted,
+        swaps_performed: swaps,
+        dist_calls,
+        dist_calls_per_iter: dist_calls as f64 / (swaps + 1) as f64,
+    }
+}
+
+/// Greedy BUILD (Eq. 2.3): add the point minimizing total loss, k times.
+/// Exact: n(n−1)/2-ish distance evaluations per step (d₁ cached).
+pub fn build<P: PointSet + ?Sized>(ps: &P, k: usize) -> Vec<usize> {
+    let n = ps.len();
+    assert!(k >= 1 && k <= n);
+    let mut medoids: Vec<usize> = Vec::with_capacity(k);
+    let mut d1 = vec![f64::INFINITY; n]; // min over current medoids
+    for _ in 0..k {
+        let mut best = (f64::INFINITY, usize::MAX);
+        for x in 0..n {
+            if medoids.contains(&x) {
+                continue;
+            }
+            let mut total = 0.0;
+            for j in 0..n {
+                let dxj = ps.dist(x, j);
+                total += dxj.min(d1[j]);
+            }
+            if total < best.0 {
+                best = (total, x);
+            }
+        }
+        let m = best.1;
+        medoids.push(m);
+        for j in 0..n {
+            let d = ps.dist(m, j);
+            if d < d1[j] {
+                d1[j] = d;
+            }
+        }
+    }
+    medoids
+}
+
+/// Repeat best-improvement SWAP steps until converged. Returns final
+/// medoids and the number of swaps performed.
+pub fn swap_until_converged<P: PointSet + ?Sized>(
+    ps: &P,
+    mut medoids: Vec<usize>,
+    max_swaps: usize,
+    mode: SwapMode,
+) -> (Vec<usize>, usize) {
+    let mut swaps = 0;
+    for _ in 0..max_swaps {
+        let cache = MedoidCache::compute(ps, &medoids);
+        let (delta, mi, x) = match mode {
+            SwapMode::Naive => best_swap_naive(ps, &medoids, &cache),
+            SwapMode::FastPam1 => best_swap_fastpam1(ps, &medoids, &cache),
+        };
+        if delta >= -1e-12 {
+            break; // no improving swap
+        }
+        medoids[mi] = x;
+        swaps += 1;
+    }
+    (medoids, swaps)
+}
+
+/// Naive SWAP scan (Eq. 2.4): for every medoid position × candidate,
+/// recompute the post-swap loss contribution of every reference point.
+fn best_swap_naive<P: PointSet + ?Sized>(
+    ps: &P,
+    medoids: &[usize],
+    cache: &MedoidCache,
+) -> (f64, usize, usize) {
+    let n = ps.len();
+    let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+    for (mi, _m) in medoids.iter().enumerate() {
+        for x in 0..n {
+            if medoids.contains(&x) {
+                continue;
+            }
+            // Δloss of swapping medoid position mi for x.
+            let mut delta = 0.0;
+            for j in 0..n {
+                let dxj = ps.dist(x, j);
+                let without_m = if cache.nearest[j] == mi { cache.d2[j] } else { cache.d1[j] };
+                delta += dxj.min(without_m) - cache.d1[j];
+            }
+            if delta < best.0 {
+                best = (delta, mi, x);
+            }
+        }
+    }
+    best
+}
+
+/// FastPAM1 SWAP scan (§A.1.1 / Eq. A.1): one pass over j per candidate x
+/// computes the loss deltas for *all* k medoid positions at once using the
+/// cached d₁, d₂ and cluster assignments.
+fn best_swap_fastpam1<P: PointSet + ?Sized>(
+    ps: &P,
+    medoids: &[usize],
+    cache: &MedoidCache,
+) -> (f64, usize, usize) {
+    let n = ps.len();
+    let k = medoids.len();
+    let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+    let mut delta = vec![0f64; k];
+    for x in 0..n {
+        if medoids.contains(&x) {
+            continue;
+        }
+        delta.iter_mut().for_each(|d| *d = 0.0);
+        // Shared accumulator: removing medoid m only changes points in C_m.
+        let mut shared = 0.0; // Σ_j min(dxj, d1_j) − d1_j  (m ∉ nearest(j))
+        for j in 0..n {
+            let dxj = ps.dist(x, j);
+            let nj = cache.nearest[j];
+            // For m ≠ nearest(j): contribution min(dxj, d1) − d1.
+            let other = dxj.min(cache.d1[j]) - cache.d1[j];
+            shared += other;
+            // For m = nearest(j): contribution min(dxj, d2) − d1, replacing
+            // the `other` term accounted in `shared`.
+            delta[nj] += (dxj.min(cache.d2[j]) - cache.d1[j]) - other;
+        }
+        for mi in 0..k {
+            let total = shared + delta[mi];
+            if total < best.0 {
+                best = (total, mi, x);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::distance::Metric;
+    use crate::data::synthetic::mnist_like_d;
+    use crate::data::{Matrix, VecPointSet};
+    use crate::kmedoids::loss;
+
+    fn line_clusters() -> VecPointSet {
+        let rows = vec![
+            vec![0.0f32],
+            vec![1.0],
+            vec![2.0],
+            vec![10.0],
+            vec![11.0],
+            vec![12.0],
+        ];
+        VecPointSet::new(Matrix::from_rows(rows), Metric::L2)
+    }
+
+    #[test]
+    fn build_picks_greedy_optima() {
+        let ps = line_clusters();
+        let m = build(&ps, 2);
+        // Greedy BUILD first picks the global 1-medoid (point 2, sum of
+        // distances 30), then point 11 (index 4). SWAP later refines 2 → 1.
+        assert_eq!(m, vec![2, 4]);
+    }
+
+    #[test]
+    fn pam_converges_to_optimal_on_line() {
+        let ps = line_clusters();
+        let r = pam(&ps, &KmConfig::new(2), SwapMode::Naive);
+        assert_eq!(r.medoids, vec![1, 4]);
+        assert!((r.loss - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fastpam1_agrees_with_naive() {
+        // The thesis' guarantee: FastPAM1 returns the *same* result as PAM.
+        for seed in 0..5 {
+            let m = mnist_like_d(60, 20, seed);
+            let ps = VecPointSet::new(m, Metric::L2);
+            let cfg = KmConfig { k: 3, max_swaps: 20, seed };
+            let a = pam(&ps, &cfg, SwapMode::Naive);
+            let b = pam(&ps, &cfg, SwapMode::FastPam1);
+            assert_eq!(a.medoids, b.medoids, "seed {seed}");
+            assert!((a.loss - b.loss).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fastpam1_uses_fewer_distance_calls() {
+        let m = mnist_like_d(80, 20, 3);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let cfg = KmConfig { k: 4, max_swaps: 20, seed: 0 };
+        ps.counter().reset();
+        let _ = pam(&ps, &cfg, SwapMode::Naive);
+        let naive_calls = ps.counter().get();
+        ps.counter().reset();
+        let _ = pam(&ps, &cfg, SwapMode::FastPam1);
+        let fp1_calls = ps.counter().get();
+        assert!(
+            fp1_calls * 2 < naive_calls,
+            "FastPAM1 {fp1_calls} vs naive {naive_calls}"
+        );
+    }
+
+    #[test]
+    fn swap_never_increases_loss() {
+        let m = mnist_like_d(50, 10, 9);
+        let ps = VecPointSet::new(m, Metric::L1);
+        let built = build(&ps, 3);
+        let loss_before = loss(&ps, &built);
+        let (after, _) = swap_until_converged(&ps, built, 10, SwapMode::FastPam1);
+        let loss_after = loss(&ps, &after);
+        assert!(loss_after <= loss_before + 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_zero_loss() {
+        let ps = line_clusters();
+        let r = pam(&ps, &KmConfig::new(6), SwapMode::FastPam1);
+        assert!(r.loss.abs() < 1e-12);
+        assert_eq!(r.medoids, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

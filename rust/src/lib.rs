@@ -1,0 +1,24 @@
+//! # adaptive-sampling
+//!
+//! A Rust + JAX/Pallas reproduction of *"Accelerating Machine Learning
+//! Algorithms with Adaptive Sampling"* (Tiwari, 2023): BanditPAM
+//! (k-medoids, Ch. 2), MABSplit (forest node-splitting, Ch. 3) and
+//! BanditMIPS (maximum inner product search, Ch. 4), built on one shared
+//! fixed-confidence best-arm identification engine (Ch. 1).
+//!
+//! Architecture (see DESIGN.md): the adaptive-sampling control loop and
+//! every substrate live in Rust (this crate); the arithmetic hot-spots are
+//! Pallas kernels inside JAX graphs, AOT-lowered to HLO text at build time
+//! (`make artifacts`) and executed from Rust via PJRT ([`runtime`]).
+//! Python never runs on the request path.
+
+pub mod bandit;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod forest;
+pub mod kmedoids;
+pub mod metrics;
+pub mod mips;
+pub mod runtime;
+pub mod util;

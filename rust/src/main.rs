@@ -1,0 +1,184 @@
+//! `repro` — the leader binary: experiment harnesses, the MIPS serving
+//! coordinator, and artifact smoke checks.
+//!
+//! ```text
+//! repro list                      # show all experiment ids
+//! repro exp <id>|all [--seed S]   # regenerate a paper table/figure
+//! repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]
+//! repro check-artifacts           # load + smoke-test the AOT bundle
+//! ```
+
+use std::sync::Arc;
+
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::data::synthetic::lowrank_like;
+use adaptive_sampling::experiments;
+use adaptive_sampling::metrics::LatencyRecorder;
+use adaptive_sampling::runtime::service::PjrtHandle;
+use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("check-artifacts") => cmd_check_artifacts(),
+        _ => {
+            eprintln!(
+                "usage: repro <list|exp|serve|check-artifacts> [...]\n\
+                 \n  repro list\n  repro exp <id>|all [--seed S]\n  \
+                 repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
+                 repro check-artifacts"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn cmd_list() -> i32 {
+    println!("{:<10} description", "id");
+    println!("{}", "-".repeat(72));
+    for (id, desc, _) in experiments::registry() {
+        println!("{id:<10} {desc}");
+    }
+    0
+}
+
+fn cmd_exp(args: &[String]) -> i32 {
+    let Some(id) = args.first() else {
+        eprintln!("usage: repro exp <id>|all [--seed S]   (ids: repro list)");
+        return 2;
+    };
+    let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    if experiments::run(id, seed) {
+        0
+    } else {
+        eprintln!("unknown experiment id {id:?}; try `repro list`");
+        2
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let n_queries: usize =
+        flag_value(args, "--queries").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let backend_name = flag_value(args, "--backend").unwrap_or("hybrid");
+    let cfg = match flag_value(args, "--config") {
+        Some(path) => match ServerConfig::from_file(std::path::Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e:#}");
+                return 1;
+            }
+        },
+        None => ServerConfig::default(),
+    };
+
+    // Atoms sized to the mips_scores artifact so the PJRT path works 1:1.
+    let (n, d) = (512, 1024);
+    let atoms = Arc::new(lowrank_like(n, d, 15, 7));
+    let backend = match backend_name {
+        "native" => Backend::NativeBandit,
+        "pjrt" | "hybrid" => {
+            let dir = ArtifactStore::default_dir();
+            match PjrtHandle::start(&dir) {
+                Ok(handle) => {
+                    let entry = "mips_scores_n512_d1024".to_string();
+                    if backend_name == "pjrt" {
+                        Backend::PjrtExact { store: handle, entry }
+                    } else {
+                        Backend::Hybrid { store: handle, entry }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("PJRT unavailable ({e:#}); falling back to native backend");
+                    Backend::NativeBandit
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown backend {other}");
+            return 2;
+        }
+    };
+
+    println!("serving {n_queries} queries over {n}x{d} atoms, backend={backend:?}, {cfg:?}");
+    let server = MipsServer::start(atoms.clone(), cfg, backend);
+    let mut rng = Rng::new(99);
+    let receivers: Vec<_> = (0..n_queries)
+        .map(|_| {
+            let q: Vec<f32> = (0..d).map(|_| rng.f32() * 5.0).collect();
+            server.submit(q)
+        })
+        .collect();
+    let mut lat = LatencyRecorder::new();
+    let t0 = std::time::Instant::now();
+    let mut validated_ok = 0usize;
+    let mut validated = 0usize;
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        lat.record(resp.latency);
+        if let Some(ok) = resp.validated {
+            validated += 1;
+            validated_ok += ok as usize;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("latency: {}", lat.summary());
+    println!(
+        "throughput: {:.0} qps over {:.2}s; batches={}; samples/query p50≈{:.0}",
+        n_queries as f64 / wall,
+        wall,
+        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.samples.get() as f64 / n_queries as f64,
+    );
+    if validated > 0 {
+        println!("PJRT canary validation: {validated_ok}/{validated} agreements");
+    }
+    server.shutdown();
+    0
+}
+
+fn cmd_check_artifacts() -> i32 {
+    let dir = ArtifactStore::default_dir();
+    match ArtifactStore::load(&dir) {
+        Ok(store) => {
+            println!("platform: {}", store.platform());
+            for name in store.names() {
+                let meta = store.meta(name).unwrap();
+                // Smoke: execute on zeros.
+                let inputs: Vec<Vec<f32>> = meta
+                    .params
+                    .iter()
+                    .map(|s| vec![0f32; s.iter().product()])
+                    .collect();
+                let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                match store.exec_f32(name, &refs) {
+                    Ok(outs) => println!(
+                        "  {name:<32} OK ({} outputs: {:?})",
+                        outs.len(),
+                        meta.outputs
+                    ),
+                    Err(e) => {
+                        println!("  {name:<32} FAILED: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#}");
+            1
+        }
+    }
+}

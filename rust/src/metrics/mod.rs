@@ -1,0 +1,161 @@
+//! Operation counters and latency recorders.
+//!
+//! The thesis reports *sample complexity* — distance evaluations (Ch. 2),
+//! histogram insertions (Ch. 3), coordinate-wise multiplications (Ch. 4) —
+//! as its hardware-independent cost metric. Every algorithm in this repo
+//! routes its fundamental operation through an [`OpCounter`] so harnesses
+//! can report exactly what the paper plots, alongside wall-clock time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A cheap, thread-safe counter for an algorithm's fundamental operation.
+#[derive(Debug, Default)]
+pub struct OpCounter {
+    count: AtomicU64,
+}
+
+impl OpCounter {
+    pub const fn new() -> Self {
+        OpCounter { count: AtomicU64::new(0) }
+    }
+
+    /// Add `n` operations.
+    #[inline(always)]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one operation.
+    #[inline(always)]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+
+    /// Run `f` and return (result, ops consumed by f).
+    pub fn scoped<T>(&self, f: impl FnOnce() -> T) -> (T, u64) {
+        let before = self.get();
+        let out = f();
+        (out, self.get() - before)
+    }
+}
+
+impl Clone for OpCounter {
+    fn clone(&self) -> Self {
+        OpCounter { count: AtomicU64::new(self.get()) }
+    }
+}
+
+/// Latency recorder for the serving coordinator: stores microsecond
+/// samples and reports percentiles/throughput.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        crate::util::stats::quantile(&self.samples_us, q)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_us)
+    }
+
+    /// Human summary: "n=..., mean=..µs p50=..µs p95=..µs p99=..µs".
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.len(),
+            self.mean_us(),
+            self.p(0.50),
+            self.p(0.95),
+            self.p(0.99)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_and_resets() {
+        let c = OpCounter::new();
+        c.add(5);
+        c.incr();
+        assert_eq!(c.get(), 6);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn scoped_measures_delta() {
+        let c = OpCounter::new();
+        c.add(100);
+        let (out, used) = c.scoped(|| {
+            c.add(42);
+            "done"
+        });
+        assert_eq!(out, "done");
+        assert_eq!(used, 42);
+        assert_eq!(c.get(), 142);
+    }
+
+    #[test]
+    fn counter_threadsafe() {
+        let c = std::sync::Arc::new(OpCounter::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    c.incr();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyRecorder::new();
+        for i in 1..=100 {
+            l.record(Duration::from_micros(i));
+        }
+        assert!((l.p(0.5) - 50.5).abs() < 1.0);
+        assert!(l.p(0.99) > 98.0);
+        assert!(!l.summary().is_empty());
+    }
+}

@@ -1,0 +1,81 @@
+//! Chapter 4 — Maximum Inner Product Search.
+//!
+//! * [`banditmips`] — BanditMIPS (Algorithm 4), BanditMIPS-α (sorted-query
+//!   coordinate schedule), non-uniform β-weighted sampling, warm starts;
+//! * [`baselines`] — the comparison set of §4.5: naive, BoundedME,
+//!   Greedy-MIPS, LSH-MIPS (asymmetric SimHash), PCA-MIPS, ip-NSW-style
+//!   graph search;
+//! * [`bucket`] — Bucket_AE norm-binned preprocessing (§C.4);
+//! * [`matching_pursuit`] — MP with a pluggable MIPS subroutine (§C.5).
+//!
+//! Cost metric: *coordinate-wise multiplications* (`sample complexity` in
+//! the thesis), counted on an [`crate::metrics::OpCounter`]. Query-time
+//! complexity excludes preprocessing, as the paper measures (favourable
+//! to the baselines — §4.5).
+
+pub mod banditmips;
+pub mod baselines;
+pub mod bucket;
+pub mod matching_pursuit;
+
+use crate::data::Matrix;
+use crate::metrics::OpCounter;
+
+/// The exact (naive) solution: full inner products, `n·d` multiplications.
+pub fn naive_mips(atoms: &Matrix, q: &[f32], k: usize, counter: &OpCounter) -> Vec<usize> {
+    assert_eq!(atoms.d, q.len());
+    let mut scored: Vec<(f64, usize)> = (0..atoms.n)
+        .map(|i| {
+            counter.add(atoms.d as u64);
+            (dot_ip(atoms.row(i), q), i)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    scored.into_iter().take(k).map(|(_, i)| i).collect()
+}
+
+/// Plain inner product (no counting — callers count).
+#[inline]
+pub fn dot_ip(a: &[f32], b: &[f32]) -> f64 {
+    crate::util::linalg::dot_f32(a, b) as f64
+}
+
+/// Recall@k of `got` against ground truth `want` (order-insensitive).
+pub fn recall_at_k(got: &[usize], want: &[usize]) -> f64 {
+    if want.is_empty() {
+        return 1.0;
+    }
+    let w: std::collections::HashSet<_> = want.iter().collect();
+    let hits = got.iter().filter(|i| w.contains(i)).count();
+    hits as f64 / want.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::normal_custom;
+
+    #[test]
+    fn naive_finds_true_argmax() {
+        let (atoms, queries) = normal_custom(50, 200, 1, 7);
+        let c = OpCounter::new();
+        let got = naive_mips(&atoms, queries.row(0), 1, &c);
+        // brute-force double check
+        let mut best = (f64::MIN, 0usize);
+        for i in 0..atoms.n {
+            let ip = dot_ip(atoms.row(i), queries.row(0));
+            if ip > best.0 {
+                best = (ip, i);
+            }
+        }
+        assert_eq!(got[0], best.1);
+        assert_eq!(c.get(), 50 * 200);
+    }
+
+    #[test]
+    fn recall_counts_hits() {
+        assert_eq!(recall_at_k(&[1, 2, 3], &[3, 4, 5]), 1.0 / 3.0);
+        assert_eq!(recall_at_k(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(recall_at_k(&[], &[1]), 0.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and execute them from the Rust request path.
+//!
+//! Python never runs here. HLO *text* is the interchange format (the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos); the
+//! text parser reassigns instruction ids and round-trips cleanly.
+//!
+//! An [`ArtifactStore`] compiles every manifest entry once on a PJRT CPU
+//! client; [`ArtifactStore::exec_f32`] builds literals, runs, and unpacks
+//! the tuple outputs. Shape-specialized executables mean callers pad the
+//! last batch up to the artifact's declared parameter shapes (see
+//! [`pad_to`]).
+
+pub mod service;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One manifest entry: an entry-point name plus its fixed shapes.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Parameter shapes (row-major dims; scalars/vectors are 1-element).
+    pub params: Vec<Vec<usize>>,
+    /// Output shapes (the computation returns a tuple of these).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parse `manifest.txt` (line format documented in aot.py).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let parse_shapes = |spec: &str| -> Result<Vec<Vec<usize>>> {
+        spec.split(';')
+            .filter(|s| !s.is_empty())
+            .map(|shape| {
+                shape
+                    .split('x')
+                    .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+                    .collect()
+            })
+            .collect()
+    };
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(name), Some(file), Some(params), Some(outputs)) =
+            (it.next(), it.next(), it.next(), it.next())
+        else {
+            bail!("manifest line {} malformed: {line}", ln + 1);
+        };
+        let params = params
+            .strip_prefix("params=")
+            .ok_or_else(|| anyhow!("line {}: missing params=", ln + 1))?;
+        let outputs = outputs
+            .strip_prefix("outputs=")
+            .ok_or_else(|| anyhow!("line {}: missing outputs=", ln + 1))?;
+        out.push(ArtifactMeta {
+            name: name.to_string(),
+            file: file.to_string(),
+            params: parse_shapes(params)?,
+            outputs: parse_shapes(outputs)?,
+        });
+    }
+    Ok(out)
+}
+
+/// Compiled artifacts, keyed by entry name.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    exes: HashMap<String, (xla::PjRtLoadedExecutable, ArtifactMeta)>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load + compile every artifact in `dir`. Fails with a pointed
+    /// message if `make artifacts` hasn't been run.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "missing {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+            exes.insert(meta.name.clone(), (exe, meta));
+        }
+        Ok(ArtifactStore { client, exes, dir: dir.to_path_buf() })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.exes.get(name).map(|(_, m)| m)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute entry `name` on f32 inputs (row-major, matching the
+    /// manifest's parameter shapes exactly). Returns the tuple outputs as
+    /// flat f32 vectors.
+    pub fn exec_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (exe, meta) = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.names()))?;
+        if inputs.len() != meta.params.len() {
+            bail!(
+                "{name}: got {} inputs, manifest wants {}",
+                inputs.len(),
+                meta.params.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (&data, shape)) in inputs.iter().zip(&meta.params).enumerate() {
+            let expect: usize = shape.iter().product();
+            if data.len() != expect {
+                bail!(
+                    "{name}: input {i} has {} elems, shape {shape:?} wants {expect}",
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.len() > 1 {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape input {i}: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack all outputs.
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output {i} of {name}: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Pad a row-major [rows, cols] matrix up to [target_rows, cols] with
+/// `fill` — the shape-specialization helper for last batches.
+pub fn pad_to(data: &[f32], rows: usize, cols: usize, target_rows: usize, fill: f32) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    assert!(target_rows >= rows);
+    let mut out = Vec::with_capacity(target_rows * cols);
+    out.extend_from_slice(data);
+    out.resize(target_rows * cols, fill);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = ArtifactStore::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("[skip] no artifacts at {} — run `make artifacts`", dir.display());
+            return None;
+        }
+        Some(ArtifactStore::load(&dir).expect("artifact store"))
+    }
+
+    #[test]
+    fn manifest_parser_roundtrip() {
+        let text = "a a.hlo.txt params=64x784;256 outputs=64x256\n\
+                    # comment\n\
+                    b b.hlo.txt params=512 outputs=512;16x16\n";
+        let metas = parse_manifest(text).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].params, vec![vec![64, 784], vec![256]]);
+        assert_eq!(metas[1].outputs, vec![vec![512], vec![16, 16]]);
+    }
+
+    #[test]
+    fn manifest_parser_rejects_garbage() {
+        assert!(parse_manifest("oops\n").is_err());
+        assert!(parse_manifest("a f params=1x nope outputs=1\n").is_err());
+    }
+
+    #[test]
+    fn pad_to_fills_rows() {
+        let m = pad_to(&[1.0, 2.0, 3.0, 4.0], 2, 2, 4, 0.0);
+        assert_eq!(m, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pjrt_mips_scores_matches_native() {
+        let Some(store) = store() else { return };
+        let meta = store.meta("mips_scores_n512_d1024").unwrap().clone();
+        let (n, d) = (meta.params[0][0], meta.params[0][1]);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let atoms: Vec<f32> = (0..n * d).map(|_| rng.f32() - 0.5).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let out = store.exec_f32("mips_scores_n512_d1024", &[&atoms, &q]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        for i in (0..n).step_by(97) {
+            let native = crate::util::linalg::dot_f32(&atoms[i * d..(i + 1) * d], &q);
+            assert!(
+                (out[0][i] - native).abs() < 1e-2,
+                "atom {i}: pjrt {} vs native {native}",
+                out[0][i]
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_build_g_matches_native() {
+        let Some(store) = store() else { return };
+        let meta = store.meta("bpam_build_t64_r256_d784").unwrap().clone();
+        let (t, d) = (meta.params[0][0], meta.params[0][1]);
+        let r = meta.params[1][0];
+        let mut rng = crate::util::rng::Rng::new(5);
+        let cand: Vec<f32> = (0..t * d).map(|_| rng.f32()).collect();
+        let refs: Vec<f32> = (0..r * d).map(|_| rng.f32()).collect();
+        let d1: Vec<f32> = (0..r).map(|_| rng.f32() * 10.0).collect();
+        let out = store
+            .exec_f32("bpam_build_t64_r256_d784", &[&cand, &refs, &d1])
+            .unwrap();
+        assert_eq!(out[0].len(), t * r);
+        // native check on a few entries
+        for &(ti, ri) in &[(0usize, 0usize), (5, 100), (63, 255)] {
+            let dist = crate::data::distance::l2(
+                &cand[ti * d..(ti + 1) * d],
+                &refs[ri * d..(ri + 1) * d],
+            ) as f32;
+            let want = (dist - d1[ri]).min(0.0);
+            let got = out[0][ti * r + ri];
+            assert!((got - want).abs() < 1e-2, "({ti},{ri}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn pjrt_hist_outputs_counts_and_gini() {
+        let Some(store) = store() else { return };
+        let b = 256;
+        let bins: Vec<f32> = (0..b).map(|i| (i % 8) as f32).collect();
+        let labels: Vec<f32> = (0..b).map(|i| ((i % 8) >= 4) as u8 as f32).collect();
+        let out = store
+            .exec_f32("mabsplit_hist_b256_t16_k16", &[&bins, &labels])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let counts = &out[0];
+        let gini = &out[1];
+        assert_eq!(counts.len(), 16 * 16);
+        assert_eq!(gini.len(), 15);
+        let total: f32 = counts.iter().sum();
+        assert_eq!(total as usize, b);
+        // threshold after bin 3 separates labels perfectly
+        assert!(gini[3] < 1e-5, "gini[3] = {}", gini[3]);
+        assert!(gini[1] > 0.1);
+    }
+}

@@ -1,0 +1,108 @@
+//! A thread-owned PJRT service: the `xla` crate's client and executables
+//! are not `Send` (Rc + raw PJRT pointers), so one dedicated thread owns
+//! the [`ArtifactStore`] and serves execution requests over channels. The
+//! cloneable [`PjrtHandle`] is what the coordinator's worker pool holds.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::{ArtifactMeta, ArtifactStore};
+
+type ExecRequest = (String, Vec<Vec<f32>>, Sender<Result<Vec<Vec<f32>>>>);
+
+/// Cloneable, `Send` handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<ExecRequest>,
+    metas: HashMap<String, ArtifactMeta>,
+}
+
+impl PjrtHandle {
+    /// Load the artifact store on a dedicated service thread.
+    pub fn start(dir: &Path) -> Result<PjrtHandle> {
+        let (tx, rx) = channel::<ExecRequest>();
+        let (boot_tx, boot_rx) = channel::<Result<HashMap<String, ArtifactMeta>>>();
+        let dir = dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let store = match ArtifactStore::load(&dir) {
+                    Ok(s) => {
+                        let metas: HashMap<String, ArtifactMeta> = s
+                            .names()
+                            .iter()
+                            .map(|&n| (n.to_string(), s.meta(n).unwrap().clone()))
+                            .collect();
+                        let _ = boot_tx.send(Ok(metas));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((name, inputs, respond)) = rx.recv() {
+                    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                    let _ = respond.send(store.exec_f32(&name, &refs));
+                }
+            })
+            .expect("spawn pjrt-service");
+        let metas = boot_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service died during startup"))??;
+        Ok(PjrtHandle { tx, metas })
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute an artifact (blocking until the service thread replies).
+    pub fn exec_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send((name.to_string(), inputs.iter().map(|s| s.to_vec()).collect(), rtx))
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped request"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_usable_from_many_threads() {
+        let dir = ArtifactStore::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("[skip] no artifacts — run `make artifacts`");
+            return;
+        }
+        let handle = PjrtHandle::start(&dir).unwrap();
+        let meta = handle.meta("mips_scores_n512_d1024").unwrap().clone();
+        let (n, d) = (meta.params[0][0], meta.params[0][1]);
+        let mut threads = Vec::new();
+        for t in 0..4 {
+            let h = handle.clone();
+            threads.push(std::thread::spawn(move || {
+                let atoms = vec![t as f32 * 0.1 + 0.1; n * d];
+                let q = vec![1.0f32; d];
+                let out = h.exec_f32("mips_scores_n512_d1024", &[&atoms, &q]).unwrap();
+                let want = (t as f32 * 0.1 + 0.1) * d as f32;
+                assert!((out[0][0] - want).abs() < 0.5, "{} vs {}", out[0][0], want);
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

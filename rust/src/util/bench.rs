@@ -1,0 +1,126 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Benches declare `harness = false` in Cargo.toml and drive this module
+//! from their `main()`. The harness warms up, then runs timed iterations
+//! until a wall-clock budget or iteration cap is reached, and reports
+//! mean / stddev / min per iteration plus an ops-per-second figure.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected timings.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<52} {:>10} iters   mean {:>12}   p50 {:>12}   min {:>12}   ±{:>10}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.std_ns),
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Bench runner with a shared time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Keep whole-suite runtime modest: these run as part of `make bench`.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bencher {
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(200) },
+            budget: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one full unit of work per call.
+    /// Use `std::hint::black_box` inside `f` to defeat DCE.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed.
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let mean = crate::util::stats::mean(&samples);
+        let std = crate::util::stats::std_dev(&samples);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let p50 = crate::util::stats::quantile(&samples, 0.5);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: mean,
+            std_ns: std,
+            min_ns: min,
+            p50_ns: p50,
+        };
+        r.report();
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// All results collected so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Small dense linear algebra: just enough for the substrates the paper
+//! needs — PCA (scRNA-PCA dataset of Appendix A.1.3, PCA-MIPS baseline)
+//! and low-rank matrix synthesis (Netflix / MovieLens simulators).
+//!
+//! Matrices are row-major `Vec<f32>` with explicit (rows, cols); at these
+//! sizes (≤ a few thousand square) simple loops autovectorize fine.
+
+use crate::util::rng::Rng;
+
+/// y += a * x
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product (f64 accumulation).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Dot product over f32 slices with f32 accumulation in 4 lanes — the
+/// shape LLVM reliably autovectorizes; used by the MIPS hot path.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm of an f64 slice.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Center columns of a row-major (n x d) matrix in place; returns the mean.
+pub fn center_columns(x: &mut [f32], n: usize, d: usize) -> Vec<f64> {
+    let mut mu = vec![0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mu[j] += x[i * d + j] as f64;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f64;
+    }
+    for i in 0..n {
+        for j in 0..d {
+            x[i * d + j] -= mu[j] as f32;
+        }
+    }
+    mu
+}
+
+/// Top-`k` principal components of a row-major (n x d) matrix via power
+/// iteration with Gram–Schmidt deflation. Returns (components [k x d],
+/// projected data [n x k]). Deterministic given `seed`.
+pub fn pca(x: &[f32], n: usize, d: usize, k: usize, seed: u64) -> (Vec<f64>, Vec<f32>) {
+    let mut xc: Vec<f32> = x.to_vec();
+    center_columns(&mut xc, n, d);
+    let mut rng = Rng::new(seed);
+    let mut comps: Vec<f64> = Vec::with_capacity(k * d);
+
+    let matvec = |v: &[f64], comps: &[f64], kdone: usize| -> Vec<f64> {
+        // w = X^T (X v) / n, then deflate against found components.
+        let mut xv = vec![0f64; n];
+        for i in 0..n {
+            let row = &xc[i * d..(i + 1) * d];
+            let mut s = 0f64;
+            for j in 0..d {
+                s += row[j] as f64 * v[j];
+            }
+            xv[i] = s;
+        }
+        let mut w = vec![0f64; d];
+        for i in 0..n {
+            let row = &xc[i * d..(i + 1) * d];
+            let a = xv[i] / n as f64;
+            for j in 0..d {
+                w[j] += row[j] as f64 * a;
+            }
+        }
+        for c in 0..kdone {
+            let comp = &comps[c * d..(c + 1) * d];
+            let proj = dot(&w, comp);
+            for j in 0..d {
+                w[j] -= proj * comp[j];
+            }
+        }
+        w
+    };
+
+    for c in 0..k {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        // Orthogonalize the start vector against found components.
+        for cc in 0..c {
+            let comp = &comps[cc * d..(cc + 1) * d];
+            let proj = dot(&v, comp);
+            for j in 0..d {
+                v[j] -= proj * comp[j];
+            }
+        }
+        let nv = norm(&v).max(1e-12);
+        v.iter_mut().for_each(|z| *z /= nv);
+        for _ in 0..60 {
+            let w = matvec(&v, &comps, c);
+            let nw = norm(&w).max(1e-12);
+            let wn: Vec<f64> = w.iter().map(|z| z / nw).collect();
+            let delta: f64 = wn.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = wn;
+            if delta < 1e-9 * d as f64 {
+                break;
+            }
+        }
+        comps.extend_from_slice(&v);
+    }
+
+    // Project.
+    let mut proj = vec![0f32; n * k];
+    for i in 0..n {
+        let row = &xc[i * d..(i + 1) * d];
+        for c in 0..k {
+            let comp = &comps[c * d..(c + 1) * d];
+            let mut s = 0f64;
+            for j in 0..d {
+                s += row[j] as f64 * comp[j];
+            }
+            proj[i * k + c] = s as f32;
+        }
+    }
+    (comps, proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_f32_matches_scalar() {
+        let mut r = Rng::new(5);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let a: Vec<f32> = (0..len).map(|_| r.f32() - 0.5).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.f32() - 0.5).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot_f32(&a, &b);
+            assert!((scalar - fast).abs() < 1e-3, "len {len}: {scalar} vs {fast}");
+        }
+    }
+
+    #[test]
+    fn pca_recovers_dominant_direction() {
+        // Data stretched along (1,1)/sqrt(2) in 2-D.
+        let mut r = Rng::new(7);
+        let n = 500;
+        let d = 2;
+        let mut x = vec![0f32; n * d];
+        for i in 0..n {
+            let t = r.normal() * 10.0;
+            let noise = r.normal() * 0.1;
+            x[i * d] = (t + noise) as f32;
+            x[i * d + 1] = (t - noise) as f32;
+        }
+        let (comps, proj) = pca(&x, n, d, 1, 42);
+        let c0 = (comps[0].abs() - (0.5f64).sqrt()).abs();
+        let c1 = (comps[1].abs() - (0.5f64).sqrt()).abs();
+        assert!(c0 < 0.02 && c1 < 0.02, "components {comps:?}");
+        assert_eq!(proj.len(), n);
+    }
+
+    #[test]
+    fn pca_components_orthonormal() {
+        let mut r = Rng::new(9);
+        let (n, d, k) = (200, 8, 3);
+        let x: Vec<f32> = (0..n * d).map(|_| r.f32()).collect();
+        let (comps, _) = pca(&x, n, d, k, 1);
+        for a in 0..k {
+            for b in 0..k {
+                let va = &comps[a * d..(a + 1) * d];
+                let vb = &comps[b * d..(b + 1) * d];
+                let ip = dot(va, vb);
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((ip - expect).abs() < 1e-6, "({a},{b}) ip={ip}");
+            }
+        }
+    }
+}

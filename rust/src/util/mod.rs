@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic PRNG, statistics, table/CSV output,
+//! a minimal benchmark harness, and property-testing helpers. The build
+//! image is offline, so these replace `rand`, `criterion`, and `proptest`.
+
+pub mod bench;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,135 @@
+//! Small statistics helpers shared by the experiment harnesses:
+//! summary statistics, quantiles, and least-squares fits (the paper reports
+//! log–log slopes for its scaling figures).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Population standard deviation (n denominator) — matches the paper's
+/// per-arm sigma estimate STD_{y in batch} g_x(y).
+pub fn std_pop(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Half-width of a 95% normal confidence interval of the mean.
+pub fn ci95(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Quantile with linear interpolation, q in [0,1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = pos - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+/// Ordinary least squares y = a + b x. Returns (intercept, slope, r2).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let syy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (intercept, slope, r2 * n / n) // n/n: keep shape; r2 already correct
+}
+
+/// Log–log slope fit: fits ln(y) = a + b ln(x), the paper's scaling metric.
+pub fn loglog_slope(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let lx: Vec<f64> = x.iter().map(|v| v.max(1e-12).ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.max(1e-12).ln()).collect();
+    let (_, slope, r2) = linear_fit(&lx, &ly);
+    (slope, r2)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let (_, slope, r2) = linear_fit(x, y);
+    r2.sqrt() * slope.signum()
+}
+
+/// Mean and 95% CI formatted as "m ± c".
+pub fn fmt_mean_ci(xs: &[f64]) -> String {
+    format!("{:.4} ± {:.4}", mean(xs), ci95(xs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let (a, b, r2) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn loglog_slope_of_power_law() {
+        let x: Vec<f64> = (1..20).map(|i| i as f64 * 100.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v.powf(1.5)).collect();
+        let (slope, r2) = loglog_slope(&x, &y);
+        assert!((slope - 1.5).abs() < 1e-6, "slope {slope}");
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn pop_std_of_constant_is_zero() {
+        assert_eq!(std_pop(&[2.0, 2.0, 2.0]), 0.0);
+    }
+}

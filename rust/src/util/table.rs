@@ -1,0 +1,112 @@
+//! Plain-text table rendering + CSV writing for the experiment harnesses.
+//! Every `repro exp <id>` prints a table shaped like the paper's and also
+//! writes `results/<id>.csv` for downstream plotting.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// A simple left-aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |ch: char| {
+            let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+            println!("{}", ch.to_string().repeat(total));
+        };
+        line('-');
+        let mut hdr = String::from("|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            hdr.push_str(&format!(" {h:<w$} |"));
+        }
+        println!("{hdr}");
+        line('-');
+        for row in &self.rows {
+            let mut s = String::from("|");
+            for (c, w) in row.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            println!("{s}");
+        }
+        line('-');
+    }
+
+    /// Write as CSV to `results/<name>.csv` (creating the directory).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<()> {
+        let dir = Path::new("results");
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            let escaped: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", escaped.join(","))?;
+        }
+        eprintln!("[results] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["1", "hello, world"]);
+        t.print();
+        // csv escaping
+        let dir = std::env::temp_dir().join("as_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        t.write_csv("t").unwrap();
+        let s = std::fs::read_to_string(dir.join("results/t.csv")).unwrap();
+        std::env::set_current_dir(old).unwrap();
+        assert!(s.contains("\"hello, world\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

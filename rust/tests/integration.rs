@@ -1,0 +1,191 @@
+//! Cross-module integration tests: each one exercises several layers of
+//! the stack together (datasets → algorithms → metrics; artifacts → PJRT
+//! → coordinator), i.e. the seams unit tests can't see.
+
+use std::sync::Arc;
+
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::data::distance::Metric;
+use adaptive_sampling::data::synthetic::{lowrank_like, mnist_like_d, scrna_like};
+use adaptive_sampling::data::tabular::{covtype_like, mnist_classification};
+use adaptive_sampling::data::trees::TreePointSet;
+use adaptive_sampling::data::{PointSet, VecPointSet};
+use adaptive_sampling::forest::ensemble::{Forest, ForestConfig, ForestKind};
+use adaptive_sampling::forest::tree::Solver;
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
+use adaptive_sampling::kmedoids::pam::{pam, SwapMode};
+use adaptive_sampling::kmedoids::KmConfig;
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
+use adaptive_sampling::mips::naive_mips;
+use adaptive_sampling::runtime::service::PjrtHandle;
+use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::util::rng::Rng;
+
+/// BanditPAM over *program trees with edit distance* — the exotic-metric
+/// path (data::trees + kmedoids + bandit engine together).
+#[test]
+fn banditpam_clusters_program_trees() {
+    let ps = TreePointSet::hoc4_like(160, 5);
+    let cfg = KmConfig::new(2);
+    let exact = pam(&ps, &cfg, SwapMode::FastPam1);
+    let mut bcfg = BanditPamConfig::new(2);
+    bcfg.km = cfg;
+    let bandit = bandit_pam(&ps, &bcfg);
+    assert!(
+        bandit.loss <= exact.loss * 1.05,
+        "bandit {} vs exact {}",
+        bandit.loss,
+        exact.loss
+    );
+}
+
+/// The three chapters compose: cluster cells, train a forest on the
+/// cluster labels, then use MIPS to find each medoid's nearest atoms.
+#[test]
+fn chapters_compose_end_to_end() {
+    // Ch2: cluster scRNA-like cells.
+    let mat = scrna_like(300, 64, 9);
+    let ps = VecPointSet::new(mat.clone(), Metric::L1);
+    let km = bandit_pam(&ps, &BanditPamConfig::new(4));
+    assert_eq!(km.medoids.len(), 4);
+
+    // Labels from cluster assignment → Ch3 forest learns them.
+    let cache = adaptive_sampling::kmedoids::MedoidCache::compute(&ps, &km.medoids);
+    let labels: Vec<f32> = cache.nearest.iter().map(|&m| m as f32).collect();
+    let ds = adaptive_sampling::data::LabeledDataset { x: mat.clone(), y: labels, n_classes: 4 };
+    let c = OpCounter::new();
+    let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+    fcfg.n_trees = 5;
+    fcfg.max_depth = 6;
+    let forest = Forest::fit(&ds, &fcfg, &c);
+    let acc = forest.accuracy(&ds);
+    assert!(acc > 0.7, "forest can't learn cluster structure: {acc}");
+
+    // Ch4: medoid rows as queries; the medoid itself must be the argmax
+    // of inner product... over normalized rows that's its own row.
+    let c = OpCounter::new();
+    let q = mat.row(km.medoids[0]);
+    let ans = bandit_mips(&mat, q, &BanditMipsConfig::default(), &c);
+    let truth = naive_mips(&mat, q, 1, &c);
+    assert_eq!(ans.atoms[0], truth[0]);
+}
+
+/// Determinism: identical seeds give identical medoids / splits / atoms.
+#[test]
+fn everything_is_deterministic_given_seed() {
+    let run = || {
+        let ps = VecPointSet::new(mnist_like_d(200, 32, 7), Metric::L2);
+        let km = bandit_pam(&ps, &BanditPamConfig::new(3));
+        let ds = mnist_classification(1000, 32, 7);
+        let c = OpCounter::new();
+        let f = Forest::fit(&ds, &ForestConfig::new(ForestKind::RandomForest, Solver::mab()), &c);
+        let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(50, 1000, 1, 7);
+        let c2 = OpCounter::new();
+        let m = bandit_mips(&atoms, queries.row(0), &BanditMipsConfig::default(), &c2);
+        (km.medoids, c.get(), m.atoms, m.samples)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+}
+
+/// Full PJRT round trip through the artifact store: Python-authored
+/// kernels must agree with the native Rust implementations numerically.
+#[test]
+fn pjrt_and_native_agree_on_swap_pulls() {
+    let dir = ArtifactStore::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let store = ArtifactStore::load(&dir).unwrap();
+    let meta = store.meta("bpam_swap_t64_r256_d784").unwrap().clone();
+    let (t, d) = (meta.params[0][0], meta.params[0][1]);
+    let r = meta.params[1][0];
+    let mut rng = Rng::new(17);
+    let cand: Vec<f32> = (0..t * d).map(|_| rng.f32()).collect();
+    let refs: Vec<f32> = (0..r * d).map(|_| rng.f32()).collect();
+    let d1: Vec<f32> = (0..r).map(|_| rng.f32() * 3.0).collect();
+    let d2: Vec<f32> = d1.iter().map(|&v| v + 1.0).collect();
+    let mine: Vec<f32> = (0..r).map(|i| (i % 2) as f32).collect();
+    let out = store
+        .exec_f32("bpam_swap_t64_r256_d784", &[&cand, &refs, &d1, &d2, &mine])
+        .unwrap();
+    // Native check: g = min(dist, w) − d1, w = mine ? d2 : d1.
+    for &(ti, ri) in &[(0usize, 0usize), (3, 33), (63, 255)] {
+        let dist = adaptive_sampling::data::distance::l2(
+            &cand[ti * d..(ti + 1) * d],
+            &refs[ri * d..(ri + 1) * d],
+        ) as f32;
+        let w = if mine[ri] > 0.5 { d2[ri] } else { d1[ri] };
+        let want = dist.min(w) - d1[ri];
+        let got = out[0][ti * r + ri];
+        assert!((got - want).abs() < 1e-2, "({ti},{ri}): {got} vs {want}");
+    }
+}
+
+/// The serving coordinator over the PJRT exact backend returns true
+/// argmaxes (the artifact path, not the native one).
+#[test]
+fn pjrt_exact_backend_serves_correctly() {
+    let dir = ArtifactStore::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let handle = PjrtHandle::start(&dir).unwrap();
+    let atoms = Arc::new(lowrank_like(512, 1024, 10, 3));
+    let cfg = ServerConfig { workers: 2, max_batch: 4, ..Default::default() };
+    let backend = Backend::PjrtExact { store: handle, entry: "mips_scores_n512_d1024".into() };
+    let server = MipsServer::start(atoms.clone(), cfg, backend);
+    let mut rng = Rng::new(31);
+    let mut correct = 0;
+    let total = 8;
+    for _ in 0..total {
+        let q: Vec<f32> = (0..atoms.d).map(|_| rng.f32() * 5.0).collect();
+        let rx = server.submit(q.clone());
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let c = OpCounter::new();
+        let truth = naive_mips(&atoms, &q, 1, &c);
+        if resp.top_atoms.first() == truth.first() {
+            correct += 1;
+        }
+    }
+    assert_eq!(correct, total, "PJRT exact backend must be exact");
+    server.shutdown();
+}
+
+/// Fixed-budget training respects the budget across ensemble kinds and
+/// both solvers (integration of tree budget + forest loop + counters).
+#[test]
+fn budgets_respected_across_kinds() {
+    let ds = covtype_like(8_000, 21);
+    for kind in [ForestKind::RandomForest, ForestKind::ExtraTrees, ForestKind::RandomPatches] {
+        for solver in [Solver::Exact, Solver::mab()] {
+            let budget = 8_000u64 * 8;
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(kind, solver);
+            cfg.n_trees = 50;
+            cfg.budget = Some(budget);
+            let _ = Forest::fit(&ds, &cfg, &c);
+            // one node's full scan of overshoot allowed (checked-before,
+            // spent-during semantics)
+            assert!(
+                c.get() <= budget + 8_000 * 8,
+                "{kind:?}/{solver:?}: {} over budget {budget}",
+                c.get()
+            );
+        }
+    }
+}
+
+/// Op counters are the single source of truth: KmResult's dist_calls must
+/// equal the counter delta.
+#[test]
+fn counters_and_results_agree() {
+    let ps = VecPointSet::new(mnist_like_d(150, 16, 3), Metric::L2);
+    ps.counter().reset();
+    let r = bandit_pam(&ps, &BanditPamConfig::new(3));
+    assert_eq!(r.dist_calls, ps.counter().get());
+}
