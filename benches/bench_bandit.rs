@@ -1,10 +1,115 @@
 //! Engine-overhead benches: successive elimination on synthetic arms.
 //! Measures the coordinator loop itself (no distance/impurity work), i.e.
-//! the L3 overhead floor per elimination round.
+//! the L3 overhead floor per elimination round — plus a threads={1,2,4,8}
+//! scaling sweep of the shard-parallel engine on a compute-heavy arm set,
+//! recorded to `BENCH_engine.json` (ops, wall-clock, speedup vs 1 thread)
+//! so the perf trajectory is tracked across PRs.
+
+use std::time::Instant;
 
 use adaptive_sampling::bandit::streams::{successive_elimination_streams, GaussianArms};
-use adaptive_sampling::bandit::{successive_elimination, BanditConfig, MeanArms, Sampling};
+use adaptive_sampling::bandit::{
+    successive_elimination, BanditConfig, Engine, MeanArms, Sampling,
+};
+use adaptive_sampling::exec::WorkerPool;
+use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::util::bench::Bencher;
+
+/// A pull that costs roughly one small distance evaluation (~16
+/// transcendental ops): arm-separated means plus deterministic
+/// pseudo-noise in j, so elimination behaves like a real workload.
+fn heavy_pull(a: usize, j: usize) -> f64 {
+    let mut x = (a as f64 + 1.0) * 0.618_033 + (j as f64 + 1.0) * 0.381_966;
+    let mut acc = 0.0;
+    for _ in 0..16 {
+        x = (x * x + 1.0).ln();
+        acc += x;
+    }
+    (a % 64) as f64 * 0.05 + (acc - acc.floor()) - 0.5
+}
+
+struct ScalePoint {
+    threads: usize,
+    ops: u64,
+    wall_s: f64,
+    speedup: f64,
+}
+
+fn engine_scaling_sweep(n_arms: usize, ref_len: usize, batch_size: usize) -> Vec<ScalePoint> {
+    let cfg = BanditConfig {
+        delta: 1e-3,
+        batch_size,
+        sampling: Sampling::Permutation,
+        keep: 1,
+        seed: 0xBE9C4,
+        threads: 1,
+    };
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let reps = if quick { 1 } else { 3 };
+
+    let mut points: Vec<ScalePoint> = Vec::new();
+    let mut baseline_best: Option<Vec<usize>> = None;
+    for &threads in &[1usize, 2, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let counter = OpCounter::new();
+        let run = || {
+            let c = &counter;
+            let mut arms = MeanArms::new(n_arms, ref_len, move |a: usize, j: usize| {
+                c.incr();
+                heavy_pull(a, j)
+            });
+            Engine::with_pool(cfg.clone(), &pool, threads).run(&mut arms)
+        };
+        // Warmup once, then time the best of `reps` runs.
+        let warm = run();
+        match &baseline_best {
+            None => baseline_best = Some(warm.best.clone()),
+            Some(b) => assert_eq!(&warm.best, b, "threads={threads} changed the answer"),
+        }
+        counter.reset();
+        let mut best_wall = f64::INFINITY;
+        let mut ops = 0u64;
+        for _ in 0..reps {
+            counter.reset();
+            let t0 = Instant::now();
+            let r = run();
+            let wall = t0.elapsed().as_secs_f64();
+            std::hint::black_box(r.n_used);
+            best_wall = best_wall.min(wall);
+            ops = counter.get();
+        }
+        let speedup = points.first().map_or(1.0, |p0: &ScalePoint| p0.wall_s / best_wall);
+        points.push(ScalePoint { threads, ops, wall_s: best_wall, speedup });
+    }
+    // Sample complexity must be thread-invariant.
+    for p in &points[1..] {
+        assert_eq!(p.ops, points[0].ops, "ops changed at {} threads", p.threads);
+    }
+    points
+}
+
+fn write_engine_json(n_arms: usize, ref_len: usize, batch_size: usize, points: &[ScalePoint]) {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"threads\": {}, \"ops\": {}, \"wall_s\": {:.6}, \"speedup_vs_1\": {:.3}}}",
+                p.threads, p.ops, p.wall_s, p.speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"engine_scaling\",\n  \"n_arms\": {n_arms},\n  \
+         \"ref_len\": {ref_len},\n  \"batch_size\": {batch_size},\n  \
+         \"host_parallelism\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_engine.json", &json) {
+        Ok(()) => println!("wrote BENCH_engine.json"),
+        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
+    }
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -41,4 +146,19 @@ fn main() {
         let r = successive_elimination_streams(&mut arms, 0.01, 7, 1_000_000);
         std::hint::black_box(r.best);
     });
+
+    // Shard-parallel scaling sweep.
+    let (n_arms, ref_len, batch_size) = (512usize, 20_000usize, 100usize);
+    println!("\nengine scaling sweep: {n_arms} arms, ref {ref_len}, batch {batch_size}");
+    let points = engine_scaling_sweep(n_arms, ref_len, batch_size);
+    for p in &points {
+        println!(
+            "engine/scaling threads={:<2} wall={:>9.2}ms ops={} speedup={:.2}x",
+            p.threads,
+            p.wall_s * 1e3,
+            p.ops,
+            p.speedup
+        );
+    }
+    write_engine_json(n_arms, ref_len, batch_size, &points);
 }

@@ -1,0 +1,6 @@
+"""Make `python/` importable (the `compile` package) without installation."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

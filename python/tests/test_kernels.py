@@ -9,6 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is optional in the offline image: skip the whole module (not
+# the collection) when it is absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import impurity, mips, pairwise, ref

@@ -10,14 +10,31 @@
 //! | 3 (MABSplit)   | (feature, threshold) pairs | data points | impurity contribution |
 //! | 4 (BanditMIPS) | atoms | coordinates | q_J · v_iJ |
 //!
+//! Engine architecture (the Engine/Scoreboard split):
+//!
+//! | piece | owns | role |
+//! |---|---|---|
+//! | [`Engine`]        | sampling RNG, round loop | draws shared batches, eliminates, resolves survivors |
+//! | [`Scoreboard`]    | per-arm μ̂ / C / LCB / UCB (struct-of-arrays) | refreshed once per round; the elimination rule reads cached bounds instead of re-calling `estimate()`/`ci()` per comparison |
+//! | [`ArmStats`]      | per-arm Σv / Σv² / count (struct-of-arrays)  | the running-moment accumulator every chapter's arm set shares |
+//! | [`AdaptiveArms`]  | problem-specific pull evaluation | [`AdaptiveArms::observe_shard`] on contiguous arm shards, fanned out on the [`crate::exec::WorkerPool`] |
+//!
 //! The engine *minimizes* the arm objective (BanditMIPS negates). Arms
 //! share each sampled reference batch — the batched structure of
 //! Algorithm 2 — and when the sample budget reaches the pool size the
 //! surviving arms are evaluated exactly (the "exact fallback" that makes
 //! every bandit algorithm here no worse than ~2× the naive solver).
+//!
+//! **Determinism contract:** for a fixed [`BanditConfig::seed`], the
+//! parallel engine (`threads != 1`) returns bit-identical
+//! [`BestArmResult`]s to the sequential path. Shards are contiguous arm
+//! ranges, every per-arm delta is computed by the same code over the same
+//! batch, and reductions are applied in fixed arm order — worker count
+//! and scheduling never reach the arithmetic.
 
 pub mod streams;
 
+use crate::exec::WorkerPool;
 use crate::util::rng::Rng;
 
 /// How reference batches are drawn.
@@ -50,6 +67,11 @@ pub struct BanditConfig {
     pub keep: usize,
     /// RNG seed for batch sampling.
     pub seed: u64,
+    /// Shard-parallel batch observation: 1 = sequential on the calling
+    /// thread; 0 = one shard per worker of the shared pool; n > 1 = n
+    /// shards on the shared pool. Results are bit-identical for every
+    /// setting (see the module docs' determinism contract).
+    pub threads: usize,
 }
 
 impl Default for BanditConfig {
@@ -60,16 +82,117 @@ impl Default for BanditConfig {
             sampling: Sampling::WithReplacement,
             keep: 1,
             seed: 0x5EED,
+            threads: 1,
         }
+    }
+}
+
+/// Shard-parallel execution context handed to
+/// [`AdaptiveArms::observe_batch`]: the pool to fan out on and the target
+/// shard count.
+#[derive(Clone, Copy)]
+pub struct ParCtx<'p> {
+    pub pool: &'p WorkerPool,
+    /// Target number of contiguous arm shards (≥ 1).
+    pub shards: usize,
+}
+
+impl<'p> ParCtx<'p> {
+    /// Evaluate `delta` for every arm shard-parallel and return the
+    /// results **in arm order** — the one determinism-critical reduction
+    /// every per-arm implementation shares (apply the returned deltas in
+    /// this order and the state is bit-identical to the sequential path).
+    pub fn arm_deltas<F>(&self, arms: &[usize], delta: F) -> Vec<(f64, f64)>
+    where
+        F: Fn(usize) -> (f64, f64) + Sync,
+    {
+        self.pool
+            .map_shards(arms, self.shards, |shard| {
+                shard.iter().map(|&a| delta(a)).collect::<Vec<(f64, f64)>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+/// Struct-of-arrays per-arm running moments: Σv, Σv², pull count — the
+/// accumulator all chapter arm sets share. Deltas are computed per shard
+/// (possibly in parallel) and applied in fixed arm order, so the stored
+/// floats never depend on thread count.
+#[derive(Clone, Debug, Default)]
+pub struct ArmStats {
+    pub sum: Vec<f64>,
+    pub sum2: Vec<f64>,
+    pub count: Vec<u64>,
+}
+
+impl ArmStats {
+    pub fn new(n_arms: usize) -> ArmStats {
+        ArmStats { sum: vec![0.0; n_arms], sum2: vec![0.0; n_arms], count: vec![0; n_arms] }
+    }
+
+    /// Fold one arm's batch delta into the running moments.
+    #[inline]
+    pub fn push(&mut self, arm: usize, s: f64, s2: f64, pulls: u64) {
+        self.sum[arm] += s;
+        self.sum2[arm] += s2;
+        self.count[arm] += pulls;
+    }
+
+    /// Fold a batch of per-arm deltas **in fixed arm order** — the one
+    /// determinism-critical reduction every solver funnels its shard
+    /// results through (do not reorder or filter here).
+    pub fn push_deltas(&mut self, arms: &[usize], deltas: &[(f64, f64)], pulls: u64) {
+        for (&a, &(s, s2)) in arms.iter().zip(deltas) {
+            self.push(a, s, s2, pulls);
+        }
+    }
+
+    /// Running mean μ̂ (∞ for an unpulled arm, so it can never eliminate
+    /// others).
+    #[inline]
+    pub fn mean(&self, arm: usize) -> f64 {
+        if self.count[arm] == 0 {
+            f64::INFINITY
+        } else {
+            self.sum[arm] / self.count[arm] as f64
+        }
+    }
+
+    /// Running σ̂ with a floor (1.0 for an unpulled arm — the conservative
+    /// prior every arm set used before its first batch).
+    #[inline]
+    pub fn sigma(&self, arm: usize, floor: f64) -> f64 {
+        if self.count[arm] == 0 {
+            return 1.0;
+        }
+        let c = self.count[arm] as f64;
+        let m = self.sum[arm] / c;
+        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(floor)
+    }
+
+    /// Evaluate one arm's (Σv, Σv²) over a batch — the shared inner loop
+    /// of both the sequential and the sharded observation paths.
+    #[inline]
+    pub fn batch_delta(batch: &[usize], mut g: impl FnMut(usize) -> f64) -> (f64, f64) {
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for &j in batch {
+            let v = g(j);
+            s += v;
+            s2 += v * v;
+        }
+        (s, s2)
     }
 }
 
 /// An adaptive-sampling arm set: the problem-specific half of Algorithm 2.
 ///
-/// The engine drives: sample batch → `observe_batch` → read `estimate` /
-/// `ci` → eliminate. Implementations own all per-arm state (running sums,
-/// histograms, σ̂ estimates) and must count their fundamental operation on
-/// an [`crate::metrics::OpCounter`].
+/// The engine drives: sample batch → [`AdaptiveArms::observe_batch`] →
+/// refresh the [`Scoreboard`] → eliminate. Implementations own all
+/// per-arm state (running sums, histograms, σ̂ estimates) and must count
+/// their fundamental operation on an [`crate::metrics::OpCounter`].
 pub trait AdaptiveArms {
     /// Number of arms |S_tar|.
     fn n_arms(&self) -> usize;
@@ -77,8 +200,19 @@ pub trait AdaptiveArms {
     /// Size of the reference pool |S_ref| (data points / coordinates).
     fn ref_len(&self) -> usize;
 
-    /// Incorporate a batch of reference indices for each surviving arm.
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]);
+    /// Incorporate a batch of reference indices for `arms`, a contiguous
+    /// shard of the surviving set — the sequential building block the
+    /// parallel path fans out over disjoint shards.
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]);
+
+    /// Incorporate a batch for all surviving arms, shard-parallel when
+    /// `par` is set. Overrides MUST be bit-identical to the sequential
+    /// path for any shard count: compute per-arm deltas shard-by-shard,
+    /// apply them in fixed arm order. Default: one sequential shard.
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let _ = par;
+        self.observe_shard(arms, batch);
+    }
 
     /// Current point estimate μ̂ for an arm (lower = better).
     fn estimate(&self, arm: usize) -> f64;
@@ -114,8 +248,60 @@ pub trait AdaptiveArms {
     }
 }
 
-/// Outcome of one successive-elimination run.
+/// Struct-of-arrays per-arm score cache: μ̂, CI half-width, LCB, UCB.
+/// Refreshed once per elimination round (one `estimate`/`ci` call per
+/// surviving arm), then read by every comparison — the seed engine
+/// re-called `estimate()` three times and `ci()` twice per arm per round.
 #[derive(Clone, Debug)]
+pub struct Scoreboard {
+    pub mu: Vec<f64>,
+    pub half: Vec<f64>,
+    pub lcb: Vec<f64>,
+    pub ucb: Vec<f64>,
+}
+
+impl Scoreboard {
+    pub fn new(n_arms: usize) -> Scoreboard {
+        Scoreboard {
+            mu: vec![f64::INFINITY; n_arms],
+            half: vec![f64::INFINITY; n_arms],
+            lcb: vec![f64::NEG_INFINITY; n_arms],
+            ucb: vec![f64::INFINITY; n_arms],
+        }
+    }
+
+    /// Recompute the cached scores for the surviving arms.
+    pub fn refresh<A: AdaptiveArms>(
+        &mut self,
+        arms: &A,
+        alive: &[usize],
+        n_used: usize,
+        delta: f64,
+    ) {
+        for &a in alive {
+            let mu = arms.estimate(a);
+            let c = arms.ci(a, n_used, delta);
+            self.mu[a] = mu;
+            self.half[a] = c;
+            self.lcb[a] = mu - c;
+            self.ucb[a] = mu + c;
+        }
+    }
+
+    /// Smallest cached UCB among the surviving arms.
+    pub fn min_ucb(&self, alive: &[usize]) -> f64 {
+        let mut min = f64::INFINITY;
+        for &a in alive {
+            if self.ucb[a] < min {
+                min = self.ucb[a];
+            }
+        }
+        min
+    }
+}
+
+/// Outcome of one successive-elimination run.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BestArmResult {
     /// Surviving arms, best (smallest estimate) first.
     pub best: Vec<usize>,
@@ -129,118 +315,161 @@ pub struct BestArmResult {
     pub rounds: usize,
 }
 
-/// Batched successive elimination (Algorithm 2 / 3 / 4 of the thesis).
-///
-/// Maintains the surviving set; each round draws a shared batch, updates
-/// estimates, and removes every arm whose lower confidence bound exceeds
-/// the smallest upper confidence bound. Terminates when `cfg.keep` arms
-/// survive or the sample budget reaches the pool size, at which point the
-/// survivors are resolved exactly.
+/// Batched successive elimination (Algorithm 2 / 3 / 4), explicit-state
+/// form: owns the [`BanditConfig`] plus the optional shard-parallel
+/// execution context, and drives any [`AdaptiveArms`] to a
+/// [`BestArmResult`].
+pub struct Engine<'p> {
+    cfg: BanditConfig,
+    par: Option<ParCtx<'p>>,
+}
+
+impl Engine<'static> {
+    /// Strictly sequential engine (ignores `cfg.threads`).
+    pub fn sequential(mut cfg: BanditConfig) -> Engine<'static> {
+        cfg.threads = 1;
+        Engine { cfg, par: None }
+    }
+
+    /// Engine honouring `cfg.threads` on the shared global pool.
+    pub fn from_config(cfg: &BanditConfig) -> Engine<'static> {
+        let par = match cfg.threads {
+            1 => None,
+            0 => {
+                let pool = WorkerPool::global();
+                Some(ParCtx { pool, shards: pool.threads() })
+            }
+            n => Some(ParCtx { pool: WorkerPool::global(), shards: n }),
+        };
+        Engine { cfg: cfg.clone(), par }
+    }
+}
+
+impl<'p> Engine<'p> {
+    /// Engine on an explicit pool with an explicit shard count (tests,
+    /// benches, dedicated pools).
+    pub fn with_pool(cfg: BanditConfig, pool: &'p WorkerPool, shards: usize) -> Engine<'p> {
+        let par = if shards <= 1 { None } else { Some(ParCtx { pool, shards }) };
+        Engine { cfg, par }
+    }
+
+    /// Run batched successive elimination to completion.
+    ///
+    /// Maintains the surviving set; each round draws a shared batch,
+    /// updates estimates (shard-parallel when configured), refreshes the
+    /// [`Scoreboard`], and removes every arm whose lower confidence bound
+    /// exceeds the smallest upper confidence bound. Terminates when
+    /// `keep` arms survive or the sample budget reaches the pool size, at
+    /// which point the survivors are resolved exactly.
+    pub fn run<A: AdaptiveArms>(&self, arms: &mut A) -> BestArmResult {
+        let cfg = &self.cfg;
+        let n_arms = arms.n_arms();
+        assert!(n_arms > 0, "no arms");
+        assert!(cfg.keep >= 1);
+        let ref_len = arms.ref_len();
+        let mut rng = Rng::new(cfg.seed);
+
+        let mut alive: Vec<usize> = (0..n_arms).collect();
+        let mut n_used = 0usize;
+        let mut rounds = 0usize;
+        let mut sb = Scoreboard::new(n_arms);
+
+        // Permutation mode: one fixed order (arm-set-chosen), consumed in
+        // slices.
+        let perm: Option<Vec<usize>> = if cfg.sampling == Sampling::Permutation {
+            let p = arms.permutation(&mut rng);
+            debug_assert_eq!(p.len(), ref_len);
+            Some(p)
+        } else {
+            None
+        };
+
+        // The paper's loop stops once the sample budget reaches |S_ref|.
+        while n_used < ref_len && alive.len() > cfg.keep {
+            let b = cfg.batch_size.min(ref_len - n_used);
+            let batch = match &perm {
+                Some(p) => p[n_used..n_used + b].to_vec(),
+                None => arms.sample_batch(&mut rng, b, cfg.sampling),
+            };
+            arms.observe_batch(&alive, &batch, self.par);
+            n_used += batch.len();
+            rounds += 1;
+
+            // Elimination rule: keep x with  μ̂_x - C_x <= min_y (μ̂_y + C_y),
+            // read off the per-round scoreboard.
+            sb.refresh(arms, &alive, n_used, cfg.delta);
+            let min_ucb = sb.min_ucb(&alive);
+            let (mut kept, mut dropped): (Vec<usize>, Vec<usize>) =
+                alive.iter().partition(|&&a| sb.lcb[a] <= min_ucb);
+            // One round may eliminate past `keep`; refill with the best of
+            // the dropped arms so top-k requests always return k arms.
+            if kept.len() < cfg.keep {
+                dropped.sort_by(|&x, &y| {
+                    sb.mu[x].partial_cmp(&sb.mu[y]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                kept.extend(dropped.into_iter().take(cfg.keep - kept.len()));
+            }
+            alive = kept;
+            debug_assert!(!alive.is_empty(), "eliminated every arm");
+        }
+
+        let survivors_at_end = alive.len();
+        // Permutation sampling with a fully-consumed pool: every survivor
+        // saw each reference exactly once, so its running mean *is* the
+        // exact objective — no fallback computation needed.
+        let estimates_exact = cfg.sampling == Sampling::Permutation && n_used >= ref_len;
+        let exact_fallback = alive.len() > cfg.keep && !estimates_exact;
+        let mut scored: Vec<(f64, usize)> = if exact_fallback {
+            // Budget exhausted with >keep survivors: compute survivors
+            // exactly.
+            alive.iter().map(|&a| (arms.exact(a), a)).collect()
+        } else {
+            alive.iter().map(|&a| (arms.estimate(a), a)).collect()
+        };
+        scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap_or(std::cmp::Ordering::Equal));
+        let best: Vec<usize> = scored.iter().map(|&(_, a)| a).take(cfg.keep.max(1)).collect();
+
+        BestArmResult { best, n_used, survivors_at_end, exact_fallback, rounds }
+    }
+}
+
+/// Batched successive elimination honouring `cfg.threads` (the
+/// convenience entry every solver calls; see [`Engine`]).
 pub fn successive_elimination<A: AdaptiveArms>(
     arms: &mut A,
     cfg: &BanditConfig,
 ) -> BestArmResult {
-    let n_arms = arms.n_arms();
-    assert!(n_arms > 0, "no arms");
-    assert!(cfg.keep >= 1);
-    let ref_len = arms.ref_len();
-    let mut rng = Rng::new(cfg.seed);
-
-    let mut alive: Vec<usize> = (0..n_arms).collect();
-    let mut n_used = 0usize;
-    let mut rounds = 0usize;
-
-    // Permutation mode: one fixed order (arm-set-chosen), consumed in
-    // slices.
-    let perm: Option<Vec<usize>> = if cfg.sampling == Sampling::Permutation {
-        let p = arms.permutation(&mut rng);
-        debug_assert_eq!(p.len(), ref_len);
-        Some(p)
-    } else {
-        None
-    };
-
-    // The paper's loop stops once the sample budget reaches |S_ref|.
-    while n_used < ref_len && alive.len() > cfg.keep {
-        let b = cfg.batch_size.min(ref_len - n_used);
-        let batch = match &perm {
-            Some(p) => p[n_used..n_used + b].to_vec(),
-            None => arms.sample_batch(&mut rng, b, cfg.sampling),
-        };
-        arms.observe_batch(&alive, &batch);
-        n_used += batch.len();
-        rounds += 1;
-
-        // Elimination rule: keep x with  μ̂_x - C_x <= min_y (μ̂_y + C_y).
-        let mut min_ucb = f64::INFINITY;
-        for &a in &alive {
-            let ucb = arms.estimate(a) + arms.ci(a, n_used, cfg.delta);
-            if ucb < min_ucb {
-                min_ucb = ucb;
-            }
-        }
-        let (mut kept, mut dropped): (Vec<usize>, Vec<usize>) = alive
-            .iter()
-            .partition(|&&a| arms.estimate(a) - arms.ci(a, n_used, cfg.delta) <= min_ucb);
-        // One round may eliminate past `keep`; refill with the best of the
-        // dropped arms so top-k requests always return k arms.
-        if kept.len() < cfg.keep {
-            dropped.sort_by(|&x, &y| {
-                arms.estimate(x)
-                    .partial_cmp(&arms.estimate(y))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-            kept.extend(dropped.into_iter().take(cfg.keep - kept.len()));
-        }
-        alive = kept;
-        debug_assert!(!alive.is_empty(), "eliminated every arm");
-    }
-
-    let survivors_at_end = alive.len();
-    // Permutation sampling with a fully-consumed pool: every survivor saw
-    // each reference exactly once, so its running mean *is* the exact
-    // objective — no fallback computation needed.
-    let estimates_exact = cfg.sampling == Sampling::Permutation && n_used >= ref_len;
-    let exact_fallback = alive.len() > cfg.keep && !estimates_exact;
-    let mut scored: Vec<(f64, usize)> = if exact_fallback {
-        // Budget exhausted with >keep survivors: compute survivors exactly.
-        alive.iter().map(|&a| (arms.exact(a), a)).collect()
-    } else {
-        alive.iter().map(|&a| (arms.estimate(a), a)).collect()
-    };
-    scored.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap_or(std::cmp::Ordering::Equal));
-    let best: Vec<usize> = scored.iter().map(|&(_, a)| a).take(cfg.keep.max(1)).collect();
-
-    BestArmResult { best, n_used, survivors_at_end, exact_fallback, rounds }
+    Engine::from_config(cfg).run(arms)
 }
 
 /// A ready-made [`AdaptiveArms`] for objectives of the form
-/// μ_x = mean over the reference pool of g(x, j): keeps running mean and
-/// per-arm σ̂ (estimated from the first observed batch, as §2.3.2), with
-/// Hoeffding CIs  C_x = σ̂_x · sqrt(2·ln(1/δ') / n_used).
+/// μ_x = mean over the reference pool of g(x, j): keeps an [`ArmStats`]
+/// struct-of-arrays and per-arm σ̂ (estimated from the first observed
+/// batch, as §2.3.2), with Hoeffding CIs
+/// C_x = σ̂_x · sqrt(2·ln(1/δ') / n_used).
 ///
 /// BanditPAM's BUILD/SWAP and the plain BanditMIPS both reduce to this.
-pub struct MeanArms<F: FnMut(usize, usize) -> f64> {
+/// `g` must be pure per (arm, ref) pair — the `Fn + Sync` bound is what
+/// lets shards evaluate it concurrently.
+pub struct MeanArms<F: Fn(usize, usize) -> f64 + Sync> {
     /// g(arm, ref_index) — must do its own op-counting.
     pub g: F,
     pub n_arms: usize,
     pub ref_len: usize,
-    sum: Vec<f64>,
-    count: Vec<u64>,
+    stats: ArmStats,
     sigma: Vec<f64>,
     sigma_ready: bool,
     /// Fixed σ override (BanditMIPS's bounded-rating σ); None → estimate.
     pub fixed_sigma: Option<f64>,
 }
 
-impl<F: FnMut(usize, usize) -> f64> MeanArms<F> {
+impl<F: Fn(usize, usize) -> f64 + Sync> MeanArms<F> {
     pub fn new(n_arms: usize, ref_len: usize, g: F) -> Self {
         MeanArms {
             g,
             n_arms,
             ref_len,
-            sum: vec![0.0; n_arms],
-            count: vec![0; n_arms],
+            stats: ArmStats::new(n_arms),
             sigma: vec![1.0; n_arms],
             sigma_ready: false,
             fixed_sigma: None,
@@ -255,9 +484,27 @@ impl<F: FnMut(usize, usize) -> f64> MeanArms<F> {
     pub fn sigma(&self, arm: usize) -> f64 {
         self.fixed_sigma.unwrap_or(self.sigma[arm])
     }
+
+    /// Apply per-arm batch deltas in fixed arm order (shared by the
+    /// sequential and sharded paths — the bit-identity pivot).
+    fn apply(&mut self, arms: &[usize], deltas: &[(f64, f64)], batch_len: usize) {
+        self.stats.push_deltas(arms, deltas, batch_len as u64);
+        if !self.sigma_ready && self.fixed_sigma.is_none() {
+            for (&a, &(s, s2)) in arms.iter().zip(deltas) {
+                if batch_len > 0 {
+                    let m = s / batch_len as f64;
+                    let var = (s2 / batch_len as f64 - m * m).max(0.0);
+                    // Floor keeps CIs honest when the first batch happens to
+                    // be constant (e.g. all-background MNIST pixels).
+                    self.sigma[a] = var.sqrt().max(1e-9);
+                }
+            }
+            self.sigma_ready = true;
+        }
+    }
 }
 
-impl<F: FnMut(usize, usize) -> f64> AdaptiveArms for MeanArms<F> {
+impl<F: Fn(usize, usize) -> f64 + Sync> AdaptiveArms for MeanArms<F> {
     fn n_arms(&self) -> usize {
         self.n_arms
     }
@@ -266,41 +513,31 @@ impl<F: FnMut(usize, usize) -> f64> AdaptiveArms for MeanArms<F> {
         self.ref_len
     }
 
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
-        let estimate_sigma = !self.sigma_ready && self.fixed_sigma.is_none();
-        for &a in arms {
-            let mut s = 0.0;
-            let mut s2 = 0.0;
-            for &j in batch {
-                let v = (self.g)(a, j);
-                s += v;
-                s2 += v * v;
-            }
-            self.sum[a] += s;
-            self.count[a] += batch.len() as u64;
-            if estimate_sigma && !batch.is_empty() {
-                let m = s / batch.len() as f64;
-                let var = (s2 / batch.len() as f64 - m * m).max(0.0);
-                // Floor keeps CIs honest when the first batch happens to be
-                // constant (e.g. all-background MNIST pixels).
-                self.sigma[a] = var.sqrt().max(1e-9);
-            }
-        }
-        if estimate_sigma {
-            self.sigma_ready = true;
-        }
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
+        let g = &self.g;
+        let deltas: Vec<(f64, f64)> = arms
+            .iter()
+            .map(|&a| ArmStats::batch_delta(batch, |j| g(a, j)))
+            .collect();
+        self.apply(arms, &deltas, batch.len());
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let Some(p) = par else {
+            self.observe_shard(arms, batch);
+            return;
+        };
+        let g = &self.g;
+        let deltas = p.arm_deltas(arms, |a| ArmStats::batch_delta(batch, |j| g(a, j)));
+        self.apply(arms, &deltas, batch.len());
     }
 
     fn estimate(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            f64::INFINITY
-        } else {
-            self.sum[arm] / self.count[arm] as f64
-        }
+        self.stats.mean(arm)
     }
 
     fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
-        if self.count[arm] == 0 {
+        if self.stats.count[arm] == 0 {
             return f64::INFINITY;
         }
         let n = n_used.max(1) as f64;
@@ -323,7 +560,11 @@ mod tests {
 
     /// Deterministic arms where g(a, j) has mean exactly `mus[a]`:
     /// g = mu_a + zero-mean perturbation depending on j.
-    fn make_arms(mus: Vec<f64>, noise: f64, ref_len: usize) -> MeanArms<impl FnMut(usize, usize) -> f64> {
+    fn make_arms(
+        mus: Vec<f64>,
+        noise: f64,
+        ref_len: usize,
+    ) -> MeanArms<impl Fn(usize, usize) -> f64 + Sync> {
         let n = mus.len();
         MeanArms::new(n, ref_len, move |a: usize, j: usize| {
             // zero-mean over j in [0, ref_len): alternating +/- noise
@@ -466,5 +707,96 @@ mod tests {
         let r = successive_elimination(&mut arms, &cfg);
         assert!(r.exact_fallback);
         assert_eq!(r.best[0], 2);
+    }
+
+    #[test]
+    fn prop_parallel_engine_bit_identical_to_sequential() {
+        // The tentpole's hard requirement: for any arm count, batch size,
+        // keep, and all three sampling modes, the sharded engine returns a
+        // BestArmResult bit-identical to the sequential path, for several
+        // shard counts on a small dedicated pool.
+        let pool = WorkerPool::new(3);
+        prop_check(0x9A, 30, |r| {
+            let n_arms = 1 + r.below(40);
+            let ref_len = 50 + r.below(3_000);
+            let batch_size = 1 + r.below(200);
+            let mode = r.below(3);
+            let keep = 1 + r.below(3);
+            (n_arms, ref_len, batch_size, mode, keep, r.next_u64())
+        }, |&(n_arms, ref_len, batch_size, mode, keep, seed)| {
+            let sampling = match mode {
+                0 => Sampling::WithReplacement,
+                1 => Sampling::WithoutReplacement,
+                _ => Sampling::Permutation,
+            };
+            let keep = keep.min(n_arms);
+            let make = || {
+                MeanArms::new(n_arms, ref_len, move |a, j| {
+                    ((a * 37 + j * 11) % 101) as f64 / 101.0 + a as f64 * 1e-3
+                })
+            };
+            let cfg = BanditConfig {
+                delta: 1e-2,
+                batch_size,
+                sampling,
+                keep,
+                seed,
+                threads: 1,
+            };
+            let r_seq = Engine::sequential(cfg.clone()).run(&mut make());
+            for shards in [2usize, 3, 7] {
+                let engine = Engine::with_pool(cfg.clone(), &pool, shards);
+                let r_par = engine.run(&mut make());
+                if r_par != r_seq {
+                    return Err(format!(
+                        "shards={shards}: {r_par:?} != sequential {r_seq:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threads_zero_uses_global_pool_and_matches() {
+        let mus = vec![5.0, 3.0, 1.0, 4.0, 2.0];
+        let run = |threads: usize| {
+            let mut arms = make_arms(mus.clone(), 0.5, 10_000);
+            let cfg = BanditConfig { batch_size: 64, threads, ..Default::default() };
+            successive_elimination(&mut arms, &cfg)
+        };
+        assert_eq!(run(0), run(1));
+        assert_eq!(run(4), run(1));
+    }
+
+    #[test]
+    fn scoreboard_caches_bounds() {
+        let mut arms = make_arms(vec![2.0, 1.0], 0.1, 1_000);
+        let alive = vec![0usize, 1];
+        let batch: Vec<usize> = (0..100).collect();
+        arms.observe_shard(&alive, &batch);
+        let mut sb = Scoreboard::new(2);
+        sb.refresh(&arms, &alive, 100, 1e-3);
+        for &a in &alive {
+            assert_eq!(sb.mu[a], arms.estimate(a));
+            assert_eq!(sb.half[a], arms.ci(a, 100, 1e-3));
+            assert_eq!(sb.lcb[a], sb.mu[a] - sb.half[a]);
+            assert_eq!(sb.ucb[a], sb.mu[a] + sb.half[a]);
+        }
+        assert!(sb.min_ucb(&alive) <= sb.ucb[0]);
+    }
+
+    #[test]
+    fn arm_stats_moments() {
+        let mut st = ArmStats::new(2);
+        assert_eq!(st.mean(0), f64::INFINITY);
+        assert_eq!(st.sigma(0, 1e-9), 1.0);
+        let (s, s2) = ArmStats::batch_delta(&[0, 1, 2, 3], |j| j as f64);
+        assert_eq!(s, 6.0);
+        assert_eq!(s2, 14.0);
+        st.push(0, s, s2, 4);
+        assert!((st.mean(0) - 1.5).abs() < 1e-12);
+        let var = 14.0 / 4.0 - 1.5 * 1.5;
+        assert!((st.sigma(0, 0.0) - var.sqrt()).abs() < 1e-12);
     }
 }

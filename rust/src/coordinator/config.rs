@@ -4,7 +4,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// Parsed configuration: section → key → raw value string.
 #[derive(Clone, Debug, Default)]

@@ -1,19 +1,24 @@
-//! The MIPS serving loop: dispatcher (dynamic batcher) + worker pool.
+//! The MIPS serving loop: dispatcher (dynamic batcher) + the shared
+//! worker pool.
 //!
 //! Life of a request: `submit()` enqueues (query, response-sender) →
 //! the dispatcher groups requests into batches (size- or age-triggered) →
-//! a worker claims the batch, samples the shared warm-start coordinate
-//! cache (§4.3.1), answers each query via the configured backend, and
-//! replies on the per-request channel. Latency is measured submit→reply.
+//! each batch is submitted to [`WorkerPool::global`] (the same thread
+//! budget the bandit engine's shard-parallel elimination rounds draw
+//! from), bounded by a [`Gate`] of `cfg.workers` batches in flight → the
+//! batch task samples the shared warm-start coordinate cache (§4.3.1),
+//! answers each query via the configured backend, and replies on the
+//! per-request channel. Latency is measured submit→reply.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::ServerConfig;
 use crate::data::Matrix;
+use crate::exec::{Gate, WorkerPool};
 use crate::metrics::OpCounter;
 use crate::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
 use crate::runtime::service::PjrtHandle;
@@ -72,24 +77,48 @@ pub struct ServerStats {
 pub struct MipsServer {
     tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Bounds concurrent batch tasks on the shared pool to `cfg.workers`.
+    gate: Arc<Gate>,
     pub stats: Arc<ServerStats>,
 }
 
 impl MipsServer {
-    /// Start the server over an atom matrix.
+    /// Start the server over an atom matrix. Batch execution runs as
+    /// bounded tasks on [`WorkerPool::global`] — the same thread budget
+    /// the bandit engine's elimination rounds use — instead of a
+    /// per-server thread set.
     pub fn start(atoms: Arc<Matrix>, cfg: ServerConfig, backend: Backend) -> MipsServer {
         let (tx, rx) = channel::<Request>();
-        let (btx, brx) = channel::<Vec<Request>>();
-        let brx = Arc::new(Mutex::new(brx));
         let stats = Arc::new(ServerStats::default());
+        let gate = Arc::new(Gate::new(cfg.workers.max(1)));
 
-        // Dispatcher: dynamic batching by size or age.
+        // Dispatcher: dynamic batching by size or age; each full batch
+        // becomes one task on the shared pool (gate-bounded, so a flood of
+        // requests cannot monopolize every worker).
         let max_batch = cfg.max_batch.max(1);
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
         let dstats = stats.clone();
+        let dgate = gate.clone();
         let dispatcher = std::thread::spawn(move || {
             let mut pending: Vec<Request> = Vec::new();
+            let mut serial = 0u64;
+            let mut dispatch = |batch: Vec<Request>| {
+                // RAII slot: released when the task drops it, including on
+                // panic, so capacity can never leak and shutdown's
+                // wait_idle cannot hang.
+                let slot = Gate::acquire_slot(&dgate);
+                serial += 1;
+                let atoms = atoms.clone();
+                let cfg = cfg.clone();
+                let backend = backend.clone();
+                let wstats = dstats.clone();
+                WorkerPool::global().spawn(move || {
+                    let _slot = slot;
+                    let mut rng =
+                        Rng::new(cfg.seed ^ serial.wrapping_mul(0x9E3779B97F4A7C15));
+                    serve_batch(&atoms, &cfg, &backend, batch, &mut rng, &wstats);
+                });
+            };
             loop {
                 let wait = if pending.is_empty() {
                     Duration::from_millis(50)
@@ -103,18 +132,19 @@ impl MipsServer {
                         pending.push(req);
                         if pending.len() >= max_batch {
                             dstats.batches.fetch_add(1, Ordering::Relaxed);
-                            let _ = btx.send(std::mem::take(&mut pending));
+                            dispatch(std::mem::take(&mut pending));
                         }
                     }
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                         if !pending.is_empty() {
                             dstats.batches.fetch_add(1, Ordering::Relaxed);
-                            let _ = btx.send(std::mem::take(&mut pending));
+                            dispatch(std::mem::take(&mut pending));
                         }
                     }
                     Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                         if !pending.is_empty() {
-                            let _ = btx.send(std::mem::take(&mut pending));
+                            dstats.batches.fetch_add(1, Ordering::Relaxed);
+                            dispatch(std::mem::take(&mut pending));
                         }
                         break;
                     }
@@ -122,28 +152,7 @@ impl MipsServer {
             }
         });
 
-        // Workers.
-        let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let brx = brx.clone();
-            let atoms = atoms.clone();
-            let backend = backend.clone();
-            let cfg = cfg.clone();
-            let wstats = stats.clone();
-            workers.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37));
-                loop {
-                    let batch = {
-                        let guard = brx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    serve_batch(&atoms, &cfg, &backend, batch, &mut rng, &wstats);
-                }
-            }));
-        }
-
-        MipsServer { tx: Some(tx), dispatcher: Some(dispatcher), workers, stats }
+        MipsServer { tx: Some(tx), dispatcher: Some(dispatcher), gate, stats }
     }
 
     /// Submit a query; returns the response receiver.
@@ -154,15 +163,14 @@ impl MipsServer {
         rrx
     }
 
-    /// Graceful shutdown: drain, then join all threads.
+    /// Graceful shutdown: drain the queue, then wait for every in-flight
+    /// batch task on the shared pool to finish.
     pub fn shutdown(mut self) {
         drop(self.tx.take());
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.gate.wait_idle();
     }
 }
 
@@ -216,6 +224,9 @@ fn answer(
         sigma: None,
         k: cfg.k,
         seed: cfg.seed ^ serial ^ rng.next_u64(),
+        // Per-query work stays on the batch's own pool worker: concurrency
+        // across queries/batches already uses the shared pool budget.
+        threads: 1,
     };
     match backend {
         Backend::NativeBandit => {

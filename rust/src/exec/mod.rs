@@ -1,0 +1,384 @@
+//! Persistent worker pool: the one thread budget every parallel path in
+//! the crate draws from.
+//!
+//! The bandit [`Engine`](crate::bandit::Engine) fans each batch
+//! observation out as disjoint arm shards, and the serving coordinator
+//! submits whole request batches — both onto the same
+//! [`WorkerPool::global`] pool, so concurrent MIPS queries and
+//! elimination rounds share one sized set of threads instead of each
+//! subsystem spawning its own (the std::thread + channel idiom of
+//! `runtime/service.rs` and `coordinator/server.rs`; the offline image
+//! carries no rayon/tokio).
+//!
+//! Two execution modes:
+//!
+//! * [`WorkerPool::run`] — scoped: blocks until every submitted task has
+//!   finished, which is what lets tasks borrow caller-local data (shard
+//!   views of arm state). While blocked, the caller drains its *own*
+//!   task group, so nested `run` calls (a pool task that itself fans
+//!   out) cannot deadlock even on a single-thread pool — and unrelated
+//!   queued work is never inlined onto the waiting caller.
+//! * [`WorkerPool::spawn`] — detached, `'static` tasks (the coordinator's
+//!   batch execution), bounded by a [`Gate`] for backpressure.
+//!
+//! Determinism contract: the pool never reorders *results* — helpers like
+//! [`WorkerPool::map_shards`] return per-shard outputs in submission
+//! order, so reductions over them are bit-identical for any worker count.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `run` call's group of tasks.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn complete_one(&self, panicked: bool) {
+        if panicked {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    /// Block until woken (completion or spurious); the caller re-checks.
+    /// Lossless without a timeout: `complete_one` decrements and notifies
+    /// under the same mutex this waits on.
+    fn wait(&self) {
+        let left = self.remaining.lock().unwrap();
+        if *left > 0 {
+            let _ = self.cv.wait(left).unwrap();
+        }
+    }
+}
+
+/// A fixed set of worker threads fed from one shared queue.
+pub struct WorkerPool {
+    tx: Mutex<Sender<Task>>,
+    threads: usize,
+}
+
+fn run_task(task: Task) {
+    // Detached tasks own their panics; scoped tasks are wrapped so the
+    // latch always fires. Either way a panic must not kill the worker.
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+}
+
+fn worker_loop(queue: Arc<Mutex<Receiver<Task>>>) {
+    loop {
+        let task = {
+            let q = queue.lock().unwrap();
+            q.recv()
+        };
+        match task {
+            Ok(t) => run_task(t),
+            Err(_) => break, // pool dropped
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Task>();
+        let queue = Arc::new(Mutex::new(rx));
+        for i in 0..threads {
+            let q = queue.clone();
+            std::thread::Builder::new()
+                .name(format!("as-worker-{i}"))
+                .spawn(move || worker_loop(q))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { tx: Mutex::new(tx), threads }
+    }
+
+    /// The process-wide shared pool. Sized by `AS_THREADS` when set,
+    /// otherwise by the machine's available parallelism.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(default_threads()))
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit a detached `'static` task (fire and forget).
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'static) {
+        self.tx.lock().unwrap().send(Box::new(task)).expect("worker pool alive");
+    }
+
+    /// Run a group of borrowing tasks to completion (scoped execution).
+    ///
+    /// The group's tasks live in their own deque; the pool receives one
+    /// *ticket* per task, each executing at most one task from the group.
+    /// While blocked, the calling thread drains **its own group only** —
+    /// that keeps nested `run` calls live even when every worker is busy,
+    /// without inlining unrelated work (e.g. a whole serving batch) onto
+    /// the waiting caller. Panics if any task panicked.
+    pub fn run<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        let group: Arc<Mutex<VecDeque<Task>>> =
+            Arc::new(Mutex::new(VecDeque::with_capacity(n)));
+        {
+            let mut q = group.lock().unwrap();
+            for task in tasks {
+                let latch = latch.clone();
+                let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                    latch.complete_one(r.is_err());
+                });
+                // SAFETY: `run` does not return until `latch` reports every
+                // task finished (the wait loop below): each task is popped
+                // and executed exactly once — by a ticket on a worker or by
+                // the caller — before the latch can complete, so borrows
+                // captured by the tasks strictly outlive their use.
+                let wrapped: Task = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(wrapped)
+                };
+                q.push_back(wrapped);
+            }
+        }
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..n {
+                let g = group.clone();
+                tx.send(Box::new(move || {
+                    let task = g.lock().unwrap().pop_front();
+                    if let Some(task) = task {
+                        task();
+                    }
+                }))
+                .expect("worker pool alive");
+            }
+        }
+        while !latch.is_done() {
+            let task = group.lock().unwrap().pop_front();
+            match task {
+                Some(task) => task(),
+                None => latch.wait(),
+            }
+        }
+        if latch.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Split `items` into at most `shards` contiguous chunks, evaluate `f`
+    /// on each concurrently, and return the per-chunk results **in chunk
+    /// order** (the determinism contract: reductions over the returned
+    /// vector are independent of worker count and scheduling).
+    pub fn map_shards<I, T, F>(&self, items: &[I], shards: usize, f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&[I]) -> T + Sync,
+    {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let shards = shards.max(1).min(items.len());
+        if shards == 1 {
+            return vec![f(items)];
+        }
+        let per = (items.len() + shards - 1) / shards;
+        let chunks: Vec<&[I]> = items.chunks(per).collect();
+        let mut out: Vec<Option<T>> = Vec::new();
+        out.resize_with(chunks.len(), || None);
+        let fref = &f;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks.len());
+        for (chunk, slot) in chunks.into_iter().zip(out.iter_mut()) {
+            tasks.push(Box::new(move || {
+                *slot = Some(fref(chunk));
+            }));
+        }
+        self.run(tasks);
+        out.into_iter().map(|s| s.expect("shard completed")).collect()
+    }
+}
+
+/// Pool size when `AS_THREADS` is unset: the machine's parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("AS_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+}
+
+/// Counting gate bounding how many units of work are in flight — the
+/// coordinator's backpressure on detached batch tasks.
+pub struct Gate {
+    state: Mutex<usize>,
+    cv: Condvar,
+    max: usize,
+}
+
+impl Gate {
+    pub fn new(max: usize) -> Gate {
+        Gate { state: Mutex::new(0), cv: Condvar::new(), max: max.max(1) }
+    }
+
+    /// Block until a slot is free, then take it.
+    pub fn acquire(&self) {
+        let mut n = self.state.lock().unwrap();
+        while *n >= self.max {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    /// Return a slot.
+    pub fn release(&self) {
+        let mut n = self.state.lock().unwrap();
+        *n -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until no slots are held (coordinator shutdown).
+    pub fn wait_idle(&self) {
+        let mut n = self.state.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+
+    /// Acquire a slot as an RAII guard: released on drop, so a panicking
+    /// task still returns its slot (no leaked capacity, no hung
+    /// `wait_idle`).
+    pub fn acquire_slot(gate: &Arc<Gate>) -> GateSlot {
+        gate.acquire();
+        GateSlot(gate.clone())
+    }
+}
+
+/// RAII slot of a [`Gate`]; see [`Gate::acquire_slot`].
+pub struct GateSlot(Arc<Gate>);
+
+impl Drop for GateSlot {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn map_shards_preserves_order_and_borrows() {
+        let pool = WorkerPool::new(3);
+        let items: Vec<usize> = (0..100).collect();
+        let sums = pool.map_shards(&items, 7, |chunk| chunk.iter().sum::<usize>());
+        assert!(sums.len() <= 7);
+        assert_eq!(sums.iter().sum::<usize>(), 99 * 100 / 2);
+        // order: first chunk holds the smallest items
+        assert!(sums[0] < *sums.last().unwrap());
+    }
+
+    #[test]
+    fn run_executes_every_task() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicU64::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..32 {
+            tasks.push(Box::new(|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.run(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        // One worker; the outer task fans out again. The caller-helps loop
+        // must drain the inner tasks.
+        let pool = Arc::new(WorkerPool::new(1));
+        let inner_sum = AtomicU64::new(0);
+        let p = pool.clone();
+        let inner_ref = &inner_sum;
+        let mut outer: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        outer.push(Box::new(move || {
+            let items: Vec<usize> = (1..=10).collect();
+            let parts = p.map_shards(&items, 4, |c| c.iter().sum::<usize>());
+            inner_ref.fetch_add(parts.iter().sum::<usize>() as u64, Ordering::Relaxed);
+        }));
+        pool.run(outer);
+        assert_eq!(inner_sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            tasks.push(Box::new(|| panic!("task boom")));
+            pool.run(tasks);
+        }));
+        assert!(caught.is_err(), "run must re-panic on task panic");
+        // pool still usable afterwards
+        let items = [1usize, 2, 3];
+        let s = pool.map_shards(&items, 2, |c| c.iter().sum::<usize>());
+        assert_eq!(s.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn gate_bounds_and_drains() {
+        let gate = Arc::new(Gate::new(2));
+        let pool = WorkerPool::new(4);
+        let peak = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            gate.acquire();
+            let g = gate.clone();
+            let peak = peak.clone();
+            let live = live.clone();
+            pool.spawn(move || {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                g.release();
+            });
+        }
+        gate.wait_idle();
+        assert!(peak.load(Ordering::SeqCst) <= 2, "gate leaked: {:?}", peak);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+    }
+}

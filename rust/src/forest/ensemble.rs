@@ -37,6 +37,9 @@ pub struct ForestConfig {
     /// Insertion budget for the fixed-budget experiments (None = off).
     pub budget: Option<u64>,
     pub seed: u64,
+    /// Shard-parallel MABSplit observation (see
+    /// [`crate::bandit::BanditConfig::threads`]); 1 = sequential.
+    pub threads: usize,
 }
 
 impl ForestConfig {
@@ -53,6 +56,7 @@ impl ForestConfig {
             alpha_f: 0.85,
             budget: None,
             seed: 42,
+            threads: 1,
         }
     }
 }
@@ -109,6 +113,7 @@ impl Forest {
             random_edges: cfg.kind == ForestKind::ExtraTrees,
             solver: cfg.solver,
             impurity: if regression { Impurity::Mse } else { cfg.impurity },
+            threads: cfg.threads,
         };
         let ranges = feature_ranges(ds);
         let budget = Budget { counter, limit: cfg.budget.map(|b| before + b) };
@@ -253,6 +258,24 @@ mod tests {
         let (acc_m, ins_m) = results[1];
         assert!(acc_m > acc_e - 0.05, "mab acc {acc_m} vs exact {acc_e}");
         assert!(ins_m < ins_e, "mab insertions {ins_m} ≥ exact {ins_e}");
+    }
+
+    #[test]
+    fn parallel_forest_bit_identical() {
+        // Forest-level determinism across the threaded MABSplit path:
+        // identical insertion totals and identical per-tree structure.
+        let ds = make_classification(3_000, 12, 4, 2, 2.0, 33);
+        let run = |threads: usize| {
+            let c = OpCounter::new();
+            let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+            cfg.n_trees = 3;
+            cfg.threads = threads;
+            let f = Forest::fit(&ds, &cfg, &c);
+            let splits: Vec<usize> = f.trees.iter().map(|t| t.nodes_split).collect();
+            (c.get(), splits, f.accuracy(&ds).to_bits())
+        };
+        let seq = run(1);
+        assert_eq!(run(4), seq);
     }
 
     #[test]

@@ -8,10 +8,10 @@
 //! (f, t) as an arm and inserts points batch-by-batch, eliminating
 //! hopeless splits early — O(1) in n when split gaps don't shrink with n.
 
-use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, Sampling};
+use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, ParCtx, Sampling};
 use crate::data::LabeledDataset;
 use crate::forest::histogram::{BinEdges, ClassHistogram, Impurity, MomentHistogram};
-use crate::metrics::OpCounter;
+use crate::metrics::{OpCounter, ShardCounters};
 use crate::util::rng::Rng;
 
 /// A chosen split.
@@ -76,6 +76,22 @@ pub fn solve_exactly(ctx: &SplitContext) -> Option<Split> {
 /// hold the entire node and the estimates are exact — the algorithm
 /// degrades to a batched version of the exact solver, never worse.
 pub fn solve_mab(ctx: &SplitContext, batch_size: usize, delta: f64, seed: u64) -> Option<Split> {
+    solve_mab_threaded(ctx, batch_size, delta, seed, 1)
+}
+
+/// [`solve_mab`] with shard-parallel batch observation: the surviving
+/// arms' *features* are sharded onto the shared worker pool (each feature
+/// histogram stays on one shard), with per-shard insertion counters
+/// merged into `ctx.counter` at batch end. For a fixed seed the chosen
+/// split and the insertion totals are bit-identical for every `threads`
+/// value (see [`BanditConfig::threads`]).
+pub fn solve_mab_threaded(
+    ctx: &SplitContext,
+    batch_size: usize,
+    delta: f64,
+    seed: u64,
+    threads: usize,
+) -> Option<Split> {
     let n = ctx.rows.len();
     let m = ctx.features.len();
     if n == 0 || m == 0 {
@@ -122,6 +138,7 @@ pub fn solve_mab(ctx: &SplitContext, batch_size: usize, delta: f64, seed: u64) -
         sampling: Sampling::Permutation,
         keep: 1,
         seed,
+        threads,
     };
     let r = successive_elimination(&mut arms, &bcfg);
     let best = r.best[0];
@@ -144,7 +161,7 @@ struct MabSplitArms<'a, 'b> {
     arm_offsets: &'b [usize],
     hists_c: Vec<ClassHistogram>,
     hists_r: Vec<MomentHistogram>,
-    /// Cached per-arm estimates, refreshed in `observe_batch`.
+    /// Cached per-arm estimates, refreshed after every observed batch.
     mu: Vec<f64>,
     se: Vec<f64>,
     n_inserted: usize,
@@ -153,6 +170,17 @@ struct MabSplitArms<'a, 'b> {
 }
 
 impl<'a, 'b> MabSplitArms<'a, 'b> {
+    /// Sorted distinct feature indices among the surviving arms.
+    fn features_of(&self, arms: &[usize]) -> Vec<usize> {
+        let mut fis: Vec<usize> = arms
+            .iter()
+            .map(|&a| self.arm_offsets.partition_point(|&o| o <= a) - 1)
+            .collect();
+        fis.sort_unstable();
+        fis.dedup();
+        fis
+    }
+
     fn refresh_feature(&mut self, fi: usize) {
         let scans = if self.ctx.ds.is_regression() {
             self.hists_r[fi].scan_thresholds()
@@ -190,13 +218,8 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
         self.ctx.rows.len()
     }
 
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
-        // Distinct features among surviving arms.
-        let mut fis: Vec<usize> = arms
-            .iter()
-            .map(|&a| self.arm_offsets.partition_point(|&o| o <= a) - 1)
-            .collect();
-        fis.dedup();
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
+        let fis = self.features_of(arms);
         for &fi in &fis {
             let f = self.ctx.features[fi];
             for &bi in batch {
@@ -208,6 +231,67 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
                     self.hists_c[fi].insert(v, self.ctx.ds.y[r] as usize, self.ctx.counter);
                 }
             }
+            self.refresh_feature(fi);
+        }
+        self.n_inserted += batch.len();
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let Some(p) = par else {
+            self.observe_shard(arms, batch);
+            return;
+        };
+        let fis = self.features_of(arms);
+        if fis.len() < 2 {
+            self.observe_shard(arms, batch);
+            return;
+        }
+        // One task per surviving feature: a histogram is only ever touched
+        // by its own shard, and inserts happen in batch order within it,
+        // so the bins match the sequential path bit-for-bit. Insertions
+        // are counted on per-shard counters and merged once at batch end.
+        let ctx = self.ctx;
+        let counters = ShardCounters::new(fis.len());
+        let regression = ctx.ds.is_regression();
+        if regression {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(fis.len());
+            let mut si = 0usize;
+            for (fi, hist) in self.hists_r.iter_mut().enumerate() {
+                if fis.binary_search(&fi).is_err() {
+                    continue;
+                }
+                let ctr = counters.shard(si);
+                si += 1;
+                let f = ctx.features[fi];
+                tasks.push(Box::new(move || {
+                    for &bi in batch {
+                        let r = ctx.rows[bi];
+                        hist.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as f64, ctr);
+                    }
+                }));
+            }
+            p.pool.run(tasks);
+        } else {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(fis.len());
+            let mut si = 0usize;
+            for (fi, hist) in self.hists_c.iter_mut().enumerate() {
+                if fis.binary_search(&fi).is_err() {
+                    continue;
+                }
+                let ctr = counters.shard(si);
+                si += 1;
+                let f = ctx.features[fi];
+                tasks.push(Box::new(move || {
+                    for &bi in batch {
+                        let r = ctx.rows[bi];
+                        hist.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as usize, ctr);
+                    }
+                }));
+            }
+            p.pool.run(tasks);
+        }
+        counters.merge_into(ctx.counter);
+        for &fi in &fis {
             self.refresh_feature(fi);
         }
         self.n_inserted += batch.len();
@@ -405,6 +489,46 @@ mod tests {
             (large as f64) < (small as f64) * 3.0,
             "insertions should be ~flat in n: {small} -> {large}"
         );
+    }
+
+    #[test]
+    fn parallel_mabsplit_bit_identical_and_same_insertions() {
+        // Tentpole acceptance: same split (feature, threshold bits,
+        // impurity bits) AND same histogram-insertion totals for every
+        // thread count, classification and regression alike.
+        for regression in [false, true] {
+            let ds = if regression {
+                make_regression(3_000, 8, 2, 0.3, 21)
+            } else {
+                make_classification(3_000, 10, 3, 2, 2.5, 21)
+            };
+            let m = ds.x.d;
+            let rows: Vec<usize> = (0..ds.x.n).collect();
+            let features: Vec<usize> = (0..m).collect();
+            let run = |threads: usize| {
+                let c = OpCounter::new();
+                let ranges = feature_ranges(&ds);
+                let mut rng = Rng::new(1);
+                let ctx = SplitContext {
+                    ds: &ds,
+                    rows: &rows,
+                    features: &features,
+                    edges: make_edges(&features, &ranges, 10, false, &mut rng),
+                    impurity: if regression { Impurity::Mse } else { Impurity::Gini },
+                    counter: &c,
+                };
+                let s = solve_mab_threaded(&ctx, 100, 0.01, 77, threads).unwrap();
+                (s.feature, s.threshold.to_bits(), s.child_impurity.to_bits(), c.get())
+            };
+            let seq = run(1);
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    run(threads),
+                    seq,
+                    "regression={regression} threads={threads} diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use crate::data::LabeledDataset;
 use crate::forest::histogram::{gini, Impurity};
-use crate::forest::split::{make_edges, solve_exactly, solve_mab, Split, SplitContext};
+use crate::forest::split::{make_edges, solve_exactly, solve_mab_threaded, Split, SplitContext};
 use crate::metrics::OpCounter;
 use crate::util::rng::Rng;
 
@@ -44,6 +44,9 @@ pub struct TreeConfig {
     pub random_edges: bool,
     pub solver: Solver,
     pub impurity: Impurity,
+    /// Shard-parallel MABSplit observation (see
+    /// [`crate::bandit::BanditConfig::threads`]); 1 = sequential.
+    pub threads: usize,
 }
 
 /// One tree node.
@@ -233,7 +236,8 @@ fn build_node(
             if n < 4 * batch_size {
                 solve_exactly(&ctx)
             } else {
-                solve_mab(&ctx, batch_size, cfg.solver.delta(), rng.next_u64())
+                let delta = cfg.solver.delta();
+                solve_mab_threaded(&ctx, batch_size, delta, rng.next_u64(), cfg.threads)
             }
         }
     };
@@ -278,6 +282,7 @@ mod tests {
             random_edges: false,
             solver,
             impurity: if regression { Impurity::Mse } else { Impurity::Gini },
+            threads: 1,
         }
     }
 

@@ -3,9 +3,16 @@
 //! on the shared engine, with per-arm σ̂ re-estimated every call (§2.3.2)
 //! and the FastPAM1 distance-sharing optimization in the SWAP arms
 //! (§A.1.1): one d(x, x_j) evaluation serves all k swap arms of x.
+//!
+//! Both arm sets implement the sharded observation API: BUILD shards by
+//! candidate, SWAP shards by candidate *group* (the k arms of one x stay
+//! on one shard so FastPAM1's shared distance evaluation is computed
+//! exactly once — parallel distance-call totals equal the sequential
+//! ones). Deltas are applied in fixed arm order, so `threads != 1`
+//! returns bit-identical medoids, losses, and counter totals.
 
 use super::{KmConfig, KmResult, MedoidCache};
-use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, Sampling};
+use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::PointSet;
 
 /// BanditPAM tuning knobs (paper defaults: B = 100, δ = 1/(1000·|S_tar|)).
@@ -15,11 +22,13 @@ pub struct BanditPamConfig {
     pub batch_size: usize,
     /// δ numerator: δ = delta_scale / |S_tar|. Paper: 1/1000 ⇒ 0.001.
     pub delta_scale: f64,
+    /// Shard-parallel observation (see [`BanditConfig::threads`]).
+    pub threads: usize,
 }
 
 impl BanditPamConfig {
     pub fn new(k: usize) -> Self {
-        BanditPamConfig { km: KmConfig::new(k), batch_size: 100, delta_scale: 1e-3 }
+        BanditPamConfig { km: KmConfig::new(k), batch_size: 100, delta_scale: 1e-3, threads: 1 }
     }
 }
 
@@ -59,9 +68,7 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
             d1: &d1,
             candidates: &candidates,
             first,
-            sum: vec![0.0; candidates.len()],
-            sum2: vec![0.0; candidates.len()],
-            count: vec![0; candidates.len()],
+            stats: ArmStats::new(candidates.len()),
         };
         let bcfg = BanditConfig {
             delta: cfg.delta_scale / candidates.len() as f64,
@@ -69,6 +76,7 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
             sampling: Sampling::Permutation,
             keep: 1,
             seed: cfg.km.seed ^ (0xB111D + step as u64),
+            threads: cfg.threads,
         };
         let r = successive_elimination(&mut arms, &bcfg);
         stats.build_sigmas.push(
@@ -95,9 +103,7 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
             cache: &cache,
             candidates: &candidates,
             k,
-            sum: vec![0.0; n_arms],
-            sum2: vec![0.0; n_arms],
-            count: vec![0; n_arms],
+            stats: ArmStats::new(n_arms),
             exact_rows: std::collections::HashMap::new(),
         };
         let bcfg = BanditConfig {
@@ -106,12 +112,13 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
             sampling: Sampling::Permutation,
             keep: 1,
             seed: cfg.km.seed ^ (0x50A9 + it as u64),
+            threads: cfg.threads,
         };
         let r = successive_elimination(&mut arms, &bcfg);
         let best = r.best[0];
         // Exact improvement check for the chosen swap (n distance calls):
         // mirrors PAM's convergence criterion.
-        let delta = arms.exact(best) ;
+        let delta = arms.exact(best);
         if delta >= -1e-12 {
             break;
         }
@@ -144,24 +151,15 @@ struct BuildArms<'a, P: PointSet + ?Sized> {
     d1: &'a [f64],
     candidates: &'a [usize],
     first: bool,
-    sum: Vec<f64>,
-    sum2: Vec<f64>,
-    count: Vec<u64>,
+    stats: ArmStats,
 }
 
 impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
     /// Running per-arm sigma estimate (re-estimated continuously; §2.3.2).
     fn sigma(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            return 1.0;
-        }
-        let c = self.count[arm] as f64;
-        let m = self.sum[arm] / c;
-        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(1e-9)
+        self.stats.sigma(arm, 1e-9)
     }
-}
 
-impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
     #[inline]
     fn g(&self, arm: usize, j: usize) -> f64 {
         let x = self.candidates[arm];
@@ -171,6 +169,13 @@ impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
         } else {
             (d - self.d1[j]).min(0.0)
         }
+    }
+
+    /// Per-arm (Σv, Σv²) deltas for one shard of arms.
+    fn deltas_for(&self, arms: &[usize], batch: &[usize]) -> Vec<(f64, f64)> {
+        arms.iter()
+            .map(|&a| ArmStats::batch_delta(batch, |j| self.g(a, j)))
+            .collect()
     }
 }
 
@@ -183,31 +188,27 @@ impl<'a, P: PointSet + ?Sized> AdaptiveArms for BuildArms<'a, P> {
         self.ps.len()
     }
 
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
-        for &a in arms {
-            let mut s = 0.0;
-            let mut s2 = 0.0;
-            for &j in batch {
-                let v = self.g(a, j);
-                s += v;
-                s2 += v * v;
-            }
-            self.sum[a] += s;
-            self.sum2[a] += s2;
-            self.count[a] += batch.len() as u64;
-        }
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
+        let deltas = self.deltas_for(arms, batch);
+        self.stats.push_deltas(arms, &deltas, batch.len() as u64);
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let Some(p) = par else {
+            self.observe_shard(arms, batch);
+            return;
+        };
+        let this: &Self = self;
+        let deltas = p.arm_deltas(arms, |a| ArmStats::batch_delta(batch, |j| this.g(a, j)));
+        self.stats.push_deltas(arms, &deltas, batch.len() as u64);
     }
 
     fn estimate(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            f64::INFINITY
-        } else {
-            self.sum[arm] / self.count[arm] as f64
-        }
+        self.stats.mean(arm)
     }
 
     fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
-        if self.count[arm] == 0 {
+        if self.stats.count[arm] == 0 {
             return f64::INFINITY;
         }
         // Paper's Algorithm 2, line 8: C_x = sigma_x * sqrt(log(1/delta) / n).
@@ -232,23 +233,35 @@ struct SwapArms<'a, P: PointSet + ?Sized> {
     cache: &'a MedoidCache,
     candidates: &'a [usize],
     k: usize,
-    sum: Vec<f64>,
-    sum2: Vec<f64>,
-    count: Vec<u64>,
+    stats: ArmStats,
     /// Memoized full distance rows for the exact fallback: the k arms of a
     /// candidate x share one row (FastPAM1 sharing applies there too).
     exact_rows: std::collections::HashMap<usize, Vec<f64>>,
 }
 
+/// Contiguous runs of `arms` sharing one candidate x (`arms` is sorted, so
+/// the k arms of a candidate are adjacent). Shards are built from whole
+/// runs: FastPAM1's shared d(x, x_j) is evaluated exactly once per (x, j)
+/// for any shard count.
+fn group_ranges(arms: &[usize], k: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < arms.len() {
+        let xi = arms[i] / k;
+        let mut e = i;
+        while e < arms.len() && arms[e] / k == xi {
+            e += 1;
+        }
+        out.push((i, e));
+        i = e;
+    }
+    out
+}
+
 impl<'a, P: PointSet + ?Sized> SwapArms<'a, P> {
     /// Running per-arm sigma estimate (re-estimated continuously; §2.3.2).
     fn sigma(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            return 1.0;
-        }
-        let c = self.count[arm] as f64;
-        let m = self.sum[arm] / c;
-        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(1e-9)
+        self.stats.sigma(arm, 1e-9)
     }
 
     /// g for swap (x, mi) at reference j, given the precomputed d(x, x_j).
@@ -261,6 +274,38 @@ impl<'a, P: PointSet + ?Sized> SwapArms<'a, P> {
         };
         dxj.min(without) - self.cache.d1[j]
     }
+
+    /// Batch deltas for one candidate's arm group: ONE distance call per
+    /// reference serves all k arms of x.
+    fn group_delta(&self, group: &[usize], batch: &[usize]) -> Vec<(f64, f64)> {
+        let xi = group[0] / self.k;
+        let x = self.candidates[xi];
+        let mut s = vec![0.0; group.len()];
+        let mut s2 = vec![0.0; group.len()];
+        for &j in batch {
+            let dxj = self.ps.dist(x, j);
+            for (gi, &a) in group.iter().enumerate() {
+                let mi = a % self.k;
+                let v = self.g_from_d(mi, j, dxj);
+                s[gi] += v;
+                s2[gi] += v * v;
+            }
+        }
+        s.into_iter().zip(s2).collect()
+    }
+
+    /// Apply per-group delta vectors group-by-group in fixed arm order.
+    fn apply(
+        &mut self,
+        arms: &[usize],
+        ranges: &[(usize, usize)],
+        deltas: &[Vec<(f64, f64)>],
+        pulls: u64,
+    ) {
+        for (&(start, end), group_deltas) in ranges.iter().zip(deltas) {
+            self.stats.push_deltas(&arms[start..end], group_deltas, pulls);
+        }
+    }
 }
 
 impl<'a, P: PointSet + ?Sized> AdaptiveArms for SwapArms<'a, P> {
@@ -272,48 +317,39 @@ impl<'a, P: PointSet + ?Sized> AdaptiveArms for SwapArms<'a, P> {
         self.ps.len()
     }
 
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
-        // `arms` is ordered, so arms sharing a candidate x are contiguous.
-        let mut i = 0;
-        while i < arms.len() {
-            let xi = arms[i] / self.k;
-            let mut run_end = i;
-            while run_end < arms.len() && arms[run_end] / self.k == xi {
-                run_end += 1;
-            }
-            let x = self.candidates[xi];
-            let group = &arms[i..run_end];
-            // Per-arm accumulators for this batch.
-            let mut s = vec![0.0; group.len()];
-            let mut s2 = vec![0.0; group.len()];
-            for &j in batch {
-                let dxj = self.ps.dist(x, j); // ONE distance call for all k arms
-                for (gi, &a) in group.iter().enumerate() {
-                    let mi = a % self.k;
-                    let v = self.g_from_d(mi, j, dxj);
-                    s[gi] += v;
-                    s2[gi] += v * v;
-                }
-            }
-            for (gi, &a) in group.iter().enumerate() {
-                self.sum[a] += s[gi];
-                self.sum2[a] += s2[gi];
-                self.count[a] += batch.len() as u64;
-            }
-            i = run_end;
-        }
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
+        let ranges = group_ranges(arms, self.k);
+        let deltas: Vec<Vec<(f64, f64)>> = ranges
+            .iter()
+            .map(|&(start, end)| self.group_delta(&arms[start..end], batch))
+            .collect();
+        self.apply(arms, &ranges, &deltas, batch.len() as u64);
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let Some(p) = par else {
+            self.observe_shard(arms, batch);
+            return;
+        };
+        let ranges = group_ranges(arms, self.k);
+        let this: &Self = self;
+        let shard_deltas: Vec<Vec<Vec<(f64, f64)>>> =
+            p.pool.map_shards(&ranges, p.shards, |range_shard| {
+                range_shard
+                    .iter()
+                    .map(|&(start, end)| this.group_delta(&arms[start..end], batch))
+                    .collect()
+            });
+        let deltas: Vec<Vec<(f64, f64)>> = shard_deltas.into_iter().flatten().collect();
+        self.apply(arms, &ranges, &deltas, batch.len() as u64);
     }
 
     fn estimate(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            f64::INFINITY
-        } else {
-            self.sum[arm] / self.count[arm] as f64
-        }
+        self.stats.mean(arm)
     }
 
     fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
-        if self.count[arm] == 0 {
+        if self.stats.count[arm] == 0 {
             return f64::INFINITY;
         }
         // Paper's Algorithm 2, line 8: C_x = sigma_x * sqrt(log(1/delta) / n).
@@ -461,5 +497,27 @@ mod tests {
             }
         }
         assert_eq!(r.medoids, vec![best.1]);
+    }
+
+    #[test]
+    fn parallel_banditpam_bit_identical_and_same_dist_calls() {
+        // Tentpole acceptance: with a fixed seed, the sharded engine must
+        // reproduce the sequential run exactly — medoids, loss bits, swap
+        // count, AND distance-call totals (FastPAM1 sharing preserved by
+        // group-aligned shards).
+        let m = mnist_like_d(140, 24, 13);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let run = |threads: usize| {
+            ps.counter().reset();
+            let mut cfg = BanditPamConfig::new(3);
+            cfg.km.seed = 13;
+            cfg.threads = threads;
+            let r = bandit_pam(&ps, &cfg);
+            (r.medoids, r.loss.to_bits(), r.swaps_performed, r.dist_calls)
+        };
+        let seq = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run(threads), seq, "threads={threads} diverged");
+        }
     }
 }

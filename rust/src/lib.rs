@@ -9,12 +9,19 @@
 //! Architecture (see DESIGN.md): the adaptive-sampling control loop and
 //! every substrate live in Rust (this crate); the arithmetic hot-spots are
 //! Pallas kernels inside JAX graphs, AOT-lowered to HLO text at build time
-//! (`make artifacts`) and executed from Rust via PJRT ([`runtime`]).
-//! Python never runs on the request path.
+//! (`make artifacts`) and executed from Rust via PJRT ([`runtime`],
+//! feature-gated `pjrt`). Python never runs on the request path.
+//!
+//! The engine is an explicit [`bandit::Engine`] with a per-round
+//! [`bandit::Scoreboard`]; batch observation fans out as contiguous arm
+//! shards over the persistent [`exec::WorkerPool`] — the same sized
+//! thread budget the serving [`coordinator`] draws its batch tasks from —
+//! with bit-identical results for any thread count.
 
 pub mod bandit;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod experiments;
 pub mod forest;
 pub mod kmedoids;

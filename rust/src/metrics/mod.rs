@@ -54,6 +54,45 @@ impl Clone for OpCounter {
     }
 }
 
+/// Per-shard operation counters for the shard-parallel observation path:
+/// each worker counts on its own [`OpCounter`] instead of contending on
+/// the parent, and the totals are merged into the parent once the batch
+/// completes. Because merging sums shard totals, the parent's final
+/// count is identical to the sequential path's for any shard count.
+#[derive(Debug)]
+pub struct ShardCounters {
+    shards: Vec<OpCounter>,
+}
+
+impl ShardCounters {
+    pub fn new(n: usize) -> ShardCounters {
+        ShardCounters { shards: (0..n.max(1)).map(|_| OpCounter::new()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// The counter for shard `i`.
+    pub fn shard(&self, i: usize) -> &OpCounter {
+        &self.shards[i]
+    }
+
+    /// Sum over all shards.
+    pub fn total(&self) -> u64 {
+        self.shards.iter().map(|c| c.get()).sum()
+    }
+
+    /// Fold the shard totals into `parent` (call once per batch).
+    pub fn merge_into(&self, parent: &OpCounter) {
+        parent.add(self.total());
+    }
+}
+
 /// Latency recorder for the serving coordinator: stores microsecond
 /// samples and reports percentiles/throughput.
 #[derive(Debug, Default, Clone)]
@@ -146,6 +185,19 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn shard_counters_merge_matches_sequential_total() {
+        let shards = ShardCounters::new(4);
+        for i in 0..shards.len() {
+            shards.shard(i).add((i as u64 + 1) * 10);
+        }
+        assert_eq!(shards.total(), 100);
+        let parent = OpCounter::new();
+        parent.add(7);
+        shards.merge_into(&parent);
+        assert_eq!(parent.get(), 107);
     }
 
     #[test]

@@ -13,8 +13,14 @@
 //!
 //! Warm start (§4.3.1): a batch of m queries shares one cached coordinate
 //! subset; each query's arms begin pre-pulled on those coordinates.
+//!
+//! The arm set implements the sharded observation API: atoms are sharded
+//! into contiguous ranges, the per-batch query gather (q_J and importance
+//! weights) is computed once and shared read-only across shards, and
+//! per-arm deltas are applied in fixed atom order — `threads != 1`
+//! returns bit-identical answers and sample counts.
 
-use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, Sampling};
+use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::Matrix;
 use crate::metrics::OpCounter;
 use crate::util::rng::Rng;
@@ -42,6 +48,8 @@ pub struct BanditMipsConfig {
     /// Atoms to return (k-MIPS).
     pub k: usize,
     pub seed: u64,
+    /// Shard-parallel observation (see [`BanditConfig::threads`]).
+    pub threads: usize,
 }
 
 impl Default for BanditMipsConfig {
@@ -53,6 +61,7 @@ impl Default for BanditMipsConfig {
             sigma: None,
             k: 1,
             seed: 0x4D495053, // "MIPS"
+            threads: 1,
         }
     }
 }
@@ -120,9 +129,7 @@ pub fn bandit_mips_warm(
         weights: weights.as_deref(),
         order: order.as_deref(),
         warm_coords,
-        sum: vec![0.0; atoms.n],
-        sum2: vec![0.0; atoms.n],
-        count: vec![0; atoms.n],
+        stats: ArmStats::new(atoms.n),
         fixed_sigma: cfg.sigma,
         exact_cache: vec![f64::NAN; atoms.n],
     };
@@ -143,6 +150,7 @@ pub fn bandit_mips_warm(
         sampling,
         keep: cfg.k,
         seed: cfg.seed,
+        threads: cfg.threads,
     };
     let r = successive_elimination(&mut arms, &bcfg);
     MipsAnswer { atoms: r.best, samples: counter.get() - before }
@@ -158,9 +166,7 @@ struct MipsArms<'a> {
     order: Option<&'a [usize]>,
     /// Warm-start coordinates to front-load in the permutation (§4.3.1).
     warm_coords: &'a [usize],
-    sum: Vec<f64>,
-    sum2: Vec<f64>,
-    count: Vec<u64>,
+    stats: ArmStats,
     fixed_sigma: Option<f64>,
     exact_cache: Vec<f64>,
 }
@@ -170,14 +176,44 @@ impl<'a> MipsArms<'a> {
         if let Some(s) = self.fixed_sigma {
             return s;
         }
-        if self.count[arm] == 0 {
-            return 1.0;
-        }
-        let c = self.count[arm] as f64;
-        let m = self.sum[arm] / c;
-        ((self.sum2[arm] / c - m * m).max(0.0)).sqrt().max(1e-12)
+        self.stats.sigma(arm, 1e-12)
     }
 
+    /// Per-batch query gather, hoisted out of the per-arm loop: q[j] (and
+    /// the importance weight) are arm-independent, so they are computed
+    /// once per batch and shared read-only by every shard.
+    fn query_weights(&self, batch: &[usize]) -> Vec<f64> {
+        let d = self.atoms.d as f64;
+        batch
+            .iter()
+            .map(|&j| {
+                let q = self.q[j] as f64;
+                match self.weights {
+                    Some(w) => q / (d * w[j]),
+                    None => q,
+                }
+            })
+            .collect()
+    }
+
+    /// One atom's (Σv, Σv²) over a batch: a single sequential row gather.
+    #[inline]
+    fn arm_delta(&self, arm: usize, batch: &[usize], qw: &[f64]) -> (f64, f64) {
+        let row = self.atoms.row(arm);
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for (&j, &qj) in batch.iter().zip(qw) {
+            let v = -(qj * row[j] as f64);
+            s += v;
+            s2 += v * v;
+        }
+        (s, s2)
+    }
+
+    fn apply(&mut self, arms: &[usize], deltas: &[(f64, f64)], pulls: u64) {
+        self.counter.add(arms.len() as u64 * pulls);
+        self.stats.push_deltas(arms, deltas, pulls);
+    }
 }
 
 impl<'a> AdaptiveArms for MipsArms<'a> {
@@ -221,48 +257,33 @@ impl<'a> AdaptiveArms for MipsArms<'a> {
         p
     }
 
-    fn observe_batch(&mut self, arms: &[usize], batch: &[usize]) {
-        // Hoist the query gather out of the per-arm loop: q[j] (and the
-        // importance weight) are arm-independent, so precompute them once
-        // per batch. The per-arm inner loop then reads one row
-        // sequentially-by-arm with a single gather per sample.
-        let d = self.atoms.d as f64;
-        let qw: Vec<f64> = batch
+    fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
+        let qw = self.query_weights(batch);
+        let deltas: Vec<(f64, f64)> = arms
             .iter()
-            .map(|&j| {
-                let q = self.q[j] as f64;
-                match self.weights {
-                    Some(w) => q / (d * w[j]),
-                    None => q,
-                }
-            })
+            .map(|&a| self.arm_delta(a, batch, &qw))
             .collect();
-        for &a in arms {
-            let row = self.atoms.row(a);
-            let mut s = 0.0;
-            let mut s2 = 0.0;
-            for (&j, &qj) in batch.iter().zip(&qw) {
-                let v = -(qj * row[j] as f64);
-                s += v;
-                s2 += v * v;
-            }
-            self.counter.add(batch.len() as u64);
-            self.sum[a] += s;
-            self.sum2[a] += s2;
-            self.count[a] += batch.len() as u64;
-        }
+        self.apply(arms, &deltas, batch.len() as u64);
+    }
+
+    fn observe_batch(&mut self, arms: &[usize], batch: &[usize], par: Option<ParCtx>) {
+        let Some(p) = par else {
+            self.observe_shard(arms, batch);
+            return;
+        };
+        let qw = self.query_weights(batch);
+        let this: &Self = self;
+        let qw_ref = &qw;
+        let deltas = p.arm_deltas(arms, |a| this.arm_delta(a, batch, qw_ref));
+        self.apply(arms, &deltas, batch.len() as u64);
     }
 
     fn estimate(&self, arm: usize) -> f64 {
-        if self.count[arm] == 0 {
-            f64::INFINITY
-        } else {
-            self.sum[arm] / self.count[arm] as f64
-        }
+        self.stats.mean(arm)
     }
 
     fn ci(&self, arm: usize, n_used: usize, delta: f64) -> f64 {
-        if self.count[arm] == 0 {
+        if self.stats.count[arm] == 0 {
             return f64::INFINITY;
         }
         // Algorithm 4: C = σ·sqrt(2·log(4 n t²/δ)/(t+1)); the engine folds
@@ -459,5 +480,31 @@ mod tests {
             c_warm.get(),
             c_cold.get()
         );
+    }
+
+    #[test]
+    fn parallel_mips_bit_identical_across_strategies() {
+        // Tentpole acceptance: same atoms AND same sample counts for the
+        // sharded engine, on every sampling strategy.
+        let (atoms, queries) = normal_custom(70, 3_000, 2, 31);
+        for strategy in [
+            SampleStrategy::Uniform,
+            SampleStrategy::Weighted { beta: 1.0 },
+            SampleStrategy::Alpha,
+        ] {
+            let run = |threads: usize| {
+                let c = OpCounter::new();
+                let mut rcfg = cfg();
+                rcfg.strategy = strategy;
+                rcfg.threads = threads;
+                rcfg.k = 2;
+                let ans = bandit_mips(&atoms, queries.row(0), &rcfg, &c);
+                (ans.atoms, ans.samples, c.get())
+            };
+            let seq = run(1);
+            for threads in [2usize, 4] {
+                assert_eq!(run(threads), seq, "{strategy:?} threads={threads} diverged");
+            }
+        }
     }
 }

@@ -7,7 +7,8 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc::{channel, Sender};
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use super::{ArtifactMeta, ArtifactStore};
 

@@ -1,0 +1,113 @@
+//! Minimal error handling (the `anyhow` crate is unavailable offline).
+//!
+//! Provides the small slice of the `anyhow` API this crate uses: a
+//! string-backed [`Error`], a [`Result`] alias defaulting to it, the
+//! [`anyhow!`](crate::anyhow) and [`bail!`](crate::bail) macros, and a
+//! [`Context`] extension trait for attaching context to fallible calls.
+
+/// A string-backed error: cheap to build, `Display`s its message.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Result alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string (the `anyhow!` idiom).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to an error, `anyhow::Context`-style.
+pub trait Context<T> {
+    /// Wrap the error with `context: original`.
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("bad value {}", 7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert_eq!(fails().unwrap_err().to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.with_context(|| "loading artifacts").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifacts: boom");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,8 +1,10 @@
 //! Shared utilities: deterministic PRNG, statistics, table/CSV output,
-//! a minimal benchmark harness, and property-testing helpers. The build
-//! image is offline, so these replace `rand`, `criterion`, and `proptest`.
+//! a minimal benchmark harness, property-testing helpers, and string-backed
+//! error handling. The build image is offline, so these replace `rand`,
+//! `criterion`, `proptest`, and `anyhow`.
 
 pub mod bench;
+pub mod error;
 pub mod linalg;
 pub mod proptest;
 pub mod rng;

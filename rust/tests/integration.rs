@@ -189,3 +189,45 @@ fn counters_and_results_agree() {
     let r = bandit_pam(&ps, &BanditPamConfig::new(3));
     assert_eq!(r.dist_calls, ps.counter().get());
 }
+
+/// The tentpole contract across all three chapter solvers at once: with a
+/// fixed seed, running every solver on the shared-pool parallel engine
+/// (threads = 0 → one shard per pool worker) reproduces the sequential
+/// results bit-for-bit, including the paper's sample-complexity counters.
+#[test]
+fn sharded_engine_bit_identical_across_all_solvers() {
+    let run = |threads: usize| {
+        // Ch2: BanditPAM.
+        let ps = VecPointSet::new(mnist_like_d(160, 24, 7), Metric::L2);
+        let mut kcfg = BanditPamConfig::new(3);
+        kcfg.threads = threads;
+        let km = bandit_pam(&ps, &kcfg);
+
+        // Ch3: MABSplit forest.
+        let ds = mnist_classification(1200, 32, 7);
+        let c = OpCounter::new();
+        let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+        fcfg.threads = threads;
+        let f = Forest::fit(&ds, &fcfg, &c);
+
+        // Ch4: BanditMIPS.
+        let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(60, 2_000, 1, 7);
+        let c2 = OpCounter::new();
+        let mut mcfg = BanditMipsConfig::default();
+        mcfg.threads = threads;
+        let m = bandit_mips(&atoms, queries.row(0), &mcfg, &c2);
+
+        (
+            km.medoids,
+            km.loss.to_bits(),
+            km.dist_calls,
+            c.get(),
+            f.trees.iter().map(|t| t.nodes_split).collect::<Vec<_>>(),
+            m.atoms,
+            m.samples,
+        )
+    };
+    let seq = run(1);
+    assert_eq!(run(0), seq, "shared-pool engine diverged from sequential");
+    assert_eq!(run(3), seq, "3-shard engine diverged from sequential");
+}
