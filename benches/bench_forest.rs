@@ -5,7 +5,7 @@ use adaptive_sampling::data::tabular::{make_classification, make_regression};
 use adaptive_sampling::forest::ensemble::{Forest, ForestConfig, ForestKind};
 use adaptive_sampling::forest::histogram::{BinEdges, ClassHistogram, Impurity};
 use adaptive_sampling::forest::split::{
-    feature_ranges, make_edges, solve_exactly, solve_mab, SplitContext,
+    feature_ranges, make_edges, solve_exactly, solve_mab, SplitContext, TrainSet,
 };
 use adaptive_sampling::forest::tree::Solver;
 use adaptive_sampling::metrics::OpCounter;
@@ -40,7 +40,7 @@ fn main() {
     let make_ctx = |c: &'static OpCounter| {
         let mut rng = Rng::new(1);
         SplitContext {
-            ds: &ds,
+            ds: TrainSet::of(&ds),
             rows: &rows,
             features: &features,
             edges: make_edges(&features, &ranges, 10, false, &mut rng),

@@ -1,12 +1,201 @@
-//! PJRT runtime benches: artifact execute round-trips — the L3↔XLA
-//! boundary cost the serving coordinator pays per batched call.
-//! Skipped (with a message) when `make artifacts` hasn't been run.
+//! Runtime-substrate benches.
+//!
+//! 1. **Store sweep** (always runs): MABSplit and BanditMIPS on the same
+//!    workload over every dataset substrate — dense `Matrix`,
+//!    `ColumnStore` f32/i8, in-RAM and spilled — recording wall-clock,
+//!    solver op counts, and store decode/spill counters to
+//!    `BENCH_store.json`, so the storage layer's perf trajectory is
+//!    tracked across PRs. F32 variants are asserted to reproduce the
+//!    dense answer exactly.
+//! 2. **PJRT benches** (skipped with a message when `make artifacts`
+//!    hasn't been run): artifact execute round-trips — the L3↔XLA
+//!    boundary cost the serving coordinator pays per batched call.
 
+use std::time::Instant;
+
+use adaptive_sampling::data::tabular::make_classification;
+use adaptive_sampling::forest::histogram::Impurity;
+use adaptive_sampling::forest::split::{
+    feature_ranges_view, make_edges, solve_mab, SplitContext, TrainSet,
+};
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
 use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::store::{Codec, ColumnStore, DatasetView, StoreOptions};
 use adaptive_sampling::util::bench::Bencher;
 use adaptive_sampling::util::rng::Rng;
 
+struct StorePoint {
+    solver: &'static str,
+    store: String,
+    wall_s: f64,
+    /// Solver op count (insertions / coordinate multiplications).
+    ops: u64,
+    /// Values decoded by the store on access (0 for matrix / f32-RAM).
+    decode_ops: u64,
+    spill_reads: u64,
+    answer_matches_dense: bool,
+}
+
+/// The store variants swept, as (label, options). `None` = dense matrix.
+fn variants(raw_bytes: usize) -> Vec<(String, Option<StoreOptions>)> {
+    let spill_budget = (raw_bytes / 8).max(64 * 1024);
+    let mut out: Vec<(String, Option<StoreOptions>)> = vec![("matrix".into(), None)];
+    for codec in [Codec::F32, Codec::I8] {
+        out.push((
+            format!("column/{}", codec.name()),
+            Some(StoreOptions { codec, rows_per_chunk: 1024, ..Default::default() }),
+        ));
+        out.push((
+            format!("column/{}/spill", codec.name()),
+            Some(
+                StoreOptions { codec, rows_per_chunk: 1024, ..Default::default() }
+                    .spill_to_temp(spill_budget),
+            ),
+        ));
+    }
+    out
+}
+
+fn store_sweep(quick: bool) -> Vec<StorePoint> {
+    let mut points = Vec::new();
+
+    // --- MABSplit: one node split over every substrate. ---
+    let n = if quick { 4_000 } else { 20_000 };
+    let ds = make_classification(n, 10, 3, 2, 2.5, 7);
+    let rows: Vec<usize> = (0..ds.x.n).collect();
+    let features: Vec<usize> = (0..ds.x.d).collect();
+    let mab = |x: &dyn DatasetView| {
+        let c = OpCounter::new();
+        let ranges = feature_ranges_view(x);
+        let mut rng = Rng::new(1);
+        let ctx = SplitContext {
+            ds: TrainSet { x, y: &ds.y, n_classes: ds.n_classes },
+            rows: &rows,
+            features: &features,
+            edges: make_edges(&features, &ranges, 10, false, &mut rng),
+            impurity: Impurity::Gini,
+            counter: &c,
+        };
+        let t0 = Instant::now();
+        let s = solve_mab(&ctx, 100, 0.01, 77).expect("split");
+        (t0.elapsed().as_secs_f64(), c.get(), (s.feature, s.threshold.to_bits()))
+    };
+    let (_, _, dense_split) = mab(&ds.x);
+    for (label, opts) in variants(ds.x.n * ds.x.d * 4) {
+        let (wall, ops, split, dec, spl) = match &opts {
+            None => {
+                let (w, o, s) = mab(&ds.x);
+                (w, o, s, 0, 0)
+            }
+            Some(o) => {
+                let cs = ColumnStore::from_matrix(&ds.x, o).expect("store build");
+                let (w, o2, s) = mab(&cs);
+                (w, o2, s, cs.decode_ops(), cs.spill_reads())
+            }
+        };
+        let lossless = !label.contains("i8");
+        if lossless {
+            assert_eq!(split, dense_split, "{label}: f32 store changed the split");
+        }
+        points.push(StorePoint {
+            solver: "mabsplit",
+            store: label,
+            wall_s: wall,
+            ops,
+            decode_ops: dec,
+            spill_reads: spl,
+            answer_matches_dense: split == dense_split,
+        });
+    }
+
+    // --- BanditMIPS: a query batch over every substrate. ---
+    let (na, da) = if quick { (100, 5_000) } else { (200, 20_000) };
+    let (atoms, queries) =
+        adaptive_sampling::data::synthetic::normal_custom(na, da, 4, 5);
+    let mips = |x: &dyn DatasetView| {
+        let c = OpCounter::new();
+        let t0 = Instant::now();
+        let mut answers = Vec::new();
+        for qi in 0..queries.n {
+            let cfg = BanditMipsConfig { seed: 9 + qi as u64, ..Default::default() };
+            answers.push(bandit_mips(x, queries.row(qi), &cfg, &c).atoms);
+        }
+        (t0.elapsed().as_secs_f64(), c.get(), answers)
+    };
+    let (_, _, dense_answers) = mips(&atoms);
+    for (label, opts) in variants(atoms.n * atoms.d * 4) {
+        let (wall, ops, answers, dec, spl) = match &opts {
+            None => {
+                let (w, o, a) = mips(&atoms);
+                (w, o, a, 0, 0)
+            }
+            Some(o) => {
+                let cs = ColumnStore::from_matrix(&atoms, o).expect("store build");
+                let (w, o2, a) = mips(&cs);
+                (w, o2, a, cs.decode_ops(), cs.spill_reads())
+            }
+        };
+        let lossless = !label.contains("i8");
+        if lossless {
+            assert_eq!(answers, dense_answers, "{label}: f32 store changed the answers");
+        }
+        points.push(StorePoint {
+            solver: "banditmips",
+            store: label,
+            wall_s: wall,
+            ops,
+            decode_ops: dec,
+            spill_reads: spl,
+            answer_matches_dense: answers == dense_answers,
+        });
+    }
+
+    points
+}
+
+fn write_store_json(points: &[StorePoint]) {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"solver\": \"{}\", \"store\": \"{}\", \"wall_s\": {:.6}, \
+                 \"ops\": {}, \"decode_ops\": {}, \"spill_reads\": {}, \
+                 \"answer_matches_dense\": {}}}",
+                p.solver, p.store, p.wall_s, p.ops, p.decode_ops, p.spill_reads,
+                p.answer_matches_dense
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"store_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_store.json", &json) {
+        Ok(()) => println!("wrote BENCH_store.json"),
+        Err(e) => eprintln!("could not write BENCH_store.json: {e}"),
+    }
+}
+
 fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+
+    println!("store sweep: Matrix vs ColumnStore (f32/i8, RAM/spill)");
+    let points = store_sweep(quick);
+    for p in &points {
+        println!(
+            "store/{:<10} {:<18} wall={:>9.2}ms ops={:<10} decode={:<10} spill_reads={:<6} match={}",
+            p.solver,
+            p.store,
+            p.wall_s * 1e3,
+            p.ops,
+            p.decode_ops,
+            p.spill_reads,
+            p.answer_matches_dense
+        );
+    }
+    write_store_json(&points);
+
     let dir = ArtifactStore::default_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("[skip] no artifacts at {} — run `make artifacts`", dir.display());

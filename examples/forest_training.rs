@@ -4,20 +4,53 @@
 //!
 //! ```bash
 //! cargo run --release --example forest_training
+//! # columnar / quantized / out-of-core training substrate:
+//! cargo run --release --example forest_training -- --store=column,i8,spill
 //! ```
+//!
+//! `--store=matrix` (default) trains from the dense in-RAM matrix;
+//! `--store=column[,f32|f16|i8][,spill]` routes training through a
+//! `store::ColumnStore` — with `spill`, chunks stream from a temp file
+//! through a bounded cache, demonstrating the out-of-core path end to
+//! end.
 
 use adaptive_sampling::data::tabular::covtype_like;
 use adaptive_sampling::forest::ensemble::{Forest, ForestConfig, ForestKind};
+use adaptive_sampling::forest::split::TrainSet;
 use adaptive_sampling::forest::tree::Solver;
 use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::store::{store_options_from_args, ColumnStore};
 
 fn main() {
     let ds = covtype_like(30_000, 5);
     let (train, test) = ds.split(0.2, 1);
     println!(
-        "Covertype-like: {} train / {} test, {} features, 7 classes\n",
+        "Covertype-like: {} train / {} test, {} features, 7 classes",
         train.x.n, test.x.n, train.x.d
     );
+
+    // Optional columnar substrate for the *training* data; evaluation
+    // stays on the dense test matrix either way.
+    let store_opts = store_options_from_args();
+    let column: Option<ColumnStore> = store_opts.as_ref().map(|o| {
+        ColumnStore::from_matrix(&train.x, o).expect("build column store")
+    });
+    let train_ts: TrainSet = match &column {
+        Some(cs) => {
+            println!(
+                "training substrate: ColumnStore codec={} chunks={}x{} rows spilled={}\n",
+                cs.codec().name(),
+                cs.n_blocks(),
+                cs.chunk_rows(),
+                cs.spilled()
+            );
+            TrainSet { x: cs, y: &train.y, n_classes: train.n_classes }
+        }
+        None => {
+            println!("training substrate: dense Matrix\n");
+            TrainSet::of(&train)
+        }
+    };
 
     println!("--- unconstrained training (5 trees, depth 5) ---");
     println!(
@@ -35,7 +68,7 @@ fn main() {
             cfg.n_trees = 5;
             cfg.max_depth = 5;
             let t0 = std::time::Instant::now();
-            let f = Forest::fit(&train, &cfg, &c);
+            let f = Forest::fit_view(&train_ts, &cfg, &c);
             println!(
                 "{:<24} {:>10.3} {:>14} {:>8.2}s",
                 format!("{kname}{sname}"),
@@ -56,7 +89,7 @@ fn main() {
         cfg.n_trees = 100;
         cfg.max_depth = 5;
         cfg.budget = Some(budget);
-        let f = Forest::fit(&train, &cfg, &c);
+        let f = Forest::fit_view(&train_ts, &cfg, &c);
         let splits: usize = f.trees.iter().map(|t| t.nodes_split).sum();
         println!(
             "{:<24} {:>7} {:>8} {:>10.3}",
@@ -67,4 +100,16 @@ fn main() {
         );
     }
     println!("\nsame budget, more trees, better generalization — the MABSplit dividend.");
+
+    if let Some(cs) = &column {
+        println!(
+            "\nstore counters: decode_ops={} spill_reads={} cache_evictions={} \
+             cache_resident={}B preview_rows={}",
+            cs.decode_ops(),
+            cs.spill_reads(),
+            cs.cache_evictions(),
+            cs.cache_resident_bytes(),
+            cs.preview().len()
+        );
+    }
 }

@@ -10,7 +10,14 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example mips_server
+//! # serve from a quantized, file-spilled column store instead of RAM:
+//! cargo run --release --example mips_server -- --store=column,i8,spill
 //! ```
+//!
+//! `--store=column[,f32|f16|i8][,spill]` swaps the item matrix for a
+//! `store::ColumnStore` behind the same `DatasetView` serving path; with
+//! `spill`, item chunks stream from a temp file through a bounded cache
+//! (the out-of-core path end to end).
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -21,6 +28,7 @@ use adaptive_sampling::metrics::{LatencyRecorder, OpCounter};
 use adaptive_sampling::mips::naive_mips;
 use adaptive_sampling::runtime::service::PjrtHandle;
 use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::store::{store_options_from_args, ColumnStore, DatasetView};
 use adaptive_sampling::util::rng::Rng;
 
 fn main() {
@@ -39,14 +47,35 @@ fn main() {
         })
         .collect();
 
-    // Ground truth for recall accounting.
+    // Ground truth for recall accounting (always vs the exact matrix).
     let truth: Vec<usize> = queries
         .iter()
         .map(|q| {
             let c = OpCounter::new();
-            naive_mips(&items, q, 1, &c)[0]
+            naive_mips(&*items, q, 1, &c)[0]
         })
         .collect();
+
+    // Optional columnar / quantized / spilled item substrate.
+    let column: Option<Arc<ColumnStore>> = store_options_from_args().map(|o| {
+        Arc::new(ColumnStore::from_matrix(&items, &o).expect("build column store"))
+    });
+    let serving_view: Arc<dyn DatasetView> = match &column {
+        Some(cs) => {
+            println!(
+                "item substrate: ColumnStore codec={} spilled={} ({}x{} rows/chunk)",
+                cs.codec().name(),
+                cs.spilled(),
+                cs.n_blocks(),
+                cs.chunk_rows()
+            );
+            cs.clone()
+        }
+        None => {
+            println!("item substrate: dense Matrix");
+            items.clone()
+        }
+    };
 
     let dir = ArtifactStore::default_dir();
     let backend = match PjrtHandle::start(&dir) {
@@ -71,7 +100,7 @@ fn main() {
         ..Default::default()
     };
     println!("starting MIPS server: {cfg:?}\n");
-    let server = MipsServer::start(items.clone(), cfg, backend);
+    let server = MipsServer::start(serving_view, cfg, backend);
 
     // Paced closed-loop load: submit in windows of `inflight` so latency
     // reflects service time + bounded queueing, not a 400-deep backlog.
@@ -118,5 +147,14 @@ fn main() {
         "dispatcher batches: {}",
         server.stats.batches.load(Ordering::Relaxed)
     );
+    if let Some(cs) = &column {
+        println!(
+            "store counters: decode_ops={} spill_reads={} cache_evictions={} cache_resident={}B",
+            cs.decode_ops(),
+            cs.spill_reads(),
+            cs.cache_evictions(),
+            cs.cache_resident_bytes()
+        );
+    }
     server.shutdown();
 }

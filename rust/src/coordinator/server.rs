@@ -17,11 +17,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::ServerConfig;
-use crate::data::Matrix;
 use crate::exec::{Gate, WorkerPool};
 use crate::metrics::OpCounter;
 use crate::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
 use crate::runtime::service::PjrtHandle;
+use crate::store::DatasetView;
 use crate::util::rng::Rng;
 
 /// Which compute backend answers queries.
@@ -83,11 +83,18 @@ pub struct MipsServer {
 }
 
 impl MipsServer {
-    /// Start the server over an atom matrix. Batch execution runs as
-    /// bounded tasks on [`WorkerPool::global`] — the same thread budget
-    /// the bandit engine's elimination rounds use — instead of a
-    /// per-server thread set.
-    pub fn start(atoms: Arc<Matrix>, cfg: ServerConfig, backend: Backend) -> MipsServer {
+    /// Start the server over any atom substrate behind a
+    /// [`DatasetView`] — a dense [`crate::data::Matrix`] (an
+    /// `Arc<Matrix>` coerces directly) or a quantized / spilled
+    /// [`crate::store::ColumnStore`] for corpora larger than RAM. Batch
+    /// execution runs as bounded tasks on [`WorkerPool::global`] — the
+    /// same thread budget the bandit engine's elimination rounds use —
+    /// instead of a per-server thread set.
+    pub fn start(
+        atoms: Arc<dyn DatasetView>,
+        cfg: ServerConfig,
+        backend: Backend,
+    ) -> MipsServer {
         let (tx, rx) = channel::<Request>();
         let stats = Arc::new(ServerStats::default());
         let gate = Arc::new(Gate::new(cfg.workers.max(1)));
@@ -116,7 +123,7 @@ impl MipsServer {
                     let _slot = slot;
                     let mut rng =
                         Rng::new(cfg.seed ^ serial.wrapping_mul(0x9E3779B97F4A7C15));
-                    serve_batch(&atoms, &cfg, &backend, batch, &mut rng, &wstats);
+                    serve_batch(&*atoms, &cfg, &backend, batch, &mut rng, &wstats);
                 });
             };
             loop {
@@ -175,7 +182,7 @@ impl MipsServer {
 }
 
 fn serve_batch(
-    atoms: &Matrix,
+    atoms: &dyn DatasetView,
     cfg: &ServerConfig,
     backend: &Backend,
     batch: Vec<Request>,
@@ -183,8 +190,9 @@ fn serve_batch(
     stats: &ServerStats,
 ) {
     // Shared warm-start coordinate cache for the batch (§4.3.1).
+    let d = atoms.n_cols();
     let warm = if cfg.warm_coords > 0 && batch.len() > 1 {
-        rng.sample_without_replacement(atoms.d, cfg.warm_coords.min(atoms.d))
+        rng.sample_without_replacement(d, cfg.warm_coords.min(d))
     } else {
         Vec::new()
     };
@@ -207,7 +215,7 @@ fn serve_batch(
 
 #[allow(clippy::too_many_arguments)]
 fn answer(
-    atoms: &Matrix,
+    atoms: &dyn DatasetView,
     cfg: &ServerConfig,
     backend: &Backend,
     query: &[f32],
@@ -254,12 +262,13 @@ fn answer(
     }
 }
 
-/// Full rescore through the PJRT executable: pads the atom matrix (once
-/// per call; the serving example sizes atoms to the artifact exactly) and
-/// takes the top-k of the returned scores.
+/// Full rescore through the PJRT executable: materializes the atom view
+/// into a zero-padded dense buffer (once per call; the serving example
+/// sizes atoms to the artifact exactly) and takes the top-k of the
+/// returned scores.
 #[allow(clippy::too_many_arguments)]
 fn pjrt_exact(
-    atoms: &Matrix,
+    atoms: &dyn DatasetView,
     store: &PjrtHandle,
     entry: &str,
     query: &[f32],
@@ -269,20 +278,33 @@ fn pjrt_exact(
 ) -> Vec<usize> {
     let Some(meta) = store.meta(entry) else { return Vec::new() };
     let (an, ad) = (meta.params[0][0], meta.params[0][1]);
-    if atoms.d != ad || atoms.n > an || query.len() != ad {
+    let (n, d) = (atoms.n_rows(), atoms.n_cols());
+    if d != ad || n > an || query.len() != ad {
         return Vec::new(); // shape mismatch: the router shouldn't send us here
     }
-    counter.add((atoms.n * atoms.d) as u64);
-    let padded;
-    let data: &[f32] = if atoms.n == an {
-        &atoms.data
-    } else {
-        padded = crate::runtime::pad_to(&atoms.data, atoms.n, ad, an, 0.0);
-        &padded
+    counter.add((n * d) as u64);
+    // Dense, exactly artifact-sized atoms (the documented serving setup)
+    // ship zero-copy; everything else materializes through the view into
+    // a zero-padded buffer.
+    let gathered: Vec<f32>;
+    let data: &[f32] = match atoms.dense_data() {
+        Some(raw) if n == an => raw,
+        Some(raw) => {
+            gathered = crate::runtime::pad_to(raw, n, ad, an, 0.0);
+            &gathered
+        }
+        None => {
+            let mut buf = vec![0f32; an * ad];
+            for i in 0..n {
+                atoms.read_row(i, &mut buf[i * ad..(i + 1) * ad]);
+            }
+            gathered = buf;
+            &gathered
+        }
     };
     let Ok(out) = store.exec_f32(entry, &[data, query]) else { return Vec::new() };
     let scores = &out[0];
-    let mut idx: Vec<usize> = (0..atoms.n).collect();
+    let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
     idx.truncate(k);
     idx
@@ -292,7 +314,9 @@ fn pjrt_exact(
 mod tests {
     use super::*;
     use crate::data::synthetic::lowrank_like;
+    use crate::data::Matrix;
     use crate::mips::naive_mips;
+    use crate::store::{ColumnStore, StoreOptions};
 
     fn atoms() -> Arc<Matrix> {
         Arc::new(lowrank_like(128, 512, 8, 77))
@@ -315,7 +339,7 @@ mod tests {
         for (rx, q) in receivers.into_iter().zip(&queries) {
             let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
             let c = OpCounter::new();
-            let truth = naive_mips(&atoms, q, 1, &c);
+            let truth = naive_mips(&*atoms, q, 1, &c);
             if resp.top_atoms.first() == truth.first() {
                 correct += 1;
             }
@@ -324,6 +348,37 @@ mod tests {
         assert!(correct >= 10, "only {correct}/12 correct");
         assert_eq!(server.stats.served.load(Ordering::Relaxed), 12);
         assert!(server.stats.batches.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_over_column_store_matches_dense_answers() {
+        // Coordinator leg of the tentpole: an out-of-core F32 ColumnStore
+        // behind the serving path answers exactly like the dense matrix.
+        let dense = atoms();
+        let opts = StoreOptions { rows_per_chunk: 32, ..Default::default() }
+            .spill_to_temp(32 * 1024);
+        let cs: Arc<ColumnStore> =
+            Arc::new(ColumnStore::from_matrix(&dense, &opts).unwrap());
+        assert!(cs.spilled());
+        let cfg = ServerConfig { workers: 2, max_batch: 4, ..Default::default() };
+        let server = MipsServer::start(cs.clone(), cfg, Backend::NativeBandit);
+        let mut rng = Rng::new(15);
+        let mut pairs = Vec::new();
+        for _ in 0..8 {
+            let q: Vec<f32> = (0..dense.d).map(|_| rng.f32() * 5.0).collect();
+            pairs.push((server.submit(q.clone()), q));
+        }
+        let mut correct = 0;
+        for (rx, q) in pairs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            let c = OpCounter::new();
+            let truth = naive_mips(&*dense, &q, 1, &c);
+            if resp.top_atoms.first() == truth.first() {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 7, "only {correct}/8 correct over spilled store");
         server.shutdown();
     }
 

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::data::distance::Metric;
 use crate::metrics::OpCounter;
+use crate::util::error::Result;
 
 /// A dense row-major matrix of `n` points in `d` dimensions.
 #[derive(Clone, Debug)]
@@ -26,15 +27,22 @@ impl Matrix {
         Matrix { data: vec![0.0; n * d], n, d }
     }
 
-    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+    /// Build from row vectors. Errors (rather than panicking) when the
+    /// rows are ragged — user-supplied data reaches this constructor, so
+    /// malformed input must be reportable. The streaming sibling is
+    /// [`crate::store::StoreBuilder::push_row`], which applies the same
+    /// rule.
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Result<Self> {
         let n = rows.len();
         let d = if n == 0 { 0 } else { rows[0].len() };
         let mut data = Vec::with_capacity(n * d);
-        for r in rows {
-            assert_eq!(r.len(), d, "ragged rows");
-            data.extend_from_slice(&r);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != d {
+                crate::bail!("ragged rows: row {i} has {} values, expected {d}", r.len());
+            }
+            data.extend_from_slice(r);
         }
-        Matrix { data, n, d }
+        Ok(Matrix { data, n, d })
     }
 
     #[inline(always)]
@@ -149,7 +157,8 @@ mod tests {
 
     #[test]
     fn matrix_rows_and_subsets() {
-        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]])
+            .expect("rectangular");
         assert_eq!(m.row(1), &[3.0, 4.0]);
         let s = m.take_rows(&[2, 0]);
         assert_eq!(s.row(0), &[5.0, 6.0]);
@@ -159,8 +168,15 @@ mod tests {
     }
 
     #[test]
+    fn ragged_rows_are_an_error() {
+        let err = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0]]).unwrap_err();
+        assert!(err.to_string().contains("ragged"), "{err}");
+        assert_eq!(Matrix::from_rows(Vec::new()).expect("empty ok").n, 0);
+    }
+
+    #[test]
     fn vec_pointset_counts() {
-        let m = Matrix::from_rows(vec![vec![0.0, 0.0], vec![3.0, 4.0]]);
+        let m = Matrix::from_rows(vec![vec![0.0, 0.0], vec![3.0, 4.0]]).expect("rectangular");
         let ps = VecPointSet::new(m, Metric::L2);
         assert!((ps.dist(0, 1) - 5.0).abs() < 1e-6);
         assert_eq!(ps.counter().get(), 1);
@@ -168,7 +184,8 @@ mod tests {
 
     #[test]
     fn split_partitions() {
-        let x = Matrix::from_rows((0..100).map(|i| vec![i as f32]).collect());
+        let x = Matrix::from_rows((0..100).map(|i| vec![i as f32]).collect())
+            .expect("rectangular");
         let y = (0..100).map(|i| (i % 2) as f32).collect();
         let ds = LabeledDataset { x, y, n_classes: 2 };
         let (tr, te) = ds.split(0.2, 1);

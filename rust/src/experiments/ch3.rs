@@ -9,7 +9,7 @@ use crate::data::tabular::{
 use crate::data::LabeledDataset;
 use crate::forest::ensemble::{Forest, ForestConfig, ForestKind};
 use crate::forest::importance::{stability_experiment, ImportanceKind};
-use crate::forest::split::{feature_ranges, make_edges, solve_mab, SplitContext};
+use crate::forest::split::{feature_ranges, make_edges, solve_mab, SplitContext, TrainSet};
 use crate::forest::tree::Solver;
 use crate::forest::Impurity;
 use crate::metrics::OpCounter;
@@ -267,7 +267,7 @@ pub fn app_b2(seed: u64) {
         let edges = make_edges(&features, &ranges, 10, false, &mut rng);
         let c = OpCounter::new();
         let ctx = SplitContext {
-            ds: &ds,
+            ds: TrainSet::of(&ds),
             rows: &rows,
             features: &features,
             edges,

@@ -4,9 +4,10 @@
 
 use crate::data::LabeledDataset;
 use crate::forest::histogram::Impurity;
-use crate::forest::split::feature_ranges;
+use crate::forest::split::{feature_ranges_view, TrainSet};
 use crate::forest::tree::{Budget, DecisionTree, Solver, TreeConfig};
 use crate::metrics::OpCounter;
+use crate::store::DatasetView;
 use crate::util::rng::Rng;
 
 /// Which ensemble variant (§3.5 "Baseline Models").
@@ -74,22 +75,30 @@ pub struct Forest {
 impl Forest {
     /// Train a forest; `counter` records histogram insertions.
     pub fn fit(ds: &LabeledDataset, cfg: &ForestConfig, counter: &OpCounter) -> Forest {
+        Self::fit_view(&TrainSet::of(ds), cfg, counter)
+    }
+
+    /// [`Forest::fit`] over any [`DatasetView`]-backed [`TrainSet`] — the
+    /// columnar / out-of-core training path (histogram fills become
+    /// column scans; see [`crate::store`]).
+    pub fn fit_view(ts: &TrainSet, cfg: &ForestConfig, counter: &OpCounter) -> Forest {
         let before = counter.get();
         let mut rng = Rng::new(cfg.seed);
-        let regression = ds.is_regression();
-        let m_total = ds.x.d;
+        let regression = ts.is_regression();
+        let n_total = ts.x.n_rows();
+        let m_total = ts.x.n_cols();
 
         // Random Patches: one fixed row/feature subsample for the forest.
         let (patch_rows, feature_pool): (Vec<usize>, Vec<usize>) = match cfg.kind {
             ForestKind::RandomPatches => {
-                let nr = ((ds.x.n as f64) * cfg.alpha_n).round().max(1.0) as usize;
+                let nr = ((n_total as f64) * cfg.alpha_n).round().max(1.0) as usize;
                 let nf = ((m_total as f64) * cfg.alpha_f).round().max(1.0) as usize;
                 (
-                    rng.sample_without_replacement(ds.x.n, nr.min(ds.x.n)),
+                    rng.sample_without_replacement(n_total, nr.min(n_total)),
                     rng.sample_without_replacement(m_total, nf.min(m_total)),
                 )
             }
-            _ => ((0..ds.x.n).collect(), (0..m_total).collect()),
+            _ => ((0..n_total).collect(), (0..m_total).collect()),
         };
 
         // Features per node: √M for classification; ExtraTrees regression
@@ -115,7 +124,7 @@ impl Forest {
             impurity: if regression { Impurity::Mse } else { cfg.impurity },
             threads: cfg.threads,
         };
-        let ranges = feature_ranges(ds);
+        let ranges = feature_ranges_view(ts.x);
         let budget = Budget { counter, limit: cfg.budget.map(|b| before + b) };
 
         let mut trees = Vec::new();
@@ -129,13 +138,11 @@ impl Forest {
             // Random Patches uses its fixed patch).
             let rows: Vec<usize> = match cfg.kind {
                 ForestKind::RandomPatches => patch_rows.clone(),
-                _ => {
-                    let n = ds.x.n;
-                    (0..n).map(|_| rng.below(n)).collect()
-                }
+                _ => (0..n_total).map(|_| rng.below(n_total)).collect(),
             };
             let mut trng = rng.fork(t as u64);
-            let tree = DecisionTree::fit(ds, &rows, &tree_cfg, &ranges, &budget, &feature_pool, &mut trng);
+            let tree =
+                DecisionTree::fit_view(ts, &rows, &tree_cfg, &ranges, &budget, &feature_pool, &mut trng);
             // A tree "completed" if the budget didn't interrupt it: either
             // budget still has room, or the tree stopped for its own
             // reasons (we approximate: room remains for another split).
@@ -155,7 +162,7 @@ impl Forest {
 
         Forest {
             trees,
-            n_classes: ds.n_classes,
+            n_classes: ts.n_classes,
             insertions: counter.get() - before,
             completed_trees: completed,
         }
@@ -181,21 +188,30 @@ impl Forest {
 
     /// Classification accuracy on a dataset.
     pub fn accuracy(&self, ds: &LabeledDataset) -> f64 {
+        self.accuracy_view(&TrainSet::of(ds))
+    }
+
+    /// Classification accuracy over any [`DatasetView`]-backed
+    /// [`TrainSet`] (rows are gathered through the view).
+    pub fn accuracy_view(&self, ts: &TrainSet) -> f64 {
         assert!(self.n_classes > 0);
+        let n = ts.x.n_rows();
+        let mut row = vec![0f32; ts.x.n_cols()];
         let mut correct = 0usize;
-        for i in 0..ds.x.n {
-            let p = self.predict_row(ds.x.row(i));
+        for i in 0..n {
+            ts.x.read_row(i, &mut row);
+            let p = self.predict_row(&row);
             let pred = p
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(c, _)| c)
                 .unwrap_or(0);
-            if pred == ds.y[i] as usize {
+            if pred == ts.y[i] as usize {
                 correct += 1;
             }
         }
-        correct as f64 / ds.x.n.max(1) as f64
+        correct as f64 / n.max(1) as f64
     }
 
     /// Regression MSE on a dataset.

@@ -22,5 +22,5 @@ pub mod tree;
 
 pub use ensemble::{Forest, ForestConfig, ForestKind};
 pub use histogram::Impurity;
-pub use split::{solve_exactly, solve_mab, solve_mab_threaded, Split, SplitContext};
+pub use split::{solve_exactly, solve_mab, solve_mab_threaded, Split, SplitContext, TrainSet};
 pub use tree::{DecisionTree, Solver, TreeConfig};

@@ -7,12 +7,47 @@
 //! into every feature histogram (O(n·m) insertions); MABSplit treats each
 //! (f, t) as an arm and inserts points batch-by-batch, eliminating
 //! hopeless splits early — O(1) in n when split gaps don't shrink with n.
+//!
+//! Data access goes through [`DatasetView`] (a [`TrainSet`] bundles the
+//! feature view with labels): each feature's histogram fill is one
+//! [`DatasetView::read_col`] gather — a true column scan on a
+//! [`crate::store::ColumnStore`], instead of the row-major striding the
+//! dense path forced — and values are inserted in batch order, so the
+//! accumulated moments are bit-identical to the legacy `Matrix` path.
 
 use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, ParCtx, Sampling};
 use crate::data::LabeledDataset;
 use crate::forest::histogram::{BinEdges, ClassHistogram, Impurity, MomentHistogram};
 use crate::metrics::{OpCounter, ShardCounters};
+use crate::store::DatasetView;
 use crate::util::rng::Rng;
+
+/// A labeled dataset behind a [`DatasetView`]: the training-time facade
+/// every Chapter 3 solver consumes. Borrow one from a dense
+/// [`LabeledDataset`] with [`TrainSet::of`], or assemble one over a
+/// [`crate::store::ColumnStore`] for the columnar / out-of-core path.
+#[derive(Clone, Copy)]
+pub struct TrainSet<'a> {
+    pub x: &'a dyn DatasetView,
+    /// Class index for classification; value for regression.
+    pub y: &'a [f32],
+    /// 0 for regression.
+    pub n_classes: usize,
+}
+
+impl<'a> TrainSet<'a> {
+    pub fn of(ds: &'a LabeledDataset) -> TrainSet<'a> {
+        TrainSet { x: &ds.x, y: &ds.y, n_classes: ds.n_classes }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        self.n_classes == 0
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+}
 
 /// A chosen split.
 #[derive(Clone, Debug)]
@@ -26,7 +61,7 @@ pub struct Split {
 
 /// Node-splitting context shared by both solvers.
 pub struct SplitContext<'a> {
-    pub ds: &'a LabeledDataset,
+    pub ds: TrainSet<'a>,
     /// Row indices belonging to this node.
     pub rows: &'a [usize],
     /// Candidate features at this node (already subsampled by the tree).
@@ -39,21 +74,23 @@ pub struct SplitContext<'a> {
 }
 
 /// Exact solver: fill every feature histogram with every node point, then
-/// scan all thresholds. `n·m` insertions.
+/// scan all thresholds. `n·m` insertions, one column scan per feature.
 pub fn solve_exactly(ctx: &SplitContext) -> Option<Split> {
     let regression = ctx.ds.is_regression();
+    let mut vals = vec![0f32; ctx.rows.len()];
     let mut best: Option<(f64, usize, usize)> = None; // (mu, fi, t)
     for (fi, &f) in ctx.features.iter().enumerate() {
+        ctx.ds.x.read_col(f, ctx.rows, &mut vals);
         let scans: Vec<(f64, f64)> = if regression {
             let mut h = MomentHistogram::new(ctx.edges[fi].clone());
-            for &r in ctx.rows {
-                h.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as f64, ctx.counter);
+            for (&r, &v) in ctx.rows.iter().zip(&vals) {
+                h.insert(v, ctx.ds.y[r] as f64, ctx.counter);
             }
             h.scan_thresholds()
         } else {
             let mut h = ClassHistogram::new(ctx.edges[fi].clone(), ctx.ds.n_classes);
-            for &r in ctx.rows {
-                h.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as usize, ctx.counter);
+            for (&r, &v) in ctx.rows.iter().zip(&vals) {
+                h.insert(v, ctx.ds.y[r] as usize, ctx.counter);
             }
             h.scan_thresholds(ctx.impurity)
         };
@@ -81,10 +118,11 @@ pub fn solve_mab(ctx: &SplitContext, batch_size: usize, delta: f64, seed: u64) -
 
 /// [`solve_mab`] with shard-parallel batch observation: the surviving
 /// arms' *features* are sharded onto the shared worker pool (each feature
-/// histogram stays on one shard), with per-shard insertion counters
-/// merged into `ctx.counter` at batch end. For a fixed seed the chosen
-/// split and the insertion totals are bit-identical for every `threads`
-/// value (see [`BanditConfig::threads`]).
+/// histogram stays on one shard and fills from its own column scan), with
+/// per-shard insertion counters merged into `ctx.counter` at batch end.
+/// For a fixed seed the chosen split and the insertion totals are
+/// bit-identical for every `threads` value (see
+/// [`BanditConfig::threads`]).
 pub fn solve_mab_threaded(
     ctx: &SplitContext,
     batch_size: usize,
@@ -220,14 +258,19 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
 
     fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
         let fis = self.features_of(arms);
+        // Resolve the batch to dataset rows once; every feature's column
+        // scan reuses it.
+        let rows: Vec<usize> = batch.iter().map(|&bi| self.ctx.rows[bi]).collect();
+        let mut vals = vec![0f32; rows.len()];
         for &fi in &fis {
             let f = self.ctx.features[fi];
-            for &bi in batch {
-                let r = self.ctx.rows[bi];
-                let v = self.ctx.ds.x.row(r)[f];
-                if self.ctx.ds.is_regression() {
+            self.ctx.ds.x.read_col(f, &rows, &mut vals);
+            if self.ctx.ds.is_regression() {
+                for (&r, &v) in rows.iter().zip(&vals) {
                     self.hists_r[fi].insert(v, self.ctx.ds.y[r] as f64, self.ctx.counter);
-                } else {
+                }
+            } else {
+                for (&r, &v) in rows.iter().zip(&vals) {
                     self.hists_c[fi].insert(v, self.ctx.ds.y[r] as usize, self.ctx.counter);
                 }
             }
@@ -247,11 +290,14 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
             return;
         }
         // One task per surviving feature: a histogram is only ever touched
-        // by its own shard, and inserts happen in batch order within it,
-        // so the bins match the sequential path bit-for-bit. Insertions
-        // are counted on per-shard counters and merged once at batch end.
+        // by its own shard, each shard fills from its own column scan, and
+        // inserts happen in batch order within it, so the bins match the
+        // sequential path bit-for-bit. Insertions are counted on per-shard
+        // counters and merged once at batch end.
         let ctx = self.ctx;
         let counters = ShardCounters::new(fis.len());
+        let rows: Vec<usize> = batch.iter().map(|&bi| ctx.rows[bi]).collect();
+        let rows_ref: &[usize] = &rows;
         let regression = ctx.ds.is_regression();
         if regression {
             let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(fis.len());
@@ -264,9 +310,10 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
                 si += 1;
                 let f = ctx.features[fi];
                 tasks.push(Box::new(move || {
-                    for &bi in batch {
-                        let r = ctx.rows[bi];
-                        hist.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as f64, ctr);
+                    let mut vals = vec![0f32; rows_ref.len()];
+                    ctx.ds.x.read_col(f, rows_ref, &mut vals);
+                    for (&r, &v) in rows_ref.iter().zip(&vals) {
+                        hist.insert(v, ctx.ds.y[r] as f64, ctr);
                     }
                 }));
             }
@@ -282,9 +329,10 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
                 si += 1;
                 let f = ctx.features[fi];
                 tasks.push(Box::new(move || {
-                    for &bi in batch {
-                        let r = ctx.rows[bi];
-                        hist.insert(ctx.ds.x.row(r)[f], ctx.ds.y[r] as usize, ctr);
+                    let mut vals = vec![0f32; rows_ref.len()];
+                    ctx.ds.x.read_col(f, rows_ref, &mut vals);
+                    for (&r, &v) in rows_ref.iter().zip(&vals) {
+                        hist.insert(v, ctx.ds.y[r] as usize, ctr);
                     }
                 }));
             }
@@ -314,16 +362,18 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
         let fi = self.arm_offsets.partition_point(|&o| o <= arm) - 1;
         if self.n_inserted < self.ctx.rows.len() && !self.full[fi] {
             let f = self.ctx.features[fi];
+            let mut vals = vec![0f32; self.ctx.rows.len()];
+            self.ctx.ds.x.read_col(f, self.ctx.rows, &mut vals);
             if self.ctx.ds.is_regression() {
                 let mut h = MomentHistogram::new(self.ctx.edges[fi].clone());
-                for &r in self.ctx.rows {
-                    h.insert(self.ctx.ds.x.row(r)[f], self.ctx.ds.y[r] as f64, self.ctx.counter);
+                for (&r, &v) in self.ctx.rows.iter().zip(&vals) {
+                    h.insert(v, self.ctx.ds.y[r] as f64, self.ctx.counter);
                 }
                 self.hists_r[fi] = h;
             } else {
                 let mut h = ClassHistogram::new(self.ctx.edges[fi].clone(), self.ctx.ds.n_classes);
-                for &r in self.ctx.rows {
-                    h.insert(self.ctx.ds.x.row(r)[f], self.ctx.ds.y[r] as usize, self.ctx.counter);
+                for (&r, &v) in self.ctx.rows.iter().zip(&vals) {
+                    h.insert(v, self.ctx.ds.y[r] as usize, self.ctx.counter);
                 }
                 self.hists_c[fi] = h;
             }
@@ -334,22 +384,17 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
     }
 }
 
-/// Compute per-feature (min, max) ranges over a dataset — done once per
-/// forest, outside the insertion budget (it is not a histogram insertion).
+/// Per-feature (min, max) ranges over any [`DatasetView`] — done once per
+/// forest, outside the insertion budget (it is not a histogram
+/// insertion). On a [`crate::store::ColumnStore`] this folds the
+/// per-chunk stats: no decode, no disk.
+pub fn feature_ranges_view(x: &dyn DatasetView) -> Vec<(f32, f32)> {
+    (0..x.n_cols()).map(|c| x.col_range(c)).collect()
+}
+
+/// [`feature_ranges_view`] over a dense labeled dataset.
 pub fn feature_ranges(ds: &LabeledDataset) -> Vec<(f32, f32)> {
-    let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); ds.x.d];
-    for i in 0..ds.x.n {
-        let row = ds.x.row(i);
-        for (j, &v) in row.iter().enumerate() {
-            if v < ranges[j].0 {
-                ranges[j].0 = v;
-            }
-            if v > ranges[j].1 {
-                ranges[j].1 = v;
-            }
-        }
-    }
-    ranges
+    feature_ranges_view(&ds.x)
 }
 
 /// Build bin edges for a node's candidate features.
@@ -377,6 +422,7 @@ pub fn make_edges(
 mod tests {
     use super::*;
     use crate::data::tabular::{make_classification, make_regression};
+    use crate::store::{ColumnStore, StoreOptions};
 
     fn ctx_for<'a>(
         ds: &'a LabeledDataset,
@@ -388,7 +434,7 @@ mod tests {
         let ranges = feature_ranges(ds);
         let mut rng = Rng::new(1);
         let edges = make_edges(features, &ranges, t_bins, false, &mut rng);
-        SplitContext { ds, rows, features, edges, impurity: Impurity::Gini, counter }
+        SplitContext { ds: TrainSet::of(ds), rows, features, edges, impurity: Impurity::Gini, counter }
     }
 
     #[test]
@@ -447,7 +493,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let edges = make_edges(&features, &ranges, 10, false, &mut rng);
         let ctx = SplitContext {
-            ds: &ds,
+            ds: TrainSet::of(&ds),
             rows: &rows,
             features: &features,
             edges,
@@ -460,7 +506,7 @@ mod tests {
         let ranges2 = feature_ranges(&ds);
         let mut rng2 = Rng::new(1);
         let ctx2 = SplitContext {
-            ds: &ds,
+            ds: TrainSet::of(&ds),
             rows: &rows,
             features: &features,
             edges: make_edges(&features, &ranges2, 10, false, &mut rng2),
@@ -510,7 +556,7 @@ mod tests {
                 let ranges = feature_ranges(&ds);
                 let mut rng = Rng::new(1);
                 let ctx = SplitContext {
-                    ds: &ds,
+                    ds: TrainSet::of(&ds),
                     rows: &rows,
                     features: &features,
                     edges: make_edges(&features, &ranges, 10, false, &mut rng),
@@ -528,6 +574,44 @@ mod tests {
                     "regression={regression} threads={threads} diverged"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn column_store_split_bit_identical_to_matrix() {
+        // The storage leg of the determinism contract, at the solver
+        // boundary: a ColumnStore(F32)-backed TrainSet yields the same
+        // split, bit for bit, with the same insertion totals.
+        let ds = make_classification(3_000, 10, 3, 2, 2.5, 31);
+        let rows: Vec<usize> = (0..ds.x.n).collect();
+        let features: Vec<usize> = (0..ds.x.d).collect();
+        let cs = ColumnStore::from_matrix(
+            &ds.x,
+            &StoreOptions { rows_per_chunk: 256, ..Default::default() },
+        )
+        .unwrap();
+        let run = |ts: TrainSet, threads: usize| {
+            let c = OpCounter::new();
+            let ranges = feature_ranges_view(ts.x);
+            let mut rng = Rng::new(1);
+            let ctx = SplitContext {
+                ds: ts,
+                rows: &rows,
+                features: &features,
+                edges: make_edges(&features, &ranges, 10, false, &mut rng),
+                impurity: Impurity::Gini,
+                counter: &c,
+            };
+            let s = solve_mab_threaded(&ctx, 100, 0.01, 77, threads).unwrap();
+            (s.feature, s.threshold.to_bits(), s.child_impurity.to_bits(), c.get())
+        };
+        let dense = run(TrainSet::of(&ds), 1);
+        for threads in [1usize, 2, 4, 8] {
+            let columnar = run(
+                TrainSet { x: &cs, y: &ds.y, n_classes: ds.n_classes },
+                threads,
+            );
+            assert_eq!(columnar, dense, "threads={threads}");
         }
     }
 

@@ -4,8 +4,11 @@
 
 use crate::data::LabeledDataset;
 use crate::forest::histogram::{gini, Impurity};
-use crate::forest::split::{make_edges, solve_exactly, solve_mab_threaded, Split, SplitContext};
+use crate::forest::split::{
+    make_edges, solve_exactly, solve_mab_threaded, Split, SplitContext, TrainSet,
+};
 use crate::metrics::OpCounter;
+use crate::store::DatasetView;
 use crate::util::rng::Rng;
 
 /// Which node-splitting subroutine to use (the ONLY difference between a
@@ -104,9 +107,24 @@ impl DecisionTree {
         feature_pool: &[usize],
         rng: &mut Rng,
     ) -> DecisionTree {
+        Self::fit_view(&TrainSet::of(ds), rows, cfg, ranges, budget, feature_pool, rng)
+    }
+
+    /// [`DecisionTree::fit`] over any [`crate::store::DatasetView`]-backed
+    /// [`TrainSet`] — the columnar / out-of-core training path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit_view(
+        ts: &TrainSet,
+        rows: &[usize],
+        cfg: &TreeConfig,
+        ranges: &[(f32, f32)],
+        budget: &Budget,
+        feature_pool: &[usize],
+        rng: &mut Rng,
+    ) -> DecisionTree {
         let mut nodes_split = 0usize;
-        let root = build_node(ds, rows, cfg, ranges, budget, feature_pool, rng, 0, &mut nodes_split);
-        DecisionTree { root, n_classes: ds.n_classes, nodes_split }
+        let root = build_node(ts, rows, cfg, ranges, budget, feature_pool, rng, 0, &mut nodes_split);
+        DecisionTree { root, n_classes: ts.n_classes, nodes_split }
     }
 
     /// Per-example prediction: class-probability vector or [mean].
@@ -139,18 +157,18 @@ impl DecisionTree {
     }
 }
 
-fn leaf_value(ds: &LabeledDataset, rows: &[usize]) -> Vec<f32> {
-    if ds.is_regression() {
+fn leaf_value(ts: &TrainSet, rows: &[usize]) -> Vec<f32> {
+    if ts.is_regression() {
         let mean = if rows.is_empty() {
             0.0
         } else {
-            rows.iter().map(|&r| ds.y[r] as f64).sum::<f64>() / rows.len() as f64
+            rows.iter().map(|&r| ts.y[r] as f64).sum::<f64>() / rows.len() as f64
         };
         vec![mean as f32]
     } else {
-        let mut probs = vec![0f32; ds.n_classes];
+        let mut probs = vec![0f32; ts.n_classes];
         for &r in rows {
-            probs[ds.y[r] as usize] += 1.0;
+            probs[ts.y[r] as usize] += 1.0;
         }
         let total: f32 = probs.iter().sum();
         if total > 0.0 {
@@ -160,19 +178,19 @@ fn leaf_value(ds: &LabeledDataset, rows: &[usize]) -> Vec<f32> {
     }
 }
 
-fn node_impurity(ds: &LabeledDataset, rows: &[usize], imp: Impurity) -> f64 {
-    if ds.is_regression() {
+fn node_impurity(ts: &TrainSet, rows: &[usize], imp: Impurity) -> f64 {
+    if ts.is_regression() {
         let n = rows.len() as f64;
         if n == 0.0 {
             return 0.0;
         }
-        let s: f64 = rows.iter().map(|&r| ds.y[r] as f64).sum();
-        let q: f64 = rows.iter().map(|&r| (ds.y[r] as f64).powi(2)).sum();
+        let s: f64 = rows.iter().map(|&r| ts.y[r] as f64).sum();
+        let q: f64 = rows.iter().map(|&r| (ts.y[r] as f64).powi(2)).sum();
         (q / n - (s / n) * (s / n)).max(0.0)
     } else {
-        let mut counts = vec![0f64; ds.n_classes];
+        let mut counts = vec![0f64; ts.n_classes];
         for &r in rows {
-            counts[ds.y[r] as usize] += 1.0;
+            counts[ts.y[r] as usize] += 1.0;
         }
         match imp {
             Impurity::Gini => gini(&counts, rows.len() as f64),
@@ -184,7 +202,7 @@ fn node_impurity(ds: &LabeledDataset, rows: &[usize], imp: Impurity) -> f64 {
 
 #[allow(clippy::too_many_arguments)]
 fn build_node(
-    ds: &LabeledDataset,
+    ts: &TrainSet,
     rows: &[usize],
     cfg: &TreeConfig,
     ranges: &[(f32, f32)],
@@ -195,12 +213,12 @@ fn build_node(
     nodes_split: &mut usize,
 ) -> Node {
     let n = rows.len();
-    let make_leaf = |rows: &[usize]| Node::Leaf { value: leaf_value(ds, rows), n: rows.len() };
+    let make_leaf = |rows: &[usize]| Node::Leaf { value: leaf_value(ts, rows), n: rows.len() };
 
     if depth >= cfg.max_depth || n < cfg.min_samples_split {
         return make_leaf(rows);
     }
-    let parent_imp = node_impurity(ds, rows, cfg.impurity);
+    let parent_imp = node_impurity(ts, rows, cfg.impurity);
     if parent_imp <= 1e-12 {
         return make_leaf(rows); // pure node
     }
@@ -220,7 +238,7 @@ fn build_node(
     let features: Vec<usize> = chosen.iter().map(|&i| feature_pool[i]).collect();
     let edges = make_edges(&features, ranges, cfg.t_bins, cfg.random_edges, rng);
     let ctx = SplitContext {
-        ds,
+        ds: *ts,
         rows,
         features: &features,
         edges,
@@ -247,15 +265,25 @@ fn build_node(
         return make_leaf(rows);
     }
 
-    let (left_rows, right_rows): (Vec<usize>, Vec<usize>) = rows
-        .iter()
-        .partition(|&&r| ds.x.row(r)[split.feature] < split.threshold);
+    // Route rows by one column gather (order-preserving, so the child row
+    // sets match the dense path exactly).
+    let mut vals = vec![0f32; rows.len()];
+    ts.x.read_col(split.feature, rows, &mut vals);
+    let mut left_rows = Vec::new();
+    let mut right_rows = Vec::new();
+    for (&r, &v) in rows.iter().zip(&vals) {
+        if v < split.threshold {
+            left_rows.push(r);
+        } else {
+            right_rows.push(r);
+        }
+    }
     if left_rows.is_empty() || right_rows.is_empty() {
         return make_leaf(rows);
     }
     *nodes_split += 1;
-    let left = build_node(ds, &left_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
-    let right = build_node(ds, &right_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    let left = build_node(ts, &left_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    let right = build_node(ts, &right_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
     Node::Internal {
         feature: split.feature,
         threshold: split.threshold,

@@ -391,7 +391,7 @@ mod tests {
             vec![11.0],
             vec![12.0],
         ];
-        let ps = VecPointSet::new(Matrix::from_rows(rows), Metric::L2);
+        let ps = VecPointSet::new(Matrix::from_rows(rows).expect("rectangular"), Metric::L2);
         let r = bandit_pam(&ps, &BanditPamConfig::new(2));
         assert_eq!(r.medoids, vec![1, 4]);
     }
@@ -497,6 +497,39 @@ mod tests {
             }
         }
         assert_eq!(r.medoids, vec![best.1]);
+    }
+
+    #[test]
+    fn column_store_banditpam_bit_identical_to_matrix() {
+        // Storage leg of the determinism contract: BanditPAM over a
+        // ViewPointSet(ColumnStore, F32) reproduces the VecPointSet run
+        // exactly — medoids, loss bits, swaps, distance-call totals — at
+        // every thread count.
+        use crate::store::{ColumnStore, StoreOptions, ViewPointSet};
+        let m = mnist_like_d(130, 20, 17);
+        let cs = std::sync::Arc::new(
+            ColumnStore::from_matrix(
+                &m,
+                &StoreOptions { rows_per_chunk: 32, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let run = |columnar: bool, threads: usize| {
+            let mut cfg = BanditPamConfig::new(3);
+            cfg.km.seed = 17;
+            cfg.threads = threads;
+            let r = if columnar {
+                bandit_pam(&ViewPointSet::new(cs.clone(), Metric::L2), &cfg)
+            } else {
+                bandit_pam(&VecPointSet::new(m.clone(), Metric::L2), &cfg)
+            };
+            (r.medoids, r.loss.to_bits(), r.swaps_performed, r.dist_calls)
+        };
+        let dense = run(false, 1);
+        for threads in [1usize, 2, 4, 8] {
+            assert_eq!(run(false, threads), dense, "matrix threads={threads}");
+            assert_eq!(run(true, threads), dense, "column store threads={threads}");
+        }
     }
 
     #[test]

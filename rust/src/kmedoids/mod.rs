@@ -123,7 +123,7 @@ mod tests {
             vec![11.0],
             vec![12.0],
         ];
-        VecPointSet::new(Matrix::from_rows(rows), Metric::L2)
+        VecPointSet::new(Matrix::from_rows(rows).expect("rectangular"), Metric::L2)
     }
 
     #[test]

@@ -17,6 +17,11 @@
 //! shards over the persistent [`exec::WorkerPool`] — the same sized
 //! thread budget the serving [`coordinator`] draws its batch tasks from —
 //! with bit-identical results for any thread count.
+//!
+//! Datasets live behind the [`store::DatasetView`] trait: the legacy
+//! dense [`data::Matrix`] and the chunked, quantized, optionally
+//! file-spilled [`store::ColumnStore`] are interchangeable substrates,
+//! bit-for-bit under the lossless `F32` codec.
 
 pub mod bandit;
 pub mod coordinator;
@@ -28,4 +33,5 @@ pub mod kmedoids;
 pub mod metrics;
 pub mod mips;
 pub mod runtime;
+pub mod store;
 pub mod util;

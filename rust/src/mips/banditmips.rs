@@ -20,10 +20,20 @@
 //! per-arm deltas are applied in fixed atom order — `threads != 1`
 //! returns bit-identical answers and sample counts.
 
+use std::cell::RefCell;
+
 use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::Matrix;
 use crate::metrics::OpCounter;
+use crate::store::DatasetView;
 use crate::util::rng::Rng;
+
+thread_local! {
+    /// Per-thread gather buffer for the coordinate pulls of one arm —
+    /// lets shard workers share zero allocation state while keeping the
+    /// arithmetic identical to the dense row-slice path.
+    static PULL_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
 
 /// Coordinate-sampling strategy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -75,9 +85,13 @@ pub struct MipsAnswer {
     pub samples: u64,
 }
 
-/// Run BanditMIPS for one query.
-pub fn bandit_mips(
-    atoms: &Matrix,
+/// Run BanditMIPS for one query. Generic over the dataset substrate
+/// (dense [`Matrix`] or [`crate::store::ColumnStore`]): coordinate pulls
+/// go through [`DatasetView::read_row_at`], so a columnar store serves
+/// them as chunk reads while the dense path keeps its row slices — with
+/// bit-identical estimates on identical values.
+pub fn bandit_mips<V: DatasetView + ?Sized>(
+    atoms: &V,
     q: &[f32],
     cfg: &BanditMipsConfig,
     counter: &OpCounter,
@@ -87,16 +101,16 @@ pub fn bandit_mips(
 
 /// Run BanditMIPS with a warm-start coordinate set (§4.3.1): those
 /// coordinates are pre-pulled for every atom before elimination starts.
-pub fn bandit_mips_warm(
-    atoms: &Matrix,
+pub fn bandit_mips_warm<V: DatasetView + ?Sized>(
+    atoms: &V,
     q: &[f32],
     cfg: &BanditMipsConfig,
     counter: &OpCounter,
     warm_coords: &[usize],
 ) -> MipsAnswer {
-    assert_eq!(atoms.d, q.len());
+    assert_eq!(atoms.n_cols(), q.len());
     let before = counter.get();
-    let d = atoms.d;
+    let d = atoms.n_cols();
 
     // α-schedule: coordinates in descending |q_j| (ties by index).
     let (order, weights) = match cfg.strategy {
@@ -122,6 +136,7 @@ pub fn bandit_mips_warm(
         SampleStrategy::Uniform => (None, None),
     };
 
+    let n = atoms.n_rows();
     let mut arms = MipsArms {
         atoms,
         q,
@@ -129,9 +144,9 @@ pub fn bandit_mips_warm(
         weights: weights.as_deref(),
         order: order.as_deref(),
         warm_coords,
-        stats: ArmStats::new(atoms.n),
+        stats: ArmStats::new(n),
         fixed_sigma: cfg.sigma,
-        exact_cache: vec![f64::NAN; atoms.n],
+        exact_cache: vec![f64::NAN; n],
     };
 
     let sampling = match cfg.strategy {
@@ -145,7 +160,7 @@ pub fn bandit_mips_warm(
         SampleStrategy::Uniform | SampleStrategy::Alpha => Sampling::Permutation,
     };
     let bcfg = BanditConfig {
-        delta: cfg.delta / atoms.n as f64,
+        delta: cfg.delta / n as f64,
         batch_size: cfg.batch_size,
         sampling,
         keep: cfg.k,
@@ -156,8 +171,8 @@ pub fn bandit_mips_warm(
     MipsAnswer { atoms: r.best, samples: counter.get() - before }
 }
 
-struct MipsArms<'a> {
-    atoms: &'a Matrix,
+struct MipsArms<'a, V: DatasetView + ?Sized> {
+    atoms: &'a V,
     q: &'a [f32],
     counter: &'a OpCounter,
     /// Non-uniform sampling weights (normalized), if any.
@@ -171,7 +186,7 @@ struct MipsArms<'a> {
     exact_cache: Vec<f64>,
 }
 
-impl<'a> MipsArms<'a> {
+impl<'a, V: DatasetView + ?Sized> MipsArms<'a, V> {
     fn sigma(&self, arm: usize) -> f64 {
         if let Some(s) = self.fixed_sigma {
             return s;
@@ -183,7 +198,7 @@ impl<'a> MipsArms<'a> {
     /// the importance weight) are arm-independent, so they are computed
     /// once per batch and shared read-only by every shard.
     fn query_weights(&self, batch: &[usize]) -> Vec<f64> {
-        let d = self.atoms.d as f64;
+        let d = self.atoms.n_cols() as f64;
         batch
             .iter()
             .map(|&j| {
@@ -196,18 +211,25 @@ impl<'a> MipsArms<'a> {
             .collect()
     }
 
-    /// One atom's (Σv, Σv²) over a batch: a single sequential row gather.
+    /// One atom's (Σv, Σv²) over a batch: one restricted row gather
+    /// through the view into per-thread scratch, accumulated in batch
+    /// order (bit-identical to the dense row-slice loop on the same
+    /// values).
     #[inline]
     fn arm_delta(&self, arm: usize, batch: &[usize], qw: &[f64]) -> (f64, f64) {
-        let row = self.atoms.row(arm);
-        let mut s = 0.0;
-        let mut s2 = 0.0;
-        for (&j, &qj) in batch.iter().zip(qw) {
-            let v = -(qj * row[j] as f64);
-            s += v;
-            s2 += v * v;
-        }
-        (s, s2)
+        PULL_SCRATCH.with(|buf| {
+            let mut buf = buf.borrow_mut();
+            buf.resize(batch.len(), 0.0);
+            self.atoms.read_row_at(arm, batch, &mut buf);
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for (&x, &qj) in buf.iter().zip(qw) {
+                let v = -(qj * x as f64);
+                s += v;
+                s2 += v * v;
+            }
+            (s, s2)
+        })
     }
 
     fn apply(&mut self, arms: &[usize], deltas: &[(f64, f64)], pulls: u64) {
@@ -216,13 +238,13 @@ impl<'a> MipsArms<'a> {
     }
 }
 
-impl<'a> AdaptiveArms for MipsArms<'a> {
+impl<'a, V: DatasetView + ?Sized> AdaptiveArms for MipsArms<'a, V> {
     fn n_arms(&self) -> usize {
-        self.atoms.n
+        self.atoms.n_rows()
     }
 
     fn ref_len(&self) -> usize {
-        self.atoms.d
+        self.atoms.n_cols()
     }
 
     fn sample_batch(&mut self, rng: &mut Rng, b: usize, sampling: Sampling) -> Vec<usize> {
@@ -230,8 +252,8 @@ impl<'a> AdaptiveArms for MipsArms<'a> {
             return (0..b).map(|_| rng.weighted_index(w)).collect();
         }
         match sampling {
-            Sampling::WithReplacement => rng.sample_with_replacement(self.atoms.d, b),
-            _ => rng.sample_without_replacement(self.atoms.d, b),
+            Sampling::WithReplacement => rng.sample_with_replacement(self.atoms.n_cols(), b),
+            _ => rng.sample_without_replacement(self.atoms.n_cols(), b),
         }
     }
 
@@ -242,7 +264,7 @@ impl<'a> AdaptiveArms for MipsArms<'a> {
         }
         // Uniform: warm-start coordinates first (shared within a serving
         // batch — §4.3.1), then the rest shuffled.
-        let d = self.atoms.d;
+        let d = self.atoms.n_cols();
         let mut seen = vec![false; d];
         let mut p = Vec::with_capacity(d);
         for &j in self.warm_coords {
@@ -293,9 +315,10 @@ impl<'a> AdaptiveArms for MipsArms<'a> {
 
     fn exact(&mut self, arm: usize) -> f64 {
         if self.exact_cache[arm].is_nan() {
-            self.counter.add(self.atoms.d as u64);
-            let ip = crate::mips::dot_ip(self.atoms.row(arm), self.q);
-            self.exact_cache[arm] = -(ip / self.atoms.d as f64);
+            let d = self.atoms.n_cols();
+            self.counter.add(d as u64);
+            let ip = self.atoms.dot(arm, self.q);
+            self.exact_cache[arm] = -(ip / d as f64);
         }
         self.exact_cache[arm]
     }
@@ -304,15 +327,16 @@ impl<'a> AdaptiveArms for MipsArms<'a> {
 /// Solve a batch of queries with a shared warm-start cache (§4.3.1):
 /// `cache_coords` coordinates are sampled once and pre-pulled for every
 /// query in the batch.
-pub fn bandit_mips_batch(
-    atoms: &Matrix,
+pub fn bandit_mips_batch<V: DatasetView + ?Sized>(
+    atoms: &V,
     queries: &Matrix,
     cfg: &BanditMipsConfig,
     cache_coords: usize,
     counter: &OpCounter,
 ) -> Vec<MipsAnswer> {
     let mut rng = Rng::new(cfg.seed ^ 0xCAC4E);
-    let warm = rng.sample_without_replacement(atoms.d, cache_coords.min(atoms.d));
+    let d = atoms.n_cols();
+    let warm = rng.sample_without_replacement(d, cache_coords.min(d));
     (0..queries.n)
         .map(|qi| {
             let mut qcfg = cfg.clone();

@@ -18,16 +18,25 @@ pub mod baselines;
 pub mod bucket;
 pub mod matching_pursuit;
 
-use crate::data::Matrix;
 use crate::metrics::OpCounter;
+use crate::store::DatasetView;
 
 /// The exact (naive) solution: full inner products, `n·d` multiplications.
-pub fn naive_mips(atoms: &Matrix, q: &[f32], k: usize, counter: &OpCounter) -> Vec<usize> {
-    assert_eq!(atoms.d, q.len());
-    let mut scored: Vec<(f64, usize)> = (0..atoms.n)
+/// Generic over the dataset substrate ([`crate::data::Matrix`] or
+/// [`crate::store::ColumnStore`]); the [`DatasetView::dot`] hook keeps
+/// the accumulation bit-identical across substrates.
+pub fn naive_mips<V: DatasetView + ?Sized>(
+    atoms: &V,
+    q: &[f32],
+    k: usize,
+    counter: &OpCounter,
+) -> Vec<usize> {
+    assert_eq!(atoms.n_cols(), q.len());
+    let d = atoms.n_cols() as u64;
+    let mut scored: Vec<(f64, usize)> = (0..atoms.n_rows())
         .map(|i| {
-            counter.add(atoms.d as u64);
-            (dot_ip(atoms.row(i), q), i)
+            counter.add(d);
+            (atoms.dot(i, q), i)
         })
         .collect();
     scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());

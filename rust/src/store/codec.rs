@@ -1,0 +1,310 @@
+//! Per-chunk codecs for the columnar store.
+//!
+//! A codec maps a chunk of `f32` column values to bytes and back. Three
+//! codecs ship, all dependency-free:
+//!
+//! * [`Codec::F32`] — raw little-endian `f32`s. **Lossless**: decode ∘
+//!   encode is the identity on bit patterns, which is what lets a
+//!   `ColumnStore(F32)` reproduce a dense [`crate::data::Matrix`]
+//!   bit-for-bit (the determinism contract's storage leg).
+//! * [`Codec::F16`] — IEEE 754 binary16 stored as `u16`, converted by
+//!   hand (no `half` crate offline). 2× smaller, ~2⁻¹¹ relative error in
+//!   the normal range; values beyond ±65504 saturate to ±∞.
+//! * [`Codec::I8`] — affine (uniform) quantization with a **per-chunk**
+//!   zero-point/scale header: `q = round((v − min) / scale)` with
+//!   `scale = (max − min)/255`, so the max absolute decode error is
+//!   `scale / 2` (+ one f32 rounding ulp). 4× smaller; the per-chunk
+//!   range adaptation is what keeps the error proportional to local —
+//!   not global — spread.
+//!
+//! Chunk layout:
+//!
+//! | codec | header | payload |
+//! |---|---|---|
+//! | `F32` | — | `4·len` bytes LE f32 |
+//! | `F16` | — | `2·len` bytes LE u16 |
+//! | `I8`  | `min: f32 LE` + `scale: f64 LE` (12 bytes) | `len` bytes u8 |
+
+use crate::util::error::Result;
+
+/// A per-chunk compression codec (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Lossless raw f32.
+    F32,
+    /// IEEE binary16 (lossy, 2×).
+    F16,
+    /// Affine-quantized u8 with per-chunk scale/zero-point (lossy, ~4×).
+    I8,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::I8 => "i8",
+        }
+    }
+
+    /// Parse a codec name (`"f32"`, `"f16"`, `"i8"`).
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "f32" => Ok(Codec::F32),
+            "f16" => Ok(Codec::F16),
+            "i8" => Ok(Codec::I8),
+            other => Err(crate::anyhow!("unknown codec {other:?} (want f32|f16|i8)")),
+        }
+    }
+
+    /// Encoded size in bytes of a `len`-value chunk.
+    pub fn encoded_len(&self, len: usize) -> usize {
+        match self {
+            Codec::F32 => 4 * len,
+            Codec::F16 => 2 * len,
+            Codec::I8 => 12 + len,
+        }
+    }
+
+    /// Encode one chunk of values into `out` (cleared first).
+    pub fn encode(&self, vals: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.encoded_len(vals.len()));
+        match self {
+            Codec::F32 => {
+                for &v in vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Codec::F16 => {
+                for &v in vals {
+                    out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+                }
+            }
+            Codec::I8 => {
+                let (mut min, mut max) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &v in vals {
+                    if v < min {
+                        min = v;
+                    }
+                    if v > max {
+                        max = v;
+                    }
+                }
+                if !min.is_finite() || !max.is_finite() {
+                    // Empty chunk (or non-finite data): degenerate header.
+                    min = 0.0;
+                    max = 0.0;
+                }
+                let scale = if max > min { (max as f64 - min as f64) / 255.0 } else { 0.0 };
+                out.extend_from_slice(&min.to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                for &v in vals {
+                    let q = if scale > 0.0 {
+                        ((v as f64 - min as f64) / scale).round().clamp(0.0, 255.0) as u8
+                    } else {
+                        0
+                    };
+                    out.push(q);
+                }
+            }
+        }
+    }
+
+    /// Decode a `len`-value chunk from `bytes`, appending to `out`.
+    pub fn decode(&self, bytes: &[u8], len: usize, out: &mut Vec<f32>) {
+        out.reserve(len);
+        match self {
+            Codec::F32 => {
+                for k in 0..len {
+                    let b: [u8; 4] = bytes[4 * k..4 * k + 4].try_into().unwrap();
+                    out.push(f32::from_le_bytes(b));
+                }
+            }
+            Codec::F16 => {
+                for k in 0..len {
+                    let b: [u8; 2] = bytes[2 * k..2 * k + 2].try_into().unwrap();
+                    out.push(f16_to_f32(u16::from_le_bytes(b)));
+                }
+            }
+            Codec::I8 => {
+                let min =
+                    f32::from_le_bytes(bytes[0..4].try_into().unwrap()) as f64;
+                let scale = f64::from_le_bytes(bytes[4..12].try_into().unwrap());
+                for &q in &bytes[12..12 + len] {
+                    out.push((min + scale * q as f64) as f32);
+                }
+            }
+        }
+    }
+
+    /// Per-chunk max absolute decode error implied by the chunk's value
+    /// range (0 for the lossless codec; `I8`: `scale/2`).
+    pub fn error_bound(&self, min: f32, max: f32) -> f64 {
+        match self {
+            Codec::F32 => 0.0,
+            // Relative 2^-11 on the magnitude, absolute 2^-25 near zero.
+            Codec::F16 => {
+                let m = (min.abs().max(max.abs())) as f64;
+                m * (1.0 / 2048.0) + 3.0e-8
+            }
+            Codec::I8 => {
+                if max > min {
+                    (max as f64 - min as f64) / 255.0 / 2.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// `f32` → IEEE binary16 bits, round-to-nearest (carries propagate into
+/// the exponent naturally because the binary16 layout is contiguous).
+pub fn f32_to_f16(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp32 = (x >> 23) & 0xff;
+    let mant = x & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN (keep NaN-ness in the top mantissa bit).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let exp = exp32 as i32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal half: shift the (implicit-bit) mantissa into place.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = m >> shift;
+        let round = (m >> (shift - 1)) & 1;
+        return sign | (half + round) as u16;
+    }
+    let half = ((exp as u32) << 10) | (mant >> 13);
+    let round = (mant >> 12) & 1;
+    sign | (half + round) as u16
+}
+
+/// IEEE binary16 bits → `f32` (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // ±inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f32_codec_is_bit_identical() {
+        let mut rng = Rng::new(1);
+        let vals: Vec<f32> = (0..257).map(|_| (rng.normal() * 1e3) as f32).collect();
+        let mut bytes = Vec::new();
+        Codec::F32.encode(&vals, &mut bytes);
+        assert_eq!(bytes.len(), Codec::F32.encoded_len(vals.len()));
+        let mut back = Vec::new();
+        Codec::F32.decode(&bytes, vals.len(), &mut back);
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        for v in [0.0f32, -0.0, 0.5, 1.0, -2.25, 1024.0, 65504.0, -0.0009765625] {
+            let back = f16_to_f32(f32_to_f16(v));
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} -> {back}");
+        }
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY, "overflow saturates");
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_error_within_bound() {
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let v = ((rng.f64() - 0.5) * 100.0) as f32;
+            let back = f16_to_f32(f32_to_f16(v));
+            let bound = Codec::F16.error_bound(v, v);
+            assert!(
+                ((v - back).abs() as f64) <= bound,
+                "{v} -> {back}, bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(11);
+        for case in 0..50 {
+            let len = 1 + (case * 37) % 300;
+            let spread = 10f64.powi((case % 7) as i32 - 3);
+            let vals: Vec<f32> = (0..len)
+                .map(|_| (rng.normal() * spread + case as f64) as f32)
+                .collect();
+            let (mut min, mut max) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in &vals {
+                min = min.min(v);
+                max = max.max(v);
+            }
+            let scale = if max > min { (max as f64 - min as f64) / 255.0 } else { 0.0 };
+            let mut bytes = Vec::new();
+            Codec::I8.encode(&vals, &mut bytes);
+            assert_eq!(bytes.len(), Codec::I8.encoded_len(len));
+            let mut back = Vec::new();
+            Codec::I8.decode(&bytes, len, &mut back);
+            for (&v, &b) in vals.iter().zip(&back) {
+                let err = (v as f64 - b as f64).abs();
+                // scale/2 from rounding, plus one f32 cast ulp of slack.
+                let bound = scale * 0.5 * (1.0 + 1e-4) + 1e-12;
+                assert!(err <= bound, "v={v} back={b} err={err} scale={scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_constant_chunk_is_exact() {
+        let vals = vec![3.25f32; 64];
+        let mut bytes = Vec::new();
+        Codec::I8.encode(&vals, &mut bytes);
+        let mut back = Vec::new();
+        Codec::I8.decode(&bytes, vals.len(), &mut back);
+        assert!(back.iter().all(|&b| b == 3.25));
+    }
+
+    #[test]
+    fn codec_parse_names() {
+        assert_eq!(Codec::parse("f32").unwrap(), Codec::F32);
+        assert_eq!(Codec::parse("f16").unwrap(), Codec::F16);
+        assert_eq!(Codec::parse("i8").unwrap(), Codec::I8);
+        assert!(Codec::parse("f64").is_err());
+        assert_eq!(Codec::I8.name(), "i8");
+    }
+}

@@ -1,0 +1,616 @@
+//! Chunked, cache-aligned, column-major storage with per-chunk stats and
+//! pluggable codecs — the in-memory / out-of-core half of the `store`
+//! subsystem.
+//!
+//! A [`ColumnStore`] holds `n` rows × `d` columns as `d · ⌈n/R⌉` chunks,
+//! where `R` = [`StoreOptions::rows_per_chunk`] (rounded to a multiple of
+//! 16 so an f32 chunk is a whole number of 64-byte cache lines). Chunk
+//! `(c, b)` holds rows `[b·R, min((b+1)·R, n))` of column `c`, encoded by
+//! the configured [`Codec`], plus a [`ChunkStats`] record of the
+//! *original* (pre-encode) values.
+//!
+//! Three backings, chosen at build time:
+//!
+//! * **Decoded** — `F32` codec, no spill: chunks live decoded in RAM and
+//!   reads are plain indexing (no locks, no decode counting). This is the
+//!   fast path the determinism contract runs on.
+//! * **Encoded** — lossy codec, no spill: encoded bytes in RAM, decoded
+//!   on access through the bounded LRU chunk cache; every decoded value
+//!   is charged to the store's decode [`OpCounter`].
+//! * **Spilled** — any codec + spill dir: encoded bytes live only on
+//!   disk ([`crate::store::spill`]); the LRU cache (bounded by
+//!   [`StoreOptions::budget_bytes`]) is the only resident copy, so
+//!   datasets larger than the budget stream from disk.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::OpCounter;
+use crate::store::codec::Codec;
+use crate::store::spill::SpillFile;
+use crate::store::DatasetView;
+
+/// Build-time options for a [`ColumnStore`] (see
+/// [`crate::store::StoreBuilder`]).
+#[derive(Clone, Debug)]
+pub struct StoreOptions {
+    /// Per-chunk codec.
+    pub codec: Codec,
+    /// Rows per chunk (rounded up to a multiple of 16; min 16).
+    pub rows_per_chunk: usize,
+    /// Decoded-chunk LRU cache budget in bytes (Encoded/Spilled backings).
+    pub budget_bytes: usize,
+    /// `Some(dir)` ⇒ spill encoded chunks to a temp file under `dir`.
+    pub spill_dir: Option<PathBuf>,
+    /// Reservoir-preview capacity kept by the builder (bandit warm
+    /// starts); 0 disables.
+    pub preview_rows: usize,
+    /// Seed for the preview reservoir.
+    pub seed: u64,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            codec: Codec::F32,
+            rows_per_chunk: 1024,
+            budget_bytes: 256 << 20,
+            spill_dir: None,
+            preview_rows: 32,
+            seed: 0x570E, // "STOE"
+        }
+    }
+}
+
+impl StoreOptions {
+    /// Options with a given codec, everything else default.
+    pub fn with_codec(codec: Codec) -> StoreOptions {
+        StoreOptions { codec, ..Default::default() }
+    }
+
+    /// Enable spill to the system temp dir with the given cache budget.
+    pub fn spill_to_temp(mut self, budget_bytes: usize) -> StoreOptions {
+        self.spill_dir = Some(std::env::temp_dir());
+        self.budget_bytes = budget_bytes;
+        self
+    }
+
+    /// Normalized rows-per-chunk (what the store will actually use).
+    pub fn chunk_rows(&self) -> usize {
+        let r = self.rows_per_chunk.max(16);
+        (r + 15) / 16 * 16
+    }
+}
+
+/// Statistics of one chunk's **original** (pre-encode) values. For the
+/// lossless `F32` codec these are exact for the stored data too; for
+/// lossy codecs decoded values may exceed `[min, max]` by at most one
+/// rounding step.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkStats {
+    pub min: f32,
+    pub max: f32,
+    pub sum: f64,
+    pub count: usize,
+}
+
+impl ChunkStats {
+    /// Compute stats over a chunk of values.
+    pub fn of(vals: &[f32]) -> ChunkStats {
+        let (mut min, mut max) = (f32::INFINITY, f32::NEG_INFINITY);
+        let mut sum = 0.0f64;
+        for &v in vals {
+            if v < min {
+                min = v;
+            }
+            if v > max {
+                max = v;
+            }
+            sum += v as f64;
+        }
+        ChunkStats { min, max, sum, count: vals.len() }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Where encoded chunks live (see module docs).
+pub(crate) enum Backing {
+    /// F32-in-RAM fast path: decoded chunks, indexed by chunk id.
+    Decoded(Vec<Arc<Vec<f32>>>),
+    /// Encoded bytes in RAM, indexed by chunk id.
+    Encoded(Vec<Vec<u8>>),
+    /// Encoded bytes on disk.
+    Spilled(SpillFile),
+}
+
+/// Bounded LRU cache of decoded chunks.
+struct ChunkCache {
+    budget: usize,
+    inner: Mutex<CacheInner>,
+    evictions: OpCounter,
+}
+
+struct CacheInner {
+    map: HashMap<usize, CacheEntry>,
+    bytes: usize,
+    tick: u64,
+}
+
+struct CacheEntry {
+    data: Arc<Vec<f32>>,
+    used: u64,
+}
+
+impl ChunkCache {
+    fn new(budget: usize) -> ChunkCache {
+        ChunkCache {
+            budget: budget.max(1),
+            inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
+            evictions: OpCounter::new(),
+        }
+    }
+
+    /// Return chunk `id`, decoding via `fill` on a miss; evicts
+    /// least-recently-used chunks (never the one just inserted) until the
+    /// byte budget holds.
+    ///
+    /// The mutex guards only the map bookkeeping: `fill` (disk read +
+    /// decode, the slow part) runs **unlocked**, so concurrent shard
+    /// workers' cache hits never stall behind another worker's miss. Two
+    /// workers racing on the same missing chunk may both decode it; the
+    /// values are identical, the second result wins the insert race, and
+    /// the duplicate work only shows up in the diagnostic counters.
+    fn get_or_fill(&self, id: usize, fill: impl FnOnce() -> Vec<f32>) -> Arc<Vec<f32>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&id) {
+                e.used = tick;
+                return e.data.clone();
+            }
+        }
+        let data = Arc::new(fill());
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.map.get_mut(&id) {
+            // Lost a fill race: keep the incumbent (identical values).
+            e.used = tick;
+            return e.data.clone();
+        }
+        g.bytes += data.len() * 4;
+        g.map.insert(id, CacheEntry { data: data.clone(), used: tick });
+        while g.bytes > self.budget && g.map.len() > 1 {
+            let victim = g
+                .map
+                .iter()
+                .filter(|(&k, _)| k != id)
+                .min_by_key(|(_, e)| e.used)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    let e = g.map.remove(&k).unwrap();
+                    g.bytes -= e.data.len() * 4;
+                    self.evictions.incr();
+                }
+                None => break,
+            }
+        }
+        data
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+/// Chunked columnar dataset (see module docs). Implements
+/// [`DatasetView`], so every chapter solver runs on it unchanged.
+pub struct ColumnStore {
+    n: usize,
+    d: usize,
+    rows_per_chunk: usize,
+    n_blocks: usize,
+    codec: Codec,
+    /// Per-chunk stats, indexed `col * n_blocks + block`.
+    stats: Vec<ChunkStats>,
+    backing: Backing,
+    /// Decoded-chunk cache (None on the Decoded fast path).
+    cache: Option<ChunkCache>,
+    decode_ops: OpCounter,
+    spill_reads: OpCounter,
+    /// Reservoir preview rows captured at ingest (warm starts).
+    preview: Vec<Vec<f32>>,
+}
+
+impl ColumnStore {
+    /// Internal constructor used by [`crate::store::StoreBuilder`].
+    pub(crate) fn assemble(
+        n: usize,
+        d: usize,
+        rows_per_chunk: usize,
+        codec: Codec,
+        stats: Vec<ChunkStats>,
+        backing: Backing,
+        budget_bytes: usize,
+        preview: Vec<Vec<f32>>,
+    ) -> ColumnStore {
+        let n_blocks = if n == 0 { 0 } else { (n + rows_per_chunk - 1) / rows_per_chunk };
+        debug_assert_eq!(stats.len(), d * n_blocks);
+        let cache = match backing {
+            Backing::Decoded(_) => None,
+            _ => Some(ChunkCache::new(budget_bytes)),
+        };
+        ColumnStore {
+            n,
+            d,
+            rows_per_chunk,
+            n_blocks,
+            codec,
+            stats,
+            backing,
+            cache,
+            decode_ops: OpCounter::new(),
+            spill_reads: OpCounter::new(),
+            preview,
+        }
+    }
+
+    /// Build from a dense matrix (ingests row by row; see
+    /// [`crate::store::StoreBuilder`] for streaming construction).
+    pub fn from_matrix(
+        m: &crate::data::Matrix,
+        opts: &StoreOptions,
+    ) -> crate::util::error::Result<ColumnStore> {
+        let mut b = crate::store::StoreBuilder::new(m.d, opts.clone())?;
+        b.push_batch(m)?;
+        b.finalize()
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Rows per (full) chunk.
+    pub fn chunk_rows(&self) -> usize {
+        self.rows_per_chunk
+    }
+
+    /// Row-blocks per column.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// True when encoded chunks live on disk.
+    pub fn spilled(&self) -> bool {
+        matches!(self.backing, Backing::Spilled(_))
+    }
+
+    /// Values decoded so far (the access cost a lossy/out-of-core store
+    /// pays on top of the solver's own op counts).
+    pub fn decode_ops(&self) -> u64 {
+        self.decode_ops.get()
+    }
+
+    /// Chunk reads served from disk.
+    pub fn spill_reads(&self) -> u64 {
+        self.spill_reads.get()
+    }
+
+    /// Decoded chunks evicted from the LRU cache.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.as_ref().map_or(0, |c| c.evictions.get())
+    }
+
+    /// Bytes of decoded chunks currently cached (0 on the fast path,
+    /// where the whole store is resident anyway).
+    pub fn cache_resident_bytes(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.resident_bytes())
+    }
+
+    /// Stats of chunk `(col, block)` (original values; see
+    /// [`ChunkStats`]).
+    pub fn chunk_stats(&self, col: usize, block: usize) -> &ChunkStats {
+        &self.stats[col * self.n_blocks + block]
+    }
+
+    /// Reservoir preview rows captured at ingest.
+    pub fn preview(&self) -> &[Vec<f32>] {
+        &self.preview
+    }
+
+    #[inline]
+    fn block_len(&self, block: usize) -> usize {
+        if block + 1 < self.n_blocks {
+            self.rows_per_chunk
+        } else {
+            self.n - block * self.rows_per_chunk
+        }
+    }
+
+    fn decode_chunk(&self, raw: &[u8], len: usize) -> Vec<f32> {
+        self.decode_ops.add(len as u64);
+        let mut out = Vec::with_capacity(len);
+        self.codec.decode(raw, len, &mut out);
+        out
+    }
+
+    /// Decoded chunk `(col, block)` — the one access primitive every
+    /// `DatasetView` method funnels through.
+    fn chunk(&self, col: usize, block: usize) -> Arc<Vec<f32>> {
+        let id = col * self.n_blocks + block;
+        match &self.backing {
+            Backing::Decoded(chunks) => chunks[id].clone(),
+            Backing::Encoded(bytes) => self
+                .cache
+                .as_ref()
+                .expect("encoded backing has a cache")
+                .get_or_fill(id, || self.decode_chunk(&bytes[id], self.block_len(block))),
+            Backing::Spilled(spill) => self
+                .cache
+                .as_ref()
+                .expect("spilled backing has a cache")
+                .get_or_fill(id, || {
+                    self.spill_reads.incr();
+                    let raw = spill.read(id).expect("spill chunk read");
+                    self.decode_chunk(&raw, self.block_len(block))
+                }),
+        }
+    }
+}
+
+impl DatasetView for ColumnStore {
+    fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    fn n_cols(&self) -> usize {
+        self.d
+    }
+
+    fn get(&self, row: usize, col: usize) -> f32 {
+        debug_assert!(row < self.n && col < self.d);
+        self.chunk(col, row / self.rows_per_chunk)[row % self.rows_per_chunk]
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        let block = row / self.rows_per_chunk;
+        let off = row % self.rows_per_chunk;
+        for (c, slot) in out.iter_mut().enumerate().take(self.d) {
+            *slot = self.chunk(c, block)[off];
+        }
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        let block = row / self.rows_per_chunk;
+        let off = row % self.rows_per_chunk;
+        for (slot, &c) in out.iter_mut().zip(cols) {
+            *slot = self.chunk(c, block)[off];
+        }
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        // True column scan: reuse the current chunk across consecutive
+        // rows of the same block (the common, sorted-rows case).
+        let mut cur_block = usize::MAX;
+        let mut cur: Option<Arc<Vec<f32>>> = None;
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            let b = r / self.rows_per_chunk;
+            if b != cur_block {
+                cur = Some(self.chunk(col, b));
+                cur_block = b;
+            }
+            *slot = cur.as_ref().unwrap()[r % self.rows_per_chunk];
+        }
+    }
+
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        // Per-chunk stats make this free — no decode, no disk.
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for b in 0..self.n_blocks {
+            let s = &self.stats[col * self.n_blocks + b];
+            if s.min < lo {
+                lo = s.min;
+            }
+            if s.max > hi {
+                hi = s.max;
+            }
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Matrix;
+    use crate::util::proptest::prop_check;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = (rng.normal() * 10.0) as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn prop_f32_store_round_trips_any_matrix_bit_identically() {
+        // Satellite acceptance: ColumnStore(F32) reproduces any Matrix
+        // bit-for-bit, across chunk sizes that do and don't divide n.
+        prop_check(
+            0xC01,
+            25,
+            |r| (1 + r.below(200), 1 + r.below(24), 16 * (1 + r.below(4)), r.next_u64()),
+            |&(n, d, rpc, seed)| {
+                let m = random_matrix(n, d, seed);
+                let opts = StoreOptions { rows_per_chunk: rpc, ..Default::default() };
+                let cs = ColumnStore::from_matrix(&m, &opts).map_err(|e| e.to_string())?;
+                let back = cs.to_matrix();
+                if back.n != m.n || back.d != m.d {
+                    return Err(format!("shape {}x{} != {}x{}", back.n, back.d, m.n, m.d));
+                }
+                for (a, b) in m.data.iter().zip(&back.data) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("value drift: {a} vs {b}"));
+                    }
+                }
+                // Spot-check every access path agrees with the matrix.
+                for i in [0, n / 2, n - 1] {
+                    for j in [0, d - 1] {
+                        if cs.get(i, j).to_bits() != m.row(i)[j].to_bits() {
+                            return Err(format!("get({i},{j}) drift"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn i8_store_error_bounded_by_chunk_scale() {
+        // Satellite acceptance: per-value quantization error ≤ scale/2,
+        // scale derived from each chunk's own min/max.
+        let m = random_matrix(300, 7, 9);
+        let opts = StoreOptions {
+            codec: Codec::I8,
+            rows_per_chunk: 64,
+            ..Default::default()
+        };
+        let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+        for c in 0..m.d {
+            for i in 0..m.n {
+                let s = cs.chunk_stats(c, i / cs.chunk_rows());
+                let scale = if s.max > s.min {
+                    (s.max as f64 - s.min as f64) / 255.0
+                } else {
+                    0.0
+                };
+                let err = (m.row(i)[c] as f64 - cs.get(i, c) as f64).abs();
+                assert!(
+                    err <= scale * 0.5 * (1.0 + 1e-4) + 1e-12,
+                    "({i},{c}): err {err} vs scale/2 {}",
+                    scale / 2.0
+                );
+            }
+        }
+        assert!(cs.decode_ops() > 0, "lossy decode must be charged");
+    }
+
+    #[test]
+    fn spill_eviction_and_reread_byte_identical_under_tiny_budget() {
+        // Satellite acceptance: with a cache budget far below the dataset
+        // size, chunks are evicted and re-read from disk byte-identically.
+        let m = random_matrix(512, 6, 21);
+        let opts = StoreOptions {
+            rows_per_chunk: 64, // 8 blocks x 6 cols = 48 chunks, 256B each
+            ..Default::default()
+        }
+        .spill_to_temp(1024); // budget: 4 chunks
+        let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+        assert!(cs.spilled());
+        let pass = |cs: &ColumnStore| {
+            let mut bits = Vec::with_capacity(m.n * m.d);
+            let mut buf = vec![0f32; m.d];
+            for i in 0..m.n {
+                cs.read_row(i, &mut buf);
+                bits.extend(buf.iter().map(|v| v.to_bits()));
+            }
+            bits
+        };
+        let first = pass(&cs);
+        assert!(cs.cache_evictions() > 0, "tiny budget must evict");
+        assert!(cs.spill_reads() > 0, "chunks must stream from disk");
+        let reads_after_first = cs.spill_reads();
+        let second = pass(&cs);
+        assert_eq!(first, second, "eviction + re-read must be byte-identical");
+        assert!(cs.spill_reads() > reads_after_first, "second pass re-reads evicted chunks");
+        assert_eq!(
+            first,
+            m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "spilled F32 store must match the source matrix exactly"
+        );
+        assert!(cs.cache_resident_bytes() <= 1024 + 64 * 4);
+    }
+
+    #[test]
+    fn read_col_matches_matrix_in_row_order() {
+        let m = random_matrix(100, 5, 3);
+        let cs = ColumnStore::from_matrix(
+            &m,
+            &StoreOptions { rows_per_chunk: 32, ..Default::default() },
+        )
+        .unwrap();
+        let rows: Vec<usize> = vec![0, 5, 31, 32, 33, 99, 2, 64];
+        let mut got = vec![0f32; rows.len()];
+        for c in 0..m.d {
+            cs.read_col(c, &rows, &mut got);
+            for (k, &r) in rows.iter().enumerate() {
+                assert_eq!(got[k].to_bits(), m.row(r)[c].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn col_range_matches_matrix_scan() {
+        let m = random_matrix(257, 4, 17);
+        let cs = ColumnStore::from_matrix(
+            &m,
+            &StoreOptions { rows_per_chunk: 64, ..Default::default() },
+        )
+        .unwrap();
+        for c in 0..m.d {
+            let (lo, hi) = DatasetView::col_range(&m, c);
+            let (slo, shi) = cs.col_range(c);
+            assert_eq!(lo.to_bits(), slo.to_bits(), "col {c} min");
+            assert_eq!(hi.to_bits(), shi.to_bits(), "col {c} max");
+        }
+    }
+
+    #[test]
+    fn chunk_stats_are_exact() {
+        let m = Matrix::from_rows(vec![
+            vec![1.0, -5.0],
+            vec![2.0, 0.0],
+            vec![3.0, 5.0],
+        ])
+        .unwrap();
+        let cs = ColumnStore::from_matrix(&m, &StoreOptions::default()).unwrap();
+        let s = cs.chunk_stats(0, 0);
+        assert_eq!((s.min, s.max, s.count), (1.0, 3.0, 3));
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        let s = cs.chunk_stats(1, 0);
+        assert_eq!((s.min, s.max), (-5.0, 5.0));
+    }
+
+    #[test]
+    fn f16_store_is_close_and_counts_decodes() {
+        let m = random_matrix(128, 3, 5);
+        let cs = ColumnStore::from_matrix(
+            &m,
+            &StoreOptions { codec: Codec::F16, rows_per_chunk: 32, ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..m.n {
+            for c in 0..m.d {
+                let v = m.row(i)[c] as f64;
+                let got = cs.get(i, c) as f64;
+                assert!((v - got).abs() <= v.abs() / 2048.0 + 1e-6, "({i},{c}): {v} vs {got}");
+            }
+        }
+        assert!(cs.decode_ops() > 0);
+        assert_eq!(cs.spill_reads(), 0);
+    }
+}

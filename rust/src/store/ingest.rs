@@ -1,0 +1,327 @@
+//! Streaming ingest: push row batches, finalize into a
+//! [`ColumnStore`] — plus a reservoir preview of the rows seen, for
+//! bandit warm starts (e.g. seeding medoid candidates or sizing a
+//! serving warm-start cache before the full dataset has landed).
+//!
+//! Memory during ingest is bounded by one staging row-block
+//! (`rows_per_chunk × d` floats): as soon as a block fills, each of its
+//! `d` column chunks is encoded and either kept (in-RAM backings) or
+//! appended straight to the spill file, so arbitrarily large datasets
+//! ingest in `O(rows_per_chunk · d)` resident memory when spilling.
+
+use std::sync::Arc;
+
+use crate::store::column::{Backing, ChunkStats, ColumnStore, StoreOptions};
+use crate::store::codec::Codec;
+use crate::store::spill::SpillWriter;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Streaming [`ColumnStore`] builder (see module docs).
+pub struct StoreBuilder {
+    opts: StoreOptions,
+    d: usize,
+    rows_per_chunk: usize,
+    /// Rows ingested so far.
+    n: usize,
+    /// Row-major staging block, at most `rows_per_chunk` rows.
+    staging: Vec<f32>,
+    staged_rows: usize,
+    /// Encoded chunks per completed block (block-major, then column);
+    /// empty when spilling or on the F32-in-RAM fast path.
+    ram_blocks: Vec<Vec<Vec<u8>>>,
+    /// Decoded chunks per completed block — the F32-in-RAM fast path
+    /// keeps values as `f32` directly instead of round-tripping through
+    /// the (identity) codec bytes.
+    decoded_blocks: Vec<Vec<Arc<Vec<f32>>>>,
+    /// Stats per completed block (block-major, then column).
+    stats_blocks: Vec<Vec<ChunkStats>>,
+    writer: Option<SpillWriter>,
+    /// Reservoir sample of ingested rows (algorithm R).
+    preview: Vec<Vec<f32>>,
+    rng: Rng,
+    scratch: Vec<u8>,
+}
+
+impl StoreBuilder {
+    /// Start a builder for rows of width `d`.
+    pub fn new(d: usize, opts: StoreOptions) -> Result<StoreBuilder> {
+        if d == 0 {
+            crate::bail!("StoreBuilder: row width d must be > 0");
+        }
+        let rows_per_chunk = opts.chunk_rows();
+        let writer = match &opts.spill_dir {
+            Some(dir) => Some(SpillWriter::create(dir)?),
+            None => None,
+        };
+        let rng = Rng::new(opts.seed);
+        Ok(StoreBuilder {
+            d,
+            rows_per_chunk,
+            n: 0,
+            staging: Vec::with_capacity(rows_per_chunk * d),
+            staged_rows: 0,
+            ram_blocks: Vec::new(),
+            decoded_blocks: Vec::new(),
+            stats_blocks: Vec::new(),
+            writer,
+            preview: Vec::new(),
+            rng,
+            scratch: Vec::new(),
+            opts,
+        })
+    }
+
+    /// Rows ingested so far.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The reservoir preview of rows seen so far (uniform without
+    /// replacement over the stream, capacity
+    /// [`StoreOptions::preview_rows`]).
+    pub fn preview(&self) -> &[Vec<f32>] {
+        &self.preview
+    }
+
+    /// Push one row. Errors on a ragged row (width ≠ `d`).
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        if row.len() != self.d {
+            crate::bail!(
+                "ragged row: got {} values at row {}, expected {}",
+                row.len(),
+                self.n,
+                self.d
+            );
+        }
+        // Reservoir (algorithm R): the i-th row replaces slot j < cap
+        // with probability cap/(i+1).
+        let cap = self.opts.preview_rows;
+        if cap > 0 {
+            if self.preview.len() < cap {
+                self.preview.push(row.to_vec());
+            } else {
+                let j = self.rng.below(self.n + 1);
+                if j < cap {
+                    self.preview[j] = row.to_vec();
+                }
+            }
+        }
+        self.staging.extend_from_slice(row);
+        self.staged_rows += 1;
+        self.n += 1;
+        if self.staged_rows == self.rows_per_chunk {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    /// Push every row of a dense matrix (its width must be `d`).
+    pub fn push_batch(&mut self, m: &crate::data::Matrix) -> Result<()> {
+        if m.d != self.d {
+            crate::bail!("batch width {} != builder width {}", m.d, self.d);
+        }
+        for i in 0..m.n {
+            self.push_row(m.row(i))?;
+        }
+        Ok(())
+    }
+
+    /// Encode the staged rows as one chunk per column.
+    fn flush_block(&mut self) -> Result<()> {
+        let rows = self.staged_rows;
+        if rows == 0 {
+            return Ok(());
+        }
+        // F32 in RAM is the identity codec: keep values decoded and skip
+        // the bytes round-trip entirely.
+        let fast_f32 = self.writer.is_none() && self.opts.codec == Codec::F32;
+        let mut col_vals = vec![0f32; rows];
+        let mut block_chunks: Vec<Vec<u8>> = Vec::new();
+        let mut block_decoded: Vec<Arc<Vec<f32>>> = Vec::new();
+        let mut block_stats: Vec<ChunkStats> = Vec::with_capacity(self.d);
+        for c in 0..self.d {
+            for (k, slot) in col_vals.iter_mut().enumerate() {
+                *slot = self.staging[k * self.d + c];
+            }
+            block_stats.push(ChunkStats::of(&col_vals));
+            if fast_f32 {
+                block_decoded.push(Arc::new(col_vals.clone()));
+                continue;
+            }
+            self.opts.codec.encode(&col_vals, &mut self.scratch);
+            match &mut self.writer {
+                Some(w) => {
+                    w.append(&self.scratch)?;
+                }
+                None => block_chunks.push(std::mem::take(&mut self.scratch)),
+            }
+        }
+        if fast_f32 {
+            self.decoded_blocks.push(block_decoded);
+        } else if self.writer.is_none() {
+            self.ram_blocks.push(block_chunks);
+        }
+        self.stats_blocks.push(block_stats);
+        self.staging.clear();
+        self.staged_rows = 0;
+        Ok(())
+    }
+
+    /// Seal the builder into a [`ColumnStore`].
+    pub fn finalize(mut self) -> Result<ColumnStore> {
+        self.flush_block()?;
+        let n = self.n;
+        let d = self.d;
+        let n_blocks = self.stats_blocks.len();
+
+        // Re-key stats from (block, col) ingest order to the store's
+        // (col, block) chunk-id order.
+        let mut stats = Vec::with_capacity(d * n_blocks);
+        for c in 0..d {
+            for b in 0..n_blocks {
+                stats.push(self.stats_blocks[b][c]);
+            }
+        }
+
+        let backing = match self.writer {
+            Some(w) => {
+                // Chunk id -> write-order index (block-major ingest).
+                let mut reorder = Vec::with_capacity(d * n_blocks);
+                for c in 0..d {
+                    for b in 0..n_blocks {
+                        reorder.push(b * d + c);
+                    }
+                }
+                Backing::Spilled(w.finish(&reorder)?)
+            }
+            None => {
+                if self.opts.codec == Codec::F32 {
+                    // Lossless fast path: chunks were kept decoded at
+                    // flush time — re-key to (col, block) id order,
+                    // lock-free reads.
+                    let mut by_id: Vec<Arc<Vec<f32>>> = Vec::with_capacity(d * n_blocks);
+                    for c in 0..d {
+                        for b in 0..n_blocks {
+                            by_id.push(self.decoded_blocks[b][c].clone());
+                        }
+                    }
+                    Backing::Decoded(by_id)
+                } else {
+                    let mut by_id: Vec<Vec<u8>> = Vec::with_capacity(d * n_blocks);
+                    for c in 0..d {
+                        for b in 0..n_blocks {
+                            by_id.push(std::mem::take(&mut self.ram_blocks[b][c]));
+                        }
+                    }
+                    Backing::Encoded(by_id)
+                }
+            }
+        };
+
+        Ok(ColumnStore::assemble(
+            n,
+            d,
+            self.rows_per_chunk,
+            self.opts.codec,
+            stats,
+            backing,
+            self.opts.budget_bytes,
+            self.preview,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Matrix;
+    use crate::store::DatasetView;
+
+    fn demo_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.f32() * 100.0 - 50.0;
+        }
+        m
+    }
+
+    #[test]
+    fn incremental_pushes_match_from_matrix() {
+        let m = demo_matrix(150, 6, 3);
+        let opts = StoreOptions { rows_per_chunk: 32, ..Default::default() };
+        let whole = ColumnStore::from_matrix(&m, &opts).unwrap();
+        // Same rows pushed one by one in uneven batches.
+        let mut b = StoreBuilder::new(6, opts).unwrap();
+        for i in 0..50 {
+            b.push_row(m.row(i)).unwrap();
+        }
+        let rest = m.take_rows(&(50..150).collect::<Vec<_>>());
+        b.push_batch(&rest).unwrap();
+        assert_eq!(b.len(), 150);
+        let streamed = b.finalize().unwrap();
+        assert_eq!(
+            whole.to_matrix().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            streamed.to_matrix().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn ragged_rows_are_an_error_not_a_panic() {
+        let mut b = StoreBuilder::new(3, StoreOptions::default()).unwrap();
+        b.push_row(&[1.0, 2.0, 3.0]).unwrap();
+        let err = b.push_row(&[1.0]).unwrap_err();
+        assert!(err.to_string().contains("ragged"), "{err}");
+        let err = StoreBuilder::new(0, StoreOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
+    }
+
+    #[test]
+    fn reservoir_preview_is_deterministic_and_uniformish() {
+        let m = demo_matrix(2_000, 2, 9);
+        let opts = StoreOptions { preview_rows: 16, seed: 42, ..Default::default() };
+        let build = || {
+            let mut b = StoreBuilder::new(2, opts.clone()).unwrap();
+            b.push_batch(&m).unwrap();
+            b
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.preview().len(), 16);
+        assert_eq!(a.preview(), b.preview(), "same seed ⇒ same reservoir");
+        // Every preview row is a real row of the stream.
+        for p in a.preview() {
+            assert!((0..m.n).any(|i| m.row(i) == p.as_slice()));
+        }
+        // Not just the first 16 rows: at least one sampled from the tail.
+        let tail_hit = a
+            .preview()
+            .iter()
+            .any(|p| (1000..m.n).any(|i| m.row(i) == p.as_slice()));
+        assert!(tail_hit, "reservoir never replaced an early row");
+        // Preview survives finalize, for warm starts downstream.
+        let cs = build().finalize().unwrap();
+        assert_eq!(cs.preview().len(), 16);
+    }
+
+    #[test]
+    fn spilled_ingest_keeps_staging_memory_only() {
+        let m = demo_matrix(600, 4, 11);
+        let opts = StoreOptions { rows_per_chunk: 64, ..Default::default() }
+            .spill_to_temp(8 * 1024);
+        let mut b = StoreBuilder::new(4, opts).unwrap();
+        b.push_batch(&m).unwrap();
+        let cs = b.finalize().unwrap();
+        assert!(cs.spilled());
+        assert_eq!(cs.n_rows(), 600);
+        let back = cs.to_matrix();
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

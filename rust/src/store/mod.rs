@@ -1,0 +1,416 @@
+//! The dataset substrate layer: columnar, quantized, out-of-core storage
+//! behind one [`DatasetView`] trait.
+//!
+//! The thesis' central claim is that adaptive sampling touches a
+//! vanishing fraction of the data — so the substrate must not force the
+//! whole dataset into RAM just to sample from it. This subsystem replaces
+//! "everything is a dense row-major [`Matrix`]" with:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`column`] | [`ColumnStore`]: chunked, cache-aligned column-major storage, per-chunk [`ChunkStats`], bounded LRU decoded-chunk cache |
+//! | [`codec`]  | per-chunk codecs: lossless `F32`, half-precision `F16`, affine-quantized `I8` (per-chunk scale/zero-point), decode charged to a [`crate::metrics::OpCounter`] |
+//! | [`spill`]  | file-backed chunk spill (`std::fs` only): datasets larger than the cache budget stream from disk |
+//! | [`ingest`] | [`StoreBuilder`]: streaming row-batch ingest with bounded staging memory + reservoir preview for bandit warm starts |
+//!
+//! # The `DatasetView` contract
+//!
+//! [`DatasetView`] is the read interface every chapter solver consumes:
+//! row gather ([`DatasetView::read_row`], [`DatasetView::read_row_at`]),
+//! column slice ([`DatasetView::read_col`], [`DatasetView::col_range`])
+//! and the distance hooks ([`DatasetView::dist`], [`DatasetView::dot`]).
+//! Both the legacy dense [`Matrix`] and [`ColumnStore`] implement it, so
+//! BanditPAM (via [`ViewPointSet`]), MABSplit (whose per-feature
+//! histogram shards become true column scans) and BanditMIPS (whose
+//! coordinate pulls become chunk reads) run on either substrate — and the
+//! engine's shard workers only ever touch data through these methods.
+//!
+//! **Matrix-compat guarantee:** the `F32` codec is bit-lossless, and
+//! every access method returns the same `f32` values in the same order as
+//! the dense path, so for a fixed seed the three solvers return
+//! bit-identical results *and op-counter totals* on a `Matrix` and on a
+//! `ColumnStore(F32)` — in RAM or spilled, at any thread count. Lossy
+//! codecs (`F16`, `I8`) trade that exactness for 2–4× smaller residency;
+//! their decode cost is visible on [`ColumnStore::decode_ops`].
+
+pub mod codec;
+pub mod column;
+pub mod ingest;
+pub mod spill;
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::data::distance::Metric;
+use crate::data::{Matrix, PointSet};
+use crate::metrics::OpCounter;
+use crate::util::error::Result;
+
+pub use codec::Codec;
+pub use column::{ChunkStats, ColumnStore, StoreOptions};
+pub use ingest::StoreBuilder;
+pub use spill::{SpillFile, SpillWriter};
+
+thread_local! {
+    /// Scratch pair for the default row-gathering distance hook.
+    static PAIR_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new()));
+    /// Scratch row for the default inner-product hook.
+    static ROW_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Read access to an `n × d` dataset of `f32`s (see module docs).
+///
+/// Implementations must return, for every method, exactly the values a
+/// dense row-major matrix of the same logical contents would — that is
+/// what makes a `ColumnStore(F32)` interchangeable with a [`Matrix`]
+/// bit-for-bit. Methods take `&self` and implementations are
+/// `Send + Sync`, so shard workers read concurrently without
+/// coordination.
+pub trait DatasetView: Send + Sync {
+    /// Number of rows (points).
+    fn n_rows(&self) -> usize;
+
+    /// Number of columns (features / coordinates).
+    fn n_cols(&self) -> usize;
+
+    /// Single element `(row, col)`.
+    fn get(&self, row: usize, col: usize) -> f32;
+
+    /// Copy row `row` into `out` (`out.len() == n_cols()`).
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        for (c, slot) in out.iter_mut().enumerate().take(self.n_cols()) {
+            *slot = self.get(row, c);
+        }
+    }
+
+    /// Copy row `row` restricted to `cols` into `out` (the BanditMIPS
+    /// coordinate-pull shape).
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        for (slot, &c) in out.iter_mut().zip(cols) {
+            *slot = self.get(row, c);
+        }
+    }
+
+    /// Copy column `col` at the given `rows` (in order) into `out` (the
+    /// MABSplit histogram-fill shape).
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            *slot = self.get(r, col);
+        }
+    }
+
+    /// (min, max) of a column; `(∞, −∞)` when there are no rows.
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for r in 0..self.n_rows() {
+            let v = self.get(r, col);
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Distance hook: `metric` between rows `i` and `j`. The default
+    /// gathers both rows into thread-local scratch and evaluates exactly
+    /// as the dense path does, so results are bit-identical to
+    /// `metric.eval(row_i, row_j)` on the same values.
+    fn dist(&self, metric: Metric, i: usize, j: usize) -> f64 {
+        PAIR_SCRATCH.with(|bufs| {
+            let mut bufs = bufs.borrow_mut();
+            let (a, b) = &mut *bufs;
+            let d = self.n_cols();
+            a.resize(d, 0.0);
+            b.resize(d, 0.0);
+            self.read_row(i, a);
+            self.read_row(j, b);
+            metric.eval(a, b)
+        })
+    }
+
+    /// Inner-product hook: `⟨row_i, q⟩` with the crate's standard f32
+    /// lane accumulation (bit-identical to the dense path on the same
+    /// values). Callers count the `n_cols()` multiplications themselves.
+    fn dot(&self, row: usize, q: &[f32]) -> f64 {
+        ROW_SCRATCH.with(|buf| {
+            let mut buf = buf.borrow_mut();
+            buf.resize(self.n_cols(), 0.0);
+            self.read_row(row, &mut buf);
+            crate::util::linalg::dot_f32(&buf, q) as f64
+        })
+    }
+
+    /// Materialize as a dense row-major [`Matrix`].
+    fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n_rows(), self.n_cols());
+        let d = m.d;
+        for i in 0..m.n {
+            self.read_row(i, &mut m.data[i * d..(i + 1) * d]);
+        }
+        m
+    }
+
+    /// Zero-copy escape hatch: the contiguous row-major buffer, when the
+    /// implementation already *is* dense (a [`Matrix`]). Bulk consumers
+    /// (e.g. the PJRT full-rescore path) use this to skip a gather copy;
+    /// everything else must go through the access methods. Default:
+    /// `None`.
+    fn dense_data(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+/// The legacy dense matrix is the reference [`DatasetView`]: every other
+/// implementation must agree with it value-for-value.
+impl DatasetView for Matrix {
+    fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    fn n_cols(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    fn get(&self, row: usize, col: usize) -> f32 {
+        self.data[row * self.d + col]
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(row));
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        let r = self.row(row);
+        for (slot, &c) in out.iter_mut().zip(cols) {
+            *slot = r[c];
+        }
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            *slot = self.data[r * self.d + col];
+        }
+    }
+
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for r in 0..self.n {
+            let v = self.data[r * self.d + col];
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        (lo, hi)
+    }
+
+    fn dist(&self, metric: Metric, i: usize, j: usize) -> f64 {
+        metric.eval(self.row(i), self.row(j))
+    }
+
+    fn dot(&self, row: usize, q: &[f32]) -> f64 {
+        crate::util::linalg::dot_f32(self.row(row), q) as f64
+    }
+
+    fn to_matrix(&self) -> Matrix {
+        self.clone()
+    }
+
+    fn dense_data(&self) -> Option<&[f32]> {
+        Some(&self.data)
+    }
+}
+
+/// A [`PointSet`] over any [`DatasetView`] — the bridge that runs
+/// BanditPAM (and every other `PointSet` consumer) on a [`ColumnStore`].
+/// Counts one op per [`PointSet::dist`] call, exactly like
+/// [`crate::data::VecPointSet`].
+pub struct ViewPointSet<V: DatasetView + ?Sized> {
+    view: Arc<V>,
+    pub metric: Metric,
+    counter: OpCounter,
+}
+
+impl<V: DatasetView + ?Sized> ViewPointSet<V> {
+    pub fn new(view: Arc<V>, metric: Metric) -> ViewPointSet<V> {
+        ViewPointSet { view, metric, counter: OpCounter::new() }
+    }
+
+    /// The underlying view.
+    pub fn view(&self) -> &V {
+        &self.view
+    }
+}
+
+impl<V: DatasetView + ?Sized> PointSet for ViewPointSet<V> {
+    fn len(&self) -> usize {
+        self.view.n_rows()
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.counter.incr();
+        self.view.dist(self.metric, i, j)
+    }
+
+    fn counter(&self) -> &OpCounter {
+        &self.counter
+    }
+}
+
+/// Parse the examples' `--store=` flag value.
+///
+/// * `"matrix"` → `Ok(None)` — the dense legacy path;
+/// * `"column[,f32|f16|i8][,spill]"` → `Ok(Some(options))` — a
+///   [`ColumnStore`] with the given codec (default `f32`); `spill`
+///   additionally routes chunks through a temp file with a 1 MiB cache
+///   budget, demonstrating the out-of-core path end to end.
+pub fn parse_store_flag(spec: &str) -> Result<Option<StoreOptions>> {
+    let mut parts = spec.split(',');
+    match parts.next() {
+        Some("matrix") => {
+            if parts.next().is_some() {
+                crate::bail!("--store=matrix takes no options");
+            }
+            Ok(None)
+        }
+        Some("column") => {
+            let mut opts = StoreOptions::default();
+            for p in parts {
+                match p {
+                    "f32" | "f16" | "i8" => opts.codec = Codec::parse(p)?,
+                    "spill" => opts = opts.spill_to_temp(1 << 20),
+                    other => {
+                        crate::bail!("unknown --store option {other:?} (want f32|f16|i8|spill)")
+                    }
+                }
+            }
+            Ok(Some(opts))
+        }
+        _ => crate::bail!("--store wants matrix or column[,f32|f16|i8][,spill], got {spec:?}"),
+    }
+}
+
+/// Scan the process arguments for the examples' shared `--store=SPEC`
+/// flag and parse it with [`parse_store_flag`]. `None` means no flag (or
+/// an explicit `--store=matrix`): use the dense path. Panics with the
+/// parse error on an invalid spec — examples want loud feedback, not a
+/// silent fallback.
+pub fn store_options_from_args() -> Option<StoreOptions> {
+    for arg in std::env::args().skip(1) {
+        if let Some(spec) = arg.strip_prefix("--store=") {
+            return parse_store_flag(spec).expect("--store");
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn demo(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = (rng.normal() * 3.0) as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn matrix_view_methods_agree_with_direct_access() {
+        let m = demo(40, 6, 1);
+        assert_eq!((m.n_rows(), m.n_cols()), (40, 6));
+        let mut row = vec![0f32; 6];
+        m.read_row(7, &mut row);
+        assert_eq!(row.as_slice(), m.row(7));
+        let cols = [5usize, 0, 3];
+        let mut picked = vec![0f32; 3];
+        m.read_row_at(7, &cols, &mut picked);
+        assert_eq!(picked, vec![m.row(7)[5], m.row(7)[0], m.row(7)[3]]);
+        let rows = [0usize, 39, 13];
+        let mut col = vec![0f32; 3];
+        m.read_col(2, &rows, &mut col);
+        assert_eq!(col, vec![m.row(0)[2], m.row(39)[2], m.row(13)[2]]);
+        assert_eq!(m.get(13, 2), m.row(13)[2]);
+        let back = DatasetView::to_matrix(&m);
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn dist_and_dot_hooks_are_bit_identical_to_dense() {
+        let m = demo(30, 17, 2);
+        let cs = Arc::new(
+            ColumnStore::from_matrix(
+                &m,
+                &StoreOptions { rows_per_chunk: 16, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let q: Vec<f32> = (0..17).map(|i| i as f32 * 0.25 - 2.0).collect();
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            for (i, j) in [(0usize, 29usize), (3, 3), (15, 16)] {
+                let want = metric.eval(m.row(i), m.row(j));
+                assert_eq!(
+                    want.to_bits(),
+                    m.dist(metric, i, j).to_bits(),
+                    "matrix dist hook {metric}"
+                );
+                assert_eq!(
+                    want.to_bits(),
+                    cs.dist(metric, i, j).to_bits(),
+                    "store dist hook {metric}"
+                );
+            }
+        }
+        for i in [0usize, 16, 29] {
+            let want = crate::util::linalg::dot_f32(m.row(i), &q) as f64;
+            assert_eq!(want.to_bits(), m.dot(i, &q).to_bits());
+            assert_eq!(want.to_bits(), cs.dot(i, &q).to_bits());
+        }
+    }
+
+    #[test]
+    fn view_pointset_counts_like_vec_pointset() {
+        let m = demo(20, 8, 3);
+        let vps = crate::data::VecPointSet::new(m.clone(), Metric::L2);
+        let cs = Arc::new(ColumnStore::from_matrix(&m, &StoreOptions::default()).unwrap());
+        let sps = ViewPointSet::new(cs, Metric::L2);
+        assert_eq!(PointSet::len(&sps), 20);
+        for (i, j) in [(0usize, 1usize), (5, 19), (7, 7)] {
+            assert_eq!(vps.dist(i, j).to_bits(), sps.dist(i, j).to_bits());
+        }
+        assert_eq!(vps.counter().get(), sps.counter().get());
+        assert_eq!(sps.counter().get(), 3);
+        assert_eq!(sps.view().n_cols(), 8);
+    }
+
+    #[test]
+    fn store_flag_parses_every_documented_form() {
+        assert!(parse_store_flag("matrix").unwrap().is_none());
+        let o = parse_store_flag("column").unwrap().unwrap();
+        assert_eq!(o.codec, Codec::F32);
+        assert!(o.spill_dir.is_none());
+        let o = parse_store_flag("column,i8").unwrap().unwrap();
+        assert_eq!(o.codec, Codec::I8);
+        let o = parse_store_flag("column,i8,spill").unwrap().unwrap();
+        assert_eq!(o.codec, Codec::I8);
+        assert!(o.spill_dir.is_some());
+        assert_eq!(o.budget_bytes, 1 << 20);
+        let o = parse_store_flag("column,spill,f16").unwrap().unwrap();
+        assert_eq!(o.codec, Codec::F16);
+        assert!(o.spill_dir.is_some());
+        assert!(parse_store_flag("row").is_err());
+        assert!(parse_store_flag("column,f64").is_err());
+        assert!(parse_store_flag("matrix,spill").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! File-backed chunk spill (`std::fs` only — the offline image carries no
+//! mmap or async-io crates).
+//!
+//! When a [`crate::store::ColumnStore`] is built with a spill directory,
+//! its encoded chunks are appended to one flat temp file as each row
+//! block completes (so ingest memory stays bounded by a single staging
+//! block) and re-read on demand through the store's bounded LRU
+//! decoded-chunk cache. The file is deleted when the store is dropped.
+//!
+//! Layout: chunks are written back-to-back in ingest order; an in-memory
+//! index maps chunk id → (offset, byte length). No framing or checksums —
+//! the file never outlives the process that wrote it.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::{Context, Result};
+
+/// Process-unique suffix source for spill file names.
+static SPILL_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+/// Append-only writer used during ingest; [`SpillWriter::finish`] seals it
+/// into a read-only [`SpillFile`].
+pub struct SpillWriter {
+    file: File,
+    path: PathBuf,
+    /// (offset, len) per chunk, in **write** order.
+    offsets: Vec<(u64, u32)>,
+    pos: u64,
+}
+
+impl SpillWriter {
+    /// Create a fresh spill file under `dir` with a process-unique name.
+    pub fn create(dir: &Path) -> Result<SpillWriter> {
+        let serial = SPILL_SERIAL.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!(
+            "as_store_{}_{serial}.spill",
+            std::process::id()
+        ));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        Ok(SpillWriter { file, path, offsets: Vec::new(), pos: 0 })
+    }
+
+    /// Append one encoded chunk; returns its index in write order.
+    pub fn append(&mut self, bytes: &[u8]) -> Result<usize> {
+        self.file
+            .write_all(bytes)
+            .with_context(|| format!("write spill chunk to {}", self.path.display()))?;
+        self.offsets.push((self.pos, bytes.len() as u32));
+        self.pos += bytes.len() as u64;
+        Ok(self.offsets.len() - 1)
+    }
+
+    /// Number of chunks appended so far.
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Seal into a reader. `reorder[id]` gives the write-order index of
+    /// chunk `id`, letting the caller re-key chunks (ingest writes in
+    /// block-major order; the store reads in column-major chunk-id order).
+    pub fn finish(mut self, reorder: &[usize]) -> Result<SpillFile> {
+        self.file.flush().context("flush spill file")?;
+        let index = reorder.iter().map(|&w| self.offsets[w]).collect();
+        Ok(SpillFile { file: Mutex::new(self.file), path: self.path.clone(), index })
+    }
+}
+
+/// A sealed, read-only spill file; chunk reads seek + read under a mutex.
+pub struct SpillFile {
+    file: Mutex<File>,
+    path: PathBuf,
+    /// (offset, len) per chunk id.
+    index: Vec<(u64, u32)>,
+}
+
+impl SpillFile {
+    /// Number of chunks.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Total encoded bytes on disk.
+    pub fn bytes(&self) -> u64 {
+        self.index.iter().map(|&(_, l)| l as u64).sum()
+    }
+
+    /// Path of the backing file (for diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read the encoded bytes of chunk `id`.
+    pub fn read(&self, id: usize) -> Result<Vec<u8>> {
+        let (off, len) = self.index[id];
+        let mut buf = vec![0u8; len as usize];
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(off))
+            .with_context(|| format!("seek spill chunk {id}"))?;
+        f.read_exact(&mut buf)
+            .with_context(|| format!("read spill chunk {id} ({len}B @ {off})"))?;
+        Ok(buf)
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_reorder_read_round_trip() {
+        let dir = std::env::temp_dir();
+        let mut w = SpillWriter::create(&dir).unwrap();
+        let chunks: Vec<Vec<u8>> = (0..5u8).map(|i| vec![i; 3 + i as usize]).collect();
+        for c in &chunks {
+            w.append(c).unwrap();
+        }
+        assert_eq!(w.len(), 5);
+        // Read back under a permuted id space: id -> write order reversed.
+        let reorder: Vec<usize> = (0..5).rev().collect();
+        let f = w.finish(&reorder).unwrap();
+        assert_eq!(f.len(), 5);
+        for id in 0..5 {
+            assert_eq!(f.read(id).unwrap(), chunks[4 - id], "id {id}");
+        }
+        // Random re-reads hit the same bytes.
+        assert_eq!(f.read(2).unwrap(), chunks[2]);
+        assert!(f.bytes() > 0);
+    }
+
+    #[test]
+    fn drop_removes_file() {
+        let dir = std::env::temp_dir();
+        let mut w = SpillWriter::create(&dir).unwrap();
+        w.append(&[1, 2, 3]).unwrap();
+        let f = w.finish(&[0]).unwrap();
+        let path = f.path().to_path_buf();
+        assert!(path.exists());
+        drop(f);
+        assert!(!path.exists(), "spill file must be deleted on drop");
+    }
+
+    #[test]
+    fn concurrent_reads_are_safe() {
+        let dir = std::env::temp_dir();
+        let mut w = SpillWriter::create(&dir).unwrap();
+        for i in 0..64u32 {
+            w.append(&i.to_le_bytes()).unwrap();
+        }
+        let reorder: Vec<usize> = (0..64).collect();
+        let f = std::sync::Arc::new(w.finish(&reorder).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t..64).step_by(4) {
+                    let got = f.read(i).unwrap();
+                    assert_eq!(got, (i as u32).to_le_bytes().to_vec());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

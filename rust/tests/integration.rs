@@ -18,8 +18,11 @@ use adaptive_sampling::kmedoids::KmConfig;
 use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
 use adaptive_sampling::mips::naive_mips;
+use adaptive_sampling::forest::split::TrainSet;
 use adaptive_sampling::runtime::service::PjrtHandle;
 use adaptive_sampling::runtime::ArtifactStore;
+use adaptive_sampling::store::{ColumnStore, DatasetView, StoreOptions, ViewPointSet};
+use adaptive_sampling::util::proptest::prop_check;
 use adaptive_sampling::util::rng::Rng;
 
 /// BanditPAM over *program trees with edit distance* — the exotic-metric
@@ -147,7 +150,7 @@ fn pjrt_exact_backend_serves_correctly() {
         let rx = server.submit(q.clone());
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         let c = OpCounter::new();
-        let truth = naive_mips(&atoms, &q, 1, &c);
+        let truth = naive_mips(&*atoms, &q, 1, &c);
         if resp.top_atoms.first() == truth.first() {
             correct += 1;
         }
@@ -230,4 +233,172 @@ fn sharded_engine_bit_identical_across_all_solvers() {
     let seq = run(1);
     assert_eq!(run(0), seq, "shared-pool engine diverged from sequential");
     assert_eq!(run(3), seq, "3-shard engine diverged from sequential");
+}
+
+/// The store leg of the tentpole contract, per solver: for a fixed seed,
+/// BanditPAM / MABSplit / BanditMIPS return bit-identical results *and
+/// op-counter totals* on a dense `Matrix` and on a `ColumnStore(F32)`,
+/// at every thread count in {1, 2, 4, 8}.
+#[test]
+fn column_store_f32_bit_identical_across_solvers_and_threads() {
+    // Ch2: BanditPAM over VecPointSet(Matrix) vs ViewPointSet(ColumnStore).
+    let pts = mnist_like_d(120, 24, 7);
+    let pts_cs = Arc::new(
+        ColumnStore::from_matrix(&pts, &StoreOptions { rows_per_chunk: 32, ..Default::default() })
+            .unwrap(),
+    );
+    // Ch3: one MABSplit forest.
+    let ds = mnist_classification(1_000, 32, 7);
+    let ds_cs = Arc::new(ColumnStore::from_matrix(&ds.x, &StoreOptions::default()).unwrap());
+    // Ch4: BanditMIPS.
+    let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(60, 2_000, 1, 7);
+    let atoms_cs = Arc::new(
+        ColumnStore::from_matrix(
+            &atoms,
+            &StoreOptions { rows_per_chunk: 256, ..Default::default() },
+        )
+        .unwrap(),
+    );
+
+    type Fingerprint = (Vec<usize>, u64, u64, u64, Vec<usize>, Vec<usize>, u64, u64);
+    let run = |threads: usize, columnar: bool| -> Fingerprint {
+        let km = {
+            let mut kcfg = BanditPamConfig::new(3);
+            kcfg.threads = threads;
+            if columnar {
+                let ps = ViewPointSet::new(pts_cs.clone(), Metric::L2);
+                bandit_pam(&ps, &kcfg)
+            } else {
+                let ps = VecPointSet::new(pts.clone(), Metric::L2);
+                bandit_pam(&ps, &kcfg)
+            }
+        };
+        let (insertions, splits) = {
+            let c = OpCounter::new();
+            let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+            fcfg.n_trees = 2;
+            fcfg.threads = threads;
+            let ts = if columnar {
+                TrainSet { x: &*ds_cs, y: &ds.y, n_classes: ds.n_classes }
+            } else {
+                TrainSet::of(&ds)
+            };
+            let f = Forest::fit_view(&ts, &fcfg, &c);
+            (c.get(), f.trees.iter().map(|t| t.nodes_split).collect::<Vec<_>>())
+        };
+        let (m_atoms, m_samples, m_ops) = {
+            let c = OpCounter::new();
+            let mut mcfg = BanditMipsConfig::default();
+            mcfg.threads = threads;
+            let ans = if columnar {
+                bandit_mips(&*atoms_cs, queries.row(0), &mcfg, &c)
+            } else {
+                bandit_mips(&atoms, queries.row(0), &mcfg, &c)
+            };
+            (ans.atoms, ans.samples, c.get())
+        };
+        (
+            km.medoids,
+            km.loss.to_bits(),
+            km.dist_calls,
+            insertions,
+            splits,
+            m_atoms,
+            m_samples,
+            m_ops,
+        )
+    };
+
+    let reference = run(1, false);
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(run(threads, false), reference, "matrix path, threads={threads}");
+        assert_eq!(run(threads, true), reference, "column store, threads={threads}");
+    }
+}
+
+/// Property form of the storage contract: random shapes/seeds, BanditMIPS
+/// on Matrix vs ColumnStore(F32) must match answers and op totals at
+/// several thread counts.
+#[test]
+fn prop_store_and_matrix_agree_for_random_mips_instances() {
+    prop_check(
+        0x57E,
+        8,
+        |r| (5 + r.below(40), 100 + r.below(900), r.next_u64()),
+        |&(n, d, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut atoms = adaptive_sampling::data::Matrix::zeros(n, d);
+            for v in atoms.data.iter_mut() {
+                *v = (rng.normal() * 2.0) as f32;
+            }
+            let q: Vec<f32> = (0..d).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let cs = ColumnStore::from_matrix(
+                &atoms,
+                &StoreOptions { rows_per_chunk: 64, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let run = |view: &dyn DatasetView, threads: usize| {
+                let c = OpCounter::new();
+                let cfg = BanditMipsConfig { seed, threads, ..Default::default() };
+                let ans = bandit_mips(view, &q, &cfg, &c);
+                (ans.atoms, ans.samples, c.get())
+            };
+            let want = run(&atoms, 1);
+            for threads in [1usize, 2, 4, 8] {
+                let got = run(&cs, threads);
+                if got != want {
+                    return Err(format!(
+                        "n={n} d={d} threads={threads}: store {got:?} != matrix {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Out-of-core acceptance: a solver runs over a ColumnStore whose spill
+/// cache budget is far smaller than the dataset, streams chunks from
+/// disk, and still reproduces the dense answers bit-for-bit (F32 codec).
+#[test]
+fn solver_runs_out_of_core_when_budget_is_smaller_than_dataset() {
+    let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(80, 2_000, 2, 7);
+    let raw_bytes = atoms.n * atoms.d * 4; // 640 KB
+    let opts = StoreOptions { rows_per_chunk: 128, ..Default::default() }
+        .spill_to_temp(raw_bytes / 10);
+    let cs = ColumnStore::from_matrix(&atoms, &opts).unwrap();
+    assert!(cs.spilled());
+
+    for qi in 0..queries.n {
+        let c_dense = OpCounter::new();
+        let c_store = OpCounter::new();
+        let cfg = BanditMipsConfig::default();
+        let dense = bandit_mips(&atoms, queries.row(qi), &cfg, &c_dense);
+        let store = bandit_mips(&cs, queries.row(qi), &cfg, &c_store);
+        assert_eq!(
+            (dense.atoms, dense.samples, c_dense.get()),
+            (store.atoms, store.samples, c_store.get()),
+            "query {qi} diverged out of core"
+        );
+    }
+    assert!(cs.spill_reads() > 0, "nothing streamed from disk");
+    assert!(cs.decode_ops() > 0, "decode cost must be metered");
+
+    // A quantized spilled store still trains a usable forest end to end.
+    let ds = mnist_classification(800, 16, 3);
+    let q_opts = StoreOptions {
+        codec: adaptive_sampling::store::Codec::I8,
+        rows_per_chunk: 128,
+        ..Default::default()
+    }
+    .spill_to_temp(8 * 1024);
+    let qcs = ColumnStore::from_matrix(&ds.x, &q_opts).unwrap();
+    let ts = TrainSet { x: &qcs, y: &ds.y, n_classes: ds.n_classes };
+    let c = OpCounter::new();
+    let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+    fcfg.n_trees = 3;
+    let f = Forest::fit_view(&ts, &fcfg, &c);
+    let acc = f.accuracy_view(&ts);
+    assert!(acc > 0.5, "i8 out-of-core forest accuracy {acc}");
+    assert!(qcs.cache_evictions() > 0, "tiny budget must evict");
 }
