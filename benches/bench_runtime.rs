@@ -7,23 +7,35 @@
 //!    `BENCH_store.json`, so the storage layer's perf trajectory is
 //!    tracked across PRs. F32 variants are asserted to reproduce the
 //!    dense answer exactly.
-//! 2. **PJRT benches** (skipped with a message when `make artifacts`
+//! 2. **Live-plane refresh sweep** (always runs): for every
+//!    `testkit::refresh_corpus` fixture, warm-started `refresh` vs cold
+//!    solve after an append — op counts, wall clock, and answer equality
+//!    per solver family — written to `BENCH_live.json` so the < 50%
+//!    acceptance ratio is tracked as a trend, not just a pass/fail.
+//! 3. **PJRT benches** (skipped with a message when `make artifacts`
 //!    hasn't been run): artifact execute round-trips — the L3↔XLA
 //!    boundary cost the serving coordinator pays per batched call.
 
 use std::time::Instant;
 
+use adaptive_sampling::data::distance::Metric;
 use adaptive_sampling::data::tabular::make_classification;
 use adaptive_sampling::forest::histogram::Impurity;
 use adaptive_sampling::forest::split::{
-    feature_ranges_view, make_edges, solve_mab, SplitContext, TrainSet,
+    feature_ranges_view, make_edges, refresh_split, solve_exact_cached, solve_exactly,
+    solve_mab, SplitContext, TrainSet,
 };
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
 use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
+use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
 use adaptive_sampling::runtime::ArtifactStore;
-use adaptive_sampling::store::{Codec, ColumnStore, DatasetView, StoreOptions};
+use adaptive_sampling::store::{
+    Codec, ColumnStore, DatasetView, LiveStore, StoreOptions, ViewPointSet,
+};
 use adaptive_sampling::util::bench::Bencher;
 use adaptive_sampling::util::rng::Rng;
+use adaptive_sampling::util::testkit;
 
 struct StorePoint {
     solver: &'static str,
@@ -154,6 +166,168 @@ fn store_sweep(quick: bool) -> Vec<StorePoint> {
     points
 }
 
+/// A root-node split context with equal-width edges from the view's
+/// stats-backed feature ranges (shared by the live refresh sweep).
+fn root_ctx<'a>(
+    x: &'a dyn DatasetView,
+    y: &'a [f32],
+    n_classes: usize,
+    rows: &'a [usize],
+    features: &'a [usize],
+    counter: &'a OpCounter,
+) -> SplitContext<'a> {
+    SplitContext {
+        ds: TrainSet { x, y, n_classes },
+        rows,
+        features,
+        edges: make_edges(features, &feature_ranges_view(x), 10, false, &mut Rng::new(1)),
+        impurity: Impurity::Gini,
+        counter,
+    }
+}
+
+struct LivePoint {
+    fixture: &'static str,
+    solver: &'static str,
+    cold_ops: u64,
+    warm_ops: u64,
+    cold_wall_s: f64,
+    warm_wall_s: f64,
+    matches: bool,
+}
+
+impl LivePoint {
+    fn ratio(&self) -> f64 {
+        self.warm_ops as f64 / self.cold_ops.max(1) as f64
+    }
+}
+
+/// Refresh-vs-cold sweep over the shared fixture corpus (the trend
+/// behind the `< 50% of cold` acceptance assertions in tests/live.rs).
+fn live_sweep() -> Vec<LivePoint> {
+    let mut points = Vec::new();
+    for fx in testkit::refresh_corpus() {
+        let d = fx.base.x.d;
+        let full = fx.full();
+        let live = LiveStore::new(d, StoreOptions { rows_per_chunk: 64, ..Default::default() })
+            .expect("live store");
+        let snap_a = live.commit_batch(&fx.base.x).expect("base");
+        let snap_b = live.commit_batch(&fx.append.x).expect("append");
+
+        // --- BanditMIPS standing query ---
+        {
+            let cfg = BanditMipsConfig { k: 3, batch_size: d.max(32), ..Default::default() };
+            let mut rq = Rng::new(fx.seed ^ 0x9E00);
+            let qi = rq.below(fx.base.x.n);
+            let q: Vec<f32> = fx.base.x.row(qi).iter().map(|&v| v * 1.25).collect();
+            let c_prev = OpCounter::new();
+            let (_, model) = solve_model(&*snap_a, &q, &cfg, &c_prev);
+            let c_cold = OpCounter::new();
+            let t0 = Instant::now();
+            let (cold, _) = solve_model(&*snap_b, &q, &cfg, &c_cold);
+            let cold_wall = t0.elapsed().as_secs_f64();
+            let c_warm = OpCounter::new();
+            let t0 = Instant::now();
+            let (warm, _) = mips_refresh(&*snap_b, &q, &model, &cfg, &c_warm);
+            points.push(LivePoint {
+                fixture: fx.name,
+                solver: "banditmips",
+                cold_ops: c_cold.get(),
+                warm_ops: c_warm.get(),
+                cold_wall_s: cold_wall,
+                warm_wall_s: t0.elapsed().as_secs_f64(),
+                matches: warm.atoms == cold.atoms,
+            });
+        }
+
+        // --- BanditPAM (clusterable fixtures only) ---
+        if fx.clusterable {
+            let mut cfg = BanditPamConfig::new(fx.k);
+            cfg.km.seed = fx.seed;
+            let prev = bandit_pam(&ViewPointSet::new(snap_a.clone(), Metric::L2), &cfg);
+            let t0 = Instant::now();
+            let cold = bandit_pam(&ViewPointSet::new(snap_b.clone(), Metric::L2), &cfg);
+            let cold_wall = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let warm = bandit_pam_refresh(
+                &ViewPointSet::new(snap_b.clone(), Metric::L2),
+                &prev.medoids,
+                &cfg,
+            );
+            points.push(LivePoint {
+                fixture: fx.name,
+                solver: "banditpam",
+                cold_ops: cold.dist_calls,
+                warm_ops: warm.dist_calls,
+                cold_wall_s: cold_wall,
+                warm_wall_s: t0.elapsed().as_secs_f64(),
+                matches: warm.medoids == cold.medoids,
+            });
+        }
+
+        // --- MABSplit node refresh ---
+        {
+            let features: Vec<usize> = (0..d).collect();
+            let rows_a: Vec<usize> = (0..fx.base.x.n).collect();
+            let rows_b: Vec<usize> = (0..full.x.n).collect();
+            let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
+            let c_prev = OpCounter::new();
+            let ctx_a = root_ctx(&*snap_a, &full.y, full.n_classes, &rows_a, &features, &c_prev);
+            let (_, mut cache) = solve_exact_cached(&ctx_a).expect("base split");
+            let c_cold = OpCounter::new();
+            let ctx_b = root_ctx(&*snap_b, &full.y, full.n_classes, &rows_b, &features, &c_cold);
+            let t0 = Instant::now();
+            let cold = solve_exactly(&ctx_b).expect("cold split");
+            let cold_wall = t0.elapsed().as_secs_f64();
+            let c_warm = OpCounter::new();
+            let ts_b = TrainSet { x: &*snap_b, y: &full.y, n_classes: full.n_classes };
+            let t0 = Instant::now();
+            let warm =
+                refresh_split(&mut cache, &ts_b, &rows_b, &new_rows, &c_warm).expect("warm split");
+            points.push(LivePoint {
+                fixture: fx.name,
+                solver: "mabsplit-node",
+                cold_ops: c_cold.get(),
+                warm_ops: c_warm.get(),
+                cold_wall_s: cold_wall,
+                warm_wall_s: t0.elapsed().as_secs_f64(),
+                matches: warm.feature == cold.feature
+                    && warm.threshold.to_bits() == cold.threshold.to_bits(),
+            });
+        }
+    }
+    points
+}
+
+fn write_live_json(points: &[LivePoint]) {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"fixture\": \"{}\", \"solver\": \"{}\", \"cold_ops\": {}, \
+                 \"warm_ops\": {}, \"warm_over_cold\": {:.4}, \"cold_wall_s\": {:.6}, \
+                 \"warm_wall_s\": {:.6}, \"matches_cold\": {}}}",
+                p.fixture,
+                p.solver,
+                p.cold_ops,
+                p.warm_ops,
+                p.ratio(),
+                p.cold_wall_s,
+                p.warm_wall_s,
+                p.matches
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"live_refresh_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_live.json", &json) {
+        Ok(()) => println!("wrote BENCH_live.json"),
+        Err(e) => eprintln!("could not write BENCH_live.json: {e}"),
+    }
+}
+
 fn write_store_json(points: &[StorePoint]) {
     let rows: Vec<String> = points
         .iter()
@@ -195,6 +369,23 @@ fn main() {
         );
     }
     write_store_json(&points);
+
+    println!("\nlive refresh sweep: warm-started refresh vs cold solve after an append");
+    let live_points = live_sweep();
+    for p in &live_points {
+        println!(
+            "live/{:<14} {:<20} warm={:<9} cold={:<9} ratio={:>6.1}% wall {:>7.2}ms vs {:>7.2}ms match={}",
+            p.solver,
+            p.fixture,
+            p.warm_ops,
+            p.cold_ops,
+            p.ratio() * 100.0,
+            p.warm_wall_s * 1e3,
+            p.cold_wall_s * 1e3,
+            p.matches
+        );
+    }
+    write_live_json(&live_points);
 
     let dir = ArtifactStore::default_dir();
     if !dir.join("manifest.txt").exists() {

@@ -1,0 +1,243 @@
+//! LIVE data plane end to end: versioned ingest + snapshot-isolated
+//! serving + warm-started refresh.
+//!
+//! A `store::LiveStore` holds the item matrix; a dedicated ingest thread
+//! commits append batches (atomically swapping in new versions) while
+//! the MIPS coordinator serves queries, each batch pinned to one
+//! consistent snapshot. Afterwards, the three chapter solvers
+//! demonstrate their `refresh` paths: re-solving after the appends for a
+//! fraction of a cold solve's op count, with identical answers.
+//!
+//! ```bash
+//! cargo run --release --example live_ingest
+//! # live store over quantized, file-spilled segments:
+//! cargo run --release --example live_ingest -- --store=column,i8,spill
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::data::synthetic::lowrank_like;
+use adaptive_sampling::data::distance::Metric;
+use adaptive_sampling::forest::split::{feature_ranges_view, make_edges};
+use adaptive_sampling::forest::{
+    refresh_split, solve_exact_cached, solve_exactly, Forest, ForestConfig, ForestKind,
+    Impurity, Solver, SplitContext, TrainSet,
+};
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
+use adaptive_sampling::metrics::{LatencyRecorder, OpCounter};
+use adaptive_sampling::mips::banditmips::BanditMipsConfig;
+use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
+use adaptive_sampling::store::{
+    store_options_from_args, DatasetView, LiveStore, StoreOptions, ViewPointSet,
+};
+use adaptive_sampling::util::rng::Rng;
+use adaptive_sampling::util::testkit;
+
+fn main() {
+    let (n0, d) = (400usize, 64usize);
+    let opts = store_options_from_args().unwrap_or_default();
+    println!(
+        "live store: codec={} spill={} rows/chunk={}",
+        opts.codec.name(),
+        opts.spill_dir.is_some(),
+        opts.chunk_rows()
+    );
+
+    // ---- versioned ingest under live serving --------------------------
+    let live = Arc::new(LiveStore::new(d, opts).expect("live store"));
+    let items = lowrank_like(n0, d, 15, 7);
+    live.commit_batch(&items).expect("base commit");
+
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 16,
+        batch_timeout_us: 300,
+        warm_coords: 32,
+        validate_every: 0,
+        ..Default::default()
+    };
+    println!("starting MIPS server over the live store: {cfg:?}");
+    let server = MipsServer::start(live.clone(), cfg, Backend::NativeBandit);
+
+    // Dedicated ingest thread: 20 append batches race the queries below.
+    let ingest = live.spawn_ingest(4);
+    let feeder = {
+        let batches: Vec<_> = (0..20u64).map(|b| lowrank_like(32, d, 15, 1_000 + b)).collect();
+        std::thread::spawn(move || {
+            for m in batches {
+                ingest.submit(m);
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+            ingest.close();
+        })
+    };
+
+    let mut rng = Rng::new(99);
+    let n_queries = 300usize;
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|_| {
+            let base = items.row(rng.below(n0)).to_vec();
+            base.iter().map(|&v| v + 0.3 * rng.normal() as f32).collect()
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut lat = LatencyRecorder::new();
+    let (mut v_lo, mut v_hi) = (u64::MAX, 0u64);
+    let mut total_samples = 0u64;
+    for window in queries.chunks(32) {
+        let receivers: Vec<_> = window.iter().map(|q| server.submit(q.clone())).collect();
+        for rx in receivers {
+            let resp = rx.recv().expect("response");
+            lat.record(resp.latency);
+            total_samples += resp.samples;
+            v_lo = v_lo.min(resp.version);
+            v_hi = v_hi.max(resp.version);
+        }
+    }
+    feeder.join().expect("feeder");
+    let wall = t0.elapsed().as_secs_f64();
+    let last = server.stats.last_version.load(Ordering::Relaxed);
+    server.shutdown();
+
+    let final_snap = live.pin();
+    println!(
+        "served {n_queries} queries in {wall:.2}s ({:.0} qps) across versions {v_lo}..={v_hi} (last pinned {last})",
+        n_queries as f64 / wall
+    );
+    println!("latency: {}", lat.summary());
+    println!(
+        "final state: version {} with {} rows in {} segments; mean samples/query {:.0}",
+        DatasetView::version(&*final_snap),
+        final_snap.n_rows(),
+        final_snap.n_segments(),
+        total_samples as f64 / n_queries as f64
+    );
+
+    // ---- warm-started refresh: BanditMIPS standing query --------------
+    println!("\n== refresh: BanditMIPS standing query ==");
+    let early = live.pin();
+    let q: Vec<f32> = items.row(3).iter().map(|&v| v * 1.2).collect();
+    let mcfg = BanditMipsConfig { k: 5, batch_size: d.max(32), ..Default::default() };
+    let c_model = OpCounter::new();
+    let (_, model) = solve_model(&*early, &q, &mcfg, &c_model);
+    let growth = lowrank_like(64, d, 15, 9_999);
+    let grown = live.commit_batch(&growth).expect("append");
+    let c_cold = OpCounter::new();
+    let (cold, _) = solve_model(&*grown, &q, &mcfg, &c_cold);
+    let c_warm = OpCounter::new();
+    let (warm, _) = mips_refresh(&*grown, &q, &model, &mcfg, &c_warm);
+    println!(
+        "top-5 after append: warm == cold: {}; samples warm {} vs cold {} ({:.1}% of cold)",
+        warm.atoms == cold.atoms,
+        c_warm.get(),
+        c_cold.get(),
+        100.0 * c_warm.get() as f64 / c_cold.get().max(1) as f64
+    );
+
+    // ---- warm-started refresh: BanditPAM + MABSplit + forest ----------
+    println!("\n== refresh: k-medoids / node split / forest (fixture corpus) ==");
+    let fx = testkit::refresh_corpus()
+        .into_iter()
+        .find(|f| f.name == "medium-clusterable")
+        .expect("corpus fixture");
+    let full = fx.full();
+    let flive = LiveStore::new(fx.base.x.d, StoreOptions::default()).expect("fixture store");
+    let snap_a = flive.commit_batch(&fx.base.x).expect("fixture base");
+    let snap_b = flive.commit_batch(&fx.append.x).expect("fixture append");
+
+    // BanditPAM.
+    let mut kcfg = BanditPamConfig::new(fx.k);
+    kcfg.km.seed = fx.seed;
+    let prev = bandit_pam(&ViewPointSet::new(snap_a.clone(), Metric::L2), &kcfg);
+    let cold_km = bandit_pam(&ViewPointSet::new(snap_b.clone(), Metric::L2), &kcfg);
+    let warm_km =
+        bandit_pam_refresh(&ViewPointSet::new(snap_b.clone(), Metric::L2), &prev.medoids, &kcfg);
+    println!(
+        "k-medoids: same medoids: {}; dist calls warm {} vs cold {} ({:.1}%)",
+        warm_km.medoids == cold_km.medoids,
+        warm_km.dist_calls,
+        cold_km.dist_calls,
+        100.0 * warm_km.dist_calls as f64 / cold_km.dist_calls.max(1) as f64
+    );
+
+    // Node split.
+    let features: Vec<usize> = (0..fx.base.x.d).collect();
+    let rows_a: Vec<usize> = (0..fx.base.x.n).collect();
+    let rows_b: Vec<usize> = (0..full.x.n).collect();
+    let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
+    let c_prev = OpCounter::new();
+    let (_, mut cache) = solve_exact_cached(&SplitContext {
+        ds: TrainSet { x: &*snap_a, y: &full.y, n_classes: full.n_classes },
+        rows: &rows_a,
+        features: &features,
+        edges: make_edges(&features, &feature_ranges_view(&*snap_a), 10, false, &mut Rng::new(1)),
+        impurity: Impurity::Gini,
+        counter: &c_prev,
+    })
+    .expect("base split");
+    let c_cold_split = OpCounter::new();
+    let cold_split = solve_exactly(&SplitContext {
+        ds: TrainSet { x: &*snap_b, y: &full.y, n_classes: full.n_classes },
+        rows: &rows_b,
+        features: &features,
+        edges: make_edges(&features, &feature_ranges_view(&*snap_b), 10, false, &mut Rng::new(1)),
+        impurity: Impurity::Gini,
+        counter: &c_cold_split,
+    })
+    .expect("cold split");
+    let c_warm_split = OpCounter::new();
+    let ts_b = TrainSet { x: &*snap_b, y: &full.y, n_classes: full.n_classes };
+    let warm_split =
+        refresh_split(&mut cache, &ts_b, &rows_b, &new_rows, &c_warm_split).expect("warm split");
+    println!(
+        "node split: same (feature, threshold): {}; insertions warm {} vs cold {} ({:.1}%)",
+        warm_split.feature == cold_split.feature
+            && warm_split.threshold.to_bits() == cold_split.threshold.to_bits(),
+        c_warm_split.get(),
+        c_cold_split.get(),
+        100.0 * c_warm_split.get() as f64 / c_cold_split.get().max(1) as f64
+    );
+
+    // Forest leaf refresh.
+    let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+    fcfg.n_trees = 4;
+    let c_fit = OpCounter::new();
+    let forest = Forest::fit(&fx.base, &fcfg, &c_fit);
+    let c_refit = OpCounter::new();
+    let refit = Forest::fit(&full, &fcfg, &c_refit);
+    let c_absorb = OpCounter::new();
+    let refreshed = forest.refresh(&TrainSet::of(&full), &new_rows, &c_absorb);
+    println!(
+        "forest: acc warm {:.3} vs cold refit {:.3}; insertions warm {} vs refit {} ({:.2}%)",
+        refreshed.accuracy(&full),
+        refit.accuracy(&full),
+        c_absorb.get(),
+        c_refit.get(),
+        100.0 * c_absorb.get() as f64 / c_refit.get().max(1) as f64
+    );
+
+    // ---- tombstones + compaction --------------------------------------
+    println!("\n== tombstones & compaction ==");
+    let before = live.pin();
+    let dead: Vec<u64> = (0..10u64).collect();
+    let after = live.delete_rows(&dead).expect("delete");
+    println!(
+        "deleted {} rows: {} -> {} logical rows (version {} -> {})",
+        dead.len(),
+        before.n_rows(),
+        after.n_rows(),
+        DatasetView::version(&*before),
+        DatasetView::version(&*after)
+    );
+    let compacted = live.compact().expect("compact");
+    println!(
+        "compacted: {} segments -> {} (version {}), stable ids preserved: id 10 is now row {:?}",
+        after.n_segments(),
+        compacted.n_segments(),
+        DatasetView::version(&*compacted),
+        compacted.locate(10)
+    );
+}

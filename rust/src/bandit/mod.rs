@@ -140,6 +140,18 @@ impl ArmStats {
         self.count[arm] += pulls;
     }
 
+    /// Seed an arm with a warm-start prior: a previously-established mean
+    /// (and spread) worth `pulls` virtual observations. The arm behaves
+    /// as if it had already been pulled that many times with sample mean
+    /// `mean` and variance `var`, so its σ̂ collapses toward √var and its
+    /// estimate starts at `mean` instead of ∞ — the refresh paths use
+    /// this to carry the previous solution's per-arm state into a new
+    /// solve (`var = 0` encodes an exactly-known objective).
+    pub fn seed(&mut self, arm: usize, mean: f64, var: f64, pulls: u64) {
+        let p = pulls as f64;
+        self.push(arm, mean * p, (var + mean * mean) * p, pulls);
+    }
+
     /// Fold a batch of per-arm deltas **in fixed arm order** — the one
     /// determinism-critical reduction every solver funnels its shard
     /// results through (do not reorder or filter here).
@@ -798,5 +810,28 @@ mod tests {
         assert!((st.mean(0) - 1.5).abs() < 1e-12);
         let var = 14.0 / 4.0 - 1.5 * 1.5;
         assert!((st.sigma(0, 0.0) - var.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seeded_arm_stats_behave_like_virtual_pulls() {
+        let mut st = ArmStats::new(3);
+        st.seed(0, 2.5, 0.0, 100);
+        assert!((st.mean(0) - 2.5).abs() < 1e-12, "seeded mean holds");
+        assert!(st.sigma(0, 0.0) < 1e-6, "var=0 prior collapses σ̂");
+        st.seed(1, -1.0, 4.0, 50);
+        assert!((st.sigma(1, 0.0) - 2.0).abs() < 1e-9, "σ̂ = √var");
+        // Later real pulls blend consistently with the prior.
+        st.push(0, 2.5 * 10.0, 2.5 * 2.5 * 10.0, 10);
+        assert!((st.mean(0) - 2.5).abs() < 1e-12);
+        assert_eq!(st.count[0], 110);
+        // A strongly-seeded best arm wins without the engine pulling it
+        // to parity: its CI is already tight.
+        let mut arms = MeanArms::new(3, 10_000, move |a: usize, j: usize| {
+            [0.0, 5.0, 5.0][a] + ((j % 2) as f64 - 0.5)
+        });
+        arms.stats.seed(0, 0.0, 1e-6, 256);
+        let cfg = BanditConfig { batch_size: 64, ..Default::default() };
+        let r = successive_elimination(&mut arms, &cfg);
+        assert_eq!(r.best[0], 0);
     }
 }

@@ -55,6 +55,18 @@ pub struct QueryResponse {
     /// Set when a Hybrid canary check ran: did BanditMIPS agree with the
     /// PJRT exact rescore?
     pub validated: Option<bool>,
+    /// Dataset version this query was answered against (the snapshot its
+    /// batch pinned; 0 for static substrates). Together with `seed` and
+    /// `warm_coords`, this makes every answer exactly replayable against
+    /// a retained snapshot (`bandit_mips_warm` with the same inputs) —
+    /// the stress tests' serial-replay oracle.
+    pub version: u64,
+    /// The BanditMIPS seed used for this query.
+    pub seed: u64,
+    /// The batch-shared warm-start coordinate cache this query was
+    /// answered with (empty when `ServerConfig::warm_coords` is 0 or the
+    /// batch had a single request).
+    pub warm_coords: Vec<usize>,
 }
 
 struct Request {
@@ -71,6 +83,9 @@ pub struct ServerStats {
     pub validations: AtomicU64,
     pub validation_failures: AtomicU64,
     pub samples: OpCounter,
+    /// Most recent dataset version a batch pinned (monotone under a
+    /// single live store; 0 for static substrates).
+    pub last_version: AtomicU64,
 }
 
 /// A running MIPS server.
@@ -85,11 +100,16 @@ pub struct MipsServer {
 impl MipsServer {
     /// Start the server over any atom substrate behind a
     /// [`DatasetView`] — a dense [`crate::data::Matrix`] (an
-    /// `Arc<Matrix>` coerces directly) or a quantized / spilled
-    /// [`crate::store::ColumnStore`] for corpora larger than RAM. Batch
-    /// execution runs as bounded tasks on [`WorkerPool::global`] — the
-    /// same thread budget the bandit engine's elimination rounds use —
-    /// instead of a per-server thread set.
+    /// `Arc<Matrix>` coerces directly), a quantized / spilled
+    /// [`crate::store::ColumnStore`] for corpora larger than RAM, or a
+    /// mutable [`crate::store::LiveStore`] whose ingest thread keeps
+    /// committing while queries are in flight. Each batch task pins one
+    /// snapshot ([`crate::store::pin`]) for all of its queries, so
+    /// serving reads a consistent version end to end and is never
+    /// blocked by writers; [`QueryResponse::version`] reports which.
+    /// Batch execution runs as bounded tasks on [`WorkerPool::global`] —
+    /// the same thread budget the bandit engine's elimination rounds use
+    /// — instead of a per-server thread set.
     pub fn start(
         atoms: Arc<dyn DatasetView>,
         cfg: ServerConfig,
@@ -123,7 +143,7 @@ impl MipsServer {
                     let _slot = slot;
                     let mut rng =
                         Rng::new(cfg.seed ^ serial.wrapping_mul(0x9E3779B97F4A7C15));
-                    serve_batch(&*atoms, &cfg, &backend, batch, &mut rng, &wstats);
+                    serve_batch(&atoms, &cfg, &backend, batch, &mut rng, &wstats);
                 });
             };
             loop {
@@ -182,15 +202,24 @@ impl MipsServer {
 }
 
 fn serve_batch(
-    atoms: &dyn DatasetView,
+    atoms: &Arc<dyn DatasetView>,
     cfg: &ServerConfig,
     backend: &Backend,
     batch: Vec<Request>,
     rng: &mut Rng,
     stats: &ServerStats,
 ) {
+    // Pin ONE snapshot for the whole batch: every query in it reads a
+    // single consistent dataset version while the ingest thread keeps
+    // committing and swapping newer ones in (static substrates pin to
+    // themselves; see `store::pin`).
+    let pinned = crate::store::pin(atoms);
+    let version = pinned.version();
+    // fetch_max, not store: concurrent batch workers may pin out of order,
+    // and the field is documented monotone.
+    stats.last_version.fetch_max(version, Ordering::Relaxed);
     // Shared warm-start coordinate cache for the batch (§4.3.1).
-    let d = atoms.n_cols();
+    let d = pinned.n_cols();
     let warm = if cfg.warm_coords > 0 && batch.len() > 1 {
         rng.sample_without_replacement(d, cfg.warm_coords.min(d))
     } else {
@@ -201,14 +230,18 @@ fn serve_batch(
         // Per-request counter: the global one is shared across workers, so
         // window deltas would overcount under concurrency.
         let local = OpCounter::new();
+        let seed = cfg.seed ^ served ^ rng.next_u64();
         let (top, validated) =
-            answer(atoms, cfg, backend, &req.query, &warm, served, &local, stats, rng);
+            answer(&*pinned, cfg, backend, &req.query, &warm, served, seed, &local, stats);
         stats.samples.add(local.get());
         let _ = req.respond.send(QueryResponse {
             top_atoms: top,
             latency: req.submitted.elapsed(),
             samples: local.get(),
             validated,
+            version,
+            seed,
+            warm_coords: warm.clone(),
         });
     }
 }
@@ -221,9 +254,9 @@ fn answer(
     query: &[f32],
     warm: &[usize],
     serial: u64,
+    seed: u64,
     counter: &OpCounter,
     stats: &ServerStats,
-    rng: &mut Rng,
 ) -> (Vec<usize>, Option<bool>) {
     let bandit_cfg = BanditMipsConfig {
         delta: cfg.delta,
@@ -231,7 +264,7 @@ fn answer(
         strategy: SampleStrategy::Uniform,
         sigma: None,
         k: cfg.k,
-        seed: cfg.seed ^ serial ^ rng.next_u64(),
+        seed,
         // Per-query work stays on the batch's own pool worker: concurrency
         // across queries/batches already uses the shared pool budget.
         threads: 1,
@@ -380,6 +413,65 @@ mod tests {
         }
         assert!(correct >= 7, "only {correct}/8 correct over spilled store");
         server.shutdown();
+    }
+
+    #[test]
+    fn live_store_serving_pins_versions_and_replays_exactly() {
+        use std::collections::HashMap;
+
+        use crate::store::{LiveSnapshot, LiveStore};
+        use crate::util::testkit;
+
+        let live = Arc::new(LiveStore::new(64, StoreOptions::default()).unwrap());
+        let mut snaps: HashMap<u64, Arc<LiveSnapshot>> = HashMap::new();
+        let base = testkit::gaussian(96, 64, 301);
+        let s = live.commit_batch(&base).unwrap();
+        snaps.insert(crate::store::DatasetView::version(&*s), s);
+
+        let cfg = ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            validate_every: 0,
+            ..Default::default() // default warm_coords: replay carries them
+        };
+        let server = MipsServer::start(live.clone(), cfg.clone(), Backend::NativeBandit);
+        let mut rng = Rng::new(77);
+        let mut pending = Vec::new();
+        for round in 0..4u64 {
+            for _ in 0..6 {
+                let q: Vec<f32> = (0..64).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                pending.push((server.submit(q.clone()), q));
+            }
+            let s = live.commit_batch(&testkit::gaussian(24, 64, 400 + round)).unwrap();
+            snaps.insert(crate::store::DatasetView::version(&*s), s);
+        }
+        let mut responses = Vec::new();
+        for (rx, q) in pending {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            responses.push((resp, q));
+        }
+        server.shutdown();
+
+        // Serial replay: every response names its (version, seed,
+        // warm_coords); running the same solve against the retained
+        // snapshot must reproduce the answer bit for bit.
+        for (resp, q) in responses {
+            let snap = snaps.get(&resp.version).expect("version was published");
+            let c = OpCounter::new();
+            let replay_cfg = crate::mips::banditmips::BanditMipsConfig {
+                delta: cfg.delta,
+                batch_size: 64,
+                strategy: crate::mips::banditmips::SampleStrategy::Uniform,
+                sigma: None,
+                k: cfg.k,
+                seed: resp.seed,
+                threads: 1,
+            };
+            let again = bandit_mips_warm(&**snap, &q, &replay_cfg, &c, &resp.warm_coords);
+            assert_eq!(again.atoms, resp.top_atoms, "replay diverged at v{}", resp.version);
+            assert_eq!(again.samples, resp.samples, "replay sample count diverged");
+        }
+        assert!(server.stats.last_version.load(Ordering::Relaxed) >= 1);
     }
 
     #[test]

@@ -168,6 +168,32 @@ impl Forest {
         }
     }
 
+    /// Warm-started refresh after an append: keep every tree's split
+    /// structure and absorb the rows at `new_rows` into node counts and
+    /// leaf statistics ([`DecisionTree::absorb_row`] — one insertion per
+    /// row per tree on `counter`, against a cold refit's full training
+    /// cost). Structural drift is the [`crate::forest::SplitCache`] /
+    /// [`crate::forest::refresh_split`] path's job: callers that keep a
+    /// root-split cache can detect a changed best split and escalate to a
+    /// cold `fit_view` for exactly the trees that need it.
+    pub fn refresh(&self, ts: &TrainSet, new_rows: &[usize], counter: &OpCounter) -> Forest {
+        let before = counter.get();
+        let mut trees = self.trees.clone();
+        let mut x = vec![0f32; ts.x.n_cols()];
+        for &r in new_rows {
+            ts.x.read_row(r, &mut x);
+            for t in trees.iter_mut() {
+                t.absorb_row(&x, ts.y[r], counter);
+            }
+        }
+        Forest {
+            trees,
+            n_classes: self.n_classes,
+            insertions: counter.get() - before,
+            completed_trees: self.completed_trees,
+        }
+    }
+
     /// Soft-vote class probabilities / mean prediction for one row.
     pub fn predict_row(&self, x: &[f32]) -> Vec<f32> {
         let width = if self.n_classes == 0 { 1 } else { self.n_classes };
@@ -314,6 +340,49 @@ mod tests {
                 let _ = f.mse(&dsr);
             }
         }
+    }
+
+    #[test]
+    fn refresh_absorbs_appends_at_a_fraction_of_a_cold_refit() {
+        use crate::util::testkit;
+        let fx = testkit::refresh_corpus()
+            .into_iter()
+            .find(|f| f.name == "medium-clusterable")
+            .unwrap();
+        let full = fx.full();
+        let mut cfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+        cfg.n_trees = 4;
+
+        let c_prev = OpCounter::new();
+        let prev = Forest::fit(&fx.base, &cfg, &c_prev);
+
+        let c_cold = OpCounter::new();
+        let cold = Forest::fit(&full, &cfg, &c_cold);
+
+        let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
+        let c_warm = OpCounter::new();
+        let warm = prev.refresh(&TrainSet::of(&full), &new_rows, &c_warm);
+        assert_eq!(warm.insertions, (new_rows.len() * 4) as u64);
+        assert!(
+            c_warm.get() * 2 < c_cold.get(),
+            "warm {} vs cold {}",
+            c_warm.get(),
+            c_cold.get()
+        );
+        // Structure kept, statistics current: accuracy on the grown data
+        // stays within noise of the cold refit.
+        let acc_warm = warm.accuracy(&full);
+        let acc_cold = cold.accuracy(&full);
+        assert!(
+            acc_warm > acc_cold - 0.05,
+            "warm acc {acc_warm} vs cold {acc_cold}"
+        );
+        // Root counts reflect the absorbed rows.
+        let n_root: usize = match &warm.trees[0].root {
+            crate::forest::tree::Node::Internal { n, .. }
+            | crate::forest::tree::Node::Leaf { n, .. } => *n,
+        };
+        assert_eq!(n_root, fx.base.x.n + new_rows.len());
     }
 
     #[test]

@@ -22,5 +22,8 @@ pub mod tree;
 
 pub use ensemble::{Forest, ForestConfig, ForestKind};
 pub use histogram::Impurity;
-pub use split::{solve_exactly, solve_mab, solve_mab_threaded, Split, SplitContext, TrainSet};
+pub use split::{
+    refresh_split, solve_exact_cached, solve_exactly, solve_mab, solve_mab_threaded, Split,
+    SplitCache, SplitContext, TrainSet,
+};
 pub use tree::{DecisionTree, Solver, TreeConfig};

@@ -76,35 +76,161 @@ pub struct SplitContext<'a> {
 /// Exact solver: fill every feature histogram with every node point, then
 /// scan all thresholds. `n·m` insertions, one column scan per feature.
 pub fn solve_exactly(ctx: &SplitContext) -> Option<Split> {
+    solve_exact_cached(ctx).map(|(s, _)| s)
+}
+
+/// [`solve_exactly`], additionally returning the filled per-feature
+/// histograms as a [`SplitCache`] for later warm-started
+/// [`refresh_split`] calls.
+pub fn solve_exact_cached(ctx: &SplitContext) -> Option<(Split, SplitCache)> {
     let regression = ctx.ds.is_regression();
+    let mut cache = SplitCache {
+        features: ctx.features.to_vec(),
+        edges: ctx.edges.clone(),
+        ranges: ctx.features.iter().map(|&f| ctx.ds.x.col_range(f)).collect(),
+        impurity: ctx.impurity,
+        n_classes: ctx.ds.n_classes,
+        hists_c: Vec::new(),
+        hists_r: Vec::new(),
+        n_rows_seen: ctx.rows.len(),
+    };
     let mut vals = vec![0f32; ctx.rows.len()];
-    let mut best: Option<(f64, usize, usize)> = None; // (mu, fi, t)
     for (fi, &f) in ctx.features.iter().enumerate() {
         ctx.ds.x.read_col(f, ctx.rows, &mut vals);
-        let scans: Vec<(f64, f64)> = if regression {
+        if regression {
             let mut h = MomentHistogram::new(ctx.edges[fi].clone());
             for (&r, &v) in ctx.rows.iter().zip(&vals) {
                 h.insert(v, ctx.ds.y[r] as f64, ctx.counter);
             }
-            h.scan_thresholds()
+            cache.hists_r.push(h);
         } else {
             let mut h = ClassHistogram::new(ctx.edges[fi].clone(), ctx.ds.n_classes);
             for (&r, &v) in ctx.rows.iter().zip(&vals) {
                 h.insert(v, ctx.ds.y[r] as usize, ctx.counter);
             }
-            h.scan_thresholds(ctx.impurity)
-        };
-        for (t, &(mu, _)) in scans.iter().enumerate() {
-            if best.map_or(true, |(bm, _, _)| mu < bm) {
-                best = Some((mu, fi, t));
+            cache.hists_c.push(h);
+        }
+    }
+    cache.best_split().map(|s| (s, cache))
+}
+
+/// A node's filled per-feature histograms, kept after an exact solve so
+/// an append only pays for the **new** rows: [`refresh_split`] inserts
+/// them on top and re-scans thresholds. For classification the histogram
+/// counts are order-independent integers, so a refreshed split is
+/// *identical* to a cold exact solve over the grown node; regression
+/// moment sums agree up to f64 addition order.
+///
+/// The cache is only valid while the node's bin edges stay valid: if an
+/// appended value falls outside a feature's cached edge span, that
+/// feature's histogram must be rebuilt (cold) — [`refresh_split`] checks
+/// via [`DatasetView::col_range`] (free on a
+/// [`crate::store::ColumnStore`]) and rebuilds exactly the features that
+/// need it. Random-edge (ExtraTrees) nodes are not cacheable: their
+/// edges consume RNG state a refresh cannot replay.
+pub struct SplitCache {
+    pub features: Vec<usize>,
+    pub edges: Vec<BinEdges>,
+    /// Per-feature [`DatasetView::col_range`] at cache-build time: the
+    /// drift check compares bit patterns against the current view, so a
+    /// feature rebuilds exactly when a cold solve would see different
+    /// ranges (and hence different equal-width edges).
+    ranges: Vec<(f32, f32)>,
+    pub impurity: Impurity,
+    pub n_classes: usize,
+    hists_c: Vec<ClassHistogram>,
+    hists_r: Vec<MomentHistogram>,
+    /// Rows inserted so far (diagnostics; refresh adds to it).
+    pub n_rows_seen: usize,
+}
+
+impl SplitCache {
+    fn is_regression(&self) -> bool {
+        self.n_classes == 0
+    }
+
+    /// Best split over the cached histograms (the shared scan of the
+    /// exact solver and the refresh path).
+    fn best_split(&self) -> Option<Split> {
+        let mut best: Option<(f64, usize, usize)> = None; // (mu, fi, t)
+        for fi in 0..self.features.len() {
+            let scans: Vec<(f64, f64)> = if self.is_regression() {
+                self.hists_r[fi].scan_thresholds()
+            } else {
+                self.hists_c[fi].scan_thresholds(self.impurity)
+            };
+            for (t, &(mu, _)) in scans.iter().enumerate() {
+                if best.map_or(true, |(bm, _, _)| mu < bm) {
+                    best = Some((mu, fi, t));
+                }
+            }
+        }
+        best.map(|(mu, fi, t)| Split {
+            feature: self.features[fi],
+            threshold: self.edges[fi].edges[t + 1],
+            child_impurity: mu,
+        })
+    }
+}
+
+/// Warm-started node re-split after an append: insert only `new_rows`
+/// into the cached histograms (rebuilding just the features whose cached
+/// edge span no longer covers the data), then re-scan every threshold.
+/// `all_rows` is the node's full row set including the appended rows —
+/// used only when a rebuild is needed. Cost: `|new_rows| · m` insertions
+/// (+ full refills for out-of-range features), against the cold solve's
+/// `|all_rows| · m`.
+pub fn refresh_split(
+    cache: &mut SplitCache,
+    ds: &TrainSet,
+    all_rows: &[usize],
+    new_rows: &[usize],
+    counter: &OpCounter,
+) -> Option<Split> {
+    let regression = cache.is_regression();
+    debug_assert_eq!(regression, ds.is_regression());
+    let mut vals = vec![0f32; new_rows.len()];
+    for fi in 0..cache.features.len() {
+        let f = cache.features[fi];
+        let (span_lo, span_hi) = cache.ranges[fi];
+        let (lo, hi) = ds.x.col_range(f);
+        if lo.to_bits() != span_lo.to_bits() || hi.to_bits() != span_hi.to_bits() {
+            // Range drift: this feature's bins no longer match what a
+            // cold solve would use — rebuild it cold over the full node
+            // with fresh equal-width edges over the current range.
+            let t = cache.edges[fi].n_bins();
+            cache.edges[fi] = BinEdges::equal_width(lo, hi, t);
+            cache.ranges[fi] = (lo, hi);
+            let mut full_vals = vec![0f32; all_rows.len()];
+            ds.x.read_col(f, all_rows, &mut full_vals);
+            if regression {
+                let mut h = MomentHistogram::new(cache.edges[fi].clone());
+                for (&r, &v) in all_rows.iter().zip(&full_vals) {
+                    h.insert(v, ds.y[r] as f64, counter);
+                }
+                cache.hists_r[fi] = h;
+            } else {
+                let mut h = ClassHistogram::new(cache.edges[fi].clone(), cache.n_classes);
+                for (&r, &v) in all_rows.iter().zip(&full_vals) {
+                    h.insert(v, ds.y[r] as usize, counter);
+                }
+                cache.hists_c[fi] = h;
+            }
+            continue;
+        }
+        ds.x.read_col(f, new_rows, &mut vals);
+        if regression {
+            for (&r, &v) in new_rows.iter().zip(&vals) {
+                cache.hists_r[fi].insert(v, ds.y[r] as f64, counter);
+            }
+        } else {
+            for (&r, &v) in new_rows.iter().zip(&vals) {
+                cache.hists_c[fi].insert(v, ds.y[r] as usize, counter);
             }
         }
     }
-    best.map(|(mu, fi, t)| Split {
-        feature: ctx.features[fi],
-        threshold: ctx.edges[fi].edges[t + 1],
-        child_impurity: mu,
-    })
+    cache.n_rows_seen += new_rows.len();
+    cache.best_split()
 }
 
 /// MABSplit (Algorithm 3): batched successive elimination over (f, t)
@@ -613,6 +739,90 @@ mod tests {
             );
             assert_eq!(columnar, dense, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn refresh_split_identical_to_cold_exact_after_append() {
+        use crate::util::testkit;
+        let base = testkit::clusterable(3_000, 10, 3, 6.0, 61);
+        let (ax, ay) = testkit::append_within(&base.x, Some(&base.y), 120, 61);
+        let mut full_rows: Vec<Vec<f32>> = (0..base.x.n).map(|i| base.x.row(i).to_vec()).collect();
+        full_rows.extend((0..ax.n).map(|i| ax.row(i).to_vec()));
+        let full = LabeledDataset {
+            x: crate::data::Matrix::from_rows(full_rows).unwrap(),
+            y: base.y.iter().chain(&ay).copied().collect(),
+            n_classes: 3,
+        };
+        let features: Vec<usize> = (0..10).collect();
+        let base_rows: Vec<usize> = (0..base.x.n).collect();
+        let all_rows: Vec<usize> = (0..full.x.n).collect();
+        let new_rows: Vec<usize> = (base.x.n..full.x.n).collect();
+
+        // Previous solve on the base node, cache kept.
+        let c_prev = OpCounter::new();
+        let (_, mut cache) =
+            solve_exact_cached(&ctx_for(&base, &base_rows, &features, &c_prev, 10)).unwrap();
+
+        // Cold exact on the grown node (appends stay inside the column
+        // ranges by construction, so cold edges == cached edges).
+        let c_cold = OpCounter::new();
+        let cold = solve_exactly(&ctx_for(&full, &all_rows, &features, &c_cold, 10)).unwrap();
+
+        let c_warm = OpCounter::new();
+        let warm =
+            refresh_split(&mut cache, &TrainSet::of(&full), &all_rows, &new_rows, &c_warm)
+                .unwrap();
+        assert_eq!(
+            (warm.feature, warm.threshold.to_bits(), warm.child_impurity.to_bits()),
+            (cold.feature, cold.threshold.to_bits(), cold.child_impurity.to_bits()),
+            "warm refresh must reproduce the cold exact split bit-for-bit"
+        );
+        assert!(
+            c_warm.get() * 2 < c_cold.get(),
+            "warm {} vs cold {}",
+            c_warm.get(),
+            c_cold.get()
+        );
+        assert_eq!(cache.n_rows_seen, full.x.n);
+    }
+
+    #[test]
+    fn refresh_split_rebuilds_features_whose_range_drifted() {
+        use crate::util::testkit;
+        let base = testkit::clusterable(2_000, 6, 2, 6.0, 67);
+        // One appended row escapes feature 2's range; the rest stay in.
+        let (mut ax, ay) = testkit::append_within(&base.x, Some(&base.y), 40, 67);
+        let (_, hi) = crate::store::DatasetView::col_range(&base.x, 2);
+        ax.row_mut(0)[2] = hi + 25.0;
+        let mut full_rows: Vec<Vec<f32>> = (0..base.x.n).map(|i| base.x.row(i).to_vec()).collect();
+        full_rows.extend((0..ax.n).map(|i| ax.row(i).to_vec()));
+        let full = LabeledDataset {
+            x: crate::data::Matrix::from_rows(full_rows).unwrap(),
+            y: base.y.iter().chain(&ay).copied().collect(),
+            n_classes: 2,
+        };
+        let features: Vec<usize> = (0..6).collect();
+        let base_rows: Vec<usize> = (0..base.x.n).collect();
+        let all_rows: Vec<usize> = (0..full.x.n).collect();
+        let new_rows: Vec<usize> = (base.x.n..full.x.n).collect();
+
+        let c_prev = OpCounter::new();
+        let (_, mut cache) =
+            solve_exact_cached(&ctx_for(&base, &base_rows, &features, &c_prev, 8)).unwrap();
+        let c_cold = OpCounter::new();
+        let cold = solve_exactly(&ctx_for(&full, &all_rows, &features, &c_cold, 8)).unwrap();
+        let c_warm = OpCounter::new();
+        let warm =
+            refresh_split(&mut cache, &TrainSet::of(&full), &all_rows, &new_rows, &c_warm)
+                .unwrap();
+        assert_eq!(
+            (warm.feature, warm.threshold.to_bits(), warm.child_impurity.to_bits()),
+            (cold.feature, cold.threshold.to_bits(), cold.child_impurity.to_bits()),
+            "rebuilt feature must match the cold edges exactly"
+        );
+        // One feature refilled in full (n_all), five incremental (n_new).
+        assert_eq!(c_warm.get(), full.x.n as u64 + 5 * new_rows.len() as u64);
+        assert!(c_warm.get() * 2 < c_cold.get());
     }
 
     #[test]

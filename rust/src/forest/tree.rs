@@ -140,6 +140,43 @@ impl DecisionTree {
         }
     }
 
+    /// Absorb one labeled example into the trained tree without changing
+    /// its structure: route it to a leaf and fold it into every node's
+    /// count and the leaf's value (class distribution / running mean) —
+    /// the per-tree building block of [`super::ensemble::Forest::refresh`].
+    /// Costs one histogram-insertion on `counter` (the same budget metric
+    /// training pays per point per feature).
+    pub fn absorb_row(&mut self, x: &[f32], y: f32, counter: &OpCounter) {
+        counter.incr();
+        let regression = self.n_classes == 0;
+        let mut node = &mut self.root;
+        loop {
+            match node {
+                Node::Leaf { value, n } => {
+                    let prev = *n as f32;
+                    if regression {
+                        value[0] = (value[0] * prev + y) / (prev + 1.0);
+                    } else {
+                        // Convert probabilities back to counts, add, renormalize.
+                        for (c, p) in value.iter_mut().enumerate() {
+                            let mut count = *p * prev;
+                            if c == y as usize {
+                                count += 1.0;
+                            }
+                            *p = count / (prev + 1.0);
+                        }
+                    }
+                    *n += 1;
+                    return;
+                }
+                Node::Internal { feature, threshold, n, left, right, .. } => {
+                    *n += 1;
+                    node = if x[*feature] < *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
     /// Accumulate impurity-decrease MDI contributions into `acc`.
     pub fn accumulate_mdi(&self, acc: &mut [f64]) {
         fn walk(node: &Node, acc: &mut [f64], n_root: f64) {
@@ -411,6 +448,41 @@ mod tests {
         let tree = DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
         assert!(tree.nodes_split <= 1, "budget must stop after ~1 exact split");
         assert!(c.get() <= 2000 * 8 + 1);
+    }
+
+    #[test]
+    fn absorb_row_updates_leaf_and_path_counts() {
+        let ds = make_classification(800, 6, 3, 2, 2.5, 27);
+        let rows: Vec<usize> = (0..ds.x.n).collect();
+        let pool: Vec<usize> = (0..ds.x.d).collect();
+        let ranges = feature_ranges(&ds);
+        let c = OpCounter::new();
+        let b = Budget { counter: &c, limit: None };
+        let mut rng = Rng::new(3);
+        let mut tree =
+            DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let root_n_before = match &tree.root {
+            Node::Internal { n, .. } | Node::Leaf { n, .. } => *n,
+        };
+        let x = ds.x.row(0).to_vec();
+        let y = ds.y[0];
+        let before = tree.predict_row(&x)[y as usize];
+        let cc = OpCounter::new();
+        for _ in 0..50 {
+            tree.absorb_row(&x, y, &cc);
+        }
+        assert_eq!(cc.get(), 50);
+        let after = tree.predict_row(&x)[y as usize];
+        assert!(after >= before, "absorbing label {y} must not lower its probability");
+        assert!(after > 0.9, "50 repeats dominate the leaf: {after}");
+        let root_n_after = match &tree.root {
+            Node::Internal { n, .. } | Node::Leaf { n, .. } => *n,
+        };
+        assert_eq!(root_n_after, root_n_before + 50);
+        // Leaf probabilities stay normalized.
+        let probs = tree.predict_row(&x);
+        let total: f32 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-4, "probs sum {total}");
     }
 
     #[test]

@@ -61,41 +61,120 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
     let mut medoids: Vec<usize> = Vec::with_capacity(k);
     let mut d1 = vec![f64::INFINITY; n];
     for step in 0..k {
-        let candidates: Vec<usize> = (0..n).filter(|x| !medoids.contains(x)).collect();
-        let first = step == 0;
-        let mut arms = BuildArms {
-            ps,
-            d1: &d1,
-            candidates: &candidates,
-            first,
-            stats: ArmStats::new(candidates.len()),
-        };
-        let bcfg = BanditConfig {
-            delta: cfg.delta_scale / candidates.len() as f64,
-            batch_size: cfg.batch_size,
-            sampling: Sampling::Permutation,
-            keep: 1,
-            seed: cfg.km.seed ^ (0xB111D + step as u64),
-            threads: cfg.threads,
-        };
-        let r = successive_elimination(&mut arms, &bcfg);
-        stats.build_sigmas.push(
-            (0..candidates.len()).map(|a| arms.sigma(a)).collect(),
-        );
-        let m = candidates[r.best[0]];
-        medoids.push(m);
-        for j in 0..n {
-            let d = ps.dist(m, j);
-            if d < d1[j] {
-                d1[j] = d;
-            }
-        }
+        stats.build_sigmas.push(build_step(ps, cfg, &mut medoids, &mut d1, step));
     }
 
     // ---------------- SWAP ----------------
+    let swaps = swap_phase(ps, cfg, &mut medoids);
+    (finish(ps, medoids, swaps, before), stats)
+}
+
+/// Warm-started re-solve: adopt the previous solution's medoids as the
+/// starting point, skipping BUILD entirely when all of them survive into
+/// the current view (the ISSUE's "seed from the previous solution" — the
+/// medoids *are* the previous per-arm state worth keeping; the SWAP
+/// search re-verifies optimality against the changed data and only pays
+/// for what actually moved). Medoids whose rows were deleted are
+/// replaced by warm BUILD steps over the survivors' d₁ cache.
+///
+/// On stable data (appends that respect the cluster structure — the
+/// refresh fixture corpus) this converges to the same medoids as a cold
+/// [`bandit_pam`] on the same snapshot for a fraction of the distance
+/// evaluations; the acceptance tests assert both on [`crate::metrics::OpCounter`]s.
+pub fn bandit_pam_refresh<P: PointSet + ?Sized>(
+    ps: &P,
+    prev_medoids: &[usize],
+    cfg: &BanditPamConfig,
+) -> KmResult {
+    let before = ps.counter().get();
+    let n = ps.len();
+    let k = cfg.km.k;
+    assert!(k >= 1 && k <= n);
+
+    // Adopt the surviving previous medoids (in-range, de-duplicated).
+    let mut medoids: Vec<usize> = Vec::with_capacity(k);
+    for &m in prev_medoids {
+        if m < n && !medoids.contains(&m) && medoids.len() < k {
+            medoids.push(m);
+        }
+    }
+
+    // Replace lost medoids with warm BUILD steps (first = false: the d₁
+    // cache of the survivors already shapes the objective).
+    if medoids.len() < k {
+        let mut d1 = vec![f64::INFINITY; n];
+        for &m in &medoids {
+            for (j, slot) in d1.iter_mut().enumerate() {
+                let d = ps.dist(m, j);
+                if d < *slot {
+                    *slot = d;
+                }
+            }
+        }
+        for step in medoids.len()..k {
+            build_step(ps, cfg, &mut medoids, &mut d1, step);
+        }
+    }
+
+    let swaps = swap_phase(ps, cfg, &mut medoids);
+    finish(ps, medoids, swaps, before)
+}
+
+/// One BUILD step (Algorithm 2 over Eq. 2.5): pick the next medoid among
+/// all non-medoids, push it, fold it into the d₁ cache. Returns the
+/// per-candidate σ̂ snapshot (Fig. A.1 instrumentation).
+fn build_step<P: PointSet + ?Sized>(
+    ps: &P,
+    cfg: &BanditPamConfig,
+    medoids: &mut Vec<usize>,
+    d1: &mut [f64],
+    step: usize,
+) -> Vec<f64> {
+    let n = ps.len();
+    let candidates: Vec<usize> = (0..n).filter(|x| !medoids.contains(x)).collect();
+    let first = medoids.is_empty();
+    let mut arms = BuildArms {
+        ps,
+        d1: &*d1,
+        candidates: &candidates,
+        first,
+        stats: ArmStats::new(candidates.len()),
+    };
+    let bcfg = BanditConfig {
+        delta: cfg.delta_scale / candidates.len() as f64,
+        batch_size: cfg.batch_size,
+        sampling: Sampling::Permutation,
+        keep: 1,
+        seed: cfg.km.seed ^ (0xB111D + step as u64),
+        threads: cfg.threads,
+    };
+    let r = successive_elimination(&mut arms, &bcfg);
+    let sigmas = (0..candidates.len()).map(|a| arms.sigma(a)).collect();
+    let m = candidates[r.best[0]];
+    medoids.push(m);
+    for (j, slot) in d1.iter_mut().enumerate() {
+        let d = ps.dist(m, j);
+        if d < *slot {
+            *slot = d;
+        }
+    }
+    sigmas
+}
+
+/// The SWAP loop shared by the cold and warm entry points: repeat
+/// best-swap identification until no swap improves (PAM's convergence
+/// criterion), mutating `medoids` in place. Returns the number of swaps
+/// performed.
+fn swap_phase<P: PointSet + ?Sized>(
+    ps: &P,
+    cfg: &BanditPamConfig,
+    medoids: &mut [usize],
+) -> usize {
+    let n = ps.len();
+    let k = cfg.km.k;
     let mut swaps = 0usize;
     for it in 0..cfg.km.max_swaps {
-        let cache = MedoidCache::compute(ps, &medoids);
+        let cache = MedoidCache::compute(ps, medoids);
         let candidates: Vec<usize> = (0..n).filter(|x| !medoids.contains(x)).collect();
         let n_arms = candidates.len() * k;
         let mut arms = SwapArms {
@@ -126,21 +205,27 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
         medoids[mi] = candidates[xi];
         swaps += 1;
     }
+    swaps
+}
 
+/// Sort the medoids, compute the final loss, and assemble the result.
+fn finish<P: PointSet + ?Sized>(
+    ps: &P,
+    medoids: Vec<usize>,
+    swaps: usize,
+    before: u64,
+) -> KmResult {
     let mut sorted = medoids;
     sorted.sort_unstable();
     let cache = MedoidCache::compute(ps, &sorted);
     let dist_calls = ps.counter().get() - before;
-    (
-        KmResult {
-            loss: cache.loss(),
-            medoids: sorted,
-            swaps_performed: swaps,
-            dist_calls,
-            dist_calls_per_iter: dist_calls as f64 / (swaps + 1) as f64,
-        },
-        stats,
-    )
+    KmResult {
+        loss: cache.loss(),
+        medoids: sorted,
+        swaps_performed: swaps,
+        dist_calls,
+        dist_calls_per_iter: dist_calls as f64 / (swaps + 1) as f64,
+    }
 }
 
 /// BUILD arms (Eq. 2.5): one arm per candidate medoid x, reference pool =
@@ -530,6 +615,45 @@ mod tests {
             assert_eq!(run(false, threads), dense, "matrix threads={threads}");
             assert_eq!(run(true, threads), dense, "column store threads={threads}");
         }
+    }
+
+    #[test]
+    fn refresh_from_own_solution_is_a_cheap_fixed_point() {
+        // Refreshing from the cold solution on unchanged data must return
+        // the same medoids while skipping BUILD entirely.
+        let m = mnist_like_d(150, 20, 19);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let cfg = BanditPamConfig::new(3);
+        ps.counter().reset();
+        let cold = bandit_pam(&ps, &cfg);
+        let cold_calls = ps.counter().get();
+        ps.counter().reset();
+        let warm = bandit_pam_refresh(&ps, &cold.medoids, &cfg);
+        let warm_calls = ps.counter().get();
+        assert_eq!(warm.medoids, cold.medoids);
+        assert_eq!(warm.loss.to_bits(), cold.loss.to_bits());
+        assert_eq!(warm.swaps_performed, 0, "already at a local optimum");
+        assert!(
+            warm_calls * 2 < cold_calls,
+            "warm {warm_calls} should be < 50% of cold {cold_calls}"
+        );
+    }
+
+    #[test]
+    fn refresh_rebuilds_lost_medoids() {
+        // A deleted medoid (out-of-range index after remapping) is
+        // replaced via a warm BUILD step; the result still has k medoids
+        // and near-cold quality.
+        let m = mnist_like_d(120, 16, 23);
+        let ps = VecPointSet::new(m, Metric::L2);
+        let cfg = BanditPamConfig::new(3);
+        let cold = bandit_pam(&ps, &cfg);
+        // Drop one survivor, pass one out-of-range id and one duplicate.
+        let prev = vec![cold.medoids[0], cold.medoids[0], usize::MAX, cold.medoids[2]];
+        let warm = bandit_pam_refresh(&ps, &prev, &cfg);
+        assert_eq!(warm.medoids.len(), 3);
+        assert!(warm.medoids.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+        assert!(warm.loss <= cold.loss * 1.05, "warm {} vs cold {}", warm.loss, cold.loss);
     }
 
     #[test]

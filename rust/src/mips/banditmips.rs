@@ -108,6 +108,32 @@ pub fn bandit_mips_warm<V: DatasetView + ?Sized>(
     counter: &OpCounter,
     warm_coords: &[usize],
 ) -> MipsAnswer {
+    bandit_mips_seeded(atoms, q, cfg, counter, warm_coords, &[])
+}
+
+/// A warm-start prior for one arm, in the engine's minimized scale
+/// (`mean = −⟨v,q⟩/d` for an exactly-known atom): `pulls` virtual
+/// zero-variance observations seeded into the arm's
+/// [`ArmStats`] before elimination starts. The refresh path uses this to
+/// hand the previous solution's incumbents into a re-solve with already
+/// tight confidence intervals.
+#[derive(Clone, Copy, Debug)]
+pub struct WarmPrior {
+    pub arm: usize,
+    pub mean: f64,
+    pub pulls: u64,
+}
+
+/// [`bandit_mips_warm`] plus per-arm warm-start priors (see
+/// [`WarmPrior`]).
+pub fn bandit_mips_seeded<V: DatasetView + ?Sized>(
+    atoms: &V,
+    q: &[f32],
+    cfg: &BanditMipsConfig,
+    counter: &OpCounter,
+    warm_coords: &[usize],
+    priors: &[WarmPrior],
+) -> MipsAnswer {
     assert_eq!(atoms.n_cols(), q.len());
     let before = counter.get();
     let d = atoms.n_cols();
@@ -148,6 +174,12 @@ pub fn bandit_mips_warm<V: DatasetView + ?Sized>(
         fixed_sigma: cfg.sigma,
         exact_cache: vec![f64::NAN; n],
     };
+    for p in priors {
+        debug_assert!(p.arm < n);
+        // Zero-variance prior: σ̂ collapses to the floor, so the incumbent
+        // eliminates weaker arms from the first refresh round.
+        arms.stats.seed(p.arm, p.mean, 0.0, p.pulls);
+    }
 
     let sampling = match cfg.strategy {
         // β-weighted sampling needs i.i.d. draws for unbiasedness.

@@ -6,7 +6,9 @@
 //!   Greedy-MIPS, LSH-MIPS (asymmetric SimHash), PCA-MIPS, ip-NSW-style
 //!   graph search;
 //! * [`bucket`] — Bucket_AE norm-binned preprocessing (§C.4);
-//! * [`matching_pursuit`] — MP with a pluggable MIPS subroutine (§C.5).
+//! * [`matching_pursuit`] — MP with a pluggable MIPS subroutine (§C.5);
+//! * [`refresh`] — warm-started re-answering of a standing query after
+//!   the atom set grew (the live data plane's per-query refresh path).
 //!
 //! Cost metric: *coordinate-wise multiplications* (`sample complexity` in
 //! the thesis), counted on an [`crate::metrics::OpCounter`]. Query-time
@@ -17,6 +19,7 @@ pub mod banditmips;
 pub mod baselines;
 pub mod bucket;
 pub mod matching_pursuit;
+pub mod refresh;
 
 use crate::metrics::OpCounter;
 use crate::store::DatasetView;

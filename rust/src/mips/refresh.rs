@@ -1,0 +1,338 @@
+//! Warm-started BanditMIPS refresh: re-answer a standing query after the
+//! atom set grew, for a fraction of a cold solve's samples.
+//!
+//! The live data plane only ever *appends* atom rows (deletes are
+//! tombstones that remove rows from the logical index), so a previous
+//! answer's scores are still exact for the rows it named. A refresh
+//! therefore needs to look at **new** rows only:
+//!
+//! 1. **Carry the incumbents.** The previous top-k atoms and their exact
+//!    inner products transfer at zero sample cost — this is the
+//!    "seed from the previous solution" half of the warm start.
+//! 2. **Screen the appended rows with chunk stats.** Per-block upper
+//!    bounds on `⟨v, q⟩` ([`DatasetView::block_dot_bounds`], built from
+//!    the new chunks' [`crate::store::ChunkStats`] — no decode, no disk)
+//!    eliminate whole blocks that cannot beat the k-th incumbent.
+//! 3. **Resolve the survivors.** A handful of survivors are scored
+//!    exactly (`d` multiplications each — deterministic, so the refresh
+//!    answer matches a cold solve wherever the cold solve is correct);
+//!    a large survivor set instead runs the bandit engine restricted to
+//!    `incumbents ∪ survivors` ([`crate::store::RowSubsetView`]), with
+//!    the incumbents seeded into [`crate::bandit::ArmStats`] as
+//!    zero-variance priors ([`WarmPrior`]) so their confidence intervals
+//!    start collapsed.
+//!
+//! The acceptance contract (asserted in `tests/live.rs` over the
+//! `testkit::refresh_corpus` fixtures, trend recorded in
+//! `BENCH_live.json`): same top-k atoms as a cold solve on the same
+//! snapshot, at under 50% of the cold solve's `OpCounter` samples.
+
+use crate::metrics::OpCounter;
+use crate::mips::banditmips::{
+    bandit_mips, bandit_mips_seeded, BanditMipsConfig, MipsAnswer, WarmPrior,
+};
+use crate::store::{DatasetView, RowSubsetView};
+
+/// A standing query's answer state: what [`refresh`] warm-starts from.
+#[derive(Clone, Debug)]
+pub struct MipsModel {
+    /// Dataset version this model was computed at.
+    pub version: u64,
+    /// Row count at that version (rows `>= n_rows` in a later view are
+    /// the appended ones).
+    pub n_rows: usize,
+    /// `(row, exact ⟨v_row, q⟩)`, best first — the incumbents.
+    pub top: Vec<(usize, f64)>,
+}
+
+impl MipsModel {
+    /// Remap the incumbent rows into a newer version (e.g. through
+    /// [`crate::store::LiveSnapshot::locate`] after tombstone deletes).
+    /// Returns `None` when any incumbent no longer exists — the caller
+    /// should fall back to a cold [`solve_model`], since a vanished
+    /// incumbent means the true top-k may include an arbitrary old row.
+    pub fn remap(&self, n_rows: usize, f: impl Fn(usize) -> Option<usize>) -> Option<MipsModel> {
+        let mut top = Vec::with_capacity(self.top.len());
+        for &(row, ip) in &self.top {
+            top.push((f(row)?, ip));
+        }
+        Some(MipsModel { version: self.version, n_rows, top })
+    }
+}
+
+/// Exact-score cap: at most this many screened survivors are resolved by
+/// direct inner products; beyond it the restricted bandit runs instead.
+fn exact_cap(k: usize) -> usize {
+    (4 * k).max(64)
+}
+
+/// Cold solve + model capture: run BanditMIPS, then pin the returned
+/// atoms' *exact* inner products (`k·d` metered multiplications) so the
+/// next [`refresh`] can carry them for free.
+pub fn solve_model<V: DatasetView + ?Sized>(
+    atoms: &V,
+    q: &[f32],
+    cfg: &BanditMipsConfig,
+    counter: &OpCounter,
+) -> (MipsAnswer, MipsModel) {
+    let answer = bandit_mips(atoms, q, cfg, counter);
+    let d = atoms.n_cols() as u64;
+    let mut top: Vec<(usize, f64)> = answer
+        .atoms
+        .iter()
+        .map(|&a| {
+            counter.add(d);
+            (a, atoms.dot(a, q))
+        })
+        .collect();
+    sort_best_first(&mut top);
+    let model =
+        MipsModel { version: atoms.version(), n_rows: atoms.n_rows(), top };
+    (answer, model)
+}
+
+/// Warm-started re-answer against a newer view (see module docs). Falls
+/// back to a cold [`solve_model`] when the warm start does not apply:
+/// the view shrank (un-remapped deletes), the version went backwards, or
+/// the previous model holds fewer than `cfg.k` incumbents.
+pub fn refresh<V: DatasetView + ?Sized>(
+    atoms: &V,
+    q: &[f32],
+    prev: &MipsModel,
+    cfg: &BanditMipsConfig,
+    counter: &OpCounter,
+) -> (MipsAnswer, MipsModel) {
+    assert_eq!(atoms.n_cols(), q.len());
+    let n = atoms.n_rows();
+    let d = atoms.n_cols() as u64;
+    // Incumbents must lie strictly inside the model's own row count —
+    // otherwise a stale `n_rows` would let the same row be carried as an
+    // incumbent AND re-scored as an appended survivor (duplicate atoms).
+    let warm_applies = prev.top.len() >= cfg.k
+        && prev.n_rows <= n
+        && atoms.version() >= prev.version
+        && prev.top.iter().all(|&(r, _)| r < prev.n_rows);
+    if !warm_applies {
+        return solve_model(atoms, q, cfg, counter);
+    }
+    let before = counter.get();
+
+    // 1. Incumbents carry over at zero cost (appended rows never change
+    //    existing rows' scores).
+    let mut cands: Vec<(usize, f64)> = prev.top.clone();
+    let kth = cands
+        .iter()
+        .map(|&(_, ip)| ip)
+        .fold(f64::INFINITY, f64::min);
+
+    // 2. Screen the appended rows block-by-block from chunk stats.
+    let appended = prev.n_rows..n;
+    let mut survivors: Vec<usize> = Vec::new();
+    match atoms.block_dot_bounds(q, appended.clone()) {
+        Some(bounds) => {
+            for (range, ub) in bounds {
+                // Keep on ties: the merge below breaks ties exactly like
+                // a cold solve's stable sort (lower row index wins).
+                if ub >= kth {
+                    survivors.extend(range);
+                }
+            }
+        }
+        None => survivors.extend(appended),
+    }
+
+    // 3. Resolve survivors.
+    if survivors.len() <= exact_cap(cfg.k) {
+        // Deterministic path: exact inner products for the few rows the
+        // screen could not dismiss.
+        for &r in &survivors {
+            counter.add(d);
+            cands.push((r, atoms.dot(r, q)));
+        }
+        sort_best_first(&mut cands);
+        cands.truncate(cfg.k);
+        let answer = MipsAnswer {
+            atoms: cands.iter().map(|&(r, _)| r).collect(),
+            samples: counter.get() - before,
+        };
+        let model = MipsModel { version: atoms.version(), n_rows: n, top: cands };
+        (answer, model)
+    } else {
+        // Large append: restricted bandit over incumbents ∪ survivors,
+        // incumbents seeded as zero-variance priors (their estimate is
+        // already exact, so they eliminate weak newcomers immediately).
+        let mut rows: Vec<usize> = cands.iter().map(|&(r, _)| r).collect();
+        rows.extend(survivors);
+        let sub = RowSubsetView::new(atoms, rows);
+        let priors: Vec<WarmPrior> = cands
+            .iter()
+            .enumerate()
+            .map(|(arm, &(_, ip))| WarmPrior { arm, mean: -(ip / d as f64), pulls: d })
+            .collect();
+        let sub_answer = bandit_mips_seeded(&sub, q, cfg, counter, &[], &priors);
+        let mut top: Vec<(usize, f64)> = sub_answer
+            .atoms
+            .iter()
+            .map(|&a| {
+                let r = sub.base_row(a);
+                match cands.iter().find(|&&(cr, _)| cr == r) {
+                    Some(&(_, ip)) => (r, ip), // incumbent: score known
+                    None => {
+                        counter.add(d);
+                        (r, atoms.dot(r, q))
+                    }
+                }
+            })
+            .collect();
+        sort_best_first(&mut top);
+        top.truncate(cfg.k);
+        let answer = MipsAnswer {
+            atoms: top.iter().map(|&(r, _)| r).collect(),
+            samples: counter.get() - before,
+        };
+        let model = MipsModel { version: atoms.version(), n_rows: n, top };
+        (answer, model)
+    }
+}
+
+/// Sort by inner product descending, ties by row index ascending — the
+/// same order a cold solve's stable estimate sort produces.
+fn sort_best_first(top: &mut [(usize, f64)]) {
+    top.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Matrix;
+    use crate::mips::naive_mips;
+    use crate::store::{ColumnStore, StoreOptions};
+    use crate::util::testkit;
+
+    fn stack(a: &Matrix, b: &Matrix) -> Matrix {
+        testkit::stack(&[a, b])
+    }
+
+    fn cfg(k: usize) -> BanditMipsConfig {
+        BanditMipsConfig { k, batch_size: 32, ..Default::default() }
+    }
+
+    #[test]
+    fn refresh_after_append_matches_cold_for_fewer_samples() {
+        let base = testkit::gaussian(300, 64, 41);
+        let (app, _) = testkit::append_within(&base, None, 12, 41);
+        let full = stack(&base, &app);
+        let opts = StoreOptions { rows_per_chunk: 64, ..Default::default() };
+        let cs_base = ColumnStore::from_matrix(&base, &opts).unwrap();
+        let cs_full = ColumnStore::from_matrix(&full, &opts).unwrap();
+        let q: Vec<f32> = base.row(17).iter().map(|&v| v * 1.5).collect();
+
+        let c_prev = OpCounter::new();
+        let (_, model) = solve_model(&cs_base, &q, &cfg(3), &c_prev);
+        assert_eq!(model.top.len(), 3);
+        assert_eq!(model.n_rows, 300);
+
+        let c_cold = OpCounter::new();
+        let (cold, _) = solve_model(&cs_full, &q, &cfg(3), &c_cold);
+        let c_warm = OpCounter::new();
+        let (warm, warm_model) = refresh(&cs_full, &q, &model, &cfg(3), &c_warm);
+        assert_eq!(warm.atoms, cold.atoms, "warm refresh must match the cold answer");
+        assert!(
+            c_warm.get() * 2 < c_cold.get(),
+            "warm {} vs cold {}",
+            c_warm.get(),
+            c_cold.get()
+        );
+        assert_eq!(warm_model.n_rows, 312);
+        // Exact scores in the model agree with direct dots.
+        for &(r, ip) in &warm_model.top {
+            assert_eq!(ip.to_bits(), cs_full.dot(r, &q).to_bits());
+        }
+    }
+
+    #[test]
+    fn screening_skips_hopeless_appended_blocks_entirely() {
+        // Appended atoms are tiny everywhere: chunk stats bound them far
+        // below the incumbents, so the refresh spends zero samples.
+        let base = testkit::gaussian(128, 16, 43);
+        let mut app = Matrix::zeros(64, 16);
+        for v in app.data.iter_mut() {
+            *v = 1e-4;
+        }
+        let full = stack(&base, &app);
+        let opts = StoreOptions { rows_per_chunk: 32, ..Default::default() };
+        let cs_full = ColumnStore::from_matrix(&full, &opts).unwrap();
+        let cs_base = ColumnStore::from_matrix(&base, &opts).unwrap();
+        let q: Vec<f32> = base.row(0).to_vec();
+
+        let c = OpCounter::new();
+        let (_, model) = solve_model(&cs_base, &q, &cfg(2), &c);
+        let c_warm = OpCounter::new();
+        let (warm, _) = refresh(&cs_full, &q, &model, &cfg(2), &c_warm);
+        assert_eq!(c_warm.get(), 0, "screened refresh must be free");
+        assert_eq!(warm.atoms, model.top.iter().map(|&(r, _)| r).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn large_append_takes_the_seeded_bandit_path_and_finds_new_winner() {
+        // More appended rows than the exact cap, and the true argmax is in
+        // the appended region: the restricted seeded bandit must find it.
+        let base = testkit::gaussian(100, 32, 47);
+        let mut app = testkit::gaussian(200, 32, 48);
+        let q: Vec<f32> = base.row(3).iter().map(|&v| v * 2.0).collect();
+        // Plant a dominating atom mid-append.
+        for (j, v) in app.row_mut(130).iter_mut().enumerate() {
+            *v = q[j] * 5.0;
+        }
+        let full = stack(&base, &app);
+        // Dense matrix: no chunk stats → no screening → all 200 survive.
+        let c = OpCounter::new();
+        let (_, model) = solve_model(&base, &q, &cfg(1), &c);
+        let c_warm = OpCounter::new();
+        let (warm, warm_model) = refresh(&full, &q, &model, &cfg(1), &c_warm);
+        assert_eq!(warm.atoms[0], 230, "planted winner lives at base 100 + 130");
+        assert_eq!(warm_model.top[0].0, 230);
+        let truth = naive_mips(&full, &q, 1, &OpCounter::new());
+        assert_eq!(warm.atoms[0], truth[0]);
+    }
+
+    #[test]
+    fn inapplicable_warm_start_falls_back_to_cold() {
+        let m = testkit::gaussian(60, 8, 51);
+        let q: Vec<f32> = m.row(5).to_vec();
+        let c = OpCounter::new();
+        // Model claims more rows than the view has (an un-remapped
+        // delete): must cold-solve, not index out of bounds.
+        let bogus = MipsModel { version: 0, n_rows: 80, top: vec![(70, 1.0)] };
+        let (ans, model) = refresh(&m, &q, &bogus, &cfg(2), &c);
+        let truth = naive_mips(&m, &q, 2, &OpCounter::new());
+        assert_eq!(ans.atoms[0], truth[0]);
+        assert_eq!(model.n_rows, 60);
+        // Too few incumbents for k also falls back.
+        let thin = MipsModel { version: 0, n_rows: 60, top: vec![(5, 1.0)] };
+        let (ans2, _) = refresh(&m, &q, &thin, &cfg(2), &c);
+        assert_eq!(ans2.atoms[0], truth[0]);
+        // An incumbent at or past the model's own n_rows would be both
+        // carried and re-scored as "appended" — must fall back, and must
+        // never return duplicate atoms.
+        let stale = MipsModel { version: 0, n_rows: 40, top: vec![(45, 9.0), (3, 1.0)] };
+        let (ans3, _) = refresh(&m, &q, &stale, &cfg(2), &c);
+        assert_eq!(ans3.atoms, truth);
+        let mut dedup = ans3.atoms.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ans3.atoms.len());
+    }
+
+    #[test]
+    fn remap_drops_models_with_lost_incumbents() {
+        let model = MipsModel { version: 3, n_rows: 50, top: vec![(4, 2.0), (9, 1.5)] };
+        let ok = model.remap(49, |r| if r == 4 { Some(3) } else { Some(8) }).unwrap();
+        assert_eq!(ok.top, vec![(3, 2.0), (8, 1.5)]);
+        assert_eq!(ok.n_rows, 49);
+        assert!(model.remap(49, |r| (r != 9).then_some(r)).is_none());
+    }
+}

@@ -300,6 +300,148 @@ mod tests {
     }
 
     #[test]
+    fn f16_edge_values_round_trip_by_class() {
+        // ±inf stay ±inf; NaN stays NaN; signed zeros keep their sign.
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(-0.0)).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f16_to_f32(f32_to_f16(0.0)).to_bits(), 0.0f32.to_bits());
+        // f16-representable subnormals round-trip exactly…
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(min_sub)), min_sub);
+        assert_eq!(f16_to_f32(f32_to_f16(-min_sub)), -min_sub);
+        // …while f32 denormals far below f16 range flush to signed zero.
+        let tiny = f32::from_bits(1); // smallest positive f32 subnormal
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-tiny)).to_bits(), (-0.0f32).to_bits());
+        // Saturation at the f16 ceiling.
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(65520.0)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e30)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn i8_non_finite_chunks_degrade_to_zero_not_panic() {
+        // Pinned behavior: a chunk containing any non-finite value gets a
+        // degenerate header and decodes to all zeros (the caller sees the
+        // chunk stats and can quarantine); NaNs inside an otherwise
+        // finite chunk quantize to the chunk minimum.
+        for poison in [f32::INFINITY, f32::NEG_INFINITY] {
+            let vals = vec![1.0f32, poison, 3.0];
+            let mut bytes = Vec::new();
+            Codec::I8.encode(&vals, &mut bytes);
+            let mut back = Vec::new();
+            Codec::I8.decode(&bytes, vals.len(), &mut back);
+            assert_eq!(back, vec![0.0; 3], "poison {poison}");
+        }
+        let vals = vec![f32::NAN; 4];
+        let mut bytes = Vec::new();
+        Codec::I8.encode(&vals, &mut bytes);
+        let mut back = Vec::new();
+        Codec::I8.decode(&bytes, vals.len(), &mut back);
+        assert_eq!(back, vec![0.0; 4], "all-NaN chunk");
+        let vals = vec![2.0f32, f32::NAN, 6.0];
+        let mut bytes = Vec::new();
+        Codec::I8.encode(&vals, &mut bytes);
+        let mut back = Vec::new();
+        Codec::I8.decode(&bytes, vals.len(), &mut back);
+        assert_eq!(back[1], 2.0, "NaN lands on the chunk min");
+        assert!((back[0] - 2.0).abs() < 0.02 && (back[2] - 6.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn prop_codecs_are_total_and_bounded_on_edge_value_mixtures() {
+        // Fuzz chunks mixing normals, denormals, signed zeros, extremes,
+        // and per-chunk constants: encode/decode must never panic, must
+        // emit exactly encoded_len bytes, and (for finite chunks) must
+        // stay within the documented error bound of the original.
+        let edge_pool: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            f32::from_bits(1),          // min positive subnormal
+            -f32::from_bits(1),
+            f32::from_bits(0x007f_ffff), // max subnormal
+            f32::MIN_POSITIVE,
+            2.0f32.powi(-24),
+            65504.0,
+            -65504.0,
+            1.0,
+            -1.0,
+            3.5e-5,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ];
+        crate::util::proptest::prop_check(
+            0xC0DEC,
+            60,
+            |r| {
+                let len = 1 + r.below(120);
+                let constant = r.below(4) == 0;
+                let base = edge_pool[r.below(edge_pool.len())];
+                let vals: Vec<f32> = (0..len)
+                    .map(|_| {
+                        if constant {
+                            base
+                        } else if r.below(3) == 0 {
+                            edge_pool[r.below(edge_pool.len())]
+                        } else {
+                            (r.normal() * 10.0f64.powi(r.below(7) as i32 - 3)) as f32
+                        }
+                    })
+                    .collect();
+                (vals, r.below(2))
+            },
+            |(vals, which)| {
+                let codec = if *which == 0 { Codec::F16 } else { Codec::I8 };
+                let mut bytes = Vec::new();
+                codec.encode(vals, &mut bytes);
+                if bytes.len() != codec.encoded_len(vals.len()) {
+                    return Err(format!("{codec:?}: {} bytes", bytes.len()));
+                }
+                let mut back = Vec::new();
+                codec.decode(&bytes, vals.len(), &mut back);
+                if back.len() != vals.len() {
+                    return Err("length drift".into());
+                }
+                let (mut min, mut max) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &v in vals.iter() {
+                    min = min.min(v);
+                    max = max.max(v);
+                }
+                let bound = codec.error_bound(min, max);
+                for (&v, &b) in vals.iter().zip(&back) {
+                    if !v.is_finite() {
+                        continue; // class behavior covered by the pinned tests
+                    }
+                    if codec == Codec::I8 && !(min.is_finite() && max.is_finite()) {
+                        continue; // degenerate chunk: decodes to zeros
+                    }
+                    let err = (v as f64 - b as f64).abs();
+                    // f16 subnormal flush adds one min-subnormal of slack.
+                    let slack = bound * (1.0 + 1e-4) + 6.0e-8 + 1e-12;
+                    if err > slack {
+                        return Err(format!("{codec:?}: {v} -> {b}, err {err} > {slack}"));
+                    }
+                }
+                // A constant finite chunk must decode exactly under I8.
+                if *which == 1
+                    && min.is_finite()
+                    && min.to_bits() == max.to_bits()
+                {
+                    for &b in &back {
+                        if b.to_bits() != min.to_bits() {
+                            return Err(format!("constant chunk drift: {min} -> {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn codec_parse_names() {
         assert_eq!(Codec::parse("f32").unwrap(), Codec::F32);
         assert_eq!(Codec::parse("f16").unwrap(), Codec::F16);

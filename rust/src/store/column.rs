@@ -427,6 +427,36 @@ impl DatasetView for ColumnStore {
         }
         (lo, hi)
     }
+
+    fn block_dot_bounds(
+        &self,
+        q: &[f32],
+        rows: std::ops::Range<usize>,
+    ) -> Option<Vec<(std::ops::Range<usize>, f64)>> {
+        debug_assert_eq!(q.len(), self.d);
+        let end = rows.end.min(self.n);
+        if rows.start >= end {
+            return Some(Vec::new());
+        }
+        let b0 = rows.start / self.rows_per_chunk;
+        let b1 = (end - 1) / self.rows_per_chunk;
+        let mut out = Vec::with_capacity(b1 - b0 + 1);
+        for b in b0..=b1 {
+            let lo = (b * self.rows_per_chunk).max(rows.start);
+            let hi = ((b + 1) * self.rows_per_chunk).min(end);
+            let mut ub = 0.0f64;
+            for (c, &qc) in q.iter().enumerate() {
+                let s = &self.stats[c * self.n_blocks + b];
+                let qc = qc as f64;
+                // max over v in [min, max] of qc·v, plus the codec's decode
+                // error so the bound stays sound for lossy chunks.
+                ub += (qc * s.min as f64).max(qc * s.max as f64)
+                    + qc.abs() * self.codec.error_bound(s.min, s.max);
+            }
+            out.push((lo..hi, ub));
+        }
+        Some(out)
+    }
 }
 
 #[cfg(test)]
@@ -434,16 +464,8 @@ mod tests {
     use super::*;
     use crate::data::Matrix;
     use crate::util::proptest::prop_check;
-    use crate::util::rng::Rng;
-
-    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::new(seed);
-        let mut m = Matrix::zeros(n, d);
-        for v in m.data.iter_mut() {
-            *v = (rng.normal() * 10.0) as f32;
-        }
-        m
-    }
+    // Shared fixture corpus (kills the per-suite copy-pasted generators).
+    use crate::util::testkit::gaussian as random_matrix;
 
     #[test]
     fn prop_f32_store_round_trips_any_matrix_bit_identically() {

@@ -8,6 +8,14 @@
 //! `d` column chunks is encoded and either kept (in-RAM backings) or
 //! appended straight to the spill file, so arbitrarily large datasets
 //! ingest in `O(rows_per_chunk · d)` resident memory when spilling.
+//!
+//! A builder can seal more than once: [`StoreBuilder::commit_batch`]
+//! turns the rows pushed since the previous commit into an immutable
+//! [`ColumnStore`] *segment* and resets for the next batch (fresh spill
+//! file per segment when spilling), while the reservoir preview keeps
+//! sampling uniformly across the whole stream. This is the primitive the
+//! versioned [`crate::store::LiveStore`] builds its append-only segment
+//! log from; [`StoreBuilder::finalize`] stays the one-shot form.
 
 use std::sync::Arc;
 
@@ -22,8 +30,11 @@ pub struct StoreBuilder {
     opts: StoreOptions,
     d: usize,
     rows_per_chunk: usize,
-    /// Rows ingested so far.
+    /// Rows in the current (uncommitted) segment.
     n: usize,
+    /// Rows seen across the whole stream (reservoir denominator; never
+    /// reset by [`StoreBuilder::commit_batch`]).
+    seen: usize,
     /// Row-major staging block, at most `rows_per_chunk` rows.
     staging: Vec<f32>,
     staged_rows: usize,
@@ -50,15 +61,16 @@ impl StoreBuilder {
             crate::bail!("StoreBuilder: row width d must be > 0");
         }
         let rows_per_chunk = opts.chunk_rows();
-        let writer = match &opts.spill_dir {
-            Some(dir) => Some(SpillWriter::create(dir)?),
-            None => None,
-        };
+        // The spill writer is created lazily at first flush (and re-created
+        // per segment after a commit), so a builder that never stages a
+        // block never touches the filesystem.
+        let writer = None;
         let rng = Rng::new(opts.seed);
         Ok(StoreBuilder {
             d,
             rows_per_chunk,
             n: 0,
+            seen: 0,
             staging: Vec::with_capacity(rows_per_chunk * d),
             staged_rows: 0,
             ram_blocks: Vec::new(),
@@ -72,13 +84,18 @@ impl StoreBuilder {
         })
     }
 
-    /// Rows ingested so far.
+    /// Rows in the current (uncommitted) segment.
     pub fn len(&self) -> usize {
         self.n
     }
 
     pub fn is_empty(&self) -> bool {
         self.n == 0
+    }
+
+    /// Rows seen across the whole stream (across every committed segment).
+    pub fn seen(&self) -> usize {
+        self.seen
     }
 
     /// The reservoir preview of rows seen so far (uniform without
@@ -94,18 +111,18 @@ impl StoreBuilder {
             crate::bail!(
                 "ragged row: got {} values at row {}, expected {}",
                 row.len(),
-                self.n,
+                self.seen,
                 self.d
             );
         }
         // Reservoir (algorithm R): the i-th row replaces slot j < cap
-        // with probability cap/(i+1).
+        // with probability cap/(i+1), i counted over the whole stream.
         let cap = self.opts.preview_rows;
         if cap > 0 {
             if self.preview.len() < cap {
                 self.preview.push(row.to_vec());
             } else {
-                let j = self.rng.below(self.n + 1);
+                let j = self.rng.below(self.seen + 1);
                 if j < cap {
                     self.preview[j] = row.to_vec();
                 }
@@ -114,6 +131,7 @@ impl StoreBuilder {
         self.staging.extend_from_slice(row);
         self.staged_rows += 1;
         self.n += 1;
+        self.seen += 1;
         if self.staged_rows == self.rows_per_chunk {
             self.flush_block()?;
         }
@@ -136,6 +154,11 @@ impl StoreBuilder {
         let rows = self.staged_rows;
         if rows == 0 {
             return Ok(());
+        }
+        if self.writer.is_none() {
+            if let Some(dir) = &self.opts.spill_dir {
+                self.writer = Some(SpillWriter::create(dir)?);
+            }
         }
         // F32 in RAM is the identity codec: keep values decoded and skip
         // the bytes round-trip entirely.
@@ -172,8 +195,12 @@ impl StoreBuilder {
         Ok(())
     }
 
-    /// Seal the builder into a [`ColumnStore`].
-    pub fn finalize(mut self) -> Result<ColumnStore> {
+    /// Seal the rows pushed since the last commit into an immutable
+    /// [`ColumnStore`] segment and reset for the next batch. The segment
+    /// carries a clone of the stream-wide reservoir preview as of this
+    /// commit; when spilling, each segment gets its own spill file (the
+    /// sealed one is owned — and deleted on drop — by the segment).
+    pub fn commit_batch(&mut self) -> Result<ColumnStore> {
         self.flush_block()?;
         let n = self.n;
         let d = self.d;
@@ -181,14 +208,17 @@ impl StoreBuilder {
 
         // Re-key stats from (block, col) ingest order to the store's
         // (col, block) chunk-id order.
+        let stats_blocks = std::mem::take(&mut self.stats_blocks);
         let mut stats = Vec::with_capacity(d * n_blocks);
         for c in 0..d {
             for b in 0..n_blocks {
-                stats.push(self.stats_blocks[b][c]);
+                stats.push(stats_blocks[b][c]);
             }
         }
 
-        let backing = match self.writer {
+        // Detach the current backing; the next segment's spill writer (if
+        // any) is created lazily at its first flush.
+        let backing = match self.writer.take() {
             Some(w) => {
                 // Chunk id -> write-order index (block-major ingest).
                 let mut reorder = Vec::with_capacity(d * n_blocks);
@@ -204,24 +234,27 @@ impl StoreBuilder {
                     // Lossless fast path: chunks were kept decoded at
                     // flush time — re-key to (col, block) id order,
                     // lock-free reads.
+                    let decoded = std::mem::take(&mut self.decoded_blocks);
                     let mut by_id: Vec<Arc<Vec<f32>>> = Vec::with_capacity(d * n_blocks);
                     for c in 0..d {
                         for b in 0..n_blocks {
-                            by_id.push(self.decoded_blocks[b][c].clone());
+                            by_id.push(decoded[b][c].clone());
                         }
                     }
                     Backing::Decoded(by_id)
                 } else {
+                    let mut ram = std::mem::take(&mut self.ram_blocks);
                     let mut by_id: Vec<Vec<u8>> = Vec::with_capacity(d * n_blocks);
                     for c in 0..d {
                         for b in 0..n_blocks {
-                            by_id.push(std::mem::take(&mut self.ram_blocks[b][c]));
+                            by_id.push(std::mem::take(&mut ram[b][c]));
                         }
                     }
                     Backing::Encoded(by_id)
                 }
             }
         };
+        self.n = 0;
 
         Ok(ColumnStore::assemble(
             n,
@@ -231,8 +264,14 @@ impl StoreBuilder {
             stats,
             backing,
             self.opts.budget_bytes,
-            self.preview,
+            self.preview.clone(),
         ))
+    }
+
+    /// Seal the builder into a [`ColumnStore`] (one-shot form of
+    /// [`StoreBuilder::commit_batch`]).
+    pub fn finalize(mut self) -> Result<ColumnStore> {
+        self.commit_batch()
     }
 }
 
@@ -241,15 +280,8 @@ mod tests {
     use super::*;
     use crate::data::Matrix;
     use crate::store::DatasetView;
-
-    fn demo_matrix(n: usize, d: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::new(seed);
-        let mut m = Matrix::zeros(n, d);
-        for v in m.data.iter_mut() {
-            *v = rng.f32() * 100.0 - 50.0;
-        }
-        m
-    }
+    // Shared fixture corpus (kills the per-suite copy-pasted generators).
+    use crate::util::testkit::uniform as demo_matrix;
 
     #[test]
     fn incremental_pushes_match_from_matrix() {
@@ -307,6 +339,58 @@ mod tests {
         // Preview survives finalize, for warm starts downstream.
         let cs = build().finalize().unwrap();
         assert_eq!(cs.preview().len(), 16);
+    }
+
+    #[test]
+    fn commit_batch_seals_segments_that_tile_the_stream() {
+        let m = demo_matrix(230, 5, 17);
+        let opts = StoreOptions { rows_per_chunk: 32, ..Default::default() };
+        let mut b = StoreBuilder::new(5, opts).unwrap();
+        let cuts = [0usize, 90, 91, 230]; // uneven, incl. a 1-row segment
+        let mut segments = Vec::new();
+        for w in cuts.windows(2) {
+            for i in w[0]..w[1] {
+                b.push_row(m.row(i)).unwrap();
+            }
+            assert_eq!(b.len(), w[1] - w[0]);
+            segments.push(b.commit_batch().unwrap());
+            assert_eq!(b.len(), 0, "commit resets the segment row count");
+        }
+        assert_eq!(b.seen(), 230);
+        // The segments exactly tile the source matrix, bit for bit.
+        let mut row = 0usize;
+        let mut buf = vec![0f32; 5];
+        for seg in &segments {
+            for i in 0..seg.n_rows() {
+                seg.read_row(i, &mut buf);
+                for (a, b) in m.row(row).iter().zip(&buf) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+                }
+                row += 1;
+            }
+        }
+        assert_eq!(row, 230);
+    }
+
+    #[test]
+    fn commit_batch_spilled_segments_get_their_own_files() {
+        let m = demo_matrix(200, 3, 23);
+        let opts = StoreOptions { rows_per_chunk: 32, ..Default::default() }
+            .spill_to_temp(4 * 1024);
+        let mut b = StoreBuilder::new(3, opts).unwrap();
+        b.push_batch(&m.take_rows(&(0..120).collect::<Vec<_>>())).unwrap();
+        let s1 = b.commit_batch().unwrap();
+        b.push_batch(&m.take_rows(&(120..200).collect::<Vec<_>>())).unwrap();
+        let s2 = b.commit_batch().unwrap();
+        assert!(s1.spilled() && s2.spilled());
+        // Dropping one segment must not disturb the other's file.
+        drop(s1);
+        let got = s2.to_matrix();
+        for (i, r) in (120..200).enumerate() {
+            for (a, b) in m.row(r).iter().zip(got.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

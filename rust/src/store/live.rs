@@ -1,0 +1,811 @@
+//! The live data plane: a versioned, mutable dataset behind cheap
+//! copy-on-write snapshots.
+//!
+//! A [`LiveStore`] is an append-only log of immutable
+//! [`ColumnStore`] *segments* (each sealed by
+//! [`crate::store::StoreBuilder::commit_batch`]) plus a copy-on-write row
+//! index. Every mutation — [`LiveStore::commit_batch`],
+//! [`LiveStore::delete_rows`], [`LiveStore::compact`] — publishes a new
+//! immutable [`LiveSnapshot`] and atomically swaps it in as the current
+//! version:
+//!
+//! * **Readers are never blocked by writers.** Pinning a snapshot is one
+//!   short mutex lock + `Arc` clone; every read after that touches only
+//!   immutable data. A pinned snapshot keeps serving version `N` while
+//!   ingest publishes `N+1`, `N+2`, …
+//! * **Readers never observe a half-applied batch.** A snapshot is built
+//!   completely before the swap, so any pin sees version `N` or `N+1` in
+//!   full, never a blend.
+//! * **Snapshots are cheap.** Segments are shared by `Arc` across
+//!   versions; an append copies only the per-segment offset table (and,
+//!   when tombstones exist, the row index). Data chunks are never copied.
+//! * **Stale snapshots retire through the existing machinery.** When the
+//!   last pin of an old version drops, any segment no longer referenced
+//!   (e.g. after [`LiveStore::compact`]) frees its decoded-chunk LRU cache
+//!   and deletes its spill file ([`crate::store::SpillFile`]'s `Drop`).
+//!
+//! Rows carry **stable ids** (their physical arrival index, preserved
+//! across compaction): [`LiveSnapshot::stable_id`] /
+//! [`LiveSnapshot::locate`] let a solver's previous answer be mapped into
+//! a newer version — the warm-start handoff the `refresh` paths build on.
+//! Deletes are **tombstones**: the data stays in its segment, but the row
+//! vanishes from the logical index, so it is unreachable through every
+//! [`DatasetView`] access method of later snapshots.
+
+use std::collections::HashSet;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::data::Matrix;
+use crate::exec::{Gate, GateSlot};
+use crate::store::column::{ColumnStore, StoreOptions};
+use crate::store::{DatasetView, StoreBuilder};
+use crate::util::error::Result;
+
+/// Copy-on-write row index of a snapshot with tombstones (or after a
+/// compaction). Both vectors are parallel over logical rows and strictly
+/// increasing, so stable-id lookup is a binary search.
+struct LiveIndex {
+    /// Logical row → physical row of the segment concatenation.
+    rows: Vec<usize>,
+    /// Logical row → stable id (arrival index; survives compaction).
+    ids: Vec<u64>,
+}
+
+/// One immutable published version of a [`LiveStore`] (see module docs).
+/// Implements [`DatasetView`], so every chapter solver — and the serving
+/// coordinator — runs on a pinned version unchanged.
+pub struct LiveSnapshot {
+    version: u64,
+    d: usize,
+    /// Logical (live) row count.
+    n: usize,
+    segments: Vec<Arc<ColumnStore>>,
+    /// Physical start offset of each segment + total sentinel
+    /// (`offsets.len() == segments.len() + 1`).
+    offsets: Vec<usize>,
+    /// `None` ⇒ every physical row is live in arrival order: logical row
+    /// == physical row == stable id (the append-only fast path).
+    live: Option<Arc<LiveIndex>>,
+}
+
+impl LiveSnapshot {
+    fn empty(d: usize) -> LiveSnapshot {
+        LiveSnapshot { version: 0, d, n: 0, segments: Vec::new(), offsets: vec![0], live: None }
+    }
+
+    /// Physical rows ever ingested into the segments of this snapshot.
+    fn physical_n(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Physical row behind logical row `row`.
+    #[inline]
+    fn phys(&self, row: usize) -> usize {
+        match &self.live {
+            None => row,
+            Some(ix) => ix.rows[row],
+        }
+    }
+
+    /// Segment index containing physical row `p`.
+    #[inline]
+    fn seg_of(&self, p: usize) -> usize {
+        self.offsets.partition_point(|&o| o <= p) - 1
+    }
+
+    /// Number of segments backing this snapshot.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// True when tombstones (or a compaction) gave this snapshot an
+    /// explicit row index.
+    pub fn has_tombstones(&self) -> bool {
+        self.live.is_some()
+    }
+
+    /// Stable id of logical row `row` (valid across future versions).
+    pub fn stable_id(&self, row: usize) -> u64 {
+        match &self.live {
+            None => row as u64,
+            Some(ix) => ix.ids[row],
+        }
+    }
+
+    /// Logical row currently holding stable id `id`, or `None` if the row
+    /// was deleted (or never existed) in this version.
+    pub fn locate(&self, id: u64) -> Option<usize> {
+        match &self.live {
+            None => ((id as usize) < self.n).then_some(id as usize),
+            Some(ix) => ix.ids.binary_search(&id).ok(),
+        }
+    }
+
+    /// Total values decoded by this snapshot's segments (lossy / spilled
+    /// access cost; shared with every other snapshot referencing them).
+    pub fn decode_ops(&self) -> u64 {
+        self.segments.iter().map(|s| s.decode_ops()).sum()
+    }
+
+    /// Total chunk reads served from disk by this snapshot's segments.
+    pub fn spill_reads(&self) -> u64 {
+        self.segments.iter().map(|s| s.spill_reads()).sum()
+    }
+}
+
+impl DatasetView for LiveSnapshot {
+    fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    fn n_cols(&self) -> usize {
+        self.d
+    }
+
+    fn get(&self, row: usize, col: usize) -> f32 {
+        debug_assert!(row < self.n && col < self.d);
+        let p = self.phys(row);
+        let s = self.seg_of(p);
+        self.segments[s].get(p - self.offsets[s], col)
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        let p = self.phys(row);
+        let s = self.seg_of(p);
+        self.segments[s].read_row(p - self.offsets[s], out);
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        let p = self.phys(row);
+        let s = self.seg_of(p);
+        self.segments[s].read_row_at(p - self.offsets[s], cols, out);
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        // Group consecutive rows landing in the same segment and delegate
+        // each run as one column scan (preserving the segment's own
+        // chunk-reuse optimization).
+        let m = rows.len().min(out.len());
+        let mut local: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < m {
+            let p = self.phys(rows[i]);
+            let s = self.seg_of(p);
+            let (start, end) = (self.offsets[s], self.offsets[s + 1]);
+            local.clear();
+            local.push(p - start);
+            let mut j = i + 1;
+            while j < m {
+                let pj = self.phys(rows[j]);
+                if pj < start || pj >= end {
+                    break;
+                }
+                local.push(pj - start);
+                j += 1;
+            }
+            self.segments[s].read_col(col, &local, &mut out[i..j]);
+            i = j;
+        }
+    }
+
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        match &self.live {
+            // Append-only: fold the segments' stats-backed ranges in row
+            // order — free, exactly like one big ColumnStore.
+            None => {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for seg in &self.segments {
+                    let (slo, shi) = seg.col_range(col);
+                    if slo < lo {
+                        lo = slo;
+                    }
+                    if shi > hi {
+                        hi = shi;
+                    }
+                }
+                (lo, hi)
+            }
+            // Tombstoned: chunk stats cover dead rows too, so they are
+            // only trusted for segments with no tombstones; partially
+            // dead segments scan their live rows (in row order, like a
+            // dense matrix scan).
+            Some(ix) => {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for (s, seg) in self.segments.iter().enumerate() {
+                    let (start, stop) = (self.offsets[s], self.offsets[s + 1]);
+                    let a = ix.rows.partition_point(|&p| p < start);
+                    let b = ix.rows.partition_point(|&p| p < stop);
+                    if b == a {
+                        continue; // segment fully dead
+                    }
+                    let (slo, shi) = if b - a == stop - start {
+                        seg.col_range(col) // fully live: free stats fold
+                    } else {
+                        let (mut slo, mut shi) = (f32::INFINITY, f32::NEG_INFINITY);
+                        for &p in &ix.rows[a..b] {
+                            let v = seg.get(p - start, col);
+                            if v < slo {
+                                slo = v;
+                            }
+                            if v > shi {
+                                shi = v;
+                            }
+                        }
+                        (slo, shi)
+                    };
+                    if slo < lo {
+                        lo = slo;
+                    }
+                    if shi > hi {
+                        hi = shi;
+                    }
+                }
+                (lo, hi)
+            }
+        }
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn block_dot_bounds(&self, q: &[f32], rows: Range<usize>) -> Option<Vec<(Range<usize>, f64)>> {
+        // Only the append-only fast path maps logical rows contiguously
+        // onto segment blocks; with tombstones callers score exactly.
+        if self.live.is_some() {
+            return None;
+        }
+        let end = rows.end.min(self.n);
+        let mut out = Vec::new();
+        for (s, seg) in self.segments.iter().enumerate() {
+            let (start, stop) = (self.offsets[s], self.offsets[s + 1]);
+            let lo = rows.start.max(start);
+            let hi = end.min(stop);
+            if lo >= hi {
+                continue;
+            }
+            let bounds = seg.block_dot_bounds(q, lo - start..hi - start)?;
+            out.extend(bounds.into_iter().map(|(r, ub)| (r.start + start..r.end + start, ub)));
+        }
+        Some(out)
+    }
+}
+
+/// Writer half of a [`LiveStore`]: one streaming builder (reservoir
+/// preview spans the whole stream) plus the version / stable-id counters.
+struct Writer {
+    builder: StoreBuilder,
+    version: u64,
+    /// Next stable id to assign (== physical rows ever ingested).
+    next_id: u64,
+}
+
+/// A versioned, mutable dataset: append-chunk ingest and tombstone
+/// deletes behind copy-on-write [`LiveSnapshot`]s (see module docs).
+///
+/// `LiveStore` itself implements [`DatasetView`] by delegating every call
+/// to the *current* snapshot — convenient for handing an
+/// `Arc<LiveStore>` straight to the serving coordinator — but each
+/// delegated element access re-pins (one mutex lock), so solvers must pin
+/// once via [`LiveStore::pin`] (or the trait's
+/// [`DatasetView::snapshot`]) and read through the snapshot.
+pub struct LiveStore {
+    d: usize,
+    opts: StoreOptions,
+    writer: Mutex<Writer>,
+    current: Mutex<Arc<LiveSnapshot>>,
+}
+
+impl LiveStore {
+    /// An empty live store for rows of width `d` (version 0).
+    pub fn new(d: usize, opts: StoreOptions) -> Result<LiveStore> {
+        Ok(LiveStore {
+            d,
+            writer: Mutex::new(Writer {
+                builder: StoreBuilder::new(d, opts.clone())?,
+                version: 0,
+                next_id: 0,
+            }),
+            opts,
+            current: Mutex::new(Arc::new(LiveSnapshot::empty(d))),
+        })
+    }
+
+    /// Row width.
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    /// Pin the current version (cheap: lock + `Arc` clone).
+    pub fn pin(&self) -> Arc<LiveSnapshot> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The stream-wide reservoir preview accumulated by ingest so far
+    /// (bandit warm starts; capacity [`StoreOptions::preview_rows`]).
+    pub fn preview(&self) -> Vec<Vec<f32>> {
+        self.writer.lock().unwrap().builder.preview().to_vec()
+    }
+
+    /// Publish `snap` as the current version. Writer lock must be held.
+    fn publish(&self, snap: LiveSnapshot) -> Arc<LiveSnapshot> {
+        let snap = Arc::new(snap);
+        *self.current.lock().unwrap() = snap.clone();
+        snap
+    }
+
+    /// Append a batch of rows as one sealed segment and publish the next
+    /// version. An empty batch is a no-op returning the current version.
+    ///
+    /// On error nothing is published, and the streaming builder is
+    /// replaced with a fresh one: a failed flush can leave a builder
+    /// half-flushed (e.g. some columns of a block already appended to its
+    /// spill file), and sealing more rows on top of that state would
+    /// publish misaligned chunks. The reset costs the reservoir preview
+    /// accumulated so far — a warm-start hint, not data.
+    pub fn commit_batch(&self, batch: &Matrix) -> Result<Arc<LiveSnapshot>> {
+        let mut w = self.writer.lock().unwrap();
+        if batch.n == 0 {
+            return Ok(self.pin());
+        }
+        let sealed = match w.builder.push_batch(batch) {
+            Ok(()) => w.builder.commit_batch(),
+            Err(e) => Err(e),
+        };
+        let seg = match sealed {
+            Ok(seg) => Arc::new(seg),
+            Err(e) => {
+                w.builder = StoreBuilder::new(self.d, self.opts.clone())?;
+                return Err(e);
+            }
+        };
+        w.version += 1;
+        w.next_id += seg.n_rows() as u64;
+        let cur = self.pin();
+        let phys_start = cur.physical_n();
+        let mut segments = cur.segments.clone();
+        segments.push(seg.clone());
+        let mut offsets = cur.offsets.clone();
+        offsets.push(phys_start + seg.n_rows());
+        let live = cur.live.as_ref().map(|ix| {
+            // Tombstoned history: extend the explicit index with the new
+            // physical rows (their stable ids continue the arrival count).
+            let mut rows = ix.rows.clone();
+            let mut ids = ix.ids.clone();
+            let id0 = w.next_id - seg.n_rows() as u64;
+            for k in 0..seg.n_rows() {
+                rows.push(phys_start + k);
+                ids.push(id0 + k as u64);
+            }
+            Arc::new(LiveIndex { rows, ids })
+        });
+        let snap = LiveSnapshot {
+            version: w.version,
+            d: self.d,
+            n: cur.n + seg.n_rows(),
+            segments,
+            offsets,
+            live,
+        };
+        Ok(self.publish(snap))
+    }
+
+    /// Tombstone the rows with the given stable ids and publish the next
+    /// version. Errors (without publishing) if any id is not live in the
+    /// current version — a delete of a missing row is a caller bug, not
+    /// something to paper over. An empty id list is a no-op.
+    pub fn delete_rows(&self, ids: &[u64]) -> Result<Arc<LiveSnapshot>> {
+        let mut w = self.writer.lock().unwrap();
+        if ids.is_empty() {
+            return Ok(self.pin());
+        }
+        let cur = self.pin();
+        let dead: HashSet<u64> = ids.iter().copied().collect();
+        let mut rows = Vec::with_capacity(cur.n - dead.len().min(cur.n));
+        let mut kept_ids = Vec::with_capacity(rows.capacity());
+        for r in 0..cur.n {
+            let id = cur.stable_id(r);
+            if !dead.contains(&id) {
+                rows.push(cur.phys(r));
+                kept_ids.push(id);
+            }
+        }
+        let removed = cur.n - rows.len();
+        if removed != dead.len() {
+            crate::bail!(
+                "delete_rows: {} of {} ids not live at version {}",
+                dead.len() - removed,
+                dead.len(),
+                cur.version
+            );
+        }
+        w.version += 1;
+        let snap = LiveSnapshot {
+            version: w.version,
+            d: self.d,
+            n: rows.len(),
+            segments: cur.segments.clone(),
+            offsets: cur.offsets.clone(),
+            live: Some(Arc::new(LiveIndex { rows, ids: kept_ids })),
+        };
+        Ok(self.publish(snap))
+    }
+
+    /// Rewrite the live rows into a single fresh segment and publish it as
+    /// the next version, preserving stable ids. Old segments stay alive
+    /// only as long as older pinned snapshots reference them; once those
+    /// drop, their caches and spill files retire with them.
+    pub fn compact(&self) -> Result<Arc<LiveSnapshot>> {
+        let mut w = self.writer.lock().unwrap();
+        let cur = self.pin();
+        if cur.segments.len() <= 1 && cur.live.is_none() {
+            return Ok(cur); // already compact
+        }
+        // A separate one-shot builder: the streaming writer's reservoir
+        // must keep sampling the *stream*, not re-sample compacted rows.
+        let mut b = StoreBuilder::new(self.d, self.opts.clone())?;
+        let mut row = vec![0f32; self.d];
+        let mut ids = Vec::with_capacity(cur.n);
+        for r in 0..cur.n {
+            cur.read_row(r, &mut row);
+            b.push_row(&row)?;
+            ids.push(cur.stable_id(r));
+        }
+        let seg = Arc::new(b.finalize()?);
+        w.version += 1;
+        let n = seg.n_rows();
+        let snap = LiveSnapshot {
+            version: w.version,
+            d: self.d,
+            n,
+            offsets: vec![0, n],
+            segments: vec![seg],
+            // Identity row map, but explicit ids: arrival ids survive.
+            live: Some(Arc::new(LiveIndex { rows: (0..n).collect(), ids })),
+        };
+        Ok(self.publish(snap))
+    }
+
+    /// Spawn a dedicated ingest thread feeding this store. Submitted
+    /// batches commit in submission order; at most `max_pending` commits
+    /// are in flight before [`IngestHandle::submit`] blocks (an
+    /// [`exec::Gate`](crate::exec::Gate), the coordinator's own
+    /// backpressure primitive). The thread is dedicated — not a
+    /// [`crate::exec::WorkerPool`] worker — because it blocks on the
+    /// channel and must never starve solver shards.
+    pub fn spawn_ingest(self: &Arc<Self>, max_pending: usize) -> IngestHandle {
+        let gate = Arc::new(Gate::new(max_pending));
+        let errors = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = channel::<(Matrix, GateSlot)>();
+        let store = self.clone();
+        let errs = errors.clone();
+        let join = std::thread::Builder::new()
+            .name("as-ingest".into())
+            .spawn(move || {
+                while let Ok((batch, slot)) = rx.recv() {
+                    if let Err(e) = store.commit_batch(&batch) {
+                        errs.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("live ingest: commit failed: {e}");
+                    }
+                    drop(slot);
+                }
+            })
+            .expect("spawn ingest thread");
+        IngestHandle { tx: Some(tx), join: Some(join), gate, errors }
+    }
+}
+
+impl DatasetView for LiveStore {
+    fn n_rows(&self) -> usize {
+        self.pin().n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.d
+    }
+
+    fn get(&self, row: usize, col: usize) -> f32 {
+        self.pin().get(row, col)
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        self.pin().read_row(row, out);
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        self.pin().read_row_at(row, cols, out);
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        self.pin().read_col(col, rows, out);
+    }
+
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        self.pin().col_range(col)
+    }
+
+    fn version(&self) -> u64 {
+        DatasetView::version(&*self.pin())
+    }
+
+    fn snapshot(&self) -> Option<Arc<dyn DatasetView>> {
+        Some(self.pin())
+    }
+
+    fn block_dot_bounds(&self, q: &[f32], rows: Range<usize>) -> Option<Vec<(Range<usize>, f64)>> {
+        self.pin().block_dot_bounds(q, rows)
+    }
+}
+
+/// Handle to a dedicated ingest thread (see [`LiveStore::spawn_ingest`]).
+/// Dropping the handle (or calling [`IngestHandle::close`]) drains the
+/// queue and joins the thread.
+pub struct IngestHandle {
+    tx: Option<Sender<(Matrix, GateSlot)>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    gate: Arc<Gate>,
+    errors: Arc<AtomicU64>,
+}
+
+impl IngestHandle {
+    /// Enqueue a batch for commit; blocks while `max_pending` commits are
+    /// already in flight (backpressure, not an unbounded queue).
+    pub fn submit(&self, batch: Matrix) {
+        let slot = Gate::acquire_slot(&self.gate);
+        self.tx
+            .as_ref()
+            .expect("ingest handle open")
+            .send((batch, slot))
+            .expect("ingest thread alive");
+    }
+
+    /// Commits that failed (details were logged by the ingest thread).
+    pub fn commit_errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Drain every queued batch and join the ingest thread.
+    pub fn close(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for IngestHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn opts(rpc: usize) -> StoreOptions {
+        StoreOptions { rows_per_chunk: rpc, ..Default::default() }
+    }
+
+    use crate::util::testkit::stack;
+
+    fn assert_snapshot_is(snap: &LiveSnapshot, want: &Matrix) {
+        testkit::assert_views_bit_identical(snap, want);
+    }
+
+    #[test]
+    fn append_only_versions_match_cumulative_matrix() {
+        let a = testkit::gaussian(70, 5, 1);
+        let b = testkit::gaussian(33, 5, 2);
+        let c = testkit::gaussian(1, 5, 3);
+        let live = LiveStore::new(5, opts(32)).unwrap();
+        assert_eq!(DatasetView::version(&live), 0);
+        assert_eq!(live.n_rows(), 0);
+        let s1 = live.commit_batch(&a).unwrap();
+        let s2 = live.commit_batch(&b).unwrap();
+        let s3 = live.commit_batch(&c).unwrap();
+        assert_eq!(
+            (DatasetView::version(&*s1), DatasetView::version(&*s2), DatasetView::version(&*s3)),
+            (1, 2, 3)
+        );
+        assert_snapshot_is(&s1, &a);
+        assert_snapshot_is(&s2, &stack(&[&a, &b]));
+        assert_snapshot_is(&s3, &stack(&[&a, &b, &c]));
+        assert_eq!(s3.n_segments(), 3);
+        assert!(!s3.has_tombstones());
+        // Stable ids on the append-only path are the row indices.
+        assert_eq!(s3.stable_id(80), 80);
+        assert_eq!(s3.locate(103), Some(103));
+        assert_eq!(s3.locate(104), None);
+    }
+
+    #[test]
+    fn old_pins_stay_immutable_and_share_segments() {
+        let a = testkit::gaussian(40, 4, 7);
+        let b = testkit::gaussian(25, 4, 8);
+        let live = LiveStore::new(4, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        let pin1 = live.pin();
+        let before = pin1.to_matrix();
+        let pin2 = live.commit_batch(&b).unwrap();
+        // The old pin still reads version 1's exact contents…
+        assert_eq!(pin1.n_rows(), 40);
+        assert_snapshot_is(&pin1, &before);
+        // …and the new version shares its first segment (COW, no copy).
+        assert!(Arc::ptr_eq(&pin1.segments[0], &pin2.segments[0]));
+    }
+
+    #[test]
+    fn tombstones_make_rows_unreachable_everywhere() {
+        let a = testkit::gaussian(50, 3, 11);
+        let live = LiveStore::new(3, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        let snap = live.delete_rows(&[0, 17, 49]).unwrap();
+        assert_eq!(snap.n_rows(), 47);
+        assert!(snap.has_tombstones());
+        // Reference: the matrix with those rows dropped.
+        let keep: Vec<usize> = (0..50).filter(|r| ![0, 17, 49].contains(r)).collect();
+        let want = a.take_rows(&keep);
+        assert_snapshot_is(&snap, &want);
+        // read_row_at / read_col / get can only address live rows, whose
+        // values all come from `keep` — deleted rows are structurally
+        // unreachable. Spot-check the seam rows around a tombstone.
+        let mut out = vec![0f32; 2];
+        snap.read_row_at(16, &[0, 2], &mut out); // logical 16 = physical 18
+        assert_eq!(out[0].to_bits(), a.row(18)[0].to_bits());
+        let rows: Vec<usize> = (0..snap.n_rows()).collect();
+        let mut col = vec![0f32; rows.len()];
+        snap.read_col(1, &rows, &mut col);
+        for (k, &r) in keep.iter().enumerate() {
+            assert_eq!(col[k].to_bits(), a.row(r)[1].to_bits());
+        }
+        // Ids of survivors are stable; deleted ids resolve to None.
+        assert_eq!(snap.locate(18), Some(16));
+        assert_eq!(snap.locate(17), None);
+        assert_eq!(snap.stable_id(0), 1);
+        // col_range must reflect only live rows.
+        let (lo, hi) = snap.col_range(0);
+        let (mut wlo, mut whi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &r in &keep {
+            let v = a.row(r)[0];
+            wlo = wlo.min(v);
+            whi = whi.max(v);
+        }
+        assert_eq!((lo.to_bits(), hi.to_bits()), (wlo.to_bits(), whi.to_bits()));
+    }
+
+    #[test]
+    fn delete_of_missing_id_is_an_error_and_publishes_nothing() {
+        let live = LiveStore::new(2, opts(16)).unwrap();
+        live.commit_batch(&testkit::gaussian(10, 2, 13)).unwrap();
+        live.delete_rows(&[3]).unwrap();
+        let v_before = DatasetView::version(&live);
+        assert!(live.delete_rows(&[3]).is_err(), "double delete must fail");
+        assert!(live.delete_rows(&[99]).is_err(), "unknown id must fail");
+        assert_eq!(DatasetView::version(&live), v_before, "failed delete must not publish");
+    }
+
+    #[test]
+    fn append_after_delete_continues_stable_ids() {
+        let a = testkit::gaussian(20, 3, 17);
+        let b = testkit::gaussian(5, 3, 18);
+        let live = LiveStore::new(3, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        live.delete_rows(&[4, 5]).unwrap();
+        let snap = live.commit_batch(&b).unwrap();
+        assert_eq!(snap.n_rows(), 23);
+        // New rows get arrival ids 20..25 even though 2 rows are dead.
+        assert_eq!(snap.stable_id(18), 20);
+        assert_eq!(snap.locate(24), Some(22));
+        let keep: Vec<usize> = (0..20).filter(|r| *r != 4 && *r != 5).collect();
+        assert_snapshot_is(&snap, &stack(&[&a.take_rows(&keep), &b]));
+    }
+
+    #[test]
+    fn compact_rewrites_to_one_segment_preserving_ids() {
+        let a = testkit::gaussian(30, 4, 21);
+        let b = testkit::gaussian(30, 4, 22);
+        let live = LiveStore::new(4, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        live.commit_batch(&b).unwrap();
+        live.delete_rows(&[10, 40]).unwrap();
+        let before = live.pin().to_matrix();
+        let snap = live.compact().unwrap();
+        assert_eq!(snap.n_segments(), 1);
+        assert_snapshot_is(&snap, &before);
+        // Arrival ids survive compaction; the dead ids stay dead.
+        assert_eq!(snap.locate(40), None);
+        assert_eq!(snap.locate(41), Some(39));
+        assert_eq!(snap.stable_id(10), 11);
+        // And the store keeps working after compaction.
+        let c = testkit::gaussian(3, 4, 23);
+        let snap2 = live.commit_batch(&c).unwrap();
+        assert_eq!(snap2.n_rows(), 61);
+        assert_eq!(snap2.stable_id(60), 62);
+    }
+
+    #[test]
+    fn block_dot_bounds_are_sound_and_absent_after_delete() {
+        let a = testkit::gaussian(90, 6, 29);
+        let b = testkit::gaussian(60, 6, 30);
+        let live = LiveStore::new(6, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        let snap = live.commit_batch(&b).unwrap();
+        let q: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let bounds = snap.block_dot_bounds(&q, 90..150).expect("append-only has bounds");
+        assert!(!bounds.is_empty());
+        let mut covered = 0usize;
+        for (range, ub) in &bounds {
+            for r in range.clone() {
+                let ip = snap.dot(r, &q);
+                assert!(ip <= *ub + 1e-9, "row {r}: ip {ip} > bound {ub}");
+            }
+            covered += range.len();
+        }
+        assert_eq!(covered, 60, "bounds must tile the requested range");
+        let snap2 = live.delete_rows(&[0]).unwrap();
+        assert!(snap2.block_dot_bounds(&q, 0..10).is_none(), "tombstoned → no block bounds");
+    }
+
+    #[test]
+    fn ingest_thread_commits_in_order_with_backpressure() {
+        let live = Arc::new(LiveStore::new(3, opts(16)).unwrap());
+        let handle = live.spawn_ingest(2);
+        let batches: Vec<Matrix> = (0..12).map(|k| testkit::gaussian(10, 3, 100 + k)).collect();
+        for m in &batches {
+            handle.submit(m.clone());
+        }
+        handle.close();
+        assert_eq!(DatasetView::version(&*live), 12);
+        let snap = live.pin();
+        let refs: Vec<&Matrix> = batches.iter().collect();
+        assert_snapshot_is(&snap, &stack(&refs));
+    }
+
+    #[test]
+    fn failed_commit_publishes_nothing_and_later_commits_stay_clean() {
+        let a = testkit::gaussian(20, 3, 41);
+        let live = LiveStore::new(3, opts(16)).unwrap();
+        live.commit_batch(&a).unwrap();
+        // Wrong-width batch: the commit fails, no version is published,
+        // and the (reset) builder seals the next batch correctly.
+        let err = live.commit_batch(&testkit::gaussian(4, 2, 42)).unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
+        assert_eq!(DatasetView::version(&live), 1, "failed commit must not publish");
+        let b = testkit::gaussian(7, 3, 43);
+        let snap = live.commit_batch(&b).unwrap();
+        assert_eq!(DatasetView::version(&*snap), 2);
+        assert_snapshot_is(&snap, &stack(&[&a, &b]));
+    }
+
+    #[test]
+    fn empty_commit_and_empty_delete_are_noops() {
+        let live = LiveStore::new(2, opts(16)).unwrap();
+        live.commit_batch(&testkit::gaussian(8, 2, 31)).unwrap();
+        let v = DatasetView::version(&live);
+        live.commit_batch(&Matrix::zeros(0, 2)).unwrap();
+        live.delete_rows(&[]).unwrap();
+        assert_eq!(DatasetView::version(&live), v);
+    }
+
+    #[test]
+    fn spilled_live_store_streams_from_disk() {
+        let a = testkit::gaussian(256, 4, 37);
+        let b = testkit::gaussian(128, 4, 38);
+        let o = StoreOptions { rows_per_chunk: 32, ..Default::default() }.spill_to_temp(1024);
+        let live = LiveStore::new(4, o).unwrap();
+        live.commit_batch(&a).unwrap();
+        let snap = live.commit_batch(&b).unwrap();
+        assert_snapshot_is(&snap, &stack(&[&a, &b]));
+        assert!(snap.spill_reads() > 0, "tiny budget must stream from disk");
+        assert!(snap.decode_ops() > 0);
+    }
+}

@@ -12,6 +12,7 @@
 //! | [`codec`]  | per-chunk codecs: lossless `F32`, half-precision `F16`, affine-quantized `I8` (per-chunk scale/zero-point), decode charged to a [`crate::metrics::OpCounter`] |
 //! | [`spill`]  | file-backed chunk spill (`std::fs` only): datasets larger than the cache budget stream from disk |
 //! | [`ingest`] | [`StoreBuilder`]: streaming row-batch ingest with bounded staging memory + reservoir preview for bandit warm starts |
+//! | [`live`]   | [`LiveStore`]: versioned, mutable dataset — append-chunk ingest and tombstone deletes behind cheap copy-on-write [`LiveSnapshot`]s |
 //!
 //! # The `DatasetView` contract
 //!
@@ -36,9 +37,11 @@
 pub mod codec;
 pub mod column;
 pub mod ingest;
+pub mod live;
 pub mod spill;
 
 use std::cell::RefCell;
+use std::ops::Range;
 use std::sync::Arc;
 
 use crate::data::distance::Metric;
@@ -49,6 +52,7 @@ use crate::util::error::Result;
 pub use codec::Codec;
 pub use column::{ChunkStats, ColumnStore, StoreOptions};
 pub use ingest::StoreBuilder;
+pub use live::{IngestHandle, LiveSnapshot, LiveStore};
 pub use spill::{SpillFile, SpillWriter};
 
 thread_local! {
@@ -162,6 +166,44 @@ pub trait DatasetView: Send + Sync {
     fn dense_data(&self) -> Option<&[f32]> {
         None
     }
+
+    /// Monotonic content version of this view. Static substrates
+    /// ([`Matrix`], [`ColumnStore`]) are version 0 forever; a
+    /// [`LiveStore`] bumps it on every committed batch / delete, and a
+    /// pinned [`LiveSnapshot`] reports the version it was taken at.
+    fn version(&self) -> u64 {
+        0
+    }
+
+    /// Pin the current contents as an immutable snapshot. Live substrates
+    /// return `Some(snapshot)` — an `Arc` whose contents can never change
+    /// and whose [`DatasetView::version`] names the pinned version; static
+    /// substrates return `None` because they *are* their own snapshot
+    /// (callers holding an `Arc` use [`pin`] to fold the two cases).
+    fn snapshot(&self) -> Option<Arc<dyn DatasetView>> {
+        None
+    }
+
+    /// Per-block upper bounds on `⟨row, q⟩` over a contiguous row range,
+    /// derived from per-chunk [`ChunkStats`] alone — no decode, no disk.
+    /// Each returned `(rows, ub)` guarantees `⟨row_r, q⟩ ≤ ub` for every
+    /// `r` in `rows` (including lossy-codec decode error). `None` when the
+    /// substrate keeps no chunk stats (dense [`Matrix`]); callers fall
+    /// back to exact scoring. This is the refresh path's screening hook:
+    /// appended blocks whose bound cannot beat the incumbent top-k are
+    /// skipped without touching their data.
+    fn block_dot_bounds(&self, q: &[f32], rows: Range<usize>) -> Option<Vec<(Range<usize>, f64)>> {
+        let _ = (q, rows);
+        None
+    }
+}
+
+/// Pin `view` to an immutable snapshot: live substrates hand back their
+/// current [`LiveSnapshot`]; static substrates are returned as-is. The
+/// serving coordinator calls this once per batch, so every query in the
+/// batch reads one consistent version while ingest keeps committing.
+pub fn pin(view: &Arc<dyn DatasetView>) -> Arc<dyn DatasetView> {
+    view.snapshot().unwrap_or_else(|| view.clone())
 }
 
 /// The legacy dense matrix is the reference [`DatasetView`]: every other
@@ -265,6 +307,71 @@ impl<V: DatasetView + ?Sized> PointSet for ViewPointSet<V> {
     }
 }
 
+/// A [`DatasetView`] restricted to an explicit row subset of another view
+/// (columns unchanged). Row `i` of the subset is row `rows[i]` of the
+/// base. The refresh paths use this to run a solver over "previous top-k
+/// ∪ screened appended rows" without materializing anything; all access
+/// methods delegate, so op accounting stays on the base store's counters.
+pub struct RowSubsetView<'a, V: DatasetView + ?Sized> {
+    base: &'a V,
+    rows: Vec<usize>,
+}
+
+impl<'a, V: DatasetView + ?Sized> RowSubsetView<'a, V> {
+    /// Restrict `base` to `rows` (each must be `< base.n_rows()`).
+    pub fn new(base: &'a V, rows: Vec<usize>) -> RowSubsetView<'a, V> {
+        debug_assert!(rows.iter().all(|&r| r < base.n_rows()));
+        RowSubsetView { base, rows }
+    }
+
+    /// The base-view row index behind subset row `i`.
+    pub fn base_row(&self, i: usize) -> usize {
+        self.rows[i]
+    }
+}
+
+impl<'a, V: DatasetView + ?Sized> DatasetView for RowSubsetView<'a, V> {
+    fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.base.n_cols()
+    }
+
+    #[inline]
+    fn get(&self, row: usize, col: usize) -> f32 {
+        self.base.get(self.rows[row], col)
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        self.base.read_row(self.rows[row], out);
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        self.base.read_row_at(self.rows[row], cols, out);
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        // Translate then delegate: the base's chunk-reuse optimization
+        // still applies to runs of same-chunk rows.
+        let translated: Vec<usize> = rows.iter().map(|&r| self.rows[r]).collect();
+        self.base.read_col(col, &translated, out);
+    }
+
+    fn dist(&self, metric: Metric, i: usize, j: usize) -> f64 {
+        self.base.dist(metric, self.rows[i], self.rows[j])
+    }
+
+    fn dot(&self, row: usize, q: &[f32]) -> f64 {
+        self.base.dot(self.rows[row], q)
+    }
+
+    fn version(&self) -> u64 {
+        self.base.version()
+    }
+}
+
 /// Parse the examples' `--store=` flag value.
 ///
 /// * `"matrix"` → `Ok(None)` — the dense legacy path;
@@ -315,16 +422,8 @@ pub fn store_options_from_args() -> Option<StoreOptions> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
-
-    fn demo(n: usize, d: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::new(seed);
-        let mut m = Matrix::zeros(n, d);
-        for v in m.data.iter_mut() {
-            *v = (rng.normal() * 3.0) as f32;
-        }
-        m
-    }
+    // Shared fixture corpus (kills the per-suite copy-pasted generators).
+    use crate::util::testkit::gaussian as demo;
 
     #[test]
     fn matrix_view_methods_agree_with_direct_access() {
@@ -392,6 +491,73 @@ mod tests {
         assert_eq!(vps.counter().get(), sps.counter().get());
         assert_eq!(sps.counter().get(), 3);
         assert_eq!(sps.view().n_cols(), 8);
+    }
+
+    #[test]
+    fn static_views_are_version_zero_and_their_own_snapshot() {
+        let m = demo(10, 3, 4);
+        let cs = ColumnStore::from_matrix(&m, &StoreOptions::default()).unwrap();
+        assert_eq!(DatasetView::version(&m), 0);
+        assert_eq!(DatasetView::version(&cs), 0);
+        assert!(m.snapshot().is_none());
+        assert!(cs.snapshot().is_none());
+        // pin() on a static view hands the same Arc back.
+        let arc: Arc<dyn DatasetView> = Arc::new(m.clone());
+        let pinned = pin(&arc);
+        assert_eq!(pinned.n_rows(), 10);
+        assert!(Arc::ptr_eq(&arc, &pinned));
+        // A live store pins to a different (immutable) object.
+        let live: Arc<dyn DatasetView> =
+            Arc::new(LiveStore::new(3, StoreOptions::default()).unwrap());
+        let lp = pin(&live);
+        assert!(!Arc::ptr_eq(&live, &lp));
+        assert_eq!(lp.n_rows(), 0);
+    }
+
+    #[test]
+    fn row_subset_view_reads_bit_identically_through_every_method() {
+        let m = demo(25, 7, 6);
+        let rows = vec![3usize, 0, 24, 7, 7, 12];
+        let want = m.take_rows(&rows);
+        let sub = RowSubsetView::new(&m, rows.clone());
+        crate::util::testkit::assert_views_bit_identical(&sub, &want);
+        assert_eq!(sub.base_row(2), 24);
+        let mut picked = vec![0f32; 2];
+        sub.read_row_at(1, &[6, 0], &mut picked);
+        assert_eq!(picked[0].to_bits(), m.row(0)[6].to_bits());
+        let mut col = vec![0f32; rows.len()];
+        sub.read_col(2, &(0..rows.len()).collect::<Vec<_>>(), &mut col);
+        for (k, &r) in rows.iter().enumerate() {
+            assert_eq!(col[k].to_bits(), m.row(r)[2].to_bits());
+        }
+        let q: Vec<f32> = (0..7).map(|i| i as f32 * 0.5 - 1.0).collect();
+        assert_eq!(sub.dot(3, &q).to_bits(), m.dot(7, &q).to_bits());
+        assert_eq!(
+            sub.dist(Metric::L2, 0, 2).to_bits(),
+            m.dist(Metric::L2, 3, 24).to_bits()
+        );
+    }
+
+    #[test]
+    fn matrix_has_no_block_bounds_but_store_bounds_are_sound() {
+        let m = demo(100, 5, 8);
+        assert!(m.block_dot_bounds(&[0.0; 5], 0..100).is_none());
+        let cs = ColumnStore::from_matrix(
+            &m,
+            &StoreOptions { rows_per_chunk: 16, ..Default::default() },
+        )
+        .unwrap();
+        let q: Vec<f32> = vec![1.5, -2.0, 0.0, 3.0, -0.5];
+        let bounds = cs.block_dot_bounds(&q, 10..90).unwrap();
+        let mut covered = 0;
+        for (range, ub) in &bounds {
+            for r in range.clone() {
+                let ip = m.dot(r, &q);
+                assert!(ip <= *ub + 1e-9, "row {r}: {ip} > {ub}");
+            }
+            covered += range.len();
+        }
+        assert_eq!(covered, 80);
     }
 
     #[test]

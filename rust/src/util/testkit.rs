@@ -1,0 +1,405 @@
+//! Shared test fixtures and golden-trace helpers.
+//!
+//! Before this module, every store / solver / integration suite carried
+//! its own copy-pasted `random_matrix`-style generator with slightly
+//! different scales and seeds. `testkit` centralizes:
+//!
+//! * **deterministic fixture generators** — [`gaussian`] / [`uniform`]
+//!   matrices, [`clusterable`] labeled blobs, [`adversarial`] i.i.d. data
+//!   (the §C.6 worst case where adaptive sampling degrades to full
+//!   scans);
+//! * **the refresh corpus** ([`refresh_corpus`]) — fixed-seed
+//!   base + append pairs (small/medium × clusterable/adversarial) used by
+//!   the warm-started-refresh acceptance tests and benches. Appended rows
+//!   are convex combinations of existing rows, so per-column ranges (and
+//!   hence histogram bin edges) are provably unchanged by the append;
+//! * **golden-trace helpers** — FNV-1a [`fingerprint_bits`] /
+//!   [`fingerprint_view`] over exact f32 bit patterns, and
+//!   [`assert_views_bit_identical`], the one-line form of the repo's
+//!   bit-identity contracts;
+//! * **the CI store matrix hook** — [`store_options_from_env`] reads
+//!   `AS_TEST_STORE` so one test body can run over `Matrix`,
+//!   `ColumnStore(F32)`, or a spilled `ColumnStore(I8)` per CI cell.
+//!
+//! This is a normal (non-`cfg(test)`) module so integration tests,
+//! benches, and examples can all use it; it is tiny and dependency-free.
+
+use std::sync::Arc;
+
+use crate::data::{LabeledDataset, Matrix};
+use crate::store::{Codec, ColumnStore, DatasetView, StoreOptions};
+use crate::util::rng::Rng;
+
+/// Stack matrices vertically (all must share a width) — the reference
+/// contents of an append-only snapshot.
+pub fn stack(parts: &[&Matrix]) -> Matrix {
+    assert!(!parts.is_empty(), "stack of nothing");
+    let d = parts[0].d;
+    let mut out = Matrix::zeros(parts.iter().map(|p| p.n).sum(), d);
+    let mut at = 0usize;
+    for p in parts {
+        assert_eq!(p.d, d, "stack: ragged widths");
+        out.data[at * d..(at + p.n) * d].copy_from_slice(&p.data);
+        at += p.n;
+    }
+    out
+}
+
+/// `n × d` matrix of i.i.d. `N(0, 10²)` entries — the store suites'
+/// workhorse fixture.
+pub fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, d);
+    for v in m.data.iter_mut() {
+        *v = (rng.normal() * 10.0) as f32;
+    }
+    m
+}
+
+/// `n × d` matrix of i.i.d. `U[-50, 50)` entries.
+pub fn uniform(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, d);
+    for v in m.data.iter_mut() {
+        *v = rng.f32() * 100.0 - 50.0;
+    }
+    m
+}
+
+/// `k` well-separated Gaussian blobs (unit within-cluster σ, centers
+/// `sep` apart per coordinate draw), labeled by blob — the "easy
+/// structure" fixture where adaptive solvers separate arms fast and
+/// warm starts land in the same optimum as cold solves.
+pub fn clusterable(n: usize, d: usize, k: usize, sep: f64, seed: u64) -> LabeledDataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * sep).collect()).collect();
+    let mut m = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        y.push(c as f32);
+        for (j, v) in m.row_mut(i).iter_mut().enumerate() {
+            *v = (centers[c][j] + rng.normal()) as f32;
+        }
+    }
+    LabeledDataset { x: m, y, n_classes: k }
+}
+
+/// i.i.d. standard-normal rows — the §C.6 adversarial regime: all arms
+/// look alike, gaps shrink as 1/√d, and every adaptive solver is pushed
+/// toward its exact-fallback worst case.
+pub fn adversarial(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, d);
+    for v in m.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
+/// `n_new` rows appended *inside* `base`'s geometry: each is a convex
+/// combination of two existing rows (same label when `labels` is given,
+/// so blobs stay blobs). Per-column min/max — and therefore histogram
+/// bin edges and stats-derived screening bounds — are unchanged by
+/// construction.
+pub fn append_within(
+    base: &Matrix,
+    labels: Option<&[f32]>,
+    n_new: usize,
+    seed: u64,
+) -> (Matrix, Vec<f32>) {
+    assert!(base.n >= 2, "need at least two rows to interpolate");
+    let mut rng = Rng::new(seed ^ 0xA99E7D);
+    let mut m = Matrix::zeros(n_new, base.d);
+    let mut y = Vec::with_capacity(n_new);
+    for i in 0..n_new {
+        let a = rng.below(base.n);
+        let b = loop {
+            let b = rng.below(base.n);
+            let compatible = match labels {
+                Some(ls) => ls[a] == ls[b],
+                None => true,
+            };
+            if b != a && compatible {
+                break b;
+            }
+        };
+        let t = 0.25 + 0.5 * rng.f32();
+        for (j, v) in m.row_mut(i).iter_mut().enumerate() {
+            *v = base.row(a)[j] + t * (base.row(b)[j] - base.row(a)[j]);
+        }
+        y.push(labels.map_or(0.0, |ls| ls[a]));
+    }
+    (m, y)
+}
+
+/// One base + append pair of the refresh acceptance corpus.
+pub struct RefreshFixture {
+    pub name: &'static str,
+    /// True for blob data (the k-medoids / classification fixtures);
+    /// false for the adversarial i.i.d. regime.
+    pub clusterable: bool,
+    /// Blob count (and class count) when `clusterable`.
+    pub k: usize,
+    pub base: LabeledDataset,
+    pub append: LabeledDataset,
+    pub seed: u64,
+}
+
+impl RefreshFixture {
+    fn blobs(name: &'static str, n: usize, d: usize, k: usize, n_new: usize, seed: u64) -> Self {
+        let base = clusterable(n, d, k, 6.0, seed);
+        let (ax, ay) = append_within(&base.x, Some(&base.y), n_new, seed);
+        RefreshFixture {
+            name,
+            clusterable: true,
+            k,
+            append: LabeledDataset { x: ax, y: ay, n_classes: k },
+            base,
+            seed,
+        }
+    }
+
+    fn iid(name: &'static str, n: usize, d: usize, n_new: usize, seed: u64) -> Self {
+        let x = adversarial(n, d, seed);
+        let (ax, _) = append_within(&x, None, n_new, seed);
+        // Labels for the split tests: the sign of the first coordinate —
+        // a weak but real signal, deterministic for base and append alike.
+        let label = |m: &Matrix, i: usize| if m.row(i)[0] > 0.0 { 1.0 } else { 0.0 };
+        let y: Vec<f32> = (0..n).map(|i| label(&x, i)).collect();
+        let ay: Vec<f32> = (0..ax.n).map(|i| label(&ax, i)).collect();
+        RefreshFixture {
+            name,
+            clusterable: false,
+            k: 3,
+            base: LabeledDataset { x, y, n_classes: 2 },
+            append: LabeledDataset { x: ax, y: ay, n_classes: 2 },
+            seed,
+        }
+    }
+
+    /// Base and appended rows stacked — the "after the append" dataset a
+    /// cold solve runs on.
+    pub fn full(&self) -> LabeledDataset {
+        let mut x = Matrix::zeros(self.base.x.n + self.append.x.n, self.base.x.d);
+        x.data[..self.base.x.data.len()].copy_from_slice(&self.base.x.data);
+        x.data[self.base.x.data.len()..].copy_from_slice(&self.append.x.data);
+        let mut y = self.base.y.clone();
+        y.extend_from_slice(&self.append.y);
+        LabeledDataset { x, y, n_classes: self.base.n_classes }
+    }
+}
+
+/// The fixed-seed refresh corpus: every warm-started `refresh` acceptance
+/// test (and the `BENCH_live` sweep) iterates exactly these fixtures.
+pub fn refresh_corpus() -> Vec<RefreshFixture> {
+    vec![
+        RefreshFixture::blobs("small-clusterable", 120, 16, 3, 12, 0xF1),
+        RefreshFixture::blobs("medium-clusterable", 420, 24, 4, 21, 0xF2),
+        RefreshFixture::iid("small-adversarial", 140, 16, 7, 0xF3),
+        RefreshFixture::iid("medium-adversarial", 400, 32, 16, 0xF4),
+    ]
+}
+
+/// FNV-1a 64 over the exact bit patterns of `vals` — the golden-trace
+/// fingerprint (stable across platforms, sensitive to a single ULP).
+pub fn fingerprint_bits(vals: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint of a whole view, rows in order (shape folded in so an
+/// `n×d` / `d×n` mix-up cannot collide).
+pub fn fingerprint_view(v: &dyn DatasetView) -> u64 {
+    let (n, d) = (v.n_rows(), v.n_cols());
+    let mut row = vec![0f32; d];
+    let mut h = fingerprint_bits(&[n as f32, d as f32]);
+    for i in 0..n {
+        v.read_row(i, &mut row);
+        h ^= fingerprint_bits(&row).rotate_left((i % 63) as u32);
+    }
+    h
+}
+
+/// Assert two views have identical shape and bit-identical contents,
+/// pointing at the first differing element on failure.
+pub fn assert_views_bit_identical(a: &dyn DatasetView, b: &dyn DatasetView) {
+    assert_eq!((a.n_rows(), a.n_cols()), (b.n_rows(), b.n_cols()), "shape mismatch");
+    let d = a.n_cols();
+    let (mut ra, mut rb) = (vec![0f32; d], vec![0f32; d]);
+    for i in 0..a.n_rows() {
+        a.read_row(i, &mut ra);
+        b.read_row(i, &mut rb);
+        for j in 0..d {
+            assert_eq!(
+                ra[j].to_bits(),
+                rb[j].to_bits(),
+                "views differ at ({i},{j}): {} vs {}",
+                ra[j],
+                rb[j]
+            );
+        }
+    }
+}
+
+/// A named sequence of fingerprints — the golden-trace form used by the
+/// replay tests: record one trace live, one from the serial replay, and
+/// diff them by label.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub entries: Vec<(String, u64)>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn record(&mut self, label: impl Into<String>, fp: u64) {
+        self.entries.push((label.into(), fp));
+    }
+
+    /// First label whose fingerprint differs (or is missing) between the
+    /// two traces, with both values — `None` when the traces agree.
+    pub fn first_divergence(&self, other: &Trace) -> Option<String> {
+        if self.entries.len() != other.entries.len() {
+            return Some(format!(
+                "length {} vs {}",
+                self.entries.len(),
+                other.entries.len()
+            ));
+        }
+        for ((la, fa), (lb, fb)) in self.entries.iter().zip(&other.entries) {
+            if la != lb {
+                return Some(format!("label {la:?} vs {lb:?}"));
+            }
+            if fa != fb {
+                return Some(format!("{la}: {fa:#x} vs {fb:#x}"));
+            }
+        }
+        None
+    }
+}
+
+/// The CI store-matrix hook: parse `AS_TEST_STORE` into the substrate the
+/// current test process should run on. `None` / `"matrix"` = dense
+/// [`Matrix`]; `"column-f32"` = lossless columnar; `"column-i8-spill"` =
+/// quantized + file-spilled (1 MiB cache). Panics on an unknown value so
+/// a typo in the CI matrix fails loudly instead of silently testing the
+/// default substrate.
+pub fn store_options_from_env() -> Option<StoreOptions> {
+    match std::env::var("AS_TEST_STORE").ok().as_deref() {
+        None | Some("") | Some("matrix") => None,
+        Some("column-f32") => Some(StoreOptions::default()),
+        Some("column-f16") => Some(StoreOptions::with_codec(Codec::F16)),
+        Some("column-i8-spill") => {
+            Some(StoreOptions::with_codec(Codec::I8).spill_to_temp(1 << 20))
+        }
+        Some(other) => panic!("AS_TEST_STORE={other:?}: want matrix|column-f32|column-f16|column-i8-spill"),
+    }
+}
+
+/// Materialize `m` on the substrate chosen by `opts` (the
+/// [`store_options_from_env`] output): the matrix itself, or a
+/// [`ColumnStore`] built from it.
+pub fn materialize(m: &Matrix, opts: &Option<StoreOptions>) -> Arc<dyn DatasetView> {
+    match opts {
+        None => Arc::new(m.clone()),
+        Some(o) => Arc::new(ColumnStore::from_matrix(m, o).expect("store build")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(gaussian(20, 4, 9).data, gaussian(20, 4, 9).data);
+        assert_eq!(uniform(20, 4, 9).data, uniform(20, 4, 9).data);
+        let a = clusterable(30, 5, 3, 6.0, 1);
+        let b = clusterable(30, 5, 3, 6.0, 1);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+        assert_ne!(gaussian(20, 4, 9).data, gaussian(20, 4, 10).data);
+    }
+
+    #[test]
+    fn append_within_preserves_column_ranges_and_labels() {
+        let ds = clusterable(60, 6, 3, 6.0, 7);
+        let (ax, ay) = append_within(&ds.x, Some(&ds.y), 15, 7);
+        assert_eq!(ax.n, 15);
+        for j in 0..ds.x.d {
+            let (lo, hi) = DatasetView::col_range(&ds.x, j);
+            for i in 0..ax.n {
+                let v = ax.row(i)[j];
+                assert!(v >= lo && v <= hi, "({i},{j}): {v} outside [{lo},{hi}]");
+            }
+        }
+        for &l in &ay {
+            assert!((l as usize) < 3);
+        }
+    }
+
+    #[test]
+    fn refresh_corpus_is_stable() {
+        let a = refresh_corpus();
+        let b = refresh_corpus();
+        assert_eq!(a.len(), b.len());
+        for (fa, fb) in a.iter().zip(&b) {
+            assert_eq!(fa.name, fb.name);
+            assert_eq!(fingerprint_view(&fa.base.x), fingerprint_view(&fb.base.x));
+            assert_eq!(fingerprint_view(&fa.append.x), fingerprint_view(&fb.append.x));
+            let full = fa.full();
+            assert_eq!(full.x.n, fa.base.x.n + fa.append.x.n);
+            assert_eq!(full.y.len(), full.x.n);
+        }
+    }
+
+    #[test]
+    fn fingerprints_detect_single_ulp_differences() {
+        let m = gaussian(10, 3, 5);
+        let mut m2 = m.clone();
+        m2.data[17] = f32::from_bits(m2.data[17].to_bits() ^ 1);
+        assert_ne!(fingerprint_view(&m), fingerprint_view(&m2));
+        assert_eq!(fingerprint_view(&m), fingerprint_view(&m.clone()));
+        let caught = std::panic::catch_unwind(|| assert_views_bit_identical(&m, &m2));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn trace_divergence_reports_label() {
+        let mut a = Trace::new();
+        let mut b = Trace::new();
+        a.record("q0", 1);
+        b.record("q0", 1);
+        assert_eq!(a.first_divergence(&b), None);
+        a.record("q1", 2);
+        b.record("q1", 3);
+        let msg = a.first_divergence(&b).unwrap();
+        assert!(msg.contains("q1"), "{msg}");
+    }
+
+    #[test]
+    fn env_store_matrix_parses() {
+        // Not a concurrency-safe env test — set/unset within one test only.
+        std::env::set_var("AS_TEST_STORE", "column-i8-spill");
+        let o = store_options_from_env().unwrap();
+        assert_eq!(o.codec, Codec::I8);
+        assert!(o.spill_dir.is_some());
+        std::env::set_var("AS_TEST_STORE", "matrix");
+        assert!(store_options_from_env().is_none());
+        std::env::remove_var("AS_TEST_STORE");
+        assert!(store_options_from_env().is_none());
+        let m = gaussian(8, 2, 1);
+        let v = materialize(&m, &Some(StoreOptions::default()));
+        assert_views_bit_identical(&*v, &m);
+    }
+}

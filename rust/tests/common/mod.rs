@@ -1,0 +1,24 @@
+//! Shared helpers for the integration test binaries.
+//!
+//! The heavy lifting lives in the library's `util::testkit` (fixture
+//! corpus, fingerprints, env-selected store substrate) so unit tests,
+//! benches, and examples share it too; this module only adds the few
+//! glue helpers that integration tests need and re-exports the kit under
+//! one roof (`mod common;` + `use common::*`).
+
+#![allow(dead_code)] // each test binary uses a different subset
+
+pub use adaptive_sampling::util::testkit::*;
+
+use adaptive_sampling::data::{LabeledDataset, Matrix};
+
+/// Stack labeled datasets vertically (shared width and class count).
+pub fn stack_labeled(parts: &[&LabeledDataset]) -> LabeledDataset {
+    let xs: Vec<&Matrix> = parts.iter().map(|p| &p.x).collect();
+    let mut y = Vec::new();
+    for p in parts {
+        assert_eq!(p.n_classes, parts[0].n_classes);
+        y.extend_from_slice(&p.y);
+    }
+    LabeledDataset { x: stack(&xs), y, n_classes: parts[0].n_classes }
+}

@@ -2,6 +2,8 @@
 //! the stack together (datasets → algorithms → metrics; artifacts → PJRT
 //! → coordinator), i.e. the seams unit tests can't see.
 
+mod common;
+
 use std::sync::Arc;
 
 use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
@@ -326,11 +328,9 @@ fn prop_store_and_matrix_agree_for_random_mips_instances() {
         8,
         |r| (5 + r.below(40), 100 + r.below(900), r.next_u64()),
         |&(n, d, seed)| {
-            let mut rng = Rng::new(seed);
-            let mut atoms = adaptive_sampling::data::Matrix::zeros(n, d);
-            for v in atoms.data.iter_mut() {
-                *v = (rng.normal() * 2.0) as f32;
-            }
+            // Shared fixture generator (testkit) instead of an inline one.
+            let atoms = common::gaussian(n, d, seed);
+            let mut rng = Rng::new(seed ^ 0x51);
             let q: Vec<f32> = (0..d).map(|_| (rng.normal() * 2.0) as f32).collect();
             let cs = ColumnStore::from_matrix(
                 &atoms,

@@ -1,0 +1,474 @@
+//! Live data plane integration tests: snapshot isolation under
+//! concurrent ingest, the warm-started `refresh` acceptance contract
+//! over the fixture corpus (same answers as cold at < 50% of the cold
+//! `OpCounter` cost), the ingest/query stress test with a serial-replay
+//! oracle at thread counts {1, 2, 4, 8}, tombstone/remap fallbacks, and
+//! the CI store-matrix entry point (`AS_TEST_STORE`).
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::data::distance::Metric;
+use adaptive_sampling::forest::split::{feature_ranges_view, make_edges};
+use adaptive_sampling::forest::{
+    refresh_split, solve_exact_cached, solve_exactly, solve_mab, Forest, ForestConfig,
+    ForestKind, Impurity, Solver, SplitContext, TrainSet,
+};
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
+use adaptive_sampling::mips::naive_mips;
+use adaptive_sampling::store::{
+    DatasetView, LiveSnapshot, LiveStore, StoreOptions, ViewPointSet,
+};
+use adaptive_sampling::util::rng::Rng;
+use common::*;
+
+fn live_opts(rows_per_chunk: usize) -> StoreOptions {
+    StoreOptions { rows_per_chunk, ..Default::default() }
+}
+
+/// A root-node split context over the whole view, with equal-width edges
+/// built from the view's (stats-backed) feature ranges.
+fn root_ctx<'a>(
+    x: &'a dyn DatasetView,
+    y: &'a [f32],
+    n_classes: usize,
+    rows: &'a [usize],
+    features: &'a [usize],
+    counter: &'a OpCounter,
+) -> SplitContext<'a> {
+    SplitContext {
+        ds: TrainSet { x, y, n_classes },
+        rows,
+        features,
+        edges: make_edges(features, &feature_ranges_view(x), 10, false, &mut Rng::new(1)),
+        impurity: Impurity::Gini,
+        counter,
+    }
+}
+
+/// A BanditMIPS config whose batch covers every coordinate in one round:
+/// with permutation sampling the estimates are then *exact* at full
+/// coverage, so cold answers are the true top-k deterministically — the
+/// reference the warm refresh must reproduce.
+fn exact_mips_cfg(d: usize, k: usize) -> BanditMipsConfig {
+    BanditMipsConfig { k, batch_size: d.max(32), ..Default::default() }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot isolation
+// ---------------------------------------------------------------------
+
+/// Property: a concurrent reader pins version N or N+1 — never a blend.
+/// Every committed batch carries its batch index in column 0, so any
+/// torn read (rows of batch b visible without all of batches 0..b, or a
+/// partial batch) is detected by a single column scan.
+#[test]
+fn concurrent_readers_never_observe_a_half_applied_batch() {
+    const BATCH: usize = 25;
+    const BATCHES: usize = 40;
+    let live = Arc::new(LiveStore::new(4, live_opts(16)).unwrap());
+    let done = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for _ in 0..4 {
+        let live = live.clone();
+        let done = done.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut last_version = 0u64;
+            let mut checks = 0usize;
+            while !done.load(Ordering::Acquire) || checks == 0 {
+                let snap = live.pin();
+                let v = DatasetView::version(&*snap);
+                assert!(v >= last_version, "pins must be monotone: {v} < {last_version}");
+                last_version = v;
+                let n = snap.n_rows();
+                assert_eq!(
+                    n,
+                    v as usize * BATCH,
+                    "version {v} must hold exactly {v} complete batches"
+                );
+                let rows: Vec<usize> = (0..n).collect();
+                let mut col = vec![0f32; n];
+                snap.read_col(0, &rows, &mut col);
+                for (r, &marker) in col.iter().enumerate() {
+                    assert_eq!(
+                        marker,
+                        (r / BATCH) as f32,
+                        "row {r} of version {v} shows a blended batch"
+                    );
+                }
+                checks += 1;
+            }
+            checks
+        }));
+    }
+    for b in 0..BATCHES {
+        let mut m = gaussian(BATCH, 4, 1_000 + b as u64);
+        for i in 0..BATCH {
+            m.row_mut(i)[0] = b as f32;
+        }
+        live.commit_batch(&m).unwrap();
+        std::thread::yield_now();
+    }
+    done.store(true, Ordering::Release);
+    for r in readers {
+        let checks = r.join().unwrap();
+        assert!(checks > 0, "reader never got to check anything");
+    }
+    assert_eq!(DatasetView::version(&*live.pin()), BATCHES as u64);
+}
+
+// ---------------------------------------------------------------------
+// Warm-started refresh acceptance (the tentpole contract)
+// ---------------------------------------------------------------------
+
+/// For every fixture seed: the warm-started MIPS refresh after an append
+/// returns the same top-k atoms as a cold solve on the same snapshot,
+/// for under 50% of the cold solve's OpCounter samples.
+#[test]
+fn mips_refresh_matches_cold_at_under_half_cost_on_every_fixture() {
+    for fx in refresh_corpus() {
+        let d = fx.base.x.d;
+        let live = LiveStore::new(d, live_opts(64)).unwrap();
+        let snap_a = live.commit_batch(&fx.base.x).unwrap();
+        let cfg = exact_mips_cfg(d, 3);
+        let mut rq = Rng::new(fx.seed ^ 0x9E00);
+        let qi = rq.below(fx.base.x.n);
+        let q: Vec<f32> = fx.base.x.row(qi).iter().map(|&v| v * 1.25).collect();
+
+        let c_prev = OpCounter::new();
+        let (_, model) = solve_model(&*snap_a, &q, &cfg, &c_prev);
+
+        let snap_b = live.commit_batch(&fx.append.x).unwrap();
+        let c_cold = OpCounter::new();
+        let (cold, _) = solve_model(&*snap_b, &q, &cfg, &c_cold);
+        let c_warm = OpCounter::new();
+        let (warm, model_b) = mips_refresh(&*snap_b, &q, &model, &cfg, &c_warm);
+
+        assert_eq!(warm.atoms, cold.atoms, "{}: warm != cold", fx.name);
+        assert!(
+            c_warm.get() * 2 < c_cold.get(),
+            "{}: warm {} is not < 50% of cold {}",
+            fx.name,
+            c_warm.get(),
+            c_cold.get()
+        );
+        assert_eq!(model_b.n_rows, snap_b.n_rows());
+        assert_eq!(model_b.version, DatasetView::version(&*snap_b));
+    }
+}
+
+/// For every clusterable fixture seed: warm-started BanditPAM refresh
+/// lands on the same medoids (and loss bits) as a cold solve on the
+/// grown snapshot, for under 50% of the cold distance evaluations.
+#[test]
+fn kmedoids_refresh_matches_cold_at_under_half_cost_on_clusterable_fixtures() {
+    for fx in refresh_corpus().into_iter().filter(|f| f.clusterable) {
+        let d = fx.base.x.d;
+        let live = LiveStore::new(d, live_opts(64)).unwrap();
+        let snap_a = live.commit_batch(&fx.base.x).unwrap();
+        let snap_b = live.commit_batch(&fx.append.x).unwrap();
+        let mut cfg = BanditPamConfig::new(fx.k);
+        cfg.km.seed = fx.seed;
+
+        let ps_a = ViewPointSet::new(snap_a.clone(), Metric::L2);
+        let prev = bandit_pam(&ps_a, &cfg);
+
+        let ps_cold = ViewPointSet::new(snap_b.clone(), Metric::L2);
+        let cold = bandit_pam(&ps_cold, &cfg);
+        let ps_warm = ViewPointSet::new(snap_b.clone(), Metric::L2);
+        let warm = bandit_pam_refresh(&ps_warm, &prev.medoids, &cfg);
+
+        assert_eq!(warm.medoids, cold.medoids, "{}: medoids diverged", fx.name);
+        assert_eq!(warm.loss.to_bits(), cold.loss.to_bits(), "{}: loss bits", fx.name);
+        assert!(
+            warm.dist_calls * 2 < cold.dist_calls,
+            "{}: warm {} is not < 50% of cold {}",
+            fx.name,
+            warm.dist_calls,
+            cold.dist_calls
+        );
+    }
+}
+
+/// For every fixture seed: the warm-started node-split refresh returns
+/// the same (feature, threshold, impurity) as a cold exact solve on the
+/// grown snapshot — bit for bit, classification histograms being
+/// order-independent — for under 50% of the cold insertions (both the
+/// exact scan's and MABSplit's).
+#[test]
+fn split_refresh_matches_cold_at_under_half_cost_on_every_fixture() {
+    for fx in refresh_corpus() {
+        let d = fx.base.x.d;
+        let full = fx.full();
+        let live = LiveStore::new(d, live_opts(64)).unwrap();
+        let snap_a = live.commit_batch(&fx.base.x).unwrap();
+        let snap_b = live.commit_batch(&fx.append.x).unwrap();
+        let features: Vec<usize> = (0..d).collect();
+        let rows_a: Vec<usize> = (0..fx.base.x.n).collect();
+        let rows_b: Vec<usize> = (0..full.x.n).collect();
+        let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
+
+        let c_prev = OpCounter::new();
+        let ctx_a = root_ctx(&*snap_a, &full.y, full.n_classes, &rows_a, &features, &c_prev);
+        let (_, mut cache) = solve_exact_cached(&ctx_a).unwrap();
+
+        let c_exact = OpCounter::new();
+        let ctx_b = root_ctx(&*snap_b, &full.y, full.n_classes, &rows_b, &features, &c_exact);
+        let cold_exact = solve_exactly(&ctx_b).unwrap();
+        let c_mab = OpCounter::new();
+        let ctx_b2 = root_ctx(&*snap_b, &full.y, full.n_classes, &rows_b, &features, &c_mab);
+        let cold_mab = solve_mab(&ctx_b2, 100, 0.01, fx.seed).unwrap();
+
+        let c_warm = OpCounter::new();
+        let ts_b = TrainSet { x: &*snap_b, y: &full.y, n_classes: full.n_classes };
+        let warm = refresh_split(&mut cache, &ts_b, &rows_b, &new_rows, &c_warm).unwrap();
+
+        assert_eq!(
+            (warm.feature, warm.threshold.to_bits(), warm.child_impurity.to_bits()),
+            (
+                cold_exact.feature,
+                cold_exact.threshold.to_bits(),
+                cold_exact.child_impurity.to_bits()
+            ),
+            "{}: warm split != cold exact split",
+            fx.name
+        );
+        // MABSplit is the chapter's cold solver: the warm split must be at
+        // least as good, and cheaper than half its insertions too.
+        assert!(
+            warm.child_impurity <= cold_mab.child_impurity + 1e-9,
+            "{}: warm impurity {} worse than cold MABSplit {}",
+            fx.name,
+            warm.child_impurity,
+            cold_mab.child_impurity
+        );
+        assert!(
+            c_warm.get() * 2 < c_exact.get(),
+            "{}: warm {} not < 50% of exact cold {}",
+            fx.name,
+            c_warm.get(),
+            c_exact.get()
+        );
+        assert!(
+            c_warm.get() * 2 < c_mab.get(),
+            "{}: warm {} not < 50% of MABSplit cold {}",
+            fx.name,
+            c_warm.get(),
+            c_mab.get()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ingest/query stress with a serial-replay oracle
+// ---------------------------------------------------------------------
+
+fn fingerprint_answer(atoms: &[usize], samples: u64) -> u64 {
+    let as_f32: Vec<f32> = atoms.iter().map(|&a| a as f32).collect();
+    fingerprint_bits(&as_f32) ^ samples.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One ingest thread commits batches while N query threads hammer the
+/// coordinator; every response names the (version, seed) it was served
+/// with, and a serial replay of that exact interleaving — same snapshot,
+/// same seed, one thread — must reproduce every answer and sample count
+/// bit for bit.
+#[test]
+fn ingest_query_stress_is_bit_identical_to_serial_replay() {
+    for &threads in &[1usize, 2, 4, 8] {
+        stress_round(threads);
+    }
+}
+
+fn stress_round(threads: usize) {
+    const D: usize = 48;
+    let live = Arc::new(LiveStore::new(D, live_opts(32)).unwrap());
+    let snaps: Arc<Mutex<HashMap<u64, Arc<LiveSnapshot>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let s0 = live.commit_batch(&gaussian(80, D, 7)).unwrap();
+    snaps.lock().unwrap().insert(DatasetView::version(&*s0), s0);
+
+    let cfg = ServerConfig {
+        workers: threads,
+        max_batch: 4,
+        batch_timeout_us: 200,
+        validate_every: 0, // no PJRT in this test
+        // default warm_coords stays on: responses carry the batch-shared
+        // warm cache, so the replay reconstructs it exactly.
+        ..Default::default()
+    };
+    let server = Arc::new(MipsServer::start(live.clone(), cfg.clone(), Backend::NativeBandit));
+
+    // Ingest thread: 10 commits racing the queries.
+    let ingest = {
+        let live = live.clone();
+        let snaps = snaps.clone();
+        std::thread::spawn(move || {
+            for b in 0..10u64 {
+                let s = live.commit_batch(&gaussian(16, D, 100 + b)).unwrap();
+                snaps.lock().unwrap().insert(DatasetView::version(&*s), s);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    // Query threads.
+    let mut workers = Vec::new();
+    for t in 0..threads {
+        let server = server.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x5717E55 ^ t as u64);
+            let mut out = Vec::new();
+            for i in 0..25 {
+                let q: Vec<f32> = (0..D).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let rx = server.submit(q.clone());
+                let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+                out.push((format!("t{t}-q{i}"), q, resp));
+            }
+            out
+        }));
+    }
+    let mut responses = Vec::new();
+    for w in workers {
+        responses.extend(w.join().unwrap());
+    }
+    ingest.join().unwrap();
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server still referenced after joins"),
+    }
+
+    // Serial replay of the recorded interleaving.
+    let mut live_trace = Trace::new();
+    let mut replay_trace = Trace::new();
+    let snaps = snaps.lock().unwrap();
+    for (label, q, resp) in &responses {
+        live_trace.record(label.clone(), fingerprint_answer(&resp.top_atoms, resp.samples));
+        let snap = snaps
+            .get(&resp.version)
+            .unwrap_or_else(|| panic!("{label}: version {} not retained", resp.version));
+        let mcfg = BanditMipsConfig {
+            delta: cfg.delta,
+            batch_size: 64,
+            strategy: SampleStrategy::Uniform,
+            sigma: None,
+            k: cfg.k,
+            seed: resp.seed,
+            threads: 1,
+        };
+        let c = OpCounter::new();
+        let again = bandit_mips_warm(&**snap, q, &mcfg, &c, &resp.warm_coords);
+        replay_trace.record(label.clone(), fingerprint_answer(&again.atoms, again.samples));
+        assert_eq!(
+            (&again.atoms, again.samples),
+            (&resp.top_atoms, resp.samples),
+            "threads={threads} {label}: live vs serial replay diverged at v{}",
+            resp.version
+        );
+    }
+    assert_eq!(
+        live_trace.first_divergence(&replay_trace),
+        None,
+        "threads={threads}: golden traces diverged"
+    );
+    assert_eq!(responses.len(), threads * 25);
+}
+
+// ---------------------------------------------------------------------
+// Tombstones × refresh fallbacks
+// ---------------------------------------------------------------------
+
+/// Deleting a non-incumbent row remaps the standing model into the new
+/// version and the warm refresh still matches cold; deleting an
+/// incumbent kills the remap, forcing (correctly) a cold fallback.
+#[test]
+fn tombstoned_models_remap_or_fall_back_to_cold() {
+    let d = 24;
+    let base = gaussian(200, d, 53);
+    let live = LiveStore::new(d, live_opts(32)).unwrap();
+    let snap_a = live.commit_batch(&base).unwrap();
+    let q: Vec<f32> = base.row(11).iter().map(|&v| v * 1.5).collect();
+    let cfg = exact_mips_cfg(d, 2);
+    let c = OpCounter::new();
+    let (_, model) = solve_model(&*snap_a, &q, &cfg, &c);
+    let incumbent_ids: Vec<u64> = model.top.iter().map(|&(r, _)| snap_a.stable_id(r)).collect();
+
+    // Delete a row that is NOT an incumbent.
+    let victim = (0..200u64).find(|id| !incumbent_ids.contains(id)).unwrap();
+    let snap_b = live.delete_rows(&[victim]).unwrap();
+    let remapped = model
+        .remap(snap_b.n_rows(), |r| snap_b.locate(snap_a.stable_id(r)))
+        .expect("incumbents survived");
+    let c_cold = OpCounter::new();
+    let (cold, _) = solve_model(&*snap_b, &q, &cfg, &c_cold);
+    let c_warm = OpCounter::new();
+    let (warm, _) = mips_refresh(&*snap_b, &q, &remapped, &cfg, &c_warm);
+    assert_eq!(warm.atoms, cold.atoms, "remapped warm refresh must match cold");
+    assert!(c_warm.get() < c_cold.get());
+
+    // Delete the top incumbent: remap reports the loss, caller goes cold.
+    let snap_c = live.delete_rows(&[incumbent_ids[0]]).unwrap();
+    assert!(
+        remapped
+            .remap(snap_c.n_rows(), |r| snap_c.locate(snap_b.stable_id(r)))
+            .is_none(),
+        "losing an incumbent must invalidate the model"
+    );
+    let c2 = OpCounter::new();
+    let (cold_c, _) = solve_model(&*snap_c, &q, &cfg, &c2);
+    let truth = naive_mips(&*snap_c, &q, 2, &OpCounter::new());
+    assert_eq!(cold_c.atoms, truth, "cold solve on tombstoned snapshot is exact");
+}
+
+// ---------------------------------------------------------------------
+// CI store-matrix entry point
+// ---------------------------------------------------------------------
+
+/// The body CI sweeps with `AS_TEST_STORE` × `AS_THREADS`: the solver
+/// suite runs on the env-selected substrate (dense matrix by default,
+/// columnar f32, or quantized+spilled i8) and stays correct on all of
+/// them — exact answers where the codec is lossless or the solve covers
+/// every coordinate, quality thresholds where quantization blurs bits.
+#[test]
+fn solver_suite_runs_on_env_selected_substrate() {
+    let opts = store_options_from_env();
+    let fx = refresh_corpus()
+        .into_iter()
+        .find(|f| f.name == "small-clusterable")
+        .unwrap();
+    let full = fx.full();
+    let view = materialize(&full.x, &opts);
+
+    // BanditMIPS vs naive over the SAME view: both read the same decoded
+    // values, and full-coverage permutation estimates are exact, so the
+    // answers agree even under a lossy codec.
+    let q: Vec<f32> = full.x.row(5).iter().map(|&v| v * 1.2).collect();
+    let cfg = exact_mips_cfg(full.x.d, 2);
+    let c = OpCounter::new();
+    let ans = bandit_mips(&*view, &q, &cfg, &c);
+    let truth = naive_mips(&*view, &q, 2, &OpCounter::new());
+    assert_eq!(ans.atoms, truth, "bandit vs naive on the same substrate");
+
+    // MABSplit forest trains on the substrate.
+    let ts = TrainSet { x: &*view, y: &full.y, n_classes: full.n_classes };
+    let cf = OpCounter::new();
+    let mut fcfg = ForestConfig::new(ForestKind::RandomForest, Solver::mab());
+    fcfg.n_trees = 3;
+    let forest = Forest::fit_view(&ts, &fcfg, &cf);
+    let acc = forest.accuracy_view(&ts);
+    assert!(acc > 0.8, "substrate forest accuracy {acc}");
+
+    // BanditPAM clusters through the substrate.
+    let ps = ViewPointSet::new(view, Metric::L2);
+    let km = bandit_pam(&ps, &BanditPamConfig::new(fx.k));
+    assert_eq!(km.medoids.len(), fx.k);
+    assert!(km.loss.is_finite());
+}
