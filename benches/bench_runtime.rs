@@ -12,7 +12,14 @@
 //!    solve after an append — op counts, wall clock, and answer equality
 //!    per solver family — written to `BENCH_live.json` so the < 50%
 //!    acceptance ratio is tracked as a trend, not just a pass/fail.
-//! 3. **PJRT benches** (skipped with a message when `make artifacts`
+//! 3. **Kernel sweep** (always runs): scalar vs batched access path ×
+//!    {F32, F16, I8} × {RAM, spill} on the BanditMIPS serving workload
+//!    and a MABSplit node split, written to `BENCH_kernels.json`. The
+//!    scalar leg runs the same solver through `testkit::ScalarView`
+//!    (batched `DatasetView` hooks hidden → per-pull trait defaults), so
+//!    the wall-clock gap IS the kernel layer's win; answers and op
+//!    counts are asserted identical between the legs.
+//! 4. **PJRT benches** (skipped with a message when `make artifacts`
 //!    hasn't been run): artifact execute round-trips — the L3↔XLA
 //!    boundary cost the serving coordinator pays per batched call.
 
@@ -36,6 +43,7 @@ use adaptive_sampling::store::{
 use adaptive_sampling::util::bench::Bencher;
 use adaptive_sampling::util::rng::Rng;
 use adaptive_sampling::util::testkit;
+use adaptive_sampling::util::testkit::ScalarView;
 
 struct StorePoint {
     solver: &'static str,
@@ -299,6 +307,169 @@ fn live_sweep() -> Vec<LivePoint> {
     points
 }
 
+struct KernelPoint {
+    solver: &'static str,
+    /// `codec/backing`, e.g. "i8/ram".
+    store: String,
+    /// "scalar" (ScalarView per-pull defaults) or "batched" (kernels).
+    mode: &'static str,
+    wall_s: f64,
+    ops: u64,
+    /// Full-chunk Vec<f32> decodes performed during this leg.
+    chunk_decodes: u64,
+}
+
+/// Scalar vs batched kernel sweep (see module docs, point 3). Answers
+/// and op counts are asserted identical between the two legs of every
+/// configuration — the sweep measures wall clock only.
+fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
+    let mut points = Vec::new();
+    let configs = |raw_bytes: usize| {
+        let budget = (raw_bytes / 8).max(64 * 1024);
+        let mut out = Vec::new();
+        for codec in [Codec::F32, Codec::F16, Codec::I8] {
+            for spill in [false, true] {
+                let mut opts =
+                    StoreOptions { codec, rows_per_chunk: 1024, ..Default::default() };
+                if spill {
+                    opts = opts.spill_to_temp(budget);
+                }
+                let label = format!("{}/{}", codec.name(), if spill { "spill" } else { "ram" });
+                out.push((label, opts));
+            }
+        }
+        out
+    };
+
+    // --- BanditMIPS serving sweep (threads = 1: the acceptance config).
+    let (na, da) = if quick { (100, 4_000) } else { (200, 20_000) };
+    let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(na, da, 6, 15);
+    let run_mips = |x: &dyn DatasetView| {
+        let c = OpCounter::new();
+        let t0 = Instant::now();
+        let mut answers = Vec::new();
+        for qi in 0..queries.n {
+            let cfg = BanditMipsConfig { seed: 7 + qi as u64, threads: 1, ..Default::default() };
+            answers.push(bandit_mips(x, queries.row(qi), &cfg, &c).atoms);
+        }
+        (t0.elapsed().as_secs_f64(), c.get(), answers)
+    };
+    for (label, opts) in configs(na * da * 4) {
+        // Fresh store per leg: the batched leg must not inherit the
+        // scalar leg's warm decoded-chunk LRU (cold-miss costs are part
+        // of what the sweep measures).
+        let cs = ColumnStore::from_matrix(&atoms, &opts).expect("store build");
+        let (sw, sops, sans) = run_mips(&ScalarView(&cs));
+        let scalar_decodes = cs.chunk_decodes();
+        drop(cs);
+        let cs = ColumnStore::from_matrix(&atoms, &opts).expect("store build");
+        let (bw, bops, bans) = run_mips(&cs);
+        assert_eq!(bans, sans, "banditmips {label}: batched answers diverged");
+        assert_eq!(bops, sops, "banditmips {label}: batched op count diverged");
+        points.push(KernelPoint {
+            solver: "banditmips",
+            store: label.clone(),
+            mode: "scalar",
+            wall_s: sw,
+            ops: sops,
+            chunk_decodes: scalar_decodes,
+        });
+        points.push(KernelPoint {
+            solver: "banditmips",
+            store: label,
+            mode: "batched",
+            wall_s: bw,
+            ops: bops,
+            chunk_decodes: cs.chunk_decodes(),
+        });
+    }
+
+    // --- MABSplit node split.
+    let n = if quick { 4_000 } else { 20_000 };
+    let ds = make_classification(n, 10, 3, 2, 2.5, 7);
+    let rows: Vec<usize> = (0..ds.x.n).collect();
+    let features: Vec<usize> = (0..ds.x.d).collect();
+    let run_mab = |x: &dyn DatasetView| {
+        let c = OpCounter::new();
+        let ranges = feature_ranges_view(x);
+        let mut rng = Rng::new(1);
+        let ctx = SplitContext {
+            ds: TrainSet { x, y: &ds.y, n_classes: ds.n_classes },
+            rows: &rows,
+            features: &features,
+            edges: make_edges(&features, &ranges, 10, false, &mut rng),
+            impurity: Impurity::Gini,
+            counter: &c,
+        };
+        let t0 = Instant::now();
+        let s = solve_mab(&ctx, 100, 0.01, 77).expect("split");
+        (t0.elapsed().as_secs_f64(), c.get(), (s.feature, s.threshold.to_bits()))
+    };
+    for (label, opts) in configs(ds.x.n * ds.x.d * 4) {
+        // Fresh store per leg (same cold-cache discipline as above).
+        let cs = ColumnStore::from_matrix(&ds.x, &opts).expect("store build");
+        let (sw, sops, ssplit) = run_mab(&ScalarView(&cs));
+        let scalar_decodes = cs.chunk_decodes();
+        drop(cs);
+        let cs = ColumnStore::from_matrix(&ds.x, &opts).expect("store build");
+        let (bw, bops, bsplit) = run_mab(&cs);
+        assert_eq!(bsplit, ssplit, "mabsplit {label}: batched split diverged");
+        assert_eq!(bops, sops, "mabsplit {label}: batched insertion count diverged");
+        points.push(KernelPoint {
+            solver: "mabsplit",
+            store: label.clone(),
+            mode: "scalar",
+            wall_s: sw,
+            ops: sops,
+            chunk_decodes: scalar_decodes,
+        });
+        points.push(KernelPoint {
+            solver: "mabsplit",
+            store: label,
+            mode: "batched",
+            wall_s: bw,
+            ops: bops,
+            chunk_decodes: cs.chunk_decodes(),
+        });
+    }
+
+    points
+}
+
+fn write_kernels_json(points: &[KernelPoint]) {
+    // Pair up scalar/batched legs so the JSON carries the speedup.
+    let scalar_wall = |solver: &str, store: &str| {
+        points
+            .iter()
+            .find(|p| p.solver == solver && p.store == store && p.mode == "scalar")
+            .map(|p| p.wall_s)
+    };
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            let speedup = match (p.mode, scalar_wall(p.solver, &p.store)) {
+                ("batched", Some(sw)) if p.wall_s > 0.0 => {
+                    format!(", \"speedup_vs_scalar\": {:.3}", sw / p.wall_s)
+                }
+                _ => String::new(),
+            };
+            format!(
+                "    {{\"solver\": \"{}\", \"store\": \"{}\", \"mode\": \"{}\", \
+                 \"wall_s\": {:.6}, \"ops\": {}, \"chunk_decodes\": {}{}}}",
+                p.solver, p.store, p.mode, p.wall_s, p.ops, p.chunk_decodes, speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"kernel_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_kernels.json", &json) {
+        Ok(()) => println!("wrote BENCH_kernels.json"),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
+}
+
 fn write_live_json(points: &[LivePoint]) {
     let rows: Vec<String> = points
         .iter()
@@ -386,6 +557,21 @@ fn main() {
         );
     }
     write_live_json(&live_points);
+
+    println!("\nkernel sweep: scalar (ScalarView) vs batched kernels per codec/backing");
+    let kernel_points = kernel_sweep(quick);
+    for p in &kernel_points {
+        println!(
+            "kernels/{:<10} {:<10} {:<7} wall={:>9.2}ms ops={:<12} chunk_decodes={}",
+            p.solver,
+            p.store,
+            p.mode,
+            p.wall_s * 1e3,
+            p.ops,
+            p.chunk_decodes
+        );
+    }
+    write_kernels_json(&kernel_points);
 
     let dir = ArtifactStore::default_dir();
     if !dir.join("manifest.txt").exists() {

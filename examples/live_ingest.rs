@@ -115,6 +115,16 @@ fn main() {
         final_snap.n_segments(),
         total_samples as f64 / n_queries as f64
     );
+    // Kernel-layer observability: on quantized in-RAM segments the fused
+    // read path leaves the decoded-chunk LRU untouched (decode-free
+    // serving); with --store=...,spill the hit/miss split shows how well
+    // the cache amortizes disk reads.
+    println!(
+        "decoded-chunk LRU (all segments): {} | full-chunk decodes={} spill_reads={}",
+        final_snap.cache_counters(),
+        final_snap.chunk_decodes(),
+        final_snap.spill_reads()
+    );
 
     // ---- warm-started refresh: BanditMIPS standing query --------------
     println!("\n== refresh: BanditMIPS standing query ==");

@@ -31,6 +31,16 @@
 //! ranges, every per-arm delta is computed by the same code over the same
 //! batch, and reductions are applied in fixed arm order — worker count
 //! and scheduling never reach the arithmetic.
+//!
+//! **Block-scheduled pulls:** each chapter's [`AdaptiveArms`] serves its
+//! shard's pulls with batched [`crate::kernels`] calls — BanditMIPS
+//! tiles surviving arms into `gather_block` gathers, BanditPAM
+//! evaluates a whole reference batch per (FastPAM1-grouped) arm with one
+//! `dist_batch` sweep, MABSplit fills each feature histogram from one
+//! chunk-aligned column sweep — so a round issues one kernel call per
+//! arm tile per shard instead of one storage access per pull. The
+//! determinism contract is unaffected: batching never reorders the
+//! arithmetic *within* an arm's reduction.
 
 pub mod streams;
 

@@ -327,10 +327,12 @@ fn pjrt_exact(
             &gathered
         }
         None => {
+            // Batched materialization: one gather_rows kernel sweep
+            // (chunk-batched on columnar stores, fused on quantized ones)
+            // instead of n scalar row reads.
             let mut buf = vec![0f32; an * ad];
-            for i in 0..n {
-                atoms.read_row(i, &mut buf[i * ad..(i + 1) * ad]);
-            }
+            let rows = crate::kernels::scratch::iota(n);
+            atoms.gather_rows(&rows, &mut buf[..n * ad]);
             gathered = buf;
             &gathered
         }

@@ -1,7 +1,9 @@
 //! Vector distance metrics used throughout Chapter 2: l1, l2, cosine.
 //! `d` need not be a metric for k-medoids (the thesis stresses this); we
-//! nevertheless only ship honest dissimilarities here. Hot loops are
-//! written in a fixed-lane form that autovectorizes.
+//! nevertheless only ship honest dissimilarities here. The fixed-lane
+//! reduction loops live in [`crate::kernels::reduce`] (this module used
+//! to carry its own `lane_reduce!` copy); the re-exports below keep the
+//! historical call sites and the bit-exact results unchanged.
 
 /// Supported vector dissimilarities.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,90 +35,7 @@ impl Metric {
     }
 }
 
-const LANES: usize = 8;
-
-macro_rules! lane_reduce {
-    ($a:expr, $b:expr, $op:expr) => {{
-        let a = $a;
-        let b = $b;
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let chunks = n / LANES;
-        let mut acc = [0f32; LANES];
-        for c in 0..chunks {
-            let i = c * LANES;
-            for l in 0..LANES {
-                acc[l] += $op(a[i + l], b[i + l]);
-            }
-        }
-        let mut s = 0f64;
-        for l in 0..LANES {
-            s += acc[l] as f64;
-        }
-        for i in chunks * LANES..n {
-            s += $op(a[i], b[i]) as f64;
-        }
-        s
-    }};
-}
-
-/// Manhattan distance.
-#[inline]
-pub fn l1(a: &[f32], b: &[f32]) -> f64 {
-    lane_reduce!(a, b, |x: f32, y: f32| (x - y).abs())
-}
-
-/// Euclidean distance.
-#[inline]
-pub fn l2(a: &[f32], b: &[f32]) -> f64 {
-    lane_reduce!(a, b, |x: f32, y: f32| {
-        let d = x - y;
-        d * d
-    })
-    .sqrt()
-}
-
-/// Squared Euclidean distance (no sqrt), for callers that only compare.
-#[inline]
-pub fn l2_sq(a: &[f32], b: &[f32]) -> f64 {
-    lane_reduce!(a, b, |x: f32, y: f32| {
-        let d = x - y;
-        d * d
-    })
-}
-
-/// Cosine distance: 1 - cos(a, b). Zero vectors get distance 1.
-#[inline]
-pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / LANES;
-    let mut dacc = [0f32; LANES];
-    let mut aacc = [0f32; LANES];
-    let mut bacc = [0f32; LANES];
-    for c in 0..chunks {
-        let i = c * LANES;
-        for l in 0..LANES {
-            dacc[l] += a[i + l] * b[i + l];
-            aacc[l] += a[i + l] * a[i + l];
-            bacc[l] += b[i + l] * b[i + l];
-        }
-    }
-    let (mut d, mut na, mut nb) = (0f64, 0f64, 0f64);
-    for l in 0..LANES {
-        d += dacc[l] as f64;
-        na += aacc[l] as f64;
-        nb += bacc[l] as f64;
-    }
-    for i in chunks * LANES..n {
-        d += (a[i] * b[i]) as f64;
-        na += (a[i] * a[i]) as f64;
-        nb += (b[i] * b[i]) as f64;
-    }
-    let denom = (na.sqrt() * nb.sqrt()).max(1e-20);
-    // Clamp away float rounding: cos similarity lives in [-1, 1].
-    (1.0 - d / denom).clamp(0.0, 2.0)
-}
+pub use crate::kernels::reduce::{cosine, l1, l2, l2_sq};
 
 #[cfg(test)]
 mod tests {

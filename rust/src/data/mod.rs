@@ -85,6 +85,18 @@ pub trait PointSet: Send + Sync {
     }
     /// Dissimilarity between points `i` and `j` (counted).
     fn dist(&self, i: usize, j: usize) -> f64;
+    /// Batched dissimilarities from point `i` to each point in `js`
+    /// (`out[k] = dist(i, js[k])`), counted as `js.len()` evaluations —
+    /// one batch now equals `js.len()` scalar pulls on the counter, so
+    /// sample-complexity accounting is identical either way. Default:
+    /// one scalar [`PointSet::dist`] per pair; vector-backed sets
+    /// override with the block-scheduled kernels (point `i` gathered
+    /// once per batch instead of once per pair).
+    fn dist_batch(&self, i: usize, js: &[usize], out: &mut [f64]) {
+        for (slot, &j) in out.iter_mut().zip(js) {
+            *slot = self.dist(i, j);
+        }
+    }
     /// The distance-evaluation counter.
     fn counter(&self) -> &OpCounter;
 }
@@ -111,6 +123,14 @@ impl PointSet for VecPointSet {
     fn dist(&self, i: usize, j: usize) -> f64 {
         self.counter.incr();
         self.metric.eval(self.mat.row(i), self.mat.row(j))
+    }
+
+    fn dist_batch(&self, i: usize, js: &[usize], out: &mut [f64]) {
+        self.counter.add(js.len() as u64);
+        let xi = self.mat.row(i);
+        for (slot, &j) in out.iter_mut().zip(js) {
+            *slot = self.metric.eval(xi, self.mat.row(j));
+        }
     }
 
     fn counter(&self) -> &OpCounter {

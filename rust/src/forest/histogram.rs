@@ -132,9 +132,33 @@ impl ClassHistogram {
     #[inline]
     pub fn insert(&mut self, v: f32, class: usize, counter: &OpCounter) {
         counter.incr();
+        self.insert_uncounted(v, class);
+    }
+
+    /// Insert without touching the counter — the batched fill path
+    /// ([`ClassHistogram::fill`]) counts once per run instead of once per
+    /// element; totals are identical.
+    #[inline]
+    pub fn insert_uncounted(&mut self, v: f32, class: usize) {
         let b = self.edges.bin_of(v);
         self.counts[b * self.k + class] += 1.0;
         self.total += 1.0;
+    }
+
+    /// Batched fill: insert `vals` (with their classes) in order, counted
+    /// as `vals.len()` insertions in one counter add. Bin state is
+    /// identical to the scalar insert loop — integer counts accumulated
+    /// in the same order.
+    pub fn fill(
+        &mut self,
+        vals: &[f32],
+        classes: impl Iterator<Item = usize>,
+        counter: &OpCounter,
+    ) {
+        counter.add(vals.len() as u64);
+        for (&v, class) in vals.iter().zip(classes) {
+            self.insert_uncounted(v, class);
+        }
     }
 
     /// Weighted-impurity objective μ_ft (Eq. 3.3, normalized by total) and
@@ -257,12 +281,30 @@ impl MomentHistogram {
     #[inline]
     pub fn insert(&mut self, v: f32, y: f64, counter: &OpCounter) {
         counter.incr();
+        self.insert_uncounted(v, y);
+    }
+
+    /// Insert without touching the counter (see
+    /// [`ClassHistogram::insert_uncounted`]).
+    #[inline]
+    pub fn insert_uncounted(&mut self, v: f32, y: f64) {
         let b = self.edges.bin_of(v);
         let m = &mut self.moments[b];
         m.0 += 1.0;
         m.1 += y;
         m.2 += y * y;
         self.total += 1.0;
+    }
+
+    /// Batched fill: insert `vals` (with their targets) in order, counted
+    /// as `vals.len()` insertions in one counter add. Moment sums
+    /// accumulate in the same order as the scalar insert loop, so the
+    /// f64 state is bit-identical.
+    pub fn fill(&mut self, vals: &[f32], ys: impl Iterator<Item = f64>, counter: &OpCounter) {
+        counter.add(vals.len() as u64);
+        for (&v, y) in vals.iter().zip(ys) {
+            self.insert_uncounted(v, y);
+        }
     }
 
     /// Weighted child MSE for every threshold + a CI scale: the standard

@@ -10,10 +10,12 @@
 //!
 //! Data access goes through [`DatasetView`] (a [`TrainSet`] bundles the
 //! feature view with labels): each feature's histogram fill is one
-//! [`DatasetView::read_col`] gather — a true column scan on a
-//! [`crate::store::ColumnStore`], instead of the row-major striding the
-//! dense path forced — and values are inserted in batch order, so the
-//! accumulated moments are bit-identical to the legacy `Matrix` path.
+//! chunk-aligned [`DatasetView::for_each_col_block`] sweep — a true
+//! column scan on a [`crate::store::ColumnStore`] whose quantized chunks
+//! are decoded element-fused into arena scratch (no full-chunk
+//! `Vec<f32>`), instead of the row-major striding the dense path forced
+//! — and values are inserted in batch order, so the accumulated moments
+//! are bit-identical to the legacy `Matrix` path.
 
 use crate::bandit::{successive_elimination, AdaptiveArms, BanditConfig, ParCtx, Sampling};
 use crate::data::LabeledDataset;
@@ -73,6 +75,41 @@ pub struct SplitContext<'a> {
     pub counter: &'a OpCounter,
 }
 
+/// Fill one feature's classification histogram from a chunk-aligned
+/// column sweep ([`DatasetView::for_each_col_block`]): on a
+/// [`crate::store::ColumnStore`] each chunk is decoded element-fused
+/// into an arena run buffer (no full-chunk `Vec<f32>`), and insertions
+/// are counted once per run — totals and bin state identical to the
+/// per-element path.
+fn fill_class(
+    h: &mut ClassHistogram,
+    x: &dyn DatasetView,
+    feature: usize,
+    rows: &[usize],
+    y: &[f32],
+    counter: &OpCounter,
+) {
+    x.for_each_col_block(feature, rows, &mut |start, vals| {
+        let classes = rows[start..start + vals.len()].iter().map(|&r| y[r] as usize);
+        h.fill(vals, classes, counter);
+    });
+}
+
+/// Regression sibling of [`fill_class`].
+fn fill_moment(
+    h: &mut MomentHistogram,
+    x: &dyn DatasetView,
+    feature: usize,
+    rows: &[usize],
+    y: &[f32],
+    counter: &OpCounter,
+) {
+    x.for_each_col_block(feature, rows, &mut |start, vals| {
+        let ys = rows[start..start + vals.len()].iter().map(|&r| y[r] as f64);
+        h.fill(vals, ys, counter);
+    });
+}
+
 /// Exact solver: fill every feature histogram with every node point, then
 /// scan all thresholds. `n·m` insertions, one column scan per feature.
 pub fn solve_exactly(ctx: &SplitContext) -> Option<Split> {
@@ -94,20 +131,14 @@ pub fn solve_exact_cached(ctx: &SplitContext) -> Option<(Split, SplitCache)> {
         hists_r: Vec::new(),
         n_rows_seen: ctx.rows.len(),
     };
-    let mut vals = vec![0f32; ctx.rows.len()];
     for (fi, &f) in ctx.features.iter().enumerate() {
-        ctx.ds.x.read_col(f, ctx.rows, &mut vals);
         if regression {
             let mut h = MomentHistogram::new(ctx.edges[fi].clone());
-            for (&r, &v) in ctx.rows.iter().zip(&vals) {
-                h.insert(v, ctx.ds.y[r] as f64, ctx.counter);
-            }
+            fill_moment(&mut h, ctx.ds.x, f, ctx.rows, ctx.ds.y, ctx.counter);
             cache.hists_r.push(h);
         } else {
             let mut h = ClassHistogram::new(ctx.edges[fi].clone(), ctx.ds.n_classes);
-            for (&r, &v) in ctx.rows.iter().zip(&vals) {
-                h.insert(v, ctx.ds.y[r] as usize, ctx.counter);
-            }
+            fill_class(&mut h, ctx.ds.x, f, ctx.rows, ctx.ds.y, ctx.counter);
             cache.hists_c.push(h);
         }
     }
@@ -189,7 +220,6 @@ pub fn refresh_split(
 ) -> Option<Split> {
     let regression = cache.is_regression();
     debug_assert_eq!(regression, ds.is_regression());
-    let mut vals = vec![0f32; new_rows.len()];
     for fi in 0..cache.features.len() {
         let f = cache.features[fi];
         let (span_lo, span_hi) = cache.ranges[fi];
@@ -201,32 +231,21 @@ pub fn refresh_split(
             let t = cache.edges[fi].n_bins();
             cache.edges[fi] = BinEdges::equal_width(lo, hi, t);
             cache.ranges[fi] = (lo, hi);
-            let mut full_vals = vec![0f32; all_rows.len()];
-            ds.x.read_col(f, all_rows, &mut full_vals);
             if regression {
                 let mut h = MomentHistogram::new(cache.edges[fi].clone());
-                for (&r, &v) in all_rows.iter().zip(&full_vals) {
-                    h.insert(v, ds.y[r] as f64, counter);
-                }
+                fill_moment(&mut h, ds.x, f, all_rows, ds.y, counter);
                 cache.hists_r[fi] = h;
             } else {
                 let mut h = ClassHistogram::new(cache.edges[fi].clone(), cache.n_classes);
-                for (&r, &v) in all_rows.iter().zip(&full_vals) {
-                    h.insert(v, ds.y[r] as usize, counter);
-                }
+                fill_class(&mut h, ds.x, f, all_rows, ds.y, counter);
                 cache.hists_c[fi] = h;
             }
             continue;
         }
-        ds.x.read_col(f, new_rows, &mut vals);
         if regression {
-            for (&r, &v) in new_rows.iter().zip(&vals) {
-                cache.hists_r[fi].insert(v, ds.y[r] as f64, counter);
-            }
+            fill_moment(&mut cache.hists_r[fi], ds.x, f, new_rows, ds.y, counter);
         } else {
-            for (&r, &v) in new_rows.iter().zip(&vals) {
-                cache.hists_c[fi].insert(v, ds.y[r] as usize, counter);
-            }
+            fill_class(&mut cache.hists_c[fi], ds.x, f, new_rows, ds.y, counter);
         }
     }
     cache.n_rows_seen += new_rows.len();
@@ -384,21 +403,32 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
 
     fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
         let fis = self.features_of(arms);
-        // Resolve the batch to dataset rows once; every feature's column
-        // scan reuses it.
-        let rows: Vec<usize> = batch.iter().map(|&bi| self.ctx.rows[bi]).collect();
-        let mut vals = vec![0f32; rows.len()];
+        // Resolve the batch to dataset rows once (arena scratch); every
+        // feature's chunk-aligned column sweep reuses it.
+        let mut rows = crate::kernels::scratch::idx_buf(batch.len());
+        for (slot, &bi) in rows.iter_mut().zip(batch) {
+            *slot = self.ctx.rows[bi];
+        }
         for &fi in &fis {
             let f = self.ctx.features[fi];
-            self.ctx.ds.x.read_col(f, &rows, &mut vals);
             if self.ctx.ds.is_regression() {
-                for (&r, &v) in rows.iter().zip(&vals) {
-                    self.hists_r[fi].insert(v, self.ctx.ds.y[r] as f64, self.ctx.counter);
-                }
+                fill_moment(
+                    &mut self.hists_r[fi],
+                    self.ctx.ds.x,
+                    f,
+                    &rows,
+                    self.ctx.ds.y,
+                    self.ctx.counter,
+                );
             } else {
-                for (&r, &v) in rows.iter().zip(&vals) {
-                    self.hists_c[fi].insert(v, self.ctx.ds.y[r] as usize, self.ctx.counter);
-                }
+                fill_class(
+                    &mut self.hists_c[fi],
+                    self.ctx.ds.x,
+                    f,
+                    &rows,
+                    self.ctx.ds.y,
+                    self.ctx.counter,
+                );
             }
             self.refresh_feature(fi);
         }
@@ -416,13 +446,17 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
             return;
         }
         // One task per surviving feature: a histogram is only ever touched
-        // by its own shard, each shard fills from its own column scan, and
+        // by its own shard, each shard fills from its own chunk-aligned
+        // column sweep (fused-decoded, arena scratch on the worker), and
         // inserts happen in batch order within it, so the bins match the
         // sequential path bit-for-bit. Insertions are counted on per-shard
         // counters and merged once at batch end.
         let ctx = self.ctx;
         let counters = ShardCounters::new(fis.len());
-        let rows: Vec<usize> = batch.iter().map(|&bi| ctx.rows[bi]).collect();
+        let mut rows = crate::kernels::scratch::idx_buf(batch.len());
+        for (slot, &bi) in rows.iter_mut().zip(batch) {
+            *slot = ctx.rows[bi];
+        }
         let rows_ref: &[usize] = &rows;
         let regression = ctx.ds.is_regression();
         if regression {
@@ -436,11 +470,7 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
                 si += 1;
                 let f = ctx.features[fi];
                 tasks.push(Box::new(move || {
-                    let mut vals = vec![0f32; rows_ref.len()];
-                    ctx.ds.x.read_col(f, rows_ref, &mut vals);
-                    for (&r, &v) in rows_ref.iter().zip(&vals) {
-                        hist.insert(v, ctx.ds.y[r] as f64, ctr);
-                    }
+                    fill_moment(hist, ctx.ds.x, f, rows_ref, ctx.ds.y, ctr);
                 }));
             }
             p.pool.run(tasks);
@@ -455,11 +485,7 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
                 si += 1;
                 let f = ctx.features[fi];
                 tasks.push(Box::new(move || {
-                    let mut vals = vec![0f32; rows_ref.len()];
-                    ctx.ds.x.read_col(f, rows_ref, &mut vals);
-                    for (&r, &v) in rows_ref.iter().zip(&vals) {
-                        hist.insert(v, ctx.ds.y[r] as usize, ctr);
-                    }
+                    fill_class(hist, ctx.ds.x, f, rows_ref, ctx.ds.y, ctr);
                 }));
             }
             p.pool.run(tasks);
@@ -488,19 +514,13 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
         let fi = self.arm_offsets.partition_point(|&o| o <= arm) - 1;
         if self.n_inserted < self.ctx.rows.len() && !self.full[fi] {
             let f = self.ctx.features[fi];
-            let mut vals = vec![0f32; self.ctx.rows.len()];
-            self.ctx.ds.x.read_col(f, self.ctx.rows, &mut vals);
             if self.ctx.ds.is_regression() {
                 let mut h = MomentHistogram::new(self.ctx.edges[fi].clone());
-                for (&r, &v) in self.ctx.rows.iter().zip(&vals) {
-                    h.insert(v, self.ctx.ds.y[r] as f64, self.ctx.counter);
-                }
+                fill_moment(&mut h, self.ctx.ds.x, f, self.ctx.rows, self.ctx.ds.y, self.ctx.counter);
                 self.hists_r[fi] = h;
             } else {
                 let mut h = ClassHistogram::new(self.ctx.edges[fi].clone(), self.ctx.ds.n_classes);
-                for (&r, &v) in self.ctx.rows.iter().zip(&vals) {
-                    h.insert(v, self.ctx.ds.y[r] as usize, self.ctx.counter);
-                }
+                fill_class(&mut h, self.ctx.ds.x, f, self.ctx.rows, self.ctx.ds.y, self.ctx.counter);
                 self.hists_c[fi] = h;
             }
             self.refresh_feature(fi);

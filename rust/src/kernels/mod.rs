@@ -1,0 +1,53 @@
+//! Batched compute microkernels — the zero-dependency layer every hot
+//! loop in the crate bottoms out in.
+//!
+//! The thesis shrinks *how many* samples each subroutine needs; this
+//! module shrinks *what each sample costs*. Before it existed, every
+//! bandit pull was a scalar `get`/`read_row_at`/`dot` call (one chunk-map
+//! lookup — and, on lossy stores, one LRU probe — per element), and every
+//! I8/F16 chunk was decoded to a fresh `Vec<f32>` before a single
+//! multiply happened. The kernels here operate on a row-block ×
+//! coordinate-block at a time, so each chunk is touched once per batch,
+//! and the quantized codecs are decoded element-fused inside the
+//! reduction loop — no intermediate buffer, no cache traffic.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`reduce`]  | the one fixed-lane (8-wide, autovectorizable) reduction family: `dot_f32`, `l1`, `l2`, `l2_sq`, `cosine`. Every copy that used to live in `data/distance.rs`, `util/linalg.rs`, and the MABSplit column scan now delegates here. |
+//! | [`quant`]   | fused quantized-domain element kernels: IEEE binary16 conversion and the per-chunk affine I8 header algebra, applied once per chunk run instead of once per element. Bit-for-bit identical to `store/codec.rs`'s decode (codec delegates to these). |
+//! | [`scratch`] | per-worker reusable scratch arenas: thread-local buffer pools with grow-event instrumentation, so batched kernels perform zero heap allocations in steady state. |
+//!
+//! # Kernel contract
+//!
+//! Every kernel in this module — and every batched
+//! [`crate::store::DatasetView`] hook built on it — obeys three rules:
+//!
+//! 1. **Accumulation order is pinned.** An 8-lane reduction accumulates
+//!    element `c` into lane `c % 8` (f32 lanes), folds the lanes in lane
+//!    order, then adds the `n % 8` tail elements serially — exactly the
+//!    shape the seed's hand-rolled loops used, so F32 results are
+//!    bit-identical to the scalar path no matter how the surrounding
+//!    call is batched, tiled, or sharded. Batching may reorder *which
+//!    row is reduced when*, never the order *within* a reduction.
+//! 2. **Scratch is borrowed, never owned.** Kernels take output slices
+//!    from the caller or draw reusable buffers from [`scratch`]; they do
+//!    not allocate on the hot path. [`scratch::grow_events`] counts the
+//!    (thread-local) arena growths so tests can assert steady-state
+//!    zero-allocation behavior.
+//! 3. **Determinism survives threading.** Kernels are pure functions of
+//!    their inputs; per-worker arenas are thread-local; nothing reads
+//!    thread identity. A shard boundary or tile size change never
+//!    reaches the arithmetic.
+//!
+//! Lossy codecs keep their published semantics: the fused I8/F16 element
+//! kernels compute the *same expression* as a full-chunk decode
+//! (`(min + scale·u)` in f64, cast to f32; binary16 via
+//! [`quant::f16_to_f32`]), so a fused read is bit-identical to
+//! decode-then-read — the codec `error_bound` contract is inherited, not
+//! re-derived.
+
+pub mod quant;
+pub mod reduce;
+pub mod scratch;
+
+pub use reduce::{cosine, dot_f32, l1, l2, l2_sq, LANES};

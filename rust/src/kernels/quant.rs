@@ -1,0 +1,154 @@
+//! Fused quantized-domain element kernels.
+//!
+//! `store/codec.rs` defines the chunk *formats*; this module owns the
+//! per-element arithmetic so batched readers can evaluate encoded bytes
+//! in place — header algebra applied once per chunk run, element decode
+//! fused into the consuming reduction — instead of materializing a
+//! `Vec<f32>` per chunk. Every kernel computes the exact expression the
+//! full-chunk decode uses, so a fused read is bit-identical to
+//! decode-then-read (`store/codec.rs` delegates its f16 conversion here
+//! to keep the two paths one implementation).
+//!
+//! Chunk layouts (shared with the codec):
+//!
+//! | codec | header | payload |
+//! |---|---|---|
+//! | `F32` | — | `4·len` bytes LE f32 |
+//! | `F16` | — | `2·len` bytes LE u16 |
+//! | `I8`  | `min: f32 LE` + `scale: f64 LE` (12 bytes) | `len` bytes u8 |
+
+/// The affine I8 chunk header, parsed once per chunk run (the
+/// "scale/zero-point algebra once per chunk" of the fused path).
+#[derive(Clone, Copy, Debug)]
+pub struct I8Header {
+    /// Chunk minimum, widened to f64 exactly as the decoder does.
+    pub min: f64,
+    /// Quantization step `(max − min) / 255` (0 for constant chunks).
+    pub scale: f64,
+}
+
+/// Parse the 12-byte I8 chunk header.
+#[inline]
+pub fn i8_header(bytes: &[u8]) -> I8Header {
+    I8Header {
+        min: f32::from_le_bytes(bytes[0..4].try_into().unwrap()) as f64,
+        scale: f64::from_le_bytes(bytes[4..12].try_into().unwrap()),
+    }
+}
+
+/// The u8 payload of an I8 chunk.
+#[inline]
+pub fn i8_payload(bytes: &[u8]) -> &[u8] {
+    &bytes[12..]
+}
+
+/// Fused-decode element `k` of an I8 payload — the codec's exact decode
+/// expression, one element at a time.
+#[inline]
+pub fn i8_at(h: &I8Header, payload: &[u8], k: usize) -> f32 {
+    (h.min + h.scale * payload[k] as f64) as f32
+}
+
+/// Element `k` of an F32 chunk (raw little-endian bytes).
+#[inline]
+pub fn f32_at(bytes: &[u8], k: usize) -> f32 {
+    f32::from_le_bytes(bytes[4 * k..4 * k + 4].try_into().unwrap())
+}
+
+/// Fused-decode element `k` of an F16 chunk.
+#[inline]
+pub fn f16_at(bytes: &[u8], k: usize) -> f32 {
+    f16_to_f32(u16::from_le_bytes(bytes[2 * k..2 * k + 2].try_into().unwrap()))
+}
+
+/// `f32` → IEEE binary16 bits, round-to-nearest (carries propagate into
+/// the exponent naturally because the binary16 layout is contiguous).
+pub fn f32_to_f16(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp32 = (x >> 23) & 0xff;
+    let mant = x & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN (keep NaN-ness in the top mantissa bit).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let exp = exp32 as i32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal half: shift the (implicit-bit) mantissa into place.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = m >> shift;
+        let round = (m >> (shift - 1)) & 1;
+        return sign | (half + round) as u16;
+    }
+    let half = ((exp as u32) << 10) | (mant >> 13);
+    let round = (mant >> 12) & 1;
+    sign | (half + round) as u16
+}
+
+/// IEEE binary16 bits → `f32` (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // ±inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Codec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fused_element_kernels_match_full_chunk_decode_bitwise() {
+        let mut rng = Rng::new(0xF05E);
+        for len in [1usize, 7, 16, 100, 255] {
+            let vals: Vec<f32> =
+                (0..len).map(|_| (rng.normal() * 10.0f64.powi(rng.below(5) as i32 - 2)) as f32).collect();
+            for codec in [Codec::F32, Codec::F16, Codec::I8] {
+                let mut bytes = Vec::new();
+                codec.encode(&vals, &mut bytes);
+                let mut decoded = Vec::new();
+                codec.decode(&bytes, len, &mut decoded);
+                for k in 0..len {
+                    let fused = match codec {
+                        Codec::F32 => f32_at(&bytes, k),
+                        Codec::F16 => f16_at(&bytes, k),
+                        Codec::I8 => i8_at(&i8_header(&bytes), i8_payload(&bytes), k),
+                    };
+                    assert_eq!(
+                        fused.to_bits(),
+                        decoded[k].to_bits(),
+                        "{codec:?} len {len} element {k}: {fused} vs {}",
+                        decoded[k]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! The crate's one fixed-lane reduction family.
+//!
+//! Before `kernels/` existed, three copies of the same 8-lane loop lived
+//! in `data/distance.rs` (`lane_reduce!`), `util/linalg.rs` (`dot_f32`),
+//! and the MABSplit column scan. They are deduplicated here; the old
+//! homes re-export these implementations, so callers (and results) are
+//! unchanged.
+//!
+//! Shape (see the module-level kernel contract): `LANES` f32
+//! accumulators, element `c` folded into lane `c % LANES` in ascending
+//! `c`, lanes summed in lane order, tail added serially after. LLVM
+//! reliably autovectorizes this form.
+
+/// Lane width of every fixed-lane kernel (8 × f32 = one 256-bit vector).
+pub const LANES: usize = 8;
+
+/// Dot product over f32 slices with f32 lane accumulation — the MIPS hot
+/// path's reduction (result cast to f64 by callers that need it).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = [0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The shared pairwise lane reduction: f32 lanes over the full chunks,
+/// lane totals widened to f64 and summed in lane order, f64 tail.
+macro_rules! lane_reduce {
+    ($a:expr, $b:expr, $op:expr) => {{
+        let a = $a;
+        let b = $b;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc = [0f32; LANES];
+        for c in 0..chunks {
+            let i = c * LANES;
+            for l in 0..LANES {
+                acc[l] += $op(a[i + l], b[i + l]);
+            }
+        }
+        let mut s = 0f64;
+        for l in 0..LANES {
+            s += acc[l] as f64;
+        }
+        for i in chunks * LANES..n {
+            s += $op(a[i], b[i]) as f64;
+        }
+        s
+    }};
+}
+
+/// Manhattan distance.
+#[inline]
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    lane_reduce!(a, b, |x: f32, y: f32| (x - y).abs())
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn l2(a: &[f32], b: &[f32]) -> f64 {
+    l2_sq(a, b).sqrt()
+}
+
+/// Squared Euclidean distance (no sqrt), for callers that only compare.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f64 {
+    lane_reduce!(a, b, |x: f32, y: f32| {
+        let d = x - y;
+        d * d
+    })
+}
+
+/// Cosine distance: 1 − cos(a, b). Zero vectors get distance 1. Three
+/// lane accumulators advance in lockstep so the pass stays single.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut dacc = [0f32; LANES];
+    let mut aacc = [0f32; LANES];
+    let mut bacc = [0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            dacc[l] += a[i + l] * b[i + l];
+            aacc[l] += a[i + l] * a[i + l];
+            bacc[l] += b[i + l] * b[i + l];
+        }
+    }
+    let (mut d, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for l in 0..LANES {
+        d += dacc[l] as f64;
+        na += aacc[l] as f64;
+        nb += bacc[l] as f64;
+    }
+    for i in chunks * LANES..n {
+        d += (a[i] * b[i]) as f64;
+        na += (a[i] * a[i]) as f64;
+        nb += (b[i] * b[i]) as f64;
+    }
+    let denom = (na.sqrt() * nb.sqrt()).max(1e-20);
+    // Clamp away float rounding: cos similarity lives in [-1, 1].
+    (1.0 - d / denom).clamp(0.0, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reductions_match_naive_across_tail_lengths() {
+        let mut r = Rng::new(77);
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 63, 64, 65, 1000] {
+            let a: Vec<f32> = (0..len).map(|_| r.f32() * 2.0 - 1.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.f32() * 2.0 - 1.0).collect();
+            let dot_naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_f32(&a, &b) - dot_naive).abs() < 1e-3, "dot len {len}");
+            let l1_naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs() as f64).sum();
+            assert!((l1(&a, &b) - l1_naive).abs() < 1e-4, "l1 len {len}");
+            let l2_naive: f64 =
+                a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+            assert!((l2_sq(&a, &b) - l2_naive).abs() < 1e-3, "l2_sq len {len}");
+            assert!((l2(&a, &b) - l2_naive.sqrt()).abs() < 1e-4, "l2 len {len}");
+        }
+    }
+
+    #[test]
+    fn cosine_lane_form_matches_extremes() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-9);
+        assert!(cosine(&[1.0, 0.0], &[2.0, 0.0]).abs() < 1e-9);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-worker reusable scratch arenas.
+//!
+//! Batched kernels need transient buffers (a gathered tile, a distance
+//! vector, a translated index list). Allocating them per call would put
+//! `malloc` back on the hot path the kernels exist to clear, so each
+//! thread keeps small pools of `Vec`s that are borrowed RAII-style and
+//! returned (capacity intact) on drop. After a warm-up call with the
+//! steady-state shapes, no kernel call allocates.
+//!
+//! Instrumentation: every time a borrow has to *grow* a buffer (first
+//! use, or a larger shape than any seen before on this thread), a
+//! thread-local counter ticks. [`grow_events`] reads the current
+//! thread's count, so a test can run one warm-up pass, snapshot the
+//! counter, run the workload again, and assert the delta is zero — the
+//! "zero per-pull heap allocations" acceptance check. The counter is
+//! thread-local on purpose: concurrently running tests (or other pool
+//! workers) cannot pollute the reading.
+
+use std::cell::{Cell, RefCell};
+use std::ops::{Deref, DerefMut};
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+    static GROWS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[derive(Default)]
+struct Pool {
+    f32s: Vec<Vec<f32>>,
+    f64s: Vec<Vec<f64>>,
+    idxs: Vec<Vec<usize>>,
+}
+
+/// Arena growths observed by the *current thread* so far (monotone).
+pub fn grow_events() -> u64 {
+    GROWS.with(|g| g.get())
+}
+
+fn note_grow() {
+    GROWS.with(|g| g.set(g.get() + 1));
+}
+
+macro_rules! buf_kind {
+    ($guard:ident, $take:ident, $elem:ty, $field:ident, $zero:expr) => {
+        /// RAII scratch buffer: derefs to its `Vec`, returns to the
+        /// current thread's pool (capacity kept) on drop.
+        pub struct $guard {
+            buf: Vec<$elem>,
+        }
+
+        impl Deref for $guard {
+            type Target = Vec<$elem>;
+            fn deref(&self) -> &Vec<$elem> {
+                &self.buf
+            }
+        }
+
+        impl DerefMut for $guard {
+            fn deref_mut(&mut self) -> &mut Vec<$elem> {
+                &mut self.buf
+            }
+        }
+
+        impl Drop for $guard {
+            fn drop(&mut self) {
+                let buf = std::mem::take(&mut self.buf);
+                POOL.with(|p| p.borrow_mut().$field.push(buf));
+            }
+        }
+
+        /// Borrow a zero-filled buffer of exactly `len` elements from the
+        /// current thread's pool.
+        pub fn $take(len: usize) -> $guard {
+            let mut buf = POOL.with(|p| p.borrow_mut().$field.pop()).unwrap_or_default();
+            if buf.capacity() < len {
+                note_grow();
+            }
+            buf.clear();
+            buf.resize(len, $zero);
+            $guard { buf }
+        }
+    };
+}
+
+buf_kind!(F32Buf, f32_buf, f32, f32s, 0.0f32);
+buf_kind!(F64Buf, f64_buf, f64, f64s, 0.0f64);
+buf_kind!(IdxBuf, idx_buf, usize, idxs, 0usize);
+
+/// An identity index buffer `[0, 1, …, n)` from the arena — the "all
+/// rows" argument of the batched hooks.
+pub fn iota(n: usize) -> IdxBuf {
+    let mut idx = idx_buf(n);
+    for (i, slot) in idx.iter_mut().enumerate() {
+        *slot = i;
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_reused_and_grows_are_counted() {
+        // Isolate from other tests on this thread: measure deltas only.
+        let g0 = grow_events();
+        {
+            let mut a = f32_buf(128);
+            a[0] = 1.0;
+            assert_eq!(a.len(), 128);
+        }
+        let after_warm = grow_events();
+        assert!(after_warm > g0, "first borrow must grow");
+        for _ in 0..10 {
+            let b = f32_buf(128);
+            assert!(b.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
+        }
+        assert_eq!(grow_events(), after_warm, "steady state must not grow");
+        // A larger request grows once, then is steady again.
+        drop(f32_buf(4096));
+        let after_big = grow_events();
+        assert!(after_big > after_warm);
+        drop(f32_buf(4096));
+        assert_eq!(grow_events(), after_big);
+    }
+
+    #[test]
+    fn nested_borrows_get_distinct_buffers() {
+        let mut a = f64_buf(8);
+        let mut b = f64_buf(8);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_ne!(a[0], b[0]);
+        let mut idx = idx_buf(3);
+        idx[2] = 7;
+        assert_eq!(&**idx, &[0, 0, 7]);
+        let id = iota(4);
+        assert_eq!(&**id, &[0, 1, 2, 3]);
+    }
+}

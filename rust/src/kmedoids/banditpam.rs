@@ -10,10 +10,35 @@
 //! exactly once — parallel distance-call totals equal the sequential
 //! ones). Deltas are applied in fixed arm order, so `threads != 1`
 //! returns bit-identical medoids, losses, and counter totals.
+//!
+//! Distance pulls are **batched** ([`crate::kernels`]): each arm (or
+//! FastPAM1 arm group) evaluates a whole reference batch with one
+//! [`PointSet::dist_batch`] call — the candidate's row is gathered once
+//! per batch instead of once per pair, and view-backed point sets serve
+//! the references with block-scheduled kernel reads. The per-arm folds
+//! still run in batch order, so results and distance-call totals are
+//! bit-identical to the scalar per-pull path.
 
 use super::{KmConfig, KmResult, MedoidCache};
 use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::PointSet;
+use crate::kernels::scratch;
+
+/// Fold medoid `m`'s distance row into the d₁ cache: one batched
+/// [`PointSet::dist_batch`] sweep over all points (the arm's row is
+/// gathered once, chunked stores serve block-scheduled reads) — counted
+/// exactly like the n scalar calls it replaces.
+fn fold_d1<P: PointSet + ?Sized>(ps: &P, m: usize, d1: &mut [f64]) {
+    let n = ps.len();
+    let idx = scratch::iota(n);
+    let mut dists = scratch::f64_buf(n);
+    ps.dist_batch(m, &idx, &mut dists);
+    for (slot, &d) in d1.iter_mut().zip(dists.iter()) {
+        if d < *slot {
+            *slot = d;
+        }
+    }
+}
 
 /// BanditPAM tuning knobs (paper defaults: B = 100, δ = 1/(1000·|S_tar|)).
 #[derive(Clone, Debug)]
@@ -103,13 +128,8 @@ pub fn bandit_pam_refresh<P: PointSet + ?Sized>(
     // cache of the survivors already shapes the objective).
     if medoids.len() < k {
         let mut d1 = vec![f64::INFINITY; n];
-        for &m in &medoids {
-            for (j, slot) in d1.iter_mut().enumerate() {
-                let d = ps.dist(m, j);
-                if d < *slot {
-                    *slot = d;
-                }
-            }
+        for i in 0..medoids.len() {
+            fold_d1(ps, medoids[i], &mut d1);
         }
         for step in medoids.len()..k {
             build_step(ps, cfg, &mut medoids, &mut d1, step);
@@ -152,12 +172,7 @@ fn build_step<P: PointSet + ?Sized>(
     let sigmas = (0..candidates.len()).map(|a| arms.sigma(a)).collect();
     let m = candidates[r.best[0]];
     medoids.push(m);
-    for (j, slot) in d1.iter_mut().enumerate() {
-        let d = ps.dist(m, j);
-        if d < *slot {
-            *slot = d;
-        }
-    }
+    fold_d1(ps, m, d1);
     sigmas
 }
 
@@ -245,22 +260,34 @@ impl<'a, P: PointSet + ?Sized> BuildArms<'a, P> {
         self.stats.sigma(arm, 1e-9)
     }
 
-    #[inline]
-    fn g(&self, arm: usize, j: usize) -> f64 {
+    /// One arm's (Σv, Σv²) over a batch: ONE batched distance kernel
+    /// call for the whole batch (candidate row gathered once), then the
+    /// g-fold in batch order — same values, same order, same counter
+    /// total as the scalar per-pull loop.
+    fn arm_delta(&self, arm: usize, batch: &[usize]) -> (f64, f64) {
         let x = self.candidates[arm];
-        let d = self.ps.dist(x, j);
+        let mut dists = scratch::f64_buf(batch.len());
+        self.ps.dist_batch(x, batch, &mut dists);
+        let mut s = 0.0;
+        let mut s2 = 0.0;
         if self.first {
-            d
+            for &d in dists.iter() {
+                s += d;
+                s2 += d * d;
+            }
         } else {
-            (d - self.d1[j]).min(0.0)
+            for (&d, &j) in dists.iter().zip(batch) {
+                let v = (d - self.d1[j]).min(0.0);
+                s += v;
+                s2 += v * v;
+            }
         }
+        (s, s2)
     }
 
     /// Per-arm (Σv, Σv²) deltas for one shard of arms.
     fn deltas_for(&self, arms: &[usize], batch: &[usize]) -> Vec<(f64, f64)> {
-        arms.iter()
-            .map(|&a| ArmStats::batch_delta(batch, |j| self.g(a, j)))
-            .collect()
+        arms.iter().map(|&a| self.arm_delta(a, batch)).collect()
     }
 }
 
@@ -284,7 +311,7 @@ impl<'a, P: PointSet + ?Sized> AdaptiveArms for BuildArms<'a, P> {
             return;
         };
         let this: &Self = self;
-        let deltas = p.arm_deltas(arms, |a| ArmStats::batch_delta(batch, |j| this.g(a, j)));
+        let deltas = p.arm_deltas(arms, |a| this.arm_delta(a, batch));
         self.stats.push_deltas(arms, &deltas, batch.len() as u64);
     }
 
@@ -302,10 +329,8 @@ impl<'a, P: PointSet + ?Sized> AdaptiveArms for BuildArms<'a, P> {
 
     fn exact(&mut self, arm: usize) -> f64 {
         let n = self.ps.len();
-        let mut s = 0.0;
-        for j in 0..n {
-            s += self.g(arm, j);
-        }
+        let idx = scratch::iota(n);
+        let (s, _) = self.arm_delta(arm, &idx);
         s / n as f64
     }
 }
@@ -360,15 +385,18 @@ impl<'a, P: PointSet + ?Sized> SwapArms<'a, P> {
         dxj.min(without) - self.cache.d1[j]
     }
 
-    /// Batch deltas for one candidate's arm group: ONE distance call per
-    /// reference serves all k arms of x.
+    /// Batch deltas for one candidate's arm group: ONE batched distance
+    /// kernel call for the whole batch (the FastPAM1 sharing — the
+    /// gathered d(x, ·) row serves all k arms of x), then the per-arm
+    /// folds in batch order, exactly like the scalar loop.
     fn group_delta(&self, group: &[usize], batch: &[usize]) -> Vec<(f64, f64)> {
         let xi = group[0] / self.k;
         let x = self.candidates[xi];
+        let mut dx = scratch::f64_buf(batch.len());
+        self.ps.dist_batch(x, batch, &mut dx);
         let mut s = vec![0.0; group.len()];
         let mut s2 = vec![0.0; group.len()];
-        for &j in batch {
-            let dxj = self.ps.dist(x, j);
+        for (&j, &dxj) in batch.iter().zip(dx.iter()) {
             for (gi, &a) in group.iter().enumerate() {
                 let mi = a % self.k;
                 let v = self.g_from_d(mi, j, dxj);
@@ -446,7 +474,9 @@ impl<'a, P: PointSet + ?Sized> AdaptiveArms for SwapArms<'a, P> {
         let n = self.ps.len();
         if !self.exact_rows.contains_key(&xi) {
             let x = self.candidates[xi];
-            let row: Vec<f64> = (0..n).map(|j| self.ps.dist(x, j)).collect();
+            let idx = scratch::iota(n);
+            let mut row = vec![0f64; n];
+            self.ps.dist_batch(x, &idx, &mut row);
             self.exact_rows.insert(xi, row);
         }
         let row = &self.exact_rows[&xi];

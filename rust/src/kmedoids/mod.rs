@@ -51,20 +51,24 @@ pub struct KmResult {
 }
 
 /// Exact clustering loss (Eq. 2.1). Counts its distance evaluations.
+/// Evaluates one batched [`PointSet::dist_batch`] sweep per medoid (the
+/// medoid's row gathered once; chunked stores serve block-scheduled
+/// reads) — same k·n evaluation count and, per point, the same
+/// medoid-order min fold as the scalar loop.
 pub fn loss<P: PointSet + ?Sized>(ps: &P, medoids: &[usize]) -> f64 {
     let n = ps.len();
-    let mut total = 0.0;
-    for j in 0..n {
-        let mut best = f64::INFINITY;
-        for &m in medoids {
-            let d = ps.dist(m, j);
-            if d < best {
-                best = d;
+    let idx = crate::kernels::scratch::iota(n);
+    let mut dists = crate::kernels::scratch::f64_buf(n);
+    let mut best = vec![f64::INFINITY; n];
+    for &m in medoids {
+        ps.dist_batch(m, &idx, &mut dists);
+        for (slot, &d) in best.iter_mut().zip(dists.iter()) {
+            if d < *slot {
+                *slot = d;
             }
         }
-        total += best;
     }
-    total
+    best.iter().sum()
 }
 
 /// Cached nearest / second-nearest medoid distances for every point —
@@ -80,15 +84,20 @@ pub struct MedoidCache {
 }
 
 impl MedoidCache {
-    /// Build the cache with k·n distance evaluations.
+    /// Build the cache with k·n distance evaluations — one batched
+    /// [`PointSet::dist_batch`] sweep per medoid. Each point still sees
+    /// its medoid distances in medoid order, so the d₁/d₂/nearest state
+    /// is identical to the scalar double loop.
     pub fn compute<P: PointSet + ?Sized>(ps: &P, medoids: &[usize]) -> Self {
         let n = ps.len();
         let mut nearest = vec![usize::MAX; n];
         let mut d1 = vec![f64::INFINITY; n];
         let mut d2 = vec![f64::INFINITY; n];
-        for j in 0..n {
-            for (mi, &m) in medoids.iter().enumerate() {
-                let d = ps.dist(m, j);
+        let idx = crate::kernels::scratch::iota(n);
+        let mut dists = crate::kernels::scratch::f64_buf(n);
+        for (mi, &m) in medoids.iter().enumerate() {
+            ps.dist_batch(m, &idx, &mut dists);
+            for (j, &d) in dists.iter().enumerate() {
                 if d < d1[j] {
                     d2[j] = d1[j];
                     d1[j] = d;

@@ -22,6 +22,13 @@
 //! dense [`data::Matrix`] and the chunked, quantized, optionally
 //! file-spilled [`store::ColumnStore`] are interchangeable substrates,
 //! bit-for-bit under the lossless `F32` codec.
+//!
+//! Under everything sits [`kernels`]: the zero-dependency batched
+//! microkernel layer (fixed-lane reductions, fused quantized-domain
+//! decode, per-worker scratch arenas). The batched `DatasetView` hooks
+//! and all three chapter solvers issue block-scheduled kernel calls —
+//! one chunk touch per batch instead of one per pull — while staying
+//! bit-identical to the scalar path on F32 data.
 
 pub mod bandit;
 pub mod coordinator;
@@ -29,6 +36,7 @@ pub mod data;
 pub mod exec;
 pub mod experiments;
 pub mod forest;
+pub mod kernels;
 pub mod kmedoids;
 pub mod metrics;
 pub mod mips;

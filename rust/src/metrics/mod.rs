@@ -93,6 +93,55 @@ impl ShardCounters {
     }
 }
 
+/// Decoded-chunk LRU cache counters, snapshotted from a store (or summed
+/// across a live snapshot's segments). `hits + misses` is the number of
+/// cached-chunk lookups; `misses` is how many had to decode (and, when
+/// spilled, read disk); `evictions` is budget pressure. The fused
+/// quantized read path bypasses the cache entirely, so a "decode-free"
+/// serving run shows a flat `misses` count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction in [0, 1]; 1.0 when there were no lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl std::ops::Add for CacheCounters {
+    type Output = CacheCounters;
+    fn add(self, o: CacheCounters) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits + o.hits,
+            misses: self.misses + o.misses,
+            evictions: self.evictions + o.evictions,
+        }
+    }
+}
+
+impl std::fmt::Display for CacheCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} evictions={} hit_rate={:.3}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.hit_rate()
+        )
+    }
+}
+
 /// Latency recorder for the serving coordinator: stores microsecond
 /// samples and reports percentiles/throughput.
 #[derive(Debug, Default, Clone)]
@@ -198,6 +247,17 @@ mod tests {
         parent.add(7);
         shards.merge_into(&parent);
         assert_eq!(parent.get(), 107);
+    }
+
+    #[test]
+    fn cache_counters_sum_and_rate() {
+        let a = CacheCounters { hits: 3, misses: 1, evictions: 0 };
+        let b = CacheCounters { hits: 1, misses: 1, evictions: 2 };
+        let s = a + b;
+        assert_eq!(s, CacheCounters { hits: 4, misses: 2, evictions: 2 });
+        assert!((s.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(CacheCounters::default().hit_rate(), 1.0);
+        assert!(!format!("{s}").is_empty());
     }
 
     #[test]

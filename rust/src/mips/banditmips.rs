@@ -19,21 +19,22 @@
 //! weights) is computed once and shared read-only across shards, and
 //! per-arm deltas are applied in fixed atom order — `threads != 1`
 //! returns bit-identical answers and sample counts.
-
-use std::cell::RefCell;
+//!
+//! Pulls are **block-scheduled** ([`crate::kernels`]): within a shard,
+//! surviving arms are tiled into row blocks and each tile's coordinate
+//! pulls are gathered with one [`DatasetView::gather_block`] kernel call
+//! — every storage chunk is touched once per tile per round instead of
+//! once per (arm, coordinate), and the quantized stores serve the gather
+//! straight from encoded bytes. Per-arm (Σv, Σv²) still folds in batch
+//! order, so answers and sample counts stay bit-identical to the scalar
+//! per-pull path.
 
 use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::Matrix;
+use crate::kernels::scratch;
 use crate::metrics::OpCounter;
 use crate::store::DatasetView;
 use crate::util::rng::Rng;
-
-thread_local! {
-    /// Per-thread gather buffer for the coordinate pulls of one arm —
-    /// lets shard workers share zero allocation state while keeping the
-    /// arithmetic identical to the dense row-slice path.
-    static PULL_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
-}
 
 /// Coordinate-sampling strategy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -243,25 +244,40 @@ impl<'a, V: DatasetView + ?Sized> MipsArms<'a, V> {
             .collect()
     }
 
-    /// One atom's (Σv, Σv²) over a batch: one restricted row gather
-    /// through the view into per-thread scratch, accumulated in batch
-    /// order (bit-identical to the dense row-slice loop on the same
-    /// values).
-    #[inline]
-    fn arm_delta(&self, arm: usize, batch: &[usize], qw: &[f64]) -> (f64, f64) {
-        PULL_SCRATCH.with(|buf| {
-            let mut buf = buf.borrow_mut();
-            buf.resize(batch.len(), 0.0);
-            self.atoms.read_row_at(arm, batch, &mut buf);
-            let mut s = 0.0;
-            let mut s2 = 0.0;
-            for (&x, &qj) in buf.iter().zip(qw) {
-                let v = -(qj * x as f64);
-                s += v;
-                s2 += v * v;
+    /// Per-arm (Σv, Σv²) deltas for one contiguous shard of arms,
+    /// block-scheduled: the shard's arms are tiled into row blocks, each
+    /// tile's coordinate pulls are gathered with ONE
+    /// [`DatasetView::gather_block`] kernel call (arena scratch, every
+    /// chunk touched once per tile), and each arm's delta then folds its
+    /// gathered row in batch order — the same values in the same order as
+    /// the scalar per-pull loop, so results are bit-identical for any
+    /// tile or shard boundary.
+    fn shard_deltas(&self, arms: &[usize], batch: &[usize], qw: &[f64]) -> Vec<(f64, f64)> {
+        let b = batch.len();
+        let mut out = Vec::with_capacity(arms.len());
+        if b == 0 {
+            out.resize(arms.len(), (0.0, 0.0));
+            return out;
+        }
+        // Tile so the gathered block stays within ~64 KiB of f32 scratch
+        // (and never over-sizes past the shard's own arm count).
+        let tile = ((1usize << 16) / 4 / b).clamp(1, 64).min(arms.len().max(1));
+        let mut block = scratch::f32_buf(tile * b);
+        for tile_arms in arms.chunks(tile) {
+            let m = tile_arms.len();
+            self.atoms.gather_block(tile_arms, batch, &mut block[..m * b]);
+            for row in block[..m * b].chunks_exact(b) {
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for (&x, &qj) in row.iter().zip(qw) {
+                    let v = -(qj * x as f64);
+                    s += v;
+                    s2 += v * v;
+                }
+                out.push((s, s2));
             }
-            (s, s2)
-        })
+        }
+        out
     }
 
     fn apply(&mut self, arms: &[usize], deltas: &[(f64, f64)], pulls: u64) {
@@ -313,10 +329,7 @@ impl<'a, V: DatasetView + ?Sized> AdaptiveArms for MipsArms<'a, V> {
 
     fn observe_shard(&mut self, arms: &[usize], batch: &[usize]) {
         let qw = self.query_weights(batch);
-        let deltas: Vec<(f64, f64)> = arms
-            .iter()
-            .map(|&a| self.arm_delta(a, batch, &qw))
-            .collect();
+        let deltas = self.shard_deltas(arms, batch, &qw);
         self.apply(arms, &deltas, batch.len() as u64);
     }
 
@@ -328,7 +341,15 @@ impl<'a, V: DatasetView + ?Sized> AdaptiveArms for MipsArms<'a, V> {
         let qw = self.query_weights(batch);
         let this: &Self = self;
         let qw_ref = &qw;
-        let deltas = p.arm_deltas(arms, |a| this.arm_delta(a, batch, qw_ref));
+        // One block-scheduled kernel sweep per shard per round; deltas
+        // come back in arm order, so the fold below is bit-identical to
+        // the sequential path.
+        let deltas: Vec<(f64, f64)> = p
+            .pool
+            .map_shards(arms, p.shards, |shard| this.shard_deltas(shard, batch, qw_ref))
+            .into_iter()
+            .flatten()
+            .collect();
         self.apply(arms, &deltas, batch.len() as u64);
     }
 
@@ -349,8 +370,12 @@ impl<'a, V: DatasetView + ?Sized> AdaptiveArms for MipsArms<'a, V> {
         if self.exact_cache[arm].is_nan() {
             let d = self.atoms.n_cols();
             self.counter.add(d as u64);
-            let ip = self.atoms.dot(arm, self.q);
-            self.exact_cache[arm] = -(ip / d as f64);
+            // Batched hook even for one row: on quantized stores this is
+            // a fused gather (no full-chunk decode), and the value is
+            // bit-identical to the scalar `dot`.
+            let mut ip = [0f64];
+            self.atoms.dot_batch(&[arm], self.q, &mut ip);
+            self.exact_cache[arm] = -(ip[0] / d as f64);
         }
         self.exact_cache[arm]
     }

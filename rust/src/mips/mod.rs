@@ -26,8 +26,10 @@ use crate::store::DatasetView;
 
 /// The exact (naive) solution: full inner products, `n·d` multiplications.
 /// Generic over the dataset substrate ([`crate::data::Matrix`] or
-/// [`crate::store::ColumnStore`]); the [`DatasetView::dot`] hook keeps
-/// the accumulation bit-identical across substrates.
+/// [`crate::store::ColumnStore`]); scores go through the batched
+/// [`DatasetView::dot_batch`] hook (tiled kernel on chunked stores, one
+/// chunk touch per tile), which is bit-identical to the scalar
+/// [`DatasetView::dot`] on every substrate.
 pub fn naive_mips<V: DatasetView + ?Sized>(
     atoms: &V,
     q: &[f32],
@@ -35,13 +37,13 @@ pub fn naive_mips<V: DatasetView + ?Sized>(
     counter: &OpCounter,
 ) -> Vec<usize> {
     assert_eq!(atoms.n_cols(), q.len());
+    let n = atoms.n_rows();
     let d = atoms.n_cols() as u64;
-    let mut scored: Vec<(f64, usize)> = (0..atoms.n_rows())
-        .map(|i| {
-            counter.add(d);
-            (atoms.dot(i, q), i)
-        })
-        .collect();
+    counter.add(n as u64 * d);
+    let rows = crate::kernels::scratch::iota(n);
+    let mut scores = crate::kernels::scratch::f64_buf(n);
+    atoms.dot_batch(&rows, q, &mut scores);
+    let mut scored: Vec<(f64, usize)> = scores.iter().copied().zip(0..n).collect();
     scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
     scored.into_iter().take(k).map(|(_, i)| i).collect()
 }

@@ -77,14 +77,11 @@ pub fn solve_model<V: DatasetView + ?Sized>(
 ) -> (MipsAnswer, MipsModel) {
     let answer = bandit_mips(atoms, q, cfg, counter);
     let d = atoms.n_cols() as u64;
-    let mut top: Vec<(usize, f64)> = answer
-        .atoms
-        .iter()
-        .map(|&a| {
-            counter.add(d);
-            (a, atoms.dot(a, q))
-        })
-        .collect();
+    counter.add(d * answer.atoms.len() as u64);
+    let mut scores = crate::kernels::scratch::f64_buf(answer.atoms.len());
+    atoms.dot_batch(&answer.atoms, q, &mut scores);
+    let mut top: Vec<(usize, f64)> =
+        answer.atoms.iter().copied().zip(scores.iter().copied()).collect();
     sort_best_first(&mut top);
     let model =
         MipsModel { version: atoms.version(), n_rows: atoms.n_rows(), top };
@@ -144,11 +141,12 @@ pub fn refresh<V: DatasetView + ?Sized>(
     // 3. Resolve survivors.
     if survivors.len() <= exact_cap(cfg.k) {
         // Deterministic path: exact inner products for the few rows the
-        // screen could not dismiss.
-        for &r in &survivors {
-            counter.add(d);
-            cands.push((r, atoms.dot(r, q)));
-        }
+        // screen could not dismiss (one batched kernel call — fused on
+        // quantized stores, bit-identical to scalar `dot`).
+        counter.add(d * survivors.len() as u64);
+        let mut scores = crate::kernels::scratch::f64_buf(survivors.len());
+        atoms.dot_batch(&survivors, q, &mut scores);
+        cands.extend(survivors.iter().copied().zip(scores.iter().copied()));
         sort_best_first(&mut cands);
         cands.truncate(cfg.k);
         let answer = MipsAnswer {

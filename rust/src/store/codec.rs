@@ -159,62 +159,10 @@ impl Codec {
     }
 }
 
-/// `f32` → IEEE binary16 bits, round-to-nearest (carries propagate into
-/// the exponent naturally because the binary16 layout is contiguous).
-pub fn f32_to_f16(v: f32) -> u16 {
-    let x = v.to_bits();
-    let sign = ((x >> 16) & 0x8000) as u16;
-    let exp32 = (x >> 23) & 0xff;
-    let mant = x & 0x007f_ffff;
-    if exp32 == 0xff {
-        // Inf / NaN (keep NaN-ness in the top mantissa bit).
-        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
-    }
-    let exp = exp32 as i32 - 127 + 15;
-    if exp >= 0x1f {
-        return sign | 0x7c00; // overflow → ±inf
-    }
-    if exp <= 0 {
-        if exp < -10 {
-            return sign; // underflow → ±0
-        }
-        // Subnormal half: shift the (implicit-bit) mantissa into place.
-        let m = mant | 0x0080_0000;
-        let shift = (14 - exp) as u32; // 14..=24
-        let half = m >> shift;
-        let round = (m >> (shift - 1)) & 1;
-        return sign | (half + round) as u16;
-    }
-    let half = ((exp as u32) << 10) | (mant >> 13);
-    let round = (mant >> 12) & 1;
-    sign | (half + round) as u16
-}
-
-/// IEEE binary16 bits → `f32` (exact).
-pub fn f16_to_f32(h: u16) -> f32 {
-    let sign = ((h & 0x8000) as u32) << 16;
-    let exp = ((h >> 10) & 0x1f) as u32;
-    let mant = (h & 0x3ff) as u32;
-    let bits = if exp == 0 {
-        if mant == 0 {
-            sign // ±0
-        } else {
-            // Subnormal half: normalize into an f32 exponent.
-            let mut e = 113u32; // 127 - 15 + 1
-            let mut m = mant;
-            while m & 0x400 == 0 {
-                m <<= 1;
-                e -= 1;
-            }
-            sign | (e << 23) | ((m & 0x3ff) << 13)
-        }
-    } else if exp == 0x1f {
-        sign | 0x7f80_0000 | (mant << 13) // ±inf / NaN
-    } else {
-        sign | ((exp + 112) << 23) | (mant << 13)
-    };
-    f32::from_bits(bits)
-}
+// The binary16 conversions live with the fused element kernels so the
+// full-chunk decode here and the fused in-place reads are one
+// implementation; re-exported to keep this module the codec's home.
+pub use crate::kernels::quant::{f16_to_f32, f32_to_f16};
 
 #[cfg(test)]
 mod tests {

@@ -21,15 +21,60 @@
 //!   disk ([`crate::store::spill`]); the LRU cache (bounded by
 //!   [`StoreOptions::budget_bytes`]) is the only resident copy, so
 //!   datasets larger than the budget stream from disk.
+//!
+//! The *scalar* [`DatasetView`] methods funnel through the decoded-chunk
+//! primitive above. The *batched* hooks (`gather_block`, `gather_rows`,
+//! `dot_batch`, `dist_point_batch`, `for_each_col_block`) instead touch
+//! each chunk once per run via [`crate::kernels`]: on the Encoded (RAM)
+//! backing they read the encoded bytes in place with fused per-element
+//! decode — zero full-chunk `Vec<f32>` materializations, zero LRU
+//! traffic (see [`ColumnStore::chunk_decodes`] /
+//! [`ColumnStore::cache_counters`]); on the Spilled backing they pin a
+//! cached chunk once per run so disk reads keep amortizing.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use crate::kernels::{quant, scratch};
 use crate::metrics::OpCounter;
 use crate::store::codec::Codec;
 use crate::store::spill::SpillFile;
 use crate::store::DatasetView;
+
+/// Borrowed access to one chunk for the batched readers (see
+/// [`ColumnStore::chunk_ref`]).
+enum ChunkRef<'a> {
+    /// Decoded values resident in RAM (the F32 fast path).
+    Plain(&'a [f32]),
+    /// Decoded values pinned from the LRU cache (spilled backing).
+    Cached(Arc<Vec<f32>>),
+    /// Encoded bytes read in place (fused path; in-RAM encoded backing).
+    Bytes(&'a [u8]),
+}
+
+/// Row-tile sizing for the batched gathers: bound the per-tile scratch
+/// to ~256 KiB of f32 so tiles stay cache-resident for any row width,
+/// and never over-size it past the actual request (`want` rows).
+fn tile_rows(d: usize, want: usize) -> usize {
+    ((1usize << 18) / 4 / d.max(1)).clamp(1, 64).min(want.max(1))
+}
+
+/// Call `f(block, start, end)` for each maximal run `rows[start..end]`
+/// of rows sharing one row block — the shared run detection of every
+/// batched reader (chunk reuse survives exactly as long as a run does).
+fn for_each_chunk_run(rows: &[usize], rpc: usize, mut f: impl FnMut(usize, usize, usize)) {
+    let mut i = 0;
+    while i < rows.len() {
+        let b = rows[i] / rpc;
+        let mut e = i + 1;
+        while e < rows.len() && rows[e] / rpc == b {
+            e += 1;
+        }
+        f(b, i, e);
+        i = e;
+    }
+}
 
 /// Build-time options for a [`ColumnStore`] (see
 /// [`crate::store::StoreBuilder`]).
@@ -135,6 +180,8 @@ pub(crate) enum Backing {
 struct ChunkCache {
     budget: usize,
     inner: Mutex<CacheInner>,
+    hits: OpCounter,
+    misses: OpCounter,
     evictions: OpCounter,
 }
 
@@ -154,6 +201,8 @@ impl ChunkCache {
         ChunkCache {
             budget: budget.max(1),
             inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
+            hits: OpCounter::new(),
+            misses: OpCounter::new(),
             evictions: OpCounter::new(),
         }
     }
@@ -175,9 +224,11 @@ impl ChunkCache {
             let tick = g.tick;
             if let Some(e) = g.map.get_mut(&id) {
                 e.used = tick;
+                self.hits.incr();
                 return e.data.clone();
             }
         }
+        self.misses.incr();
         let data = Arc::new(fill());
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
@@ -227,6 +278,10 @@ pub struct ColumnStore {
     /// Decoded-chunk cache (None on the Decoded fast path).
     cache: Option<ChunkCache>,
     decode_ops: OpCounter,
+    /// Full-chunk `Vec<f32>` materializations (cache-miss decodes). The
+    /// fused quantized read path never performs one on an in-RAM encoded
+    /// backing — the "decode-free I8 serving" acceptance check.
+    chunk_decodes: OpCounter,
     spill_reads: OpCounter,
     /// Reservoir preview rows captured at ingest (warm starts).
     preview: Vec<Vec<f32>>,
@@ -260,6 +315,7 @@ impl ColumnStore {
             backing,
             cache,
             decode_ops: OpCounter::new(),
+            chunk_decodes: OpCounter::new(),
             spill_reads: OpCounter::new(),
             preview,
         }
@@ -306,9 +362,26 @@ impl ColumnStore {
         self.spill_reads.get()
     }
 
+    /// Full-chunk `Vec<f32>` materializations performed so far (each one
+    /// is a cache-miss decode of a whole chunk). Zero on the fused
+    /// quantized read path over an in-RAM encoded backing.
+    pub fn chunk_decodes(&self) -> u64 {
+        self.chunk_decodes.get()
+    }
+
     /// Decoded chunks evicted from the LRU cache.
     pub fn cache_evictions(&self) -> u64 {
         self.cache.as_ref().map_or(0, |c| c.evictions.get())
+    }
+
+    /// Snapshot of the decoded-chunk LRU cache counters (all zero on the
+    /// Decoded fast path, which has no cache).
+    pub fn cache_counters(&self) -> crate::metrics::CacheCounters {
+        self.cache.as_ref().map_or_else(Default::default, |c| crate::metrics::CacheCounters {
+            hits: c.hits.get(),
+            misses: c.misses.get(),
+            evictions: c.evictions.get(),
+        })
     }
 
     /// Bytes of decoded chunks currently cached (0 on the fast path,
@@ -339,13 +412,82 @@ impl ColumnStore {
 
     fn decode_chunk(&self, raw: &[u8], len: usize) -> Vec<f32> {
         self.decode_ops.add(len as u64);
+        self.chunk_decodes.incr();
         let mut out = Vec::with_capacity(len);
         self.codec.decode(raw, len, &mut out);
         out
     }
 
+    /// Chunk access for the batched readers: borrowed decoded values on
+    /// the fast path, encoded bytes read in place on the in-RAM encoded
+    /// backing (the fused quantized path — no chunk decode, no cache),
+    /// and a cache-pinned decoded chunk when spilled (one LRU probe per
+    /// run instead of per element; disk reads amortize across batches).
+    fn chunk_ref(&self, col: usize, block: usize) -> ChunkRef<'_> {
+        let id = col * self.n_blocks + block;
+        match &self.backing {
+            Backing::Decoded(chunks) => ChunkRef::Plain(chunks[id].as_slice()),
+            Backing::Encoded(bytes) => ChunkRef::Bytes(&bytes[id]),
+            Backing::Spilled(_) => ChunkRef::Cached(self.chunk(col, block)),
+        }
+    }
+
+    /// Copy column `col` of one chunk run into `out` at a stride:
+    /// `out[k * stride + base] = value at row run[k]` for `k` in
+    /// `0..run.len()` (every `run` row must live in `block`). Quantized
+    /// backings fuse the decode per element — header algebra once per
+    /// run, no intermediate buffer.
+    fn gather_col_run(
+        &self,
+        col: usize,
+        block: usize,
+        run: &[usize],
+        out: &mut [f32],
+        base: usize,
+        stride: usize,
+    ) {
+        let rpc = self.rows_per_chunk;
+        match self.chunk_ref(col, block) {
+            ChunkRef::Plain(ch) => {
+                for (k, &r) in run.iter().enumerate() {
+                    out[k * stride + base] = ch[r % rpc];
+                }
+            }
+            ChunkRef::Cached(ch) => {
+                for (k, &r) in run.iter().enumerate() {
+                    out[k * stride + base] = ch[r % rpc];
+                }
+            }
+            ChunkRef::Bytes(raw) => {
+                // Fused read: only the touched elements are decoded (and
+                // charged), never the whole chunk.
+                self.decode_ops.add(run.len() as u64);
+                match self.codec {
+                    Codec::F32 => {
+                        for (k, &r) in run.iter().enumerate() {
+                            out[k * stride + base] = quant::f32_at(raw, r % rpc);
+                        }
+                    }
+                    Codec::F16 => {
+                        for (k, &r) in run.iter().enumerate() {
+                            out[k * stride + base] = quant::f16_at(raw, r % rpc);
+                        }
+                    }
+                    Codec::I8 => {
+                        let h = quant::i8_header(raw);
+                        let p = quant::i8_payload(raw);
+                        for (k, &r) in run.iter().enumerate() {
+                            out[k * stride + base] = quant::i8_at(&h, p, r % rpc);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Decoded chunk `(col, block)` — the one access primitive every
-    /// `DatasetView` method funnels through.
+    /// *scalar* `DatasetView` method funnels through (the batched hooks
+    /// go through [`ColumnStore::chunk_ref`] instead).
     fn chunk(&self, col: usize, block: usize) -> Arc<Vec<f32>> {
         let id = col * self.n_blocks + block;
         match &self.backing {
@@ -411,6 +553,80 @@ impl DatasetView for ColumnStore {
             }
             *slot = cur.as_ref().unwrap()[r % self.rows_per_chunk];
         }
+    }
+
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let w = cols.len();
+        if w == 0 || rows.is_empty() {
+            return;
+        }
+        for (ci, &c) in cols.iter().enumerate() {
+            // Maximal runs of rows sharing a chunk: one chunk touch (and,
+            // quantized, one header parse) per run per column.
+            for_each_chunk_run(rows, self.rows_per_chunk, |b, i, e| {
+                self.gather_col_run(c, b, &rows[i..e], &mut out[i * w..], ci, w);
+            });
+        }
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        if rows.is_empty() {
+            return;
+        }
+        let d = self.d;
+        for c in 0..d {
+            for_each_chunk_run(rows, self.rows_per_chunk, |b, i, e| {
+                self.gather_col_run(c, b, &rows[i..e], &mut out[i * d..], c, d);
+            });
+        }
+    }
+
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        // Cache-tiled: gather a row tile once (chunk-batched), then run
+        // the standard lane reduction per row — bit-identical to the
+        // scalar `dot` hook on the same values.
+        let d = self.d;
+        let tile = tile_rows(d, rows.len());
+        let mut buf = scratch::f32_buf(tile * d);
+        let mut at = 0;
+        for chunk in rows.chunks(tile) {
+            let m = chunk.len();
+            self.gather_rows(chunk, &mut buf[..m * d]);
+            for (k, row) in buf[..m * d].chunks_exact(d).enumerate() {
+                out[at + k] = crate::kernels::dot_f32(row, q) as f64;
+            }
+            at += m;
+        }
+    }
+
+    fn dist_point_batch(
+        &self,
+        metric: crate::data::distance::Metric,
+        x: &[f32],
+        js: &[usize],
+        out: &mut [f64],
+    ) {
+        let d = self.d;
+        let tile = tile_rows(d, js.len());
+        let mut buf = scratch::f32_buf(tile * d);
+        let mut at = 0;
+        for chunk in js.chunks(tile) {
+            let m = chunk.len();
+            self.gather_rows(chunk, &mut buf[..m * d]);
+            for (k, row) in buf[..m * d].chunks_exact(d).enumerate() {
+                out[at + k] = metric.eval(x, row);
+            }
+            at += m;
+        }
+    }
+
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        let mut buf = scratch::f32_buf(rows.len());
+        for_each_chunk_run(rows, self.rows_per_chunk, |b, i, e| {
+            let n = e - i;
+            self.gather_col_run(col, b, &rows[i..e], &mut buf[..n], 0, 1);
+            f(i, &buf[..n]);
+        });
     }
 
     fn col_range(&self, col: usize) -> (f32, f32) {
@@ -555,6 +771,11 @@ mod tests {
         let first = pass(&cs);
         assert!(cs.cache_evictions() > 0, "tiny budget must evict");
         assert!(cs.spill_reads() > 0, "chunks must stream from disk");
+        let cc = cs.cache_counters();
+        assert!(cc.misses > 0, "first pass must miss");
+        assert!(cc.hits > 0, "rows within a block must hit");
+        assert_eq!(cc.evictions, cs.cache_evictions());
+        assert_eq!(cs.chunk_decodes(), cc.misses, "every miss decodes one chunk");
         let reads_after_first = cs.spill_reads();
         let second = pass(&cs);
         assert_eq!(first, second, "eviction + re-read must be byte-identical");

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
+use crate::data::distance::Metric;
 use crate::data::Matrix;
 use crate::exec::{Gate, GateSlot};
 use crate::store::column::{ColumnStore, StoreOptions};
@@ -134,6 +135,52 @@ impl LiveSnapshot {
     pub fn spill_reads(&self) -> u64 {
         self.segments.iter().map(|s| s.spill_reads()).sum()
     }
+
+    /// Full-chunk decodes performed by this snapshot's segments (zero on
+    /// the fused quantized read path over in-RAM encoded segments).
+    pub fn chunk_decodes(&self) -> u64 {
+        self.segments.iter().map(|s| s.chunk_decodes()).sum()
+    }
+
+    /// Decoded-chunk LRU cache counters summed over this snapshot's
+    /// segments.
+    pub fn cache_counters(&self) -> crate::metrics::CacheCounters {
+        self.segments
+            .iter()
+            .fold(crate::metrics::CacheCounters::default(), |acc, s| acc + s.cache_counters())
+    }
+
+    /// Group `rows` into maximal runs living in one segment and hand each
+    /// run to `g` as `(run_start_in_rows, segment_index, local_rows)` —
+    /// the shared scaffolding of every batched hook below, so per-segment
+    /// kernels see contiguous work and chunk reuse survives the segment
+    /// seams.
+    fn for_each_seg_run(&self, rows: &[usize], g: &mut dyn FnMut(usize, usize, &[usize])) {
+        // Pre-sized to the worst case (one run spanning every row), so
+        // the borrow is the only point the arena can grow — keeping the
+        // grow-event instrumentation honest for this path too.
+        let mut local = crate::kernels::scratch::idx_buf(rows.len());
+        let mut i = 0;
+        while i < rows.len() {
+            let p = self.phys(rows[i]);
+            let s = self.seg_of(p);
+            let (start, end) = (self.offsets[s], self.offsets[s + 1]);
+            local[0] = p - start;
+            let mut len = 1;
+            let mut j = i + 1;
+            while j < rows.len() {
+                let pj = self.phys(rows[j]);
+                if pj < start || pj >= end {
+                    break;
+                }
+                local[len] = pj - start;
+                len += 1;
+                j += 1;
+            }
+            g(i, s, &local[..len]);
+            i = j;
+        }
+    }
 }
 
 impl DatasetView for LiveSnapshot {
@@ -189,6 +236,41 @@ impl DatasetView for LiveSnapshot {
             self.segments[s].read_col(col, &local, &mut out[i..j]);
             i = j;
         }
+    }
+
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let w = cols.len();
+        if w == 0 {
+            return;
+        }
+        self.for_each_seg_run(rows, &mut |i, s, local| {
+            self.segments[s].gather_block(local, cols, &mut out[i * w..(i + local.len()) * w]);
+        });
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        let d = self.d;
+        self.for_each_seg_run(rows, &mut |i, s, local| {
+            self.segments[s].gather_rows(local, &mut out[i * d..(i + local.len()) * d]);
+        });
+    }
+
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        self.for_each_seg_run(rows, &mut |i, s, local| {
+            self.segments[s].dot_batch(local, q, &mut out[i..i + local.len()]);
+        });
+    }
+
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        self.for_each_seg_run(js, &mut |i, s, local| {
+            self.segments[s].dist_point_batch(metric, x, local, &mut out[i..i + local.len()]);
+        });
+    }
+
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        self.for_each_seg_run(rows, &mut |i, s, local| {
+            self.segments[s].for_each_col_block(col, local, &mut |start, vals| f(i + start, vals));
+        });
     }
 
     fn col_range(&self, col: usize) -> (f32, f32) {
@@ -521,6 +603,26 @@ impl DatasetView for LiveStore {
 
     fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
         self.pin().read_col(col, rows, out);
+    }
+
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        self.pin().gather_block(rows, cols, out);
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        self.pin().gather_rows(rows, out);
+    }
+
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        self.pin().dot_batch(rows, q, out);
+    }
+
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        self.pin().dist_point_batch(metric, x, js, out);
+    }
+
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        self.pin().for_each_col_block(col, rows, f);
     }
 
     fn col_range(&self, col: usize) -> (f32, f32) {

@@ -18,8 +18,14 @@
 //!
 //! [`DatasetView`] is the read interface every chapter solver consumes:
 //! row gather ([`DatasetView::read_row`], [`DatasetView::read_row_at`]),
-//! column slice ([`DatasetView::read_col`], [`DatasetView::col_range`])
-//! and the distance hooks ([`DatasetView::dist`], [`DatasetView::dot`]).
+//! column slice ([`DatasetView::read_col`], [`DatasetView::col_range`]),
+//! the distance hooks ([`DatasetView::dist`], [`DatasetView::dot`]), and
+//! the batched kernel hooks ([`DatasetView::dot_batch`],
+//! [`DatasetView::dist_point_batch`], [`DatasetView::gather_block`],
+//! [`DatasetView::gather_rows`], [`DatasetView::for_each_col_block`]) —
+//! defaulting to bit-exact scalar loops, overridden by every substrate
+//! here so each chunk is touched once per batch instead of once per
+//! pull (see [`crate::kernels`]).
 //! Both the legacy dense [`Matrix`] and [`ColumnStore`] implement it, so
 //! BanditPAM (via [`ViewPointSet`]), MABSplit (whose per-feature
 //! histogram shards become true column scans) and BanditMIPS (whose
@@ -184,6 +190,66 @@ pub trait DatasetView: Send + Sync {
         None
     }
 
+    /// Batched inner products: `out[i] = ⟨row rows[i], q⟩` for every
+    /// requested row, each with the crate's standard accumulation (see
+    /// [`DatasetView::dot`]). Default: one scalar `dot` per row — the
+    /// bit-exact fallback the batched overrides must reproduce. Callers
+    /// count the `rows.len() · n_cols()` multiplications themselves.
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            *slot = self.dot(r, q);
+        }
+    }
+
+    /// Batched distances from an explicit point `x` to rows `js`
+    /// (`out[i] = metric(x, row js[i])`) — the BanditPAM pull shape with
+    /// the arm's row gathered once by the caller. Default: gather each
+    /// reference row and evaluate, exactly as the scalar
+    /// [`DatasetView::dist`] hook does. Callers count the `js.len()`
+    /// evaluations themselves.
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        let mut row = crate::kernels::scratch::f32_buf(self.n_cols());
+        for (slot, &j) in out.iter_mut().zip(js) {
+            self.read_row(j, &mut row);
+            *slot = metric.eval(x, &row);
+        }
+    }
+
+    /// Gather an arm-block × coordinate-block tile: row `rows[i]`
+    /// restricted to `cols` lands in `out[i·cols.len() .. (i+1)·cols.len()]`
+    /// — the BanditMIPS block-scheduled pull shape. Default: one
+    /// [`DatasetView::read_row_at`] per row; chunked substrates override
+    /// so each chunk is touched once per tile, not once per element.
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let w = cols.len();
+        for (i, &r) in rows.iter().enumerate() {
+            self.read_row_at(r, cols, &mut out[i * w..(i + 1) * w]);
+        }
+    }
+
+    /// Gather full rows: row `rows[i]` lands in
+    /// `out[i·n_cols() .. (i+1)·n_cols()]` (the rescore / distance-tile
+    /// shape). Default: one [`DatasetView::read_row`] per row.
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        let d = self.n_cols();
+        for (i, &r) in rows.iter().enumerate() {
+            self.read_row(r, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Chunk-aligned column visit: calls `f(start, vals)` for successive
+    /// runs of `rows` (in order), where `vals[k]` is column `col` at row
+    /// `rows[start + k]` — the MABSplit histogram-fill shape. Chunked
+    /// substrates call `f` once per chunk run with fused-decoded values;
+    /// the default delivers one run via [`DatasetView::read_col`].
+    /// Concatenating the runs always reproduces `read_col(col, rows, ..)`
+    /// exactly.
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        let mut vals = crate::kernels::scratch::f32_buf(rows.len());
+        self.read_col(col, rows, &mut vals);
+        f(0, &vals);
+    }
+
     /// Per-block upper bounds on `⟨row, q⟩` over a contiguous row range,
     /// derived from per-chunk [`ChunkStats`] alone — no decode, no disk.
     /// Each returned `(rows, ub)` guarantees `⟨row_r, q⟩ ≤ ub` for every
@@ -261,6 +327,28 @@ impl DatasetView for Matrix {
         crate::util::linalg::dot_f32(self.row(row), q) as f64
     }
 
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        for (slot, &r) in out.iter_mut().zip(rows) {
+            *slot = crate::util::linalg::dot_f32(self.row(r), q) as f64;
+        }
+    }
+
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        // Dense rows evaluate in place — no gather copy.
+        for (slot, &j) in out.iter_mut().zip(js) {
+            *slot = metric.eval(x, self.row(j));
+        }
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        if self.d == 0 {
+            return; // degenerate width: chunks_exact_mut(0) would panic
+        }
+        for (chunk, &r) in out.chunks_exact_mut(self.d).zip(rows) {
+            chunk.copy_from_slice(self.row(r));
+        }
+    }
+
     fn to_matrix(&self) -> Matrix {
         self.clone()
     }
@@ -302,6 +390,16 @@ impl<V: DatasetView + ?Sized> PointSet for ViewPointSet<V> {
         self.view.dist(self.metric, i, j)
     }
 
+    fn dist_batch(&self, i: usize, js: &[usize], out: &mut [f64]) {
+        // One gather of point i per batch (instead of per pair), then the
+        // view's block-scheduled distance kernel. Counted exactly like
+        // js.len() scalar dist calls.
+        self.counter.add(js.len() as u64);
+        let mut x = crate::kernels::scratch::f32_buf(self.view.n_cols());
+        self.view.read_row(i, &mut x);
+        self.view.dist_point_batch(self.metric, &x, js, out);
+    }
+
     fn counter(&self) -> &OpCounter {
         &self.counter
     }
@@ -327,6 +425,16 @@ impl<'a, V: DatasetView + ?Sized> RowSubsetView<'a, V> {
     /// The base-view row index behind subset row `i`.
     pub fn base_row(&self, i: usize) -> usize {
         self.rows[i]
+    }
+
+    /// Subset indices → base indices, in an arena buffer (no hot-path
+    /// allocation for the batched hooks).
+    fn translate(&self, rows: &[usize]) -> crate::kernels::scratch::IdxBuf {
+        let mut t = crate::kernels::scratch::idx_buf(rows.len());
+        for (slot, &r) in t.iter_mut().zip(rows) {
+            *slot = self.rows[r];
+        }
+        t
     }
 }
 
@@ -355,7 +463,7 @@ impl<'a, V: DatasetView + ?Sized> DatasetView for RowSubsetView<'a, V> {
     fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
         // Translate then delegate: the base's chunk-reuse optimization
         // still applies to runs of same-chunk rows.
-        let translated: Vec<usize> = rows.iter().map(|&r| self.rows[r]).collect();
+        let translated = self.translate(rows);
         self.base.read_col(col, &translated, out);
     }
 
@@ -365,6 +473,33 @@ impl<'a, V: DatasetView + ?Sized> DatasetView for RowSubsetView<'a, V> {
 
     fn dot(&self, row: usize, q: &[f32]) -> f64 {
         self.base.dot(self.rows[row], q)
+    }
+
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        let translated = self.translate(rows);
+        self.base.dot_batch(&translated, q, out);
+    }
+
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        let translated = self.translate(js);
+        self.base.dist_point_batch(metric, x, &translated, out);
+    }
+
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let translated = self.translate(rows);
+        self.base.gather_block(&translated, cols, out);
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        let translated = self.translate(rows);
+        self.base.gather_rows(&translated, out);
+    }
+
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        // Run starts are positions into `rows`, which the translation
+        // preserves one-for-one.
+        let translated = self.translate(rows);
+        self.base.for_each_col_block(col, &translated, f);
     }
 
     fn version(&self) -> u64 {

@@ -21,26 +21,11 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// Dot product over f32 slices with f32 accumulation in 4 lanes — the
-/// shape LLVM reliably autovectorizes; used by the MIPS hot path.
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for l in 0..8 {
-            acc[l] += a[i + l] * b[i + l];
-        }
-    }
-    let mut s: f32 = acc.iter().sum();
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
-}
+/// Dot product over f32 slices with 8-lane f32 accumulation — the MIPS
+/// hot path's reduction. The implementation (formerly a copy here) lives
+/// in [`crate::kernels::reduce`]; this re-export keeps the historical
+/// call sites and the bit-exact results unchanged.
+pub use crate::kernels::reduce::dot_f32;
 
 /// Euclidean norm of an f64 slice.
 #[inline]

@@ -288,6 +288,68 @@ impl Trace {
     }
 }
 
+/// A [`DatasetView`] adapter that forwards ONLY the scalar access
+/// methods of the wrapped view, hiding its batched overrides — the
+/// batched hooks (`dot_batch`, `dist_point_batch`, `gather_block`,
+/// `gather_rows`, `for_each_col_block`) fall back to their trait
+/// defaults, i.e. exactly the pre-kernel scalar path. Kernel parity
+/// tests (and the `BENCH_kernels` sweep) run the same workload on
+/// `ScalarView(&v)` and on `v` and assert bit-identical answers and
+/// op-counter totals; the wall-clock gap between the two IS the batched
+/// kernels' win.
+pub struct ScalarView<'a, V: DatasetView + ?Sized>(pub &'a V);
+
+impl<'a, V: DatasetView + ?Sized> DatasetView for ScalarView<'a, V> {
+    fn n_rows(&self) -> usize {
+        self.0.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.0.n_cols()
+    }
+
+    #[inline]
+    fn get(&self, row: usize, col: usize) -> f32 {
+        self.0.get(row, col)
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        self.0.read_row(row, out);
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        self.0.read_row_at(row, cols, out);
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        self.0.read_col(col, rows, out);
+    }
+
+    fn col_range(&self, col: usize) -> (f32, f32) {
+        self.0.col_range(col)
+    }
+
+    fn dist(&self, metric: crate::data::distance::Metric, i: usize, j: usize) -> f64 {
+        self.0.dist(metric, i, j)
+    }
+
+    fn dot(&self, row: usize, q: &[f32]) -> f64 {
+        self.0.dot(row, q)
+    }
+
+    fn version(&self) -> u64 {
+        self.0.version()
+    }
+
+    fn block_dot_bounds(
+        &self,
+        q: &[f32],
+        rows: std::ops::Range<usize>,
+    ) -> Option<Vec<(std::ops::Range<usize>, f64)>> {
+        self.0.block_dot_bounds(q, rows)
+    }
+}
+
 /// The CI store-matrix hook: parse `AS_TEST_STORE` into the substrate the
 /// current test process should run on. `None` / `"matrix"` = dense
 /// [`Matrix`]; `"column-f32"` = lossless columnar; `"column-i8-spill"` =

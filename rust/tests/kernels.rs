@@ -1,0 +1,376 @@
+//! Kernel-layer acceptance tests: the batched `DatasetView` hooks and
+//! the block-scheduled solver pulls must be *bit-identical* to the
+//! scalar path (values AND op-counter totals), the fused quantized reads
+//! must match decode-then-read exactly, and the quantized serving path
+//! must run allocation- and decode-free in steady state.
+//!
+//! The scalar reference is `testkit::ScalarView`, which hides a view's
+//! batched overrides so every hook falls back to its trait default —
+//! exactly the pre-kernel per-pull path.
+
+mod common;
+
+use std::sync::Arc;
+
+use adaptive_sampling::data::distance::Metric;
+use adaptive_sampling::data::VecPointSet;
+use adaptive_sampling::forest::histogram::Impurity;
+use adaptive_sampling::forest::split::{
+    feature_ranges_view, make_edges, solve_mab_threaded, SplitContext, TrainSet,
+};
+use adaptive_sampling::kernels::scratch;
+use adaptive_sampling::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
+use adaptive_sampling::store::{ColumnStore, DatasetView, LiveStore, RowSubsetView, StoreOptions};
+use adaptive_sampling::store::{Codec, ViewPointSet};
+use adaptive_sampling::util::proptest::prop_check;
+use adaptive_sampling::util::rng::Rng;
+use adaptive_sampling::util::testkit::{self, ScalarView};
+
+/// Compare every batched hook against the ScalarView defaults, bit for
+/// bit, over the given view.
+fn assert_batched_hooks_match_scalar(v: &dyn DatasetView, rows: &[usize], cols: &[usize], seed: u64) {
+    let scalar = ScalarView(v);
+    let d = v.n_cols();
+    let mut rng = Rng::new(seed);
+    let q: Vec<f32> = (0..d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+
+    // gather_block
+    let mut got = vec![f32::NAN; rows.len() * cols.len()];
+    let mut want = vec![f32::NAN; rows.len() * cols.len()];
+    v.gather_block(rows, cols, &mut got);
+    scalar.gather_block(rows, cols, &mut want);
+    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "gather_block[{k}]: {g} vs {w}");
+    }
+
+    // gather_rows
+    let mut got = vec![f32::NAN; rows.len() * d];
+    let mut want = vec![f32::NAN; rows.len() * d];
+    v.gather_rows(rows, &mut got);
+    scalar.gather_rows(rows, &mut want);
+    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "gather_rows[{k}]: {g} vs {w}");
+    }
+
+    // dot_batch
+    let mut got = vec![f64::NAN; rows.len()];
+    let mut want = vec![f64::NAN; rows.len()];
+    v.dot_batch(rows, &q, &mut got);
+    scalar.dot_batch(rows, &q, &mut want);
+    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "dot_batch[{k}]: {g} vs {w}");
+    }
+
+    // dist_point_batch, all three metrics
+    let x: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+        let mut got = vec![f64::NAN; rows.len()];
+        let mut want = vec![f64::NAN; rows.len()];
+        v.dist_point_batch(metric, &x, rows, &mut got);
+        scalar.dist_point_batch(metric, &x, rows, &mut want);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "dist_point_batch/{metric}[{k}]");
+        }
+    }
+
+    // for_each_col_block: concatenated runs must equal read_col exactly,
+    // with run starts tiling [0, rows.len()) in order.
+    for &c in cols.iter().take(2) {
+        let mut want = vec![f32::NAN; rows.len()];
+        v.read_col(c, rows, &mut want);
+        let mut got = vec![f32::NAN; rows.len()];
+        let mut next = 0usize;
+        v.for_each_col_block(c, rows, &mut |start, vals| {
+            assert_eq!(start, next, "runs must tile in order");
+            got[start..start + vals.len()].copy_from_slice(vals);
+            next = start + vals.len();
+        });
+        assert_eq!(next, rows.len(), "runs must cover every row");
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "for_each_col_block col {c} [{k}]");
+        }
+    }
+}
+
+#[test]
+fn prop_batched_hooks_bit_identical_to_scalar_for_random_shapes() {
+    // Satellite acceptance: random shapes and strides, tails (n % 8 ≠ 0,
+    // d % 8 ≠ 0, n % rows_per_chunk ≠ 0), scattered and duplicated row
+    // subsets, RAM and spilled backings — every batched hook must equal
+    // the scalar default bit for bit on F32 data.
+    prop_check(
+        0xBA7C4,
+        18,
+        |r| {
+            let n = 1 + r.below(300);
+            let d = 1 + r.below(40);
+            let rpc = 16 * (1 + r.below(4));
+            let spill = r.below(3) == 0;
+            (n, d, rpc, spill, r.next_u64())
+        },
+        |&(n, d, rpc, spill, seed)| {
+            let m = testkit::gaussian(n, d, seed);
+            let mut opts = StoreOptions { rows_per_chunk: rpc, ..Default::default() };
+            if spill {
+                opts = opts.spill_to_temp(1024); // tiny budget: force evictions
+            }
+            let cs = ColumnStore::from_matrix(&m, &opts).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(seed ^ 0x515E);
+            // Ascending subset with duplicates, plus a scattered subset.
+            let mut asc: Vec<usize> = (0..1 + rng.below(n.min(64))).map(|_| rng.below(n)).collect();
+            asc.sort_unstable();
+            let scattered: Vec<usize> =
+                (0..1 + rng.below(n.min(64))).map(|_| rng.below(n)).collect();
+            let cols: Vec<usize> = (0..1 + rng.below(d)).map(|_| rng.below(d)).collect();
+            for rows in [&asc, &scattered] {
+                assert_batched_hooks_match_scalar(&cs, rows, &cols, seed);
+                assert_batched_hooks_match_scalar(&m, rows, &cols, seed);
+            }
+            // Empty batches are no-ops, not panics.
+            let no_rows: [usize; 0] = [];
+            let no_q: [f32; 0] = [];
+            cs.gather_block(&no_rows, &cols, &mut []);
+            cs.gather_block(&asc, &no_rows, &mut []);
+            cs.dot_batch(&no_rows, &no_q, &mut []);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batched_hooks_cover_edge_shapes() {
+    // Single-row store, single-row blocks, and batches touching one row.
+    for (n, d, rpc) in [(1usize, 3usize, 16usize), (5, 9, 16), (17, 1, 16)] {
+        let m = testkit::gaussian(n, d, 9);
+        let cs = ColumnStore::from_matrix(
+            &m,
+            &StoreOptions { rows_per_chunk: rpc, ..Default::default() },
+        )
+        .unwrap();
+        let rows: Vec<usize> = (0..n).collect();
+        let cols: Vec<usize> = (0..d).collect();
+        assert_batched_hooks_match_scalar(&cs, &rows, &cols, 5);
+        assert_batched_hooks_match_scalar(&cs, &[0], &cols, 6);
+    }
+}
+
+#[test]
+fn fused_quantized_reads_match_decode_path_bitwise_and_error_bound() {
+    // Satellite acceptance: the fused I8/F16 kernels read encoded bytes
+    // in place; their values must equal the decode-then-read path bit
+    // for bit (same arithmetic), and stay within the codec's published
+    // error_bound of the original values.
+    let m = testkit::gaussian(300, 9, 31);
+    for codec in [Codec::I8, Codec::F16] {
+        let opts = StoreOptions { codec, rows_per_chunk: 64, ..Default::default() };
+        let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+        let rows: Vec<usize> = (0..m.n).step_by(3).collect();
+        let cols: Vec<usize> = (0..m.d).collect();
+        // Bitwise vs the scalar (decode-through-cache) path.
+        assert_batched_hooks_match_scalar(&cs, &rows, &cols, 77);
+        // Error bound vs the original matrix, chunk by chunk.
+        let mut got = vec![0f32; rows.len() * cols.len()];
+        cs.gather_block(&rows, &cols, &mut got);
+        for (ri, &r) in rows.iter().enumerate() {
+            for (ci, &c) in cols.iter().enumerate() {
+                let s = cs.chunk_stats(c, r / cs.chunk_rows());
+                let bound = codec.error_bound(s.min, s.max) * (1.0 + 1e-4) + 1e-12;
+                let err = (m.row(r)[c] as f64 - got[ri * cols.len() + ci] as f64).abs();
+                assert!(err <= bound, "{codec:?} ({r},{c}): err {err} > bound {bound}");
+            }
+        }
+        // Fused dot: identical to decode-then-dot (the scalar hook).
+        let q: Vec<f32> = (0..m.d).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let mut fused = vec![0f64; rows.len()];
+        cs.dot_batch(&rows, &q, &mut fused);
+        for (k, &r) in rows.iter().enumerate() {
+            assert_eq!(fused[k].to_bits(), ScalarView(&cs).dot(r, &q).to_bits());
+        }
+    }
+}
+
+#[test]
+fn live_snapshot_and_row_subset_hooks_match_scalar() {
+    // Multi-segment snapshot with tombstones: the run-grouped batched
+    // hooks must still be bit-identical to the scalar defaults.
+    let a = testkit::gaussian(70, 6, 41);
+    let b = testkit::gaussian(40, 6, 42);
+    let live = LiveStore::new(6, StoreOptions { rows_per_chunk: 16, ..Default::default() }).unwrap();
+    live.commit_batch(&a).unwrap();
+    live.commit_batch(&b).unwrap();
+    let snap = live.delete_rows(&[0, 35, 80]).unwrap();
+    let n = snap.n_rows();
+    let mut rng = Rng::new(7);
+    let rows: Vec<usize> = (0..48).map(|_| rng.below(n)).collect();
+    let cols = vec![0usize, 5, 2, 2];
+    assert_batched_hooks_match_scalar(&*snap, &rows, &cols, 43);
+
+    // RowSubsetView translation preserves bit-identity too.
+    let base = testkit::gaussian(90, 7, 44);
+    let subset: Vec<usize> = (0..30).map(|_| rng.below(90)).collect();
+    let sub = RowSubsetView::new(&base, subset);
+    let sub_rows: Vec<usize> = (0..20).map(|_| rng.below(30)).collect();
+    let sub_cols = vec![6usize, 0, 3];
+    assert_batched_hooks_match_scalar(&sub, &sub_rows, &sub_cols, 45);
+}
+
+/// Run BanditMIPS and return everything the determinism contract pins.
+fn run_mips(v: &dyn DatasetView, q: &[f32], threads: usize) -> (Vec<usize>, u64, u64) {
+    let c = OpCounter::new();
+    let cfg = BanditMipsConfig { k: 2, threads, seed: 99, ..Default::default() };
+    let ans = bandit_mips(v, q, &cfg, &c);
+    (ans.atoms, ans.samples, c.get())
+}
+
+#[test]
+fn banditmips_batched_pulls_bit_identical_to_scalar_at_every_thread_count() {
+    // Tentpole acceptance: for a fixed seed, the block-scheduled solver
+    // returns bit-identical answers AND op-counter totals to the scalar
+    // path on Matrix and ColumnStore(F32) at threads {1, 2, 4, 8} — the
+    // satellite's "one batched call over B rows counts as B pulls".
+    let m = testkit::gaussian(120, 96, 51);
+    let cs = ColumnStore::from_matrix(
+        &m,
+        &StoreOptions { rows_per_chunk: 32, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let q: Vec<f32> = (0..96).map(|_| rng.f32() * 3.0 - 1.5).collect();
+    let reference = run_mips(&ScalarView(&m), &q, 1);
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(run_mips(&m, &q, threads), reference, "matrix threads={threads}");
+        assert_eq!(run_mips(&cs, &q, threads), reference, "store threads={threads}");
+        assert_eq!(
+            run_mips(&ScalarView(&cs), &q, threads),
+            reference,
+            "scalar store threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn banditpam_batched_distance_pulls_bit_identical_to_scalar() {
+    let m = testkit::clusterable(130, 12, 3, 6.0, 53).x;
+    let cs = Arc::new(
+        ColumnStore::from_matrix(&m, &StoreOptions { rows_per_chunk: 32, ..Default::default() })
+            .unwrap(),
+    );
+    let run = |scalar: bool, threads: usize| {
+        let mut cfg = BanditPamConfig::new(3);
+        cfg.km.seed = 53;
+        cfg.threads = threads;
+        let r = if scalar {
+            let sv = ScalarView(&*cs);
+            bandit_pam(&ViewPointSet::new(Arc::new(sv), Metric::L2), &cfg)
+        } else {
+            bandit_pam(&ViewPointSet::new(cs.clone(), Metric::L2), &cfg)
+        };
+        (r.medoids, r.loss.to_bits(), r.swaps_performed, r.dist_calls)
+    };
+    let dense = {
+        let mut cfg = BanditPamConfig::new(3);
+        cfg.km.seed = 53;
+        let r = bandit_pam(&VecPointSet::new(m.clone(), Metric::L2), &cfg);
+        (r.medoids, r.loss.to_bits(), r.swaps_performed, r.dist_calls)
+    };
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(run(false, threads), dense, "batched threads={threads}");
+        assert_eq!(run(true, threads), dense, "scalar threads={threads}");
+    }
+}
+
+#[test]
+fn mabsplit_batched_fills_bit_identical_to_scalar() {
+    let ds = adaptive_sampling::data::tabular::make_classification(2_500, 8, 3, 2, 2.5, 57);
+    let cs = ColumnStore::from_matrix(
+        &ds.x,
+        &StoreOptions { rows_per_chunk: 128, ..Default::default() },
+    )
+    .unwrap();
+    let rows: Vec<usize> = (0..ds.x.n).collect();
+    let features: Vec<usize> = (0..ds.x.d).collect();
+    let run = |x: &dyn DatasetView, threads: usize| {
+        let c = OpCounter::new();
+        let ranges = feature_ranges_view(x);
+        let mut rng = Rng::new(1);
+        let ctx = SplitContext {
+            ds: TrainSet { x, y: &ds.y, n_classes: ds.n_classes },
+            rows: &rows,
+            features: &features,
+            edges: make_edges(&features, &ranges, 10, false, &mut rng),
+            impurity: Impurity::Gini,
+            counter: &c,
+        };
+        let s = solve_mab_threaded(&ctx, 100, 0.01, 57, threads).unwrap();
+        (s.feature, s.threshold.to_bits(), s.child_impurity.to_bits(), c.get())
+    };
+    let reference = run(&ScalarView(&ds.x), 1);
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(run(&ds.x, threads), reference, "matrix threads={threads}");
+        assert_eq!(run(&cs, threads), reference, "store threads={threads}");
+        assert_eq!(run(&ScalarView(&cs), threads), reference, "scalar store threads={threads}");
+    }
+}
+
+#[test]
+fn quantized_serving_path_is_allocation_and_decode_free_in_steady_state() {
+    // Tentpole acceptance: on an in-RAM I8 store, a serving query
+    // performs ZERO full-chunk Vec<f32> decodes (the fused path reads
+    // encoded bytes in place), and after one warm-up query the scratch
+    // arenas stop growing — zero per-pull heap allocations.
+    let m = testkit::gaussian(256, 64, 61);
+    let cs = ColumnStore::from_matrix(
+        &m,
+        &StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() },
+    )
+    .unwrap();
+    assert!(!cs.spilled());
+    let mut rng = Rng::new(8);
+    let q: Vec<f32> = (0..64).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let cfg = BanditMipsConfig { k: 3, threads: 1, ..Default::default() };
+
+    // Warm-up: arenas grow to the steady-state shapes.
+    let c = OpCounter::new();
+    let warm = bandit_mips(&cs, &q, &cfg, &c);
+    assert_eq!(cs.chunk_decodes(), 0, "fused path must not materialize chunks");
+    let grows_after_warmup = scratch::grow_events();
+
+    // Steady state: same shapes, zero arena growth, still zero decodes.
+    let c2 = OpCounter::new();
+    let again = bandit_mips(&cs, &q, &cfg, &c2);
+    assert_eq!(again.atoms, warm.atoms, "same query, same answer");
+    assert_eq!(
+        scratch::grow_events(),
+        grows_after_warmup,
+        "steady-state serving must not grow the scratch arenas"
+    );
+    assert_eq!(cs.chunk_decodes(), 0, "still decode-free after the second query");
+    // The decode-op meter still charges the touched elements, so lossy
+    // access cost stays visible.
+    assert!(cs.decode_ops() > 0);
+    // The LRU cache was never consulted on the fused path.
+    let cache = cs.cache_counters();
+    assert_eq!((cache.hits, cache.misses), (0, 0), "fused path bypasses the cache");
+}
+
+#[test]
+fn spilled_quantized_store_still_serves_through_the_cache() {
+    // Spilled chunks amortize disk reads through the LRU decoded cache;
+    // the batched hooks pin a chunk once per run instead of per element,
+    // and the hit/miss counters make that visible.
+    let m = testkit::gaussian(512, 24, 67);
+    let opts = StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() }
+        .spill_to_temp(1 << 20);
+    let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+    assert!(cs.spilled());
+    let mut rng = Rng::new(9);
+    let q: Vec<f32> = (0..24).map(|_| rng.f32()).collect();
+    let c = OpCounter::new();
+    let _ = bandit_mips(&cs, &q, &BanditMipsConfig::default(), &c);
+    let cache = cs.cache_counters();
+    assert!(cache.misses > 0, "spilled serving decodes through the cache");
+    assert!(cache.hits > 0, "…and reuses decoded chunks across batches");
+    assert!(cs.chunk_decodes() > 0);
+}
