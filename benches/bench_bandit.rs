@@ -14,6 +14,7 @@ use adaptive_sampling::bandit::{
 use adaptive_sampling::exec::WorkerPool;
 use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::util::bench::Bencher;
+use adaptive_sampling::util::json::Json;
 
 /// A pull that costs roughly one small distance evaluation (~16
 /// transcendental ops): arm-separated means plus deterministic
@@ -89,26 +90,28 @@ fn engine_scaling_sweep(n_arms: usize, ref_len: usize, batch_size: usize) -> Vec
 }
 
 fn write_engine_json(n_arms: usize, ref_len: usize, batch_size: usize, points: &[ScalePoint]) {
-    let rows: Vec<String> = points
+    let mut doc = Json::obj();
+    doc.push("bench", Json::Str("engine_scaling".into()));
+    doc.push("n_arms", Json::U64(n_arms as u64));
+    doc.push("ref_len", Json::U64(ref_len as u64));
+    doc.push("batch_size", Json::U64(batch_size as u64));
+    doc.push(
+        "host_parallelism",
+        Json::U64(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64),
+    );
+    let rows = points
         .iter()
         .map(|p| {
-            format!(
-                "    {{\"threads\": {}, \"ops\": {}, \"wall_s\": {:.6}, \"speedup_vs_1\": {:.3}}}",
-                p.threads, p.ops, p.wall_s, p.speedup
-            )
+            let mut row = Json::obj();
+            row.push("threads", Json::U64(p.threads as u64));
+            row.push("ops", Json::U64(p.ops));
+            row.push("wall_s", Json::F64(p.wall_s));
+            row.push("speedup_vs_1", Json::F64(p.speedup));
+            row
         })
         .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"engine_scaling\",\n  \"n_arms\": {n_arms},\n  \
-         \"ref_len\": {ref_len},\n  \"batch_size\": {batch_size},\n  \
-         \"host_parallelism\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        rows.join(",\n")
-    );
-    match std::fs::write("BENCH_engine.json", &json) {
-        Ok(()) => println!("wrote BENCH_engine.json"),
-        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
-    }
+    doc.push("results", Json::Arr(rows));
+    adaptive_sampling::util::json::write_json_file("BENCH_engine.json", &doc);
 }
 
 fn main() {
@@ -161,4 +164,5 @@ fn main() {
         );
     }
     write_engine_json(n_arms, ref_len, batch_size, &points);
+    b.write_json("engine_micro", "BENCH_engine_micro.json");
 }

@@ -73,4 +73,5 @@ fn main() {
             std::hint::black_box(Forest::fit(&dsr, &cfg, &c).trees.len());
         });
     }
+    b.write_json("forest", "BENCH_forest.json");
 }

@@ -53,4 +53,5 @@ fn main() {
         let ps = VecPointSet::new(mat.clone(), Metric::L2);
         std::hint::black_box(voronoi(&ps, &cfg, 20).loss);
     });
+    b.write_json("kmedoids", "BENCH_kmedoids.json");
 }

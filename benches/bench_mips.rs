@@ -52,4 +52,5 @@ fn main() {
         let c = OpCounter::new();
         std::hint::black_box(pca.query(&atoms, q, 1, &c)[0]);
     });
+    b.write_json("mips", "BENCH_mips.json");
 }

@@ -1,46 +1,42 @@
 //! Runtime-substrate benches.
 //!
+//! All sweeps run the **perf-gate workloads**
+//! (`adaptive_sampling::harness::workloads`) with a stopwatch around
+//! them, so the wall-clock trend files and the cost-model baselines in
+//! `benches/baselines/` always describe exactly the same code paths.
+//!
 //! 1. **Store sweep** (always runs): MABSplit and BanditMIPS on the same
 //!    workload over every dataset substrate — dense `Matrix`,
 //!    `ColumnStore` f32/i8, in-RAM and spilled — recording wall-clock,
 //!    solver op counts, and store decode/spill counters to
-//!    `BENCH_store.json`, so the storage layer's perf trajectory is
-//!    tracked across PRs. F32 variants are asserted to reproduce the
+//!    `BENCH_store.json`. F32 variants are asserted to reproduce the
 //!    dense answer exactly.
 //! 2. **Live-plane refresh sweep** (always runs): for every
 //!    `testkit::refresh_corpus` fixture, warm-started `refresh` vs cold
 //!    solve after an append — op counts, wall clock, and answer equality
-//!    per solver family — written to `BENCH_live.json` so the < 50%
-//!    acceptance ratio is tracked as a trend, not just a pass/fail.
+//!    per solver family — written to `BENCH_live.json`.
 //! 3. **Kernel sweep** (always runs): scalar vs batched access path ×
-//!    {F32, F16, I8} × {RAM, spill} on the BanditMIPS serving workload
-//!    and a MABSplit node split, written to `BENCH_kernels.json`. The
-//!    scalar leg runs the same solver through `testkit::ScalarView`
-//!    (batched `DatasetView` hooks hidden → per-pull trait defaults), so
-//!    the wall-clock gap IS the kernel layer's win; answers and op
+//!    {F32, F16, I8} × {RAM, spill}, written to `BENCH_kernels.json`.
+//!    The scalar leg runs the same solver through `testkit::ScalarView`,
+//!    so the wall-clock gap IS the kernel layer's win; answers and op
 //!    counts are asserted identical between the legs.
 //! 4. **PJRT benches** (skipped with a message when `make artifacts`
-//!    hasn't been run): artifact execute round-trips — the L3↔XLA
-//!    boundary cost the serving coordinator pays per batched call.
+//!    hasn't been run): artifact execute round-trips.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use adaptive_sampling::data::distance::Metric;
 use adaptive_sampling::data::tabular::make_classification;
-use adaptive_sampling::forest::histogram::Impurity;
-use adaptive_sampling::forest::split::{
-    feature_ranges_view, make_edges, refresh_split, solve_exact_cached, solve_exactly,
-    solve_mab, SplitContext, TrainSet,
+use adaptive_sampling::harness::workloads::{
+    refresh_banditpam, refresh_mips, refresh_split_node, MipsWorkload, RefreshLegs,
+    SplitWorkload,
 };
-use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
 use adaptive_sampling::metrics::OpCounter;
-use adaptive_sampling::mips::banditmips::{bandit_mips, BanditMipsConfig};
-use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
+use adaptive_sampling::mips::banditmips::BanditMipsConfig;
 use adaptive_sampling::runtime::ArtifactStore;
-use adaptive_sampling::store::{
-    Codec, ColumnStore, DatasetView, LiveStore, StoreOptions, ViewPointSet,
-};
+use adaptive_sampling::store::{Codec, ColumnStore, DatasetView, LiveStore, StoreOptions};
 use adaptive_sampling::util::bench::Bencher;
+use adaptive_sampling::util::json::Json;
 use adaptive_sampling::util::rng::Rng;
 use adaptive_sampling::util::testkit;
 use adaptive_sampling::util::testkit::ScalarView;
@@ -83,23 +79,12 @@ fn store_sweep(quick: bool) -> Vec<StorePoint> {
     // --- MABSplit: one node split over every substrate. ---
     let n = if quick { 4_000 } else { 20_000 };
     let ds = make_classification(n, 10, 3, 2, 2.5, 7);
-    let rows: Vec<usize> = (0..ds.x.n).collect();
-    let features: Vec<usize> = (0..ds.x.d).collect();
+    let split_wl = SplitWorkload::for_dataset(&ds);
     let mab = |x: &dyn DatasetView| {
         let c = OpCounter::new();
-        let ranges = feature_ranges_view(x);
-        let mut rng = Rng::new(1);
-        let ctx = SplitContext {
-            ds: TrainSet { x, y: &ds.y, n_classes: ds.n_classes },
-            rows: &rows,
-            features: &features,
-            edges: make_edges(&features, &ranges, 10, false, &mut rng),
-            impurity: Impurity::Gini,
-            counter: &c,
-        };
         let t0 = Instant::now();
-        let s = solve_mab(&ctx, 100, 0.01, 77).expect("split");
-        (t0.elapsed().as_secs_f64(), c.get(), (s.feature, s.threshold.to_bits()))
+        let s = split_wl.run_mab(x, 1, &c);
+        (t0.elapsed().as_secs_f64(), c.get(), s.digest())
     };
     let (_, _, dense_split) = mab(&ds.x);
     for (label, opts) in variants(ds.x.n * ds.x.d * 4) {
@@ -133,14 +118,12 @@ fn store_sweep(quick: bool) -> Vec<StorePoint> {
     let (na, da) = if quick { (100, 5_000) } else { (200, 20_000) };
     let (atoms, queries) =
         adaptive_sampling::data::synthetic::normal_custom(na, da, 4, 5);
+    let mips_wl =
+        MipsWorkload::new(queries, BanditMipsConfig { seed: 9, ..Default::default() });
     let mips = |x: &dyn DatasetView| {
         let c = OpCounter::new();
         let t0 = Instant::now();
-        let mut answers = Vec::new();
-        for qi in 0..queries.n {
-            let cfg = BanditMipsConfig { seed: 9 + qi as u64, ..Default::default() };
-            answers.push(bandit_mips(x, queries.row(qi), &cfg, &c).atoms);
-        }
+        let answers = mips_wl.run(x, &c);
         (t0.elapsed().as_secs_f64(), c.get(), answers)
     };
     let (_, _, dense_answers) = mips(&atoms);
@@ -174,26 +157,6 @@ fn store_sweep(quick: bool) -> Vec<StorePoint> {
     points
 }
 
-/// A root-node split context with equal-width edges from the view's
-/// stats-backed feature ranges (shared by the live refresh sweep).
-fn root_ctx<'a>(
-    x: &'a dyn DatasetView,
-    y: &'a [f32],
-    n_classes: usize,
-    rows: &'a [usize],
-    features: &'a [usize],
-    counter: &'a OpCounter,
-) -> SplitContext<'a> {
-    SplitContext {
-        ds: TrainSet { x, y, n_classes },
-        rows,
-        features,
-        edges: make_edges(features, &feature_ranges_view(x), 10, false, &mut Rng::new(1)),
-        impurity: Impurity::Gini,
-        counter,
-    }
-}
-
 struct LivePoint {
     fixture: &'static str,
     solver: &'static str,
@@ -208,101 +171,43 @@ impl LivePoint {
     fn ratio(&self) -> f64 {
         self.warm_ops as f64 / self.cold_ops.max(1) as f64
     }
+
+    fn from_legs(fixture: &'static str, solver: &'static str, legs: RefreshLegs) -> LivePoint {
+        LivePoint {
+            fixture,
+            solver,
+            cold_ops: legs.cold_ops,
+            warm_ops: legs.warm_ops,
+            cold_wall_s: legs.cold_wall_s,
+            warm_wall_s: legs.warm_wall_s,
+            matches: legs.matches,
+        }
+    }
 }
 
 /// Refresh-vs-cold sweep over the shared fixture corpus (the trend
-/// behind the `< 50% of cold` acceptance assertions in tests/live.rs).
+/// behind the `< 50% of cold` acceptance assertions in tests/live.rs),
+/// running the perf-gate's refresh legs against `LiveStore` snapshots.
 fn live_sweep() -> Vec<LivePoint> {
     let mut points = Vec::new();
     for fx in testkit::refresh_corpus() {
         let d = fx.base.x.d;
-        let full = fx.full();
         let live = LiveStore::new(d, StoreOptions { rows_per_chunk: 64, ..Default::default() })
             .expect("live store");
-        let snap_a = live.commit_batch(&fx.base.x).expect("base");
-        let snap_b = live.commit_batch(&fx.append.x).expect("append");
+        let base: Arc<dyn DatasetView> = live.commit_batch(&fx.base.x).expect("base");
+        let full: Arc<dyn DatasetView> = live.commit_batch(&fx.append.x).expect("append");
+        let full_ds = fx.full();
 
-        // --- BanditMIPS standing query ---
-        {
-            let cfg = BanditMipsConfig { k: 3, batch_size: d.max(32), ..Default::default() };
-            let mut rq = Rng::new(fx.seed ^ 0x9E00);
-            let qi = rq.below(fx.base.x.n);
-            let q: Vec<f32> = fx.base.x.row(qi).iter().map(|&v| v * 1.25).collect();
-            let c_prev = OpCounter::new();
-            let (_, model) = solve_model(&*snap_a, &q, &cfg, &c_prev);
-            let c_cold = OpCounter::new();
-            let t0 = Instant::now();
-            let (cold, _) = solve_model(&*snap_b, &q, &cfg, &c_cold);
-            let cold_wall = t0.elapsed().as_secs_f64();
-            let c_warm = OpCounter::new();
-            let t0 = Instant::now();
-            let (warm, _) = mips_refresh(&*snap_b, &q, &model, &cfg, &c_warm);
-            points.push(LivePoint {
-                fixture: fx.name,
-                solver: "banditmips",
-                cold_ops: c_cold.get(),
-                warm_ops: c_warm.get(),
-                cold_wall_s: cold_wall,
-                warm_wall_s: t0.elapsed().as_secs_f64(),
-                matches: warm.atoms == cold.atoms,
-            });
-        }
+        let legs = refresh_mips(&fx, &*base, &*full, &*full, 1);
+        points.push(LivePoint::from_legs(fx.name, "banditmips", legs));
 
-        // --- BanditPAM (clusterable fixtures only) ---
         if fx.clusterable {
-            let mut cfg = BanditPamConfig::new(fx.k);
-            cfg.km.seed = fx.seed;
-            let prev = bandit_pam(&ViewPointSet::new(snap_a.clone(), Metric::L2), &cfg);
-            let t0 = Instant::now();
-            let cold = bandit_pam(&ViewPointSet::new(snap_b.clone(), Metric::L2), &cfg);
-            let cold_wall = t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let warm = bandit_pam_refresh(
-                &ViewPointSet::new(snap_b.clone(), Metric::L2),
-                &prev.medoids,
-                &cfg,
-            );
-            points.push(LivePoint {
-                fixture: fx.name,
-                solver: "banditpam",
-                cold_ops: cold.dist_calls,
-                warm_ops: warm.dist_calls,
-                cold_wall_s: cold_wall,
-                warm_wall_s: t0.elapsed().as_secs_f64(),
-                matches: warm.medoids == cold.medoids,
-            });
+            let legs = refresh_banditpam(&fx, base.clone(), full.clone(), full.clone(), 1);
+            points.push(LivePoint::from_legs(fx.name, "banditpam", legs));
         }
 
-        // --- MABSplit node refresh ---
-        {
-            let features: Vec<usize> = (0..d).collect();
-            let rows_a: Vec<usize> = (0..fx.base.x.n).collect();
-            let rows_b: Vec<usize> = (0..full.x.n).collect();
-            let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
-            let c_prev = OpCounter::new();
-            let ctx_a = root_ctx(&*snap_a, &full.y, full.n_classes, &rows_a, &features, &c_prev);
-            let (_, mut cache) = solve_exact_cached(&ctx_a).expect("base split");
-            let c_cold = OpCounter::new();
-            let ctx_b = root_ctx(&*snap_b, &full.y, full.n_classes, &rows_b, &features, &c_cold);
-            let t0 = Instant::now();
-            let cold = solve_exactly(&ctx_b).expect("cold split");
-            let cold_wall = t0.elapsed().as_secs_f64();
-            let c_warm = OpCounter::new();
-            let ts_b = TrainSet { x: &*snap_b, y: &full.y, n_classes: full.n_classes };
-            let t0 = Instant::now();
-            let warm =
-                refresh_split(&mut cache, &ts_b, &rows_b, &new_rows, &c_warm).expect("warm split");
-            points.push(LivePoint {
-                fixture: fx.name,
-                solver: "mabsplit-node",
-                cold_ops: c_cold.get(),
-                warm_ops: c_warm.get(),
-                cold_wall_s: cold_wall,
-                warm_wall_s: t0.elapsed().as_secs_f64(),
-                matches: warm.feature == cold.feature
-                    && warm.threshold.to_bits() == cold.threshold.to_bits(),
-            });
-        }
+        let legs = refresh_split_node(&fx, &full_ds, &*base, &*full, &*full);
+        points.push(LivePoint::from_legs(fx.name, "mabsplit-node", legs));
     }
     points
 }
@@ -344,14 +249,14 @@ fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
     // --- BanditMIPS serving sweep (threads = 1: the acceptance config).
     let (na, da) = if quick { (100, 4_000) } else { (200, 20_000) };
     let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(na, da, 6, 15);
+    let mips_wl = MipsWorkload::new(
+        queries,
+        BanditMipsConfig { seed: 7, threads: 1, ..Default::default() },
+    );
     let run_mips = |x: &dyn DatasetView| {
         let c = OpCounter::new();
         let t0 = Instant::now();
-        let mut answers = Vec::new();
-        for qi in 0..queries.n {
-            let cfg = BanditMipsConfig { seed: 7 + qi as u64, threads: 1, ..Default::default() };
-            answers.push(bandit_mips(x, queries.row(qi), &cfg, &c).atoms);
-        }
+        let answers = mips_wl.run(x, &c);
         (t0.elapsed().as_secs_f64(), c.get(), answers)
     };
     for (label, opts) in configs(na * da * 4) {
@@ -387,23 +292,12 @@ fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
     // --- MABSplit node split.
     let n = if quick { 4_000 } else { 20_000 };
     let ds = make_classification(n, 10, 3, 2, 2.5, 7);
-    let rows: Vec<usize> = (0..ds.x.n).collect();
-    let features: Vec<usize> = (0..ds.x.d).collect();
+    let split_wl = SplitWorkload::for_dataset(&ds);
     let run_mab = |x: &dyn DatasetView| {
         let c = OpCounter::new();
-        let ranges = feature_ranges_view(x);
-        let mut rng = Rng::new(1);
-        let ctx = SplitContext {
-            ds: TrainSet { x, y: &ds.y, n_classes: ds.n_classes },
-            rows: &rows,
-            features: &features,
-            edges: make_edges(&features, &ranges, 10, false, &mut rng),
-            impurity: Impurity::Gini,
-            counter: &c,
-        };
         let t0 = Instant::now();
-        let s = solve_mab(&ctx, 100, 0.01, 77).expect("split");
-        (t0.elapsed().as_secs_f64(), c.get(), (s.feature, s.threshold.to_bits()))
+        let s = split_wl.run_mab(x, 1, &c);
+        (t0.elapsed().as_secs_f64(), c.get(), s.digest())
     };
     for (label, opts) in configs(ds.x.n * ds.x.d * 4) {
         // Fresh store per leg (same cold-cache discipline as above).
@@ -436,6 +330,13 @@ fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
     points
 }
 
+fn write_bench_json(path: &str, bench: &str, rows: Vec<Json>) {
+    let mut doc = Json::obj();
+    doc.push("bench", Json::Str(bench.to_string()));
+    doc.push("results", Json::Arr(rows));
+    adaptive_sampling::util::json::write_json_file(path, &doc);
+}
+
 fn write_kernels_json(points: &[KernelPoint]) {
     // Pair up scalar/batched legs so the JSON carries the speedup.
     let scalar_wall = |solver: &str, store: &str| {
@@ -444,82 +345,62 @@ fn write_kernels_json(points: &[KernelPoint]) {
             .find(|p| p.solver == solver && p.store == store && p.mode == "scalar")
             .map(|p| p.wall_s)
     };
-    let rows: Vec<String> = points
+    let rows = points
         .iter()
         .map(|p| {
-            let speedup = match (p.mode, scalar_wall(p.solver, &p.store)) {
-                ("batched", Some(sw)) if p.wall_s > 0.0 => {
-                    format!(", \"speedup_vs_scalar\": {:.3}", sw / p.wall_s)
+            let mut row = Json::obj();
+            row.push("solver", Json::Str(p.solver.to_string()));
+            row.push("store", Json::Str(p.store.clone()));
+            row.push("mode", Json::Str(p.mode.to_string()));
+            row.push("wall_s", Json::F64(p.wall_s));
+            row.push("ops", Json::U64(p.ops));
+            row.push("chunk_decodes", Json::U64(p.chunk_decodes));
+            if let ("batched", Some(sw)) = (p.mode, scalar_wall(p.solver, &p.store)) {
+                if p.wall_s > 0.0 {
+                    row.push("speedup_vs_scalar", Json::F64(sw / p.wall_s));
                 }
-                _ => String::new(),
-            };
-            format!(
-                "    {{\"solver\": \"{}\", \"store\": \"{}\", \"mode\": \"{}\", \
-                 \"wall_s\": {:.6}, \"ops\": {}, \"chunk_decodes\": {}{}}}",
-                p.solver, p.store, p.mode, p.wall_s, p.ops, p.chunk_decodes, speedup
-            )
+            }
+            row
         })
         .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"kernel_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
-    );
-    match std::fs::write("BENCH_kernels.json", &json) {
-        Ok(()) => println!("wrote BENCH_kernels.json"),
-        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
-    }
+    write_bench_json("BENCH_kernels.json", "kernel_sweep", rows);
 }
 
 fn write_live_json(points: &[LivePoint]) {
-    let rows: Vec<String> = points
+    let rows = points
         .iter()
         .map(|p| {
-            format!(
-                "    {{\"fixture\": \"{}\", \"solver\": \"{}\", \"cold_ops\": {}, \
-                 \"warm_ops\": {}, \"warm_over_cold\": {:.4}, \"cold_wall_s\": {:.6}, \
-                 \"warm_wall_s\": {:.6}, \"matches_cold\": {}}}",
-                p.fixture,
-                p.solver,
-                p.cold_ops,
-                p.warm_ops,
-                p.ratio(),
-                p.cold_wall_s,
-                p.warm_wall_s,
-                p.matches
-            )
+            let mut row = Json::obj();
+            row.push("fixture", Json::Str(p.fixture.to_string()));
+            row.push("solver", Json::Str(p.solver.to_string()));
+            row.push("cold_ops", Json::U64(p.cold_ops));
+            row.push("warm_ops", Json::U64(p.warm_ops));
+            row.push("warm_over_cold", Json::F64(p.ratio()));
+            row.push("cold_wall_s", Json::F64(p.cold_wall_s));
+            row.push("warm_wall_s", Json::F64(p.warm_wall_s));
+            row.push("matches_cold", Json::Bool(p.matches));
+            row
         })
         .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"live_refresh_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
-    );
-    match std::fs::write("BENCH_live.json", &json) {
-        Ok(()) => println!("wrote BENCH_live.json"),
-        Err(e) => eprintln!("could not write BENCH_live.json: {e}"),
-    }
+    write_bench_json("BENCH_live.json", "live_refresh_sweep", rows);
 }
 
 fn write_store_json(points: &[StorePoint]) {
-    let rows: Vec<String> = points
+    let rows = points
         .iter()
         .map(|p| {
-            format!(
-                "    {{\"solver\": \"{}\", \"store\": \"{}\", \"wall_s\": {:.6}, \
-                 \"ops\": {}, \"decode_ops\": {}, \"spill_reads\": {}, \
-                 \"answer_matches_dense\": {}}}",
-                p.solver, p.store, p.wall_s, p.ops, p.decode_ops, p.spill_reads,
-                p.answer_matches_dense
-            )
+            let mut row = Json::obj();
+            row.push("solver", Json::Str(p.solver.to_string()));
+            row.push("store", Json::Str(p.store.clone()));
+            row.push("wall_s", Json::F64(p.wall_s));
+            row.push("ops", Json::U64(p.ops));
+            row.push("decode_ops", Json::U64(p.decode_ops));
+            row.push("spill_reads", Json::U64(p.spill_reads));
+            row.push("answer_matches_dense", Json::Bool(p.answer_matches_dense));
+            row
         })
         .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"store_sweep\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
-    );
-    match std::fs::write("BENCH_store.json", &json) {
-        Ok(()) => println!("wrote BENCH_store.json"),
-        Err(e) => eprintln!("could not write BENCH_store.json: {e}"),
-    }
+    write_bench_json("BENCH_store.json", "store_sweep", rows);
 }
 
 fn main() {
@@ -647,4 +528,5 @@ fn main() {
             std::hint::black_box(out[1][0]);
         });
     }
+    b.write_json("pjrt_roundtrip", "BENCH_pjrt.json");
 }

@@ -45,7 +45,10 @@ fn main() {
     let vo = voronoi(&ps, &cfg, 40);
     let voronoi_calls = ps.counter().get();
 
-    println!("{:<12} {:>12} {:>14} {:>10} {:>8}", "algorithm", "loss", "dist calls", "time", "vs PAM");
+    println!(
+        "{:<12} {:>12} {:>14} {:>10} {:>8}",
+        "algorithm", "loss", "dist calls", "time", "vs PAM"
+    );
     let row = |name: &str, l: f64, calls: u64, secs: f64| {
         println!(
             "{:<12} {:>12.1} {:>14} {:>9.2}s {:>8.4}",

@@ -636,13 +636,13 @@ mod tests {
     fn harder_gaps_use_more_samples() {
         let easy = {
             let mut arms = make_arms(vec![0.0, 10.0, 10.0, 10.0], 1.0, 1_000_000);
-            successive_elimination(&mut arms, &BanditConfig { batch_size: 32, ..Default::default() })
-                .n_used
+            let cfg = BanditConfig { batch_size: 32, ..Default::default() };
+            successive_elimination(&mut arms, &cfg).n_used
         };
         let hard = {
             let mut arms = make_arms(vec![0.0, 0.05, 10.0, 10.0], 1.0, 1_000_000);
-            successive_elimination(&mut arms, &BanditConfig { batch_size: 32, ..Default::default() })
-                .n_used
+            let cfg = BanditConfig { batch_size: 32, ..Default::default() };
+            successive_elimination(&mut arms, &cfg).n_used
         };
         assert!(hard >= easy, "hard {hard} < easy {easy}");
     }
@@ -680,7 +680,10 @@ mod tests {
 
     #[test]
     fn prop_sample_complexity_bounded_by_pool() {
-        prop_check(0xCD, 30, |r| (2 + r.below(10), 100 + r.below(2000), r.next_u64()), |&(n_arms, ref_len, seed)| {
+        let draw = |r: &mut crate::util::rng::Rng| {
+            (2 + r.below(10), 100 + r.below(2000), r.next_u64())
+        };
+        prop_check(0xCD, 30, draw, |&(n_arms, ref_len, seed)| {
             let mut arms = MeanArms::new(n_arms, ref_len, move |a, j| {
                 ((a * 37 + j * 11) % 101) as f64 / 101.0
             });
@@ -698,7 +701,8 @@ mod tests {
 
     #[test]
     fn prop_keep_never_exceeds_survivors() {
-        prop_check(0xEF, 25, |r| (1 + r.below(5), 3 + r.below(8), r.next_u64()), |&(keep, n_arms, seed)| {
+        let draw = |r: &mut crate::util::rng::Rng| (1 + r.below(5), 3 + r.below(8), r.next_u64());
+        prop_check(0xEF, 25, draw, |&(keep, n_arms, seed)| {
             let keep = keep.min(n_arms);
             let mut arms = MeanArms::new(n_arms, 5_000, move |a, j| {
                 a as f64 + ((j % 13) as f64 - 6.0) / 13.0

@@ -104,7 +104,9 @@ impl ServerConfig {
         Ok(ServerConfig {
             workers: cfg.get_usize("server", "workers", d.workers)?,
             max_batch: cfg.get_usize("server", "max_batch", d.max_batch)?,
-            batch_timeout_us: cfg.get_usize("server", "batch_timeout_us", d.batch_timeout_us as usize)? as u64,
+            batch_timeout_us: cfg
+                .get_usize("server", "batch_timeout_us", d.batch_timeout_us as usize)?
+                as u64,
             k: cfg.get_usize("server", "k", d.k)?,
             delta: cfg.get_f64("server", "delta", d.delta)?,
             warm_coords: cfg.get_usize("server", "warm_coords", d.warm_coords)?,

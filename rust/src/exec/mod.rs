@@ -205,7 +205,7 @@ impl WorkerPool {
         if shards == 1 {
             return vec![f(items)];
         }
-        let per = (items.len() + shards - 1) / shards;
+        let per = items.len().div_ceil(shards);
         let chunks: Vec<&[I]> = items.chunks(per).collect();
         let mut out: Vec<Option<T>> = Vec::new();
         out.resize_with(chunks.len(), || None);

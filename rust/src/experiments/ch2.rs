@@ -56,7 +56,8 @@ fn scaling_sweep<PS: PointSet>(
     seed: u64,
     csv: &str,
 ) {
-    let mut table = Table::new(&["n", "calls/iter (BanditPAM)", "PAM kn^2 ref", "FastPAM1 n^2 ref"]);
+    let mut table =
+        Table::new(&["n", "calls/iter (BanditPAM)", "PAM kn^2 ref", "FastPAM1 n^2 ref"]);
     let mut xs = Vec::new();
     let mut ys = Vec::new();
     for &n in ns {
@@ -80,7 +81,9 @@ fn scaling_sweep<PS: PointSet>(
     }
     let (slope, r2) = loglog_slope(&xs, &ys);
     table.print();
-    println!("{label}: log-log slope = {slope:.3} (r² = {r2:.3}); paper reports ≈ 1.0 (PAM ref = 2.0)");
+    println!(
+        "{label}: log-log slope = {slope:.3} (r² = {r2:.3}); paper reports ≈ 1.0 (PAM ref = 2.0)"
+    );
     let mut t2 = Table::new(&["n", "calls_per_iter"]);
     for (x, y) in xs.iter().zip(&ys) {
         t2.row(&[format!("{x}"), format!("{y}")]);
@@ -151,15 +154,29 @@ pub fn fig_a1(seed: u64) {
     }
     table.print();
     table.write_csv("figA.1").ok();
-    println!("paper: median sigma drops sharply after the first medoid, justifying per-call re-estimation.");
+    println!(
+        "paper: median sigma drops sharply after the first medoid, justifying per-call re-estimation."
+    );
 }
 
 /// Fig A.2: distribution of true arm means μ_x in the first BUILD step.
 pub fn fig_a2(seed: u64) {
-    let mut table = Table::new(&["dataset/metric", "q0", "q10", "q25", "q50", "q75", "max", "(q10−q0)/(q75−q0)"]);
+    let mut table = Table::new(&[
+        "dataset/metric",
+        "q0",
+        "q10",
+        "q25",
+        "q50",
+        "q75",
+        "max",
+        "(q10−q0)/(q75−q0)",
+    ]);
     let datasets: Vec<(&str, Box<dyn PointSet>)> = vec![
         ("MNIST-like/l2", Box::new(VecPointSet::new(mnist_like_d(600, 196, seed), Metric::L2))),
-        ("MNIST-like/cosine", Box::new(VecPointSet::new(mnist_like_d(600, 196, seed), Metric::Cosine))),
+        (
+            "MNIST-like/cosine",
+            Box::new(VecPointSet::new(mnist_like_d(600, 196, seed), Metric::Cosine)),
+        ),
         ("scRNA-like/l1", Box::new(VecPointSet::new(scrna_like(600, 128, seed), Metric::L1))),
         ("scRNA-PCA-like/l2", Box::new(VecPointSet::new(scrna_pca_like(600, seed), Metric::L2))),
     ];
@@ -187,7 +204,9 @@ pub fn fig_a2(seed: u64) {
     }
     table.print();
     table.write_csv("figA.2").ok();
-    println!("paper: scRNA-PCA's arm means crowd the minimum (small crowding ratio) — the hard regime.");
+    println!(
+        "paper: scRNA-PCA's arm means crowd the minimum (small crowding ratio) — the hard regime."
+    );
 }
 
 /// Fig A.5: scaling on scRNA-PCA-like (assumptions violated → slope > 1).

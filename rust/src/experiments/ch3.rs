@@ -151,7 +151,9 @@ pub fn tab3_3(seed: u64) {
         table.print();
         table.write_csv(&format!("tab3.3_{name}")).ok();
     }
-    println!("paper shape: MABSplit affords many more trees under the same budget → higher accuracy.");
+    println!(
+        "paper shape: MABSplit affords many more trees under the same budget → higher accuracy."
+    );
 }
 
 /// Table 3.4: regression under a fixed insertion budget.
@@ -196,7 +198,9 @@ pub fn tab3_5(seed: u64) {
     let reg = make_regression(6000, 40, 5, 1.0, seed ^ 1);
     for (dname, ds) in [("Random Classification", &cls), ("Random Regression", &reg)] {
         let budget = Some(6_000u64 * 6 * 3);
-        for (mname, kind) in [("MDI", ImportanceKind::Mdi), ("Permutation", ImportanceKind::Permutation)] {
+        for (mname, kind) in
+            [("MDI", ImportanceKind::Mdi), ("Permutation", ImportanceKind::Permutation)]
+        {
             for (sname, solver) in [("RF", Solver::Exact), ("RF + MABSplit", Solver::mab())] {
                 let mut cfg = ForestConfig::new(ForestKind::RandomForest, solver);
                 cfg.n_trees = 60;
@@ -241,7 +245,11 @@ pub fn fig_b4(seed: u64) {
 pub fn tab_b2(seed: u64) {
     let ds = mnist_classification(12000, 196, seed);
     let mut table = Table::new(&["Model", "Train time (s)", "Test accuracy"]);
-    for (name, solver) in [("Histogram tree (exact)", Solver::Exact), ("Histogram tree (MABSplit)", Solver::mab())] {
+    let models = [
+        ("Histogram tree (exact)", Solver::Exact),
+        ("Histogram tree (MABSplit)", Solver::mab()),
+    ];
+    for (name, solver) in models {
         let (secs, _, acc, _, _) =
             fit_eval(&ds, ForestKind::RandomForest, solver, 1, 8, None, seed);
         table.row(&[name.to_string(), format!("{secs:.3}"), format!("{acc:.3}")]);

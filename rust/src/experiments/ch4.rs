@@ -89,7 +89,8 @@ fn run_algo(
             bandit_mips(atoms, q, &cfg, &c).atoms
         }
         "BanditMIPS-α" => {
-            let mut cfg = BanditMipsConfig { k, strategy: SampleStrategy::Alpha, ..Default::default() };
+            let mut cfg =
+                BanditMipsConfig { k, strategy: SampleStrategy::Alpha, ..Default::default() };
             cfg.seed = seed;
             bandit_mips(atoms, q, &cfg, &c).atoms
         }
@@ -120,7 +121,8 @@ pub fn fig4_2(seed: u64) {
                 for qi in 0..queries.n {
                     let c = OpCounter::new();
                     let truth = naive_mips(&atoms, queries.row(qi), 1, &c)[0];
-                    let (s, _) = run_algo(algo, &atoms, queries.row(qi), truth, 1, seed ^ qi as u64);
+                    let (s, _) =
+                        run_algo(algo, &atoms, queries.row(qi), truth, 1, seed ^ qi as u64);
                     samples.push(s as f64);
                 }
                 cells.push(format!("{:.2e}", mean(&samples)));
@@ -149,7 +151,9 @@ fn tradeoff(k: usize, csv: &str, seed: u64) {
                 naive_mips(&atoms, queries.row(qi), k, &c)
             })
             .collect();
-        let mut eval = |algo: &str, knob: String, f: &mut dyn FnMut(&[f32], &OpCounter) -> Vec<usize>| {
+        let mut eval = |algo: &str,
+                        knob: String,
+                        f: &mut dyn FnMut(&[f32], &OpCounter) -> Vec<usize>| {
             let mut sp = Vec::new();
             let mut pr = Vec::new();
             for qi in 0..queries.n {
@@ -170,7 +174,12 @@ fn tradeoff(k: usize, csv: &str, seed: u64) {
             eval("BanditMIPS", format!("δ={delta}"), &mut |q, c| {
                 bandit_mips(&atoms, q, &cfg, c).atoms
             });
-            let acfg = BanditMipsConfig { delta, k, strategy: SampleStrategy::Alpha, ..Default::default() };
+            let acfg = BanditMipsConfig {
+                delta,
+                k,
+                strategy: SampleStrategy::Alpha,
+                ..Default::default()
+            };
             eval("BanditMIPS-α", format!("δ={delta}"), &mut |q, c| {
                 bandit_mips(&atoms, q, &acfg, c).atoms
             });
@@ -270,7 +279,9 @@ pub fn fig_c3(seed: u64) {
     }
     let (s_flat, _) = loglog_slope(&xs, &flat);
     let (s_bucket, _) = loglog_slope(&xs, &bucketed);
-    println!("n-scaling slopes: BanditMIPS {s_flat:.2}, Bucket_AE {s_bucket:.2} (paper: bucketed < flat)");
+    println!(
+        "n-scaling slopes: BanditMIPS {s_flat:.2}, Bucket_AE {s_bucket:.2} (paper: bucketed < flat)"
+    );
     // d-sweep at fixed n
     for &d in &[2_000usize, 8_000, 32_000] {
         let (atoms, queries) = normal_custom(200, d, 1, seed);
@@ -285,13 +296,17 @@ pub fn fig_c3(seed: u64) {
 
 /// Fig C.4: Matching Pursuit on the SimpleSong dataset.
 pub fn fig_c4(seed: u64) {
-    let mut table = Table::new(&["duration (s/interval)", "d", "backend", "samples", "final residual"]);
+    let mut table =
+        Table::new(&["duration (s/interval)", "d", "backend", "samples", "final residual"]);
     for &secs in &[0.02f64, 0.05, 0.1] {
         let (atoms, song) = simple_song(1, secs, 6, seed);
         let d = song.len();
         for (bname, backend) in [
             ("naive", MipsBackend::Naive),
-            ("BanditMIPS", MipsBackend::Bandit(BanditMipsConfig { batch_size: 128, ..Default::default() })),
+            (
+                "BanditMIPS",
+                MipsBackend::Bandit(BanditMipsConfig { batch_size: 128, ..Default::default() }),
+            ),
         ] {
             let c = OpCounter::new();
             let r = matching_pursuit(&atoms, &song, 6, &backend, &c);
@@ -326,5 +341,7 @@ pub fn fig_c5(seed: u64) {
     let (slope, _) = loglog_slope(&xs, &ys);
     table.print();
     table.write_csv("figC.5").ok();
-    println!("slope = {slope:.3} (paper: ≈ 1 — BanditMIPS degrades to O(d) when all atoms tie)");
+    println!(
+        "slope = {slope:.3} (paper: ≈ 1 — BanditMIPS degrades to O(d) when all atoms tie)"
+    );
 }

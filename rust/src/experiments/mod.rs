@@ -15,7 +15,11 @@ pub mod ch4;
 /// Registry of experiment ids → (description, runner).
 pub fn registry() -> Vec<(&'static str, &'static str, fn(u64))> {
     vec![
-        ("fig2.1a", "clustering loss vs PAM (BanditPAM/CLARANS/Voronoi/CLARA)", ch2::fig2_1a as fn(u64)),
+        (
+            "fig2.1a",
+            "clustering loss vs PAM (BanditPAM/CLARANS/Voronoi/CLARA)",
+            ch2::fig2_1a as fn(u64),
+        ),
         ("fig2.1b", "BanditPAM dist calls/iter vs n — HOC4-like tree edit, k=2", ch2::fig2_1b),
         ("fig2.2", "BanditPAM calls/iter vs n — MNIST-like l2, k=5 & k=10", ch2::fig2_2),
         ("fig2.3", "BanditPAM calls/iter vs n — cosine & scRNA-like l1", ch2::fig2_3),
@@ -39,7 +43,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(u64))> {
         ("figC.3", "Bucket_AE: scaling with n and d", ch4::fig_c3),
         ("figC.4", "Matching Pursuit on SimpleSong: naive vs BanditMIPS", ch4::fig_c4),
         ("figC.5", "SymmetricNormal worst case: O(d) fallback", ch4::fig_c5),
-        ("ablation", "design-choice ablations: sampling mode, sigma source, B, delta", ablations::ablation),
+        (
+            "ablation",
+            "design-choice ablations: sampling mode, sigma source, B, delta",
+            ablations::ablation,
+        ),
     ]
 }
 

@@ -141,8 +141,15 @@ impl Forest {
                 _ => (0..n_total).map(|_| rng.below(n_total)).collect(),
             };
             let mut trng = rng.fork(t as u64);
-            let tree =
-                DecisionTree::fit_view(ts, &rows, &tree_cfg, &ranges, &budget, &feature_pool, &mut trng);
+            let tree = DecisionTree::fit_view(
+                ts,
+                &rows,
+                &tree_cfg,
+                &ranges,
+                &budget,
+                &feature_pool,
+                &mut trng,
+            );
             // A tree "completed" if the budget didn't interrupt it: either
             // budget still has room, or the tree stopped for its own
             // reasons (we approximate: room remains for another split).

@@ -61,6 +61,19 @@ pub struct Split {
     pub child_impurity: f64,
 }
 
+impl Split {
+    /// FNV-1a digest of the chosen split — feature, exact threshold
+    /// bits, and exact impurity bits — the answer the perf-gate pins
+    /// next to the insertion counts.
+    pub fn digest(&self) -> u64 {
+        crate::util::digest::fnv1a_u64s([
+            self.feature as u64,
+            self.threshold.to_bits() as u64,
+            self.child_impurity.to_bits(),
+        ])
+    }
+}
+
 /// Node-splitting context shared by both solvers.
 pub struct SplitContext<'a> {
     pub ds: TrainSet<'a>,
@@ -516,11 +529,25 @@ impl<'a, 'b> AdaptiveArms for MabSplitArms<'a, 'b> {
             let f = self.ctx.features[fi];
             if self.ctx.ds.is_regression() {
                 let mut h = MomentHistogram::new(self.ctx.edges[fi].clone());
-                fill_moment(&mut h, self.ctx.ds.x, f, self.ctx.rows, self.ctx.ds.y, self.ctx.counter);
+                fill_moment(
+                    &mut h,
+                    self.ctx.ds.x,
+                    f,
+                    self.ctx.rows,
+                    self.ctx.ds.y,
+                    self.ctx.counter,
+                );
                 self.hists_r[fi] = h;
             } else {
                 let mut h = ClassHistogram::new(self.ctx.edges[fi].clone(), self.ctx.ds.n_classes);
-                fill_class(&mut h, self.ctx.ds.x, f, self.ctx.rows, self.ctx.ds.y, self.ctx.counter);
+                fill_class(
+                    &mut h,
+                    self.ctx.ds.x,
+                    f,
+                    self.ctx.rows,
+                    self.ctx.ds.y,
+                    self.ctx.counter,
+                );
                 self.hists_c[fi] = h;
             }
             self.refresh_feature(fi);
@@ -580,7 +607,14 @@ mod tests {
         let ranges = feature_ranges(ds);
         let mut rng = Rng::new(1);
         let edges = make_edges(features, &ranges, t_bins, false, &mut rng);
-        SplitContext { ds: TrainSet::of(ds), rows, features, edges, impurity: Impurity::Gini, counter }
+        SplitContext {
+            ds: TrainSet::of(ds),
+            rows,
+            features,
+            edges,
+            impurity: Impurity::Gini,
+            counter,
+        }
     }
 
     #[test]

@@ -123,7 +123,8 @@ impl DecisionTree {
         rng: &mut Rng,
     ) -> DecisionTree {
         let mut nodes_split = 0usize;
-        let root = build_node(ts, rows, cfg, ranges, budget, feature_pool, rng, 0, &mut nodes_split);
+        let root =
+            build_node(ts, rows, cfg, ranges, budget, feature_pool, rng, 0, &mut nodes_split);
         DecisionTree { root, n_classes: ts.n_classes, nodes_split }
     }
 
@@ -319,8 +320,19 @@ fn build_node(
         return make_leaf(rows);
     }
     *nodes_split += 1;
-    let left = build_node(ts, &left_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
-    let right = build_node(ts, &right_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    let left =
+        build_node(ts, &left_rows, cfg, ranges, budget, feature_pool, rng, depth + 1, nodes_split);
+    let right = build_node(
+        ts,
+        &right_rows,
+        cfg,
+        ranges,
+        budget,
+        feature_pool,
+        rng,
+        depth + 1,
+        nodes_split,
+    );
     Node::Internal {
         feature: split.feature,
         threshold: split.threshold,
@@ -378,7 +390,15 @@ mod tests {
         let c = OpCounter::new();
         let b = Budget { counter: &c, limit: None };
         let mut rng = Rng::new(7);
-        let tree = DecisionTree::fit(&train, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let tree = DecisionTree::fit(
+            &train,
+            &rows,
+            &cfg(Solver::Exact, false),
+            &ranges,
+            &b,
+            &pool,
+            &mut rng,
+        );
         let acc = accuracy(&tree, &test);
         assert!(acc > 0.8, "exact-tree accuracy {acc}");
     }
@@ -420,7 +440,15 @@ mod tests {
         let c = OpCounter::new();
         let b = Budget { counter: &c, limit: None };
         let mut rng = Rng::new(9);
-        let tree = DecisionTree::fit(&train, &rows, &cfg(Solver::mab(), true), &ranges, &b, &pool, &mut rng);
+        let tree = DecisionTree::fit(
+            &train,
+            &rows,
+            &cfg(Solver::mab(), true),
+            &ranges,
+            &b,
+            &pool,
+            &mut rng,
+        );
         let mse: f64 = (0..test.x.n)
             .map(|i| {
                 let p = tree.predict_row(test.x.row(i))[0] as f64;
@@ -445,7 +473,15 @@ mod tests {
         let c = OpCounter::new();
         let b = Budget { counter: &c, limit: Some(2000 * 8) }; // one exact split's worth
         let mut rng = Rng::new(5);
-        let tree = DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let tree = DecisionTree::fit(
+            &ds,
+            &rows,
+            &cfg(Solver::Exact, false),
+            &ranges,
+            &b,
+            &pool,
+            &mut rng,
+        );
         assert!(tree.nodes_split <= 1, "budget must stop after ~1 exact split");
         assert!(c.get() <= 2000 * 8 + 1);
     }
@@ -494,7 +530,15 @@ mod tests {
         let c = OpCounter::new();
         let b = Budget { counter: &c, limit: None };
         let mut rng = Rng::new(11);
-        let tree = DecisionTree::fit(&ds, &rows, &cfg(Solver::Exact, false), &ranges, &b, &pool, &mut rng);
+        let tree = DecisionTree::fit(
+            &ds,
+            &rows,
+            &cfg(Solver::Exact, false),
+            &ranges,
+            &b,
+            &pool,
+            &mut rng,
+        );
         let mut mdi = vec![0f64; ds.x.d];
         tree.accumulate_mdi(&mut mdi);
         // The top-importance feature should be one that the tree actually

@@ -1,0 +1,294 @@
+//! The regression gate: diff a fresh [`RecordSet`] against a committed
+//! baseline.
+//!
+//! Because records are deterministic, the default tolerance is **zero**:
+//! any counter drift is a finding. Regressions fail outright; unexpected
+//! *improvements* fail too — not because faster is bad, but because an
+//! unstamped improvement leaves the baseline stale, and the next
+//! regression up to the stale ceiling would pass silently. The fix for
+//! an intentional change in either direction is the same: re-stamp with
+//! `repro perfgate baseline` and commit the diff (see
+//! `benches/baselines/README.md`).
+
+use crate::harness::record::RecordSet;
+
+/// What the gate concluded about one (scenario, counter) pair — or about
+/// a whole scenario, for structural findings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Counter exactly equals the baseline.
+    Equal,
+    /// Within the requested tolerance band (non-zero tolerance only).
+    WithinTolerance,
+    /// Counter grew beyond tolerance — the gate fails.
+    Regressed,
+    /// Counter shrank beyond tolerance — the gate fails until the
+    /// baseline is re-stamped (see module docs).
+    Improved,
+    /// The solver's answer digest changed.
+    DigestChanged,
+    /// Scenario ran but has no committed baseline record.
+    MissingInBaseline,
+    /// Baseline names a scenario this run did not produce.
+    MissingInRun,
+    /// Counter present on one side only, or schema/tier mismatch.
+    Structural,
+}
+
+impl Verdict {
+    pub fn failing(self) -> bool {
+        !matches!(self, Verdict::Equal | Verdict::WithinTolerance)
+    }
+}
+
+/// One gate finding, human-readable in `detail`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub scenario: String,
+    pub verdict: Verdict,
+    pub detail: String,
+}
+
+/// The gate's full output for one comparison.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    pub findings: Vec<Finding>,
+}
+
+impl GateReport {
+    fn push(&mut self, scenario: &str, verdict: Verdict, detail: String) {
+        self.findings.push(Finding { scenario: scenario.to_string(), verdict, detail });
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.verdict.failing())
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures().next().is_none()
+    }
+
+    /// One line per failing finding plus a pass/fail tail line.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for f in self.failures() {
+            out.push_str(&format!("[{:?}] {}: {}\n", f.verdict, f.scenario, f.detail));
+        }
+        let fails = self.failures().count();
+        let checks = self.findings.len();
+        if fails == 0 {
+            out.push_str(&format!("perfgate: PASS ({checks} checks, 0 drift)\n"));
+        } else {
+            out.push_str(&format!("perfgate: FAIL ({fails} of {checks} checks)\n"));
+        }
+        out
+    }
+}
+
+/// Compare `current` against `baseline` with a symmetric relative
+/// `tolerance` (a fraction: `0.02` allows ±2% per counter; `0.0` demands
+/// exact equality). Digests and record structure are always exact.
+pub fn compare(current: &RecordSet, baseline: &RecordSet, tolerance: f64) -> GateReport {
+    let mut report = GateReport::default();
+    if current.schema != baseline.schema {
+        report.push(
+            "(schema)",
+            Verdict::Structural,
+            format!(
+                "schema {} vs baseline {} — re-stamp the baseline",
+                current.schema, baseline.schema
+            ),
+        );
+        return report;
+    }
+    if current.tier != baseline.tier {
+        report.push(
+            "(tier)",
+            Verdict::Structural,
+            format!("tier {:?} vs baseline {:?}", current.tier, baseline.tier),
+        );
+    }
+
+    for base in &baseline.records {
+        if current.find(&base.scenario).is_none() {
+            report.push(
+                &base.scenario,
+                Verdict::MissingInRun,
+                "baseline scenario absent from this run (registry shrank?) — re-stamp".into(),
+            );
+        }
+    }
+
+    for cur in &current.records {
+        let Some(base) = baseline.find(&cur.scenario) else {
+            report.push(
+                &cur.scenario,
+                Verdict::MissingInBaseline,
+                "new scenario with no committed baseline — stamp it".into(),
+            );
+            continue;
+        };
+        if cur.digest != base.digest {
+            report.push(
+                &cur.scenario,
+                Verdict::DigestChanged,
+                format!("answer digest {:#018x} vs baseline {:#018x}", cur.digest, base.digest),
+            );
+        }
+        for (name, _) in base.counters.iter() {
+            if cur.counters.get(name).is_none() {
+                report.push(
+                    &cur.scenario,
+                    Verdict::Structural,
+                    format!("counter {name} vanished from the record"),
+                );
+            }
+        }
+        for (name, cur_v) in cur.counters.iter() {
+            let Some(base_v) = base.counters.get(name) else {
+                report.push(
+                    &cur.scenario,
+                    Verdict::Structural,
+                    format!("counter {name} has no baseline value"),
+                );
+                continue;
+            };
+            let verdict = judge(cur_v, base_v, tolerance);
+            let detail = match verdict {
+                Verdict::Equal => format!("{name} = {cur_v}"),
+                _ => format!(
+                    "{name}: {cur_v} vs baseline {base_v} ({:+.2}%)",
+                    percent_delta(cur_v, base_v)
+                ),
+            };
+            report.push(&cur.scenario, verdict, detail);
+        }
+    }
+    report
+}
+
+fn percent_delta(cur: u64, base: u64) -> f64 {
+    if base == 0 {
+        if cur == 0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (cur as f64 - base as f64) / base as f64 * 100.0
+    }
+}
+
+fn judge(cur: u64, base: u64, tolerance: f64) -> Verdict {
+    if cur == base {
+        return Verdict::Equal;
+    }
+    if tolerance == 0.0 {
+        // Integer-exact: above 2^53 the f64 comparisons below could
+        // round two unequal counters together.
+        return if cur > base { Verdict::Regressed } else { Verdict::Improved };
+    }
+    let base_f = base as f64;
+    if cur as f64 > base_f * (1.0 + tolerance) {
+        Verdict::Regressed
+    } else if (cur as f64) < base_f * (1.0 - tolerance) {
+        Verdict::Improved
+    } else {
+        Verdict::WithinTolerance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::record::{CostRecord, RecordSet};
+    use crate::metrics::CounterSet;
+
+    fn set_with(ops: u64, decodes: u64, digest: u64) -> RecordSet {
+        let mut counters = CounterSet::new();
+        counters.set("ops", ops);
+        counters.set("chunk_decodes", decodes);
+        let mut set = RecordSet::new("smoke");
+        set.records.push(CostRecord { scenario: "synthetic/one".into(), counters, digest });
+        set
+    }
+
+    #[test]
+    fn equal_records_pass_with_zero_tolerance() {
+        let report = compare(&set_with(100, 5, 7), &set_with(100, 5, 7), 0.0);
+        assert!(report.passed(), "{}", report.summary());
+        assert!(report.summary().contains("PASS"));
+    }
+
+    #[test]
+    fn regression_fails_and_names_the_counter() {
+        let report = compare(&set_with(150, 5, 7), &set_with(100, 5, 7), 0.0);
+        assert!(!report.passed());
+        let f = report.failures().next().unwrap();
+        assert_eq!(f.verdict, Verdict::Regressed);
+        assert!(f.detail.contains("ops"), "{}", f.detail);
+        assert!(f.detail.contains("+50.00%"), "{}", f.detail);
+    }
+
+    #[test]
+    fn improvement_also_fails_until_restamped() {
+        let report = compare(&set_with(50, 5, 7), &set_with(100, 5, 7), 0.0);
+        assert!(!report.passed());
+        assert_eq!(report.failures().next().unwrap().verdict, Verdict::Improved);
+    }
+
+    #[test]
+    fn tolerance_band_is_symmetric() {
+        let base = set_with(100, 5, 7);
+        // ±10%: 109 and 91 pass, 111 and 89 fail.
+        assert!(compare(&set_with(109, 5, 7), &base, 0.10).passed());
+        assert!(compare(&set_with(91, 5, 7), &base, 0.10).passed());
+        assert!(!compare(&set_with(111, 5, 7), &base, 0.10).passed());
+        assert!(!compare(&set_with(89, 5, 7), &base, 0.10).passed());
+    }
+
+    #[test]
+    fn zero_tolerance_is_integer_exact_beyond_f64_precision() {
+        // 2^53 and 2^53 + 1 round to the same f64; the exact gate must
+        // still see the drift.
+        let base = set_with(1u64 << 53, 5, 7);
+        let report = compare(&set_with((1u64 << 53) + 1, 5, 7), &base, 0.0);
+        assert!(!report.passed());
+        assert_eq!(report.failures().next().unwrap().verdict, Verdict::Regressed);
+    }
+
+    #[test]
+    fn digest_change_fails_even_with_loose_tolerance() {
+        let report = compare(&set_with(100, 5, 8), &set_with(100, 5, 7), 1.0);
+        assert!(!report.passed());
+        assert_eq!(report.failures().next().unwrap().verdict, Verdict::DigestChanged);
+    }
+
+    #[test]
+    fn structural_drift_fails() {
+        // Scenario present only in the run.
+        let mut bigger = set_with(100, 5, 7);
+        bigger.records.push(CostRecord {
+            scenario: "synthetic/two".into(),
+            counters: CounterSet::new(),
+            digest: 0,
+        });
+        let base = set_with(100, 5, 7);
+        let report = compare(&bigger, &base, 0.0);
+        assert!(report.failures().any(|f| f.verdict == Verdict::MissingInBaseline));
+        // …and only in the baseline.
+        let report = compare(&base, &bigger, 0.0);
+        assert!(report.failures().any(|f| f.verdict == Verdict::MissingInRun));
+        // Counter vanished.
+        let mut fewer = set_with(100, 5, 7);
+        fewer.records[0].counters = CounterSet::new();
+        let report = compare(&fewer, &base, 0.0);
+        assert!(report.failures().any(|f| f.verdict == Verdict::Structural));
+        // Schema bump refuses to compare.
+        let mut vnext = set_with(100, 5, 7);
+        vnext.schema += 1;
+        let report = compare(&vnext, &base, 0.0);
+        assert!(!report.passed());
+        assert!(report.summary().contains("re-stamp"));
+    }
+}

@@ -1,0 +1,33 @@
+//! The perf-gate harness: deterministic cost models, committed
+//! baselines, and the regression gate.
+//!
+//! The thesis's central claim is a *complexity* claim — adaptive
+//! sampling cuts sample cost from O(n²)/O(nd) to near-O(n)/O(n√d) —
+//! and sample counts, unlike wall-clock, are exactly reproducible on
+//! any machine. This subsystem turns the repo's deterministic
+//! instrumentation ([`crate::metrics::OpCounter`], store decode/cache/
+//! spill counters, scratch grow events) into a CI ratchet:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`scenario`] | named workload registry: solvers × store backends × cold/`refresh` × threads {1,8}, in `smoke` (PR) and `full` (nightly) tiers |
+//! | [`workloads`] | the workload builders themselves, shared with the wall-clock bench sweeps so both describe the same code |
+//! | [`record`] | schema-versioned [`record::CostRecord`]/[`record::RecordSet`]: counter totals + answer digests, byte-stable serialization |
+//! | [`gate`] | [`gate::compare`]: exact (or toleranced) diff against a committed baseline; regressions *and* unstamped improvements fail |
+//! | [`json`] | canonical zero-dependency JSON read/write under it all (lives in [`crate::util::json`] so `util`/benches never depend upward) |
+//!
+//! Driven by `repro perfgate <run|baseline|check|list>` (see
+//! `rust/src/main.rs`); baselines live in `benches/baselines/<tier>.json`
+//! and are re-stamped with `repro perfgate baseline` whenever a cost
+//! change is intentional.
+
+pub mod gate;
+pub mod record;
+pub mod scenario;
+pub mod workloads;
+
+pub use crate::util::json;
+
+pub use gate::{compare, GateReport, Verdict};
+pub use record::{CostRecord, RecordSet, SCHEMA_VERSION};
+pub use scenario::{registry, run_tier, scenarios_for, Scenario, Tier};

@@ -1,0 +1,209 @@
+//! Schema-versioned cost-model records.
+//!
+//! One [`CostRecord`] per scenario: the op-counter totals the paper
+//! treats as the honest, machine-independent cost currency (distance
+//! evaluations, histogram insertions, coordinate multiplications), the
+//! store-level counters behind them (chunk decodes, cache hit/miss/
+//! eviction, spill reads, scratch grow events), and a digest of the
+//! solver's *answer* so a cost win can never silently change results.
+//! Every field is deterministic for a fixed seed, which is what makes
+//! exact comparison (and hence a zero-tolerance CI gate) meaningful.
+//!
+//! A [`RecordSet`] is the on-disk unit: `BENCH_perfgate.json` from a run,
+//! or a committed baseline under `benches/baselines/`. Serialization is
+//! canonical (see [`super::json`]): serialize → parse → re-serialize is
+//! byte-identical, and two runs of the same tier at the same seed write
+//! byte-identical files.
+
+use crate::metrics::CounterSet;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{anyhow, bail};
+
+/// Bump when the record layout changes incompatibly; `check` refuses to
+/// compare across schema versions so drift is loud, not misread.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One scenario's deterministic cost model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CostRecord {
+    /// Registry name, e.g. `banditmips/cold/sm/column-f32/t1`.
+    pub scenario: String,
+    /// Labeled counter totals, in the scenario's canonical order.
+    pub counters: CounterSet,
+    /// FNV-1a digest of the solver's answer
+    /// ([`crate::util::digest::fnv1a_u64s`]).
+    pub digest: u64,
+}
+
+impl CostRecord {
+    fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, value) in self.counters.iter() {
+            counters.push(name, Json::U64(value));
+        }
+        let mut rec = Json::obj();
+        rec.push("scenario", Json::Str(self.scenario.clone()));
+        rec.push("digest", Json::Str(format!("{:#018x}", self.digest)));
+        rec.push("counters", counters);
+        rec
+    }
+
+    fn from_json(json: &Json) -> Result<CostRecord> {
+        let scenario = json
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("record missing \"scenario\""))?
+            .to_string();
+        let digest_text = json
+            .get("digest")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{scenario}: missing \"digest\""))?;
+        let digest = digest_text
+            .strip_prefix("0x")
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .ok_or_else(|| anyhow!("{scenario}: bad digest {digest_text:?}"))?;
+        let mut counters = CounterSet::new();
+        match json.get("counters") {
+            Some(Json::Obj(members)) => {
+                for (name, value) in members {
+                    let v = value
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("{scenario}: counter {name} is not a u64"))?;
+                    counters.set(name, v);
+                }
+            }
+            _ => bail!("{scenario}: missing \"counters\" object"),
+        }
+        Ok(CostRecord { scenario, counters, digest })
+    }
+}
+
+/// A tier's worth of records — the file-level unit run, stamped, and
+/// checked by the `perfgate` CLI.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecordSet {
+    pub schema: u64,
+    /// Tier name (`"smoke"` / `"full"`).
+    pub tier: String,
+    pub records: Vec<CostRecord>,
+}
+
+impl RecordSet {
+    pub fn new(tier: &str) -> RecordSet {
+        RecordSet { schema: SCHEMA_VERSION, tier: tier.to_string(), records: Vec::new() }
+    }
+
+    pub fn find(&self, scenario: &str) -> Option<&CostRecord> {
+        self.records.iter().find(|r| r.scenario == scenario)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.push("kind", Json::Str("perfgate_cost_model".into()));
+        doc.push("schema", Json::U64(self.schema));
+        doc.push("tier", Json::Str(self.tier.clone()));
+        doc.push("records", Json::Arr(self.records.iter().map(CostRecord::to_json).collect()));
+        doc
+    }
+
+    pub fn from_json(json: &Json) -> Result<RecordSet> {
+        match json.get("kind").and_then(Json::as_str) {
+            Some("perfgate_cost_model") => {}
+            other => bail!("not a perfgate record file (kind = {other:?})"),
+        }
+        let schema =
+            json.get("schema").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing schema"))?;
+        let tier = json
+            .get("tier")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing tier"))?
+            .to_string();
+        let records = json
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing records array"))?
+            .iter()
+            .map(CostRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RecordSet { schema, tier, records })
+    }
+
+    /// Canonical file contents (trailing newline included).
+    pub fn serialize(&self) -> String {
+        self.to_json().to_pretty_string()
+    }
+
+    pub fn parse(text: &str) -> Result<RecordSet> {
+        RecordSet::from_json(&Json::parse(text)?)
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.serialize())
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))
+    }
+
+    pub fn read_file(path: &std::path::Path) -> Result<RecordSet> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        RecordSet::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_set() -> RecordSet {
+        let mut set = RecordSet::new("smoke");
+        let rows = [
+            ("banditmips/cold/sm/matrix/t1", 1234u64, 0u64),
+            ("banditpam/cold/sm/column-f32/t1", 999, 77),
+        ];
+        for (name, ops, dec) in rows {
+            let mut counters = CounterSet::new();
+            counters.set("ops", ops);
+            counters.set("chunk_decodes", dec);
+            set.records.push(CostRecord {
+                scenario: name.to_string(),
+                counters,
+                digest: 0xDEADBEEF00C0FFEE ^ ops,
+            });
+        }
+        set
+    }
+
+    #[test]
+    fn schema_round_trip_is_byte_identical() {
+        let set = sample_set();
+        let text = set.serialize();
+        let back = RecordSet::parse(&text).unwrap();
+        assert_eq!(back, set);
+        assert_eq!(back.serialize(), text, "serialize ∘ parse must be the identity on bytes");
+    }
+
+    #[test]
+    fn digests_survive_hex_round_trip_at_extremes() {
+        let mut set = RecordSet::new("smoke");
+        for digest in [0u64, 1, u64::MAX, 0x8000000000000000] {
+            set.records.push(CostRecord {
+                scenario: format!("synthetic/{digest}"),
+                counters: CounterSet::new(),
+                digest,
+            });
+        }
+        let back = RecordSet::parse(&set.serialize()).unwrap();
+        for (a, b) in set.records.iter().zip(&back.records) {
+            assert_eq!(a.digest, b.digest);
+        }
+    }
+
+    #[test]
+    fn parser_rejects_foreign_and_mangled_files() {
+        assert!(RecordSet::parse("{}").is_err());
+        assert!(RecordSet::parse("{\"kind\": \"something_else\"}").is_err());
+        let good = sample_set().serialize();
+        assert!(RecordSet::parse(&good.replace("\"ops\": 1234", "\"ops\": \"x\"")).is_err());
+        assert!(RecordSet::parse(&good.replace("0xdeadbeef", "zz")).is_err());
+    }
+}

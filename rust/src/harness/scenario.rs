@@ -1,0 +1,501 @@
+//! The perf-gate scenario registry.
+//!
+//! Named, seeded workloads spanning the three chapter solvers × the
+//! store backends (dense matrix / columnar f32 / quantized-i8 spilled) ×
+//! the cold-vs-`refresh` paths × thread counts {1, 8}. Every scenario is
+//! deterministic end to end: fixtures come from seeded
+//! [`crate::util::testkit`] generators, solvers run at fixed seeds, and
+//! the collected [`CostRecord`] holds only op-counter totals and answer
+//! digests — never wall-clock — so exact comparison against a committed
+//! baseline is meaningful on any machine.
+//!
+//! **What gets recorded where.** Solver op totals (`ops`, or
+//! `warm_ops`/`cold_ops` for refresh scenarios) and the answer digest
+//! are recorded for every scenario — they are bit-identical for any
+//! thread count by the engine's determinism contract. Store-level
+//! counters (chunk decodes, cache hit/miss/eviction, spill reads) and
+//! scratch-arena grow events are recorded **only at `threads == 1`**:
+//! under a concurrent schedule, which worker misses a shared LRU chunk
+//! first (or which thread grows its arena) is timing-dependent, and a
+//! deterministic gate must not record schedule-dependent numbers.
+//!
+//! **Warm-up discipline.** Each scenario executes twice on fresh stores:
+//! the first pass brings the thread-local scratch arenas to steady
+//! state, the second is measured. Fresh stores keep the decoded-chunk
+//! cache cold in the measured pass (cold-miss costs are part of the
+//! model), while warm arenas make the recorded `scratch_grows` — the
+//! "zero per-pull heap allocations" invariant — exactly 0 in steady
+//! state and independent of scenario order.
+
+use std::sync::Arc;
+
+use crate::anyhow;
+use crate::data::distance::Metric;
+use crate::data::synthetic::normal_custom;
+use crate::data::tabular::make_classification;
+use crate::data::{LabeledDataset, Matrix};
+use crate::harness::record::{CostRecord, RecordSet};
+use crate::harness::workloads::{
+    refresh_banditpam, refresh_mips, refresh_split_node, MipsWorkload, SplitWorkload,
+};
+use crate::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
+use crate::metrics::{CounterSet, OpCounter};
+use crate::mips::banditmips::BanditMipsConfig;
+use crate::store::{Codec, ColumnStore, DatasetView, StoreOptions, ViewPointSet};
+use crate::util::error::Result;
+use crate::util::testkit::{clusterable, refresh_corpus_at, RefreshFixture};
+
+/// Which slice of the registry to run: `Smoke` on every PR, `Full`
+/// nightly (`Full` is a superset of `Smoke`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Smoke,
+    Full,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s {
+            "smoke" => Ok(Tier::Smoke),
+            "full" => Ok(Tier::Full),
+            other => Err(anyhow!("unknown tier {other:?} (want smoke|full)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// Dataset substrate under the solver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Matrix,
+    ColumnF32,
+    ColumnI8Spill,
+}
+
+impl Backend {
+    fn name(self) -> &'static str {
+        match self {
+            Backend::Matrix => "matrix",
+            Backend::ColumnF32 => "column-f32",
+            Backend::ColumnI8Spill => "column-i8-spill",
+        }
+    }
+
+    /// Store options for this backend (`None` = dense matrix). The spill
+    /// budget is a quarter of the raw bytes so even the small fixtures
+    /// actually evict and re-read chunks.
+    fn options(self, raw_bytes: usize) -> Option<StoreOptions> {
+        match self {
+            Backend::Matrix => None,
+            Backend::ColumnF32 => Some(StoreOptions { rows_per_chunk: 64, ..Default::default() }),
+            Backend::ColumnI8Spill => Some(
+                StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() }
+                    .spill_to_temp((raw_bytes / 4).max(4096)),
+            ),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Family {
+    BanditMips,
+    BanditPam,
+    MabSplit,
+}
+
+impl Family {
+    fn name(self) -> &'static str {
+        match self {
+            Family::BanditMips => "banditmips",
+            Family::BanditPam => "banditpam",
+            Family::MabSplit => "mabsplit",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PathKind {
+    Cold,
+    Refresh,
+}
+
+impl PathKind {
+    fn name(self) -> &'static str {
+        match self {
+            PathKind::Cold => "cold",
+            PathKind::Refresh => "refresh",
+        }
+    }
+}
+
+/// Fixture size: `Sm` keeps PR CI fast; `Md` is the nightly tier's
+/// larger cut of the same distributions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Scale {
+    Sm,
+    Md,
+}
+
+impl Scale {
+    fn name(self) -> &'static str {
+        match self {
+            Scale::Sm => "sm",
+            Scale::Md => "md",
+        }
+    }
+}
+
+/// One named, runnable cost-model workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    family: Family,
+    path: PathKind,
+    scale: Scale,
+    backend: Backend,
+    threads: usize,
+    tier: Tier,
+}
+
+struct ExecOut {
+    counters: CounterSet,
+    digest: u64,
+}
+
+impl Scenario {
+    /// Registry name, e.g. `banditmips/cold/sm/column-f32/t1`.
+    pub fn name(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/t{}",
+            self.family.name(),
+            self.path.name(),
+            self.scale.name(),
+            self.backend.name(),
+            self.threads
+        )
+    }
+
+    /// The smallest tier that includes this scenario.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Execute the scenario and collect its deterministic cost record
+    /// (see module docs for the warm-up + counter-selection discipline).
+    pub fn run(&self) -> CostRecord {
+        if self.threads == 1 {
+            // Warm-up: scratch arenas to steady state. Multi-threaded
+            // scenarios skip it — the only counters recorded there (ops,
+            // digest) are warm-up-independent.
+            let _ = self.execute();
+        }
+        let grows0 = crate::kernels::scratch::grow_events();
+        let out = self.execute();
+        let mut counters = out.counters;
+        if self.threads == 1 {
+            counters.set("scratch_grows", crate::kernels::scratch::grow_events() - grows0);
+        }
+        CostRecord { scenario: self.name(), counters, digest: out.digest }
+    }
+
+    fn execute(&self) -> ExecOut {
+        match self.path {
+            PathKind::Cold => self.execute_cold(),
+            PathKind::Refresh => self.execute_refresh(),
+        }
+    }
+
+    fn execute_cold(&self) -> ExecOut {
+        let mut counters = CounterSet::new();
+        match self.family {
+            Family::BanditMips => {
+                let (n, d, n_queries) = match self.scale {
+                    Scale::Sm => (96, 2048, 3),
+                    Scale::Md => (200, 8000, 4),
+                };
+                let (atoms, queries) = normal_custom(n, d, n_queries, 5);
+                let (view, store) = build_store(&atoms, self.backend);
+                let cfg =
+                    BanditMipsConfig { seed: 9, threads: self.threads, ..Default::default() };
+                let wl = MipsWorkload::new(queries, cfg);
+                let c = OpCounter::new();
+                let answers = wl.run(&*view, &c);
+                counters.set("ops", c.get());
+                self.store_counters(&mut counters, store.as_deref());
+                ExecOut { counters, digest: MipsWorkload::digest(&answers) }
+            }
+            Family::BanditPam => {
+                let (ds, k) = self.pam_fixture();
+                let (view, store) = build_store(&ds.x, self.backend);
+                let mut cfg = BanditPamConfig::new(k);
+                cfg.km.seed = 0xB0;
+                cfg.threads = self.threads;
+                let res = bandit_pam(&ViewPointSet::new(view, Metric::L2), &cfg);
+                counters.set("ops", res.dist_calls);
+                self.store_counters(&mut counters, store.as_deref());
+                ExecOut { counters, digest: res.digest() }
+            }
+            Family::MabSplit => {
+                let ds = match self.scale {
+                    Scale::Sm => make_classification(1500, 8, 3, 2, 2.5, 7),
+                    Scale::Md => make_classification(6000, 10, 3, 2, 2.5, 7),
+                };
+                let (view, store) = build_store(&ds.x, self.backend);
+                let wl = SplitWorkload::for_dataset(&ds);
+                let c = OpCounter::new();
+                let split = wl.run_mab(&*view, self.threads, &c);
+                counters.set("ops", c.get());
+                self.store_counters(&mut counters, store.as_deref());
+                ExecOut { counters, digest: split.digest() }
+            }
+        }
+    }
+
+    fn execute_refresh(&self) -> ExecOut {
+        let fx = self.refresh_fixture();
+        let full = fx.full();
+        // Three independent stores: the base model, the cold leg, and
+        // the warm leg each get their own, so the warm store's counters
+        // describe the warm-started path alone.
+        let (base_view, _) = build_store(&fx.base.x, self.backend);
+        let (cold_view, _) = build_store(&full.x, self.backend);
+        let (warm_view, warm_store) = build_store(&full.x, self.backend);
+        let legs = match self.family {
+            Family::BanditMips => {
+                refresh_mips(&fx, &*base_view, &*cold_view, &*warm_view, self.threads)
+            }
+            Family::BanditPam => {
+                refresh_banditpam(&fx, base_view, cold_view, warm_view, self.threads)
+            }
+            Family::MabSplit => {
+                refresh_split_node(&fx, &full, &*base_view, &*cold_view, &*warm_view)
+            }
+        };
+        let mut counters = CounterSet::new();
+        counters.set("warm_ops", legs.warm_ops);
+        counters.set("cold_ops", legs.cold_ops);
+        counters.set("warm_matches_cold", legs.matches as u64);
+        self.store_counters(&mut counters, warm_store.as_deref());
+        ExecOut { counters, digest: legs.warm_digest }
+    }
+
+    fn pam_fixture(&self) -> (LabeledDataset, usize) {
+        match self.scale {
+            Scale::Sm => (clusterable(160, 12, 3, 6.0, 0xA1), 3),
+            Scale::Md => (clusterable(400, 24, 4, 6.0, 0xA2), 4),
+        }
+    }
+
+    /// The shared refresh-corpus fixture this scenario replays:
+    /// BanditPAM and MABSplit use the clusterable blob fixtures (PAM
+    /// needs blob structure; the split refresh is bit-identical to cold
+    /// there), while BanditMIPS gets the adversarial i.i.d. regime,
+    /// which stresses its screening hardest.
+    fn refresh_fixture(&self) -> RefreshFixture {
+        let idx = match (self.family, self.scale) {
+            (Family::BanditPam, Scale::Sm) | (Family::MabSplit, Scale::Sm) => 0,
+            (Family::BanditPam, Scale::Md) | (Family::MabSplit, Scale::Md) => 1,
+            (Family::BanditMips, Scale::Sm) => 2,
+            (Family::BanditMips, Scale::Md) => 3,
+        };
+        refresh_corpus_at(idx)
+    }
+
+    /// Store-level counters are schedule-dependent under concurrency, so
+    /// they are recorded only at `threads == 1` (see module docs).
+    fn store_counters(&self, counters: &mut CounterSet, store: Option<&ColumnStore>) {
+        if self.threads != 1 {
+            return;
+        }
+        if let Some(cs) = store {
+            counters.set("decode_ops", cs.decode_ops());
+            counters.set("chunk_decodes", cs.chunk_decodes());
+            counters.set("spill_reads", cs.spill_reads());
+            counters.set_cache(cs.cache_counters());
+        }
+    }
+}
+
+/// Materialize `m` on `backend`, returning the dyn view plus (for
+/// columnar backends) the typed store so counters stay readable.
+fn build_store(m: &Matrix, backend: Backend) -> (Arc<dyn DatasetView>, Option<Arc<ColumnStore>>) {
+    match backend.options(m.n * m.d * 4) {
+        None => (Arc::new(m.clone()), None),
+        Some(opts) => {
+            let cs = Arc::new(ColumnStore::from_matrix(m, &opts).expect("store build"));
+            let view: Arc<dyn DatasetView> = cs.clone();
+            (view, Some(cs))
+        }
+    }
+}
+
+/// Every registered scenario, in canonical (deterministic) order.
+pub fn registry() -> Vec<Scenario> {
+    let families = [Family::BanditMips, Family::BanditPam, Family::MabSplit];
+    let mut v = Vec::new();
+    // Smoke: cold path on every backend at one thread…
+    for &family in &families {
+        for backend in [Backend::Matrix, Backend::ColumnF32, Backend::ColumnI8Spill] {
+            v.push(Scenario {
+                family,
+                path: PathKind::Cold,
+                scale: Scale::Sm,
+                backend,
+                threads: 1,
+                tier: Tier::Smoke,
+            });
+        }
+    }
+    // …the warm-started refresh path on the columnar store…
+    for &family in &families {
+        v.push(Scenario {
+            family,
+            path: PathKind::Refresh,
+            scale: Scale::Sm,
+            backend: Backend::ColumnF32,
+            threads: 1,
+            tier: Tier::Smoke,
+        });
+    }
+    // …and the sharded engine at 8 threads (op totals and answers must
+    // match t1 bit-for-bit; the baseline pins both sides).
+    for &family in &families {
+        v.push(Scenario {
+            family,
+            path: PathKind::Cold,
+            scale: Scale::Sm,
+            backend: Backend::Matrix,
+            threads: 8,
+            tier: Tier::Smoke,
+        });
+    }
+    // Full (nightly) additions: refresh on the remaining backends,
+    // threaded columnar cold runs, and medium-scale cuts.
+    for &family in &families {
+        for backend in [Backend::Matrix, Backend::ColumnI8Spill] {
+            v.push(Scenario {
+                family,
+                path: PathKind::Refresh,
+                scale: Scale::Sm,
+                backend,
+                threads: 1,
+                tier: Tier::Full,
+            });
+        }
+        v.push(Scenario {
+            family,
+            path: PathKind::Cold,
+            scale: Scale::Sm,
+            backend: Backend::ColumnF32,
+            threads: 8,
+            tier: Tier::Full,
+        });
+        v.push(Scenario {
+            family,
+            path: PathKind::Cold,
+            scale: Scale::Md,
+            backend: Backend::ColumnF32,
+            threads: 1,
+            tier: Tier::Full,
+        });
+        v.push(Scenario {
+            family,
+            path: PathKind::Refresh,
+            scale: Scale::Md,
+            backend: Backend::ColumnF32,
+            threads: 1,
+            tier: Tier::Full,
+        });
+    }
+    v
+}
+
+/// The registry slice a tier runs (`Smoke` ⊂ `Full`).
+pub fn scenarios_for(tier: Tier) -> Vec<Scenario> {
+    registry().into_iter().filter(|s| s.tier() <= tier).collect()
+}
+
+/// Run a whole tier, with per-scenario progress on stderr.
+pub fn run_tier(tier: Tier) -> RecordSet {
+    let mut set = RecordSet::new(tier.name());
+    for scenario in scenarios_for(tier) {
+        eprintln!("perfgate: running {}", scenario.name());
+        set.records.push(scenario.run());
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_well_formed() {
+        let all = registry();
+        let mut names: Vec<String> = all.iter().map(|s| s.name()).collect();
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names");
+        for name in &names {
+            assert_eq!(name.split('/').count(), 5, "{name}");
+        }
+    }
+
+    #[test]
+    fn smoke_is_a_strict_subset_of_full() {
+        let smoke = scenarios_for(Tier::Smoke);
+        let full = scenarios_for(Tier::Full);
+        assert!(!smoke.is_empty());
+        assert!(smoke.len() < full.len());
+        let full_names: Vec<String> = full.iter().map(|s| s.name()).collect();
+        for s in &smoke {
+            assert!(full_names.contains(&s.name()), "{} missing from full", s.name());
+        }
+        assert_eq!(full.len(), registry().len());
+    }
+
+    #[test]
+    fn tier_parsing_round_trips() {
+        assert_eq!(Tier::parse("smoke").unwrap(), Tier::Smoke);
+        assert_eq!(Tier::parse("full").unwrap(), Tier::Full);
+        assert!(Tier::parse("nightly").is_err());
+        assert_eq!(Tier::parse(Tier::Full.name()).unwrap(), Tier::Full);
+    }
+
+    // The determinism contract itself: every smoke-tier scenario, run
+    // twice, must produce identical records — counters AND digests.
+    // (The CI perfgate job additionally diffs two whole
+    // `BENCH_perfgate.json` files byte-for-byte; the full tier's extra
+    // scenarios get the same treatment nightly.)
+    #[test]
+    fn scenario_records_are_identical_across_runs() {
+        for scenario in scenarios_for(Tier::Smoke) {
+            let name = scenario.name();
+            let a = scenario.run();
+            let b = scenario.run();
+            assert_eq!(a, b, "{name}: records differ across identical runs");
+        }
+    }
+
+    #[test]
+    fn spilled_scenario_observes_store_traffic() {
+        let scenario = registry()
+            .into_iter()
+            .find(|s| s.name() == "banditmips/cold/sm/column-i8-spill/t1")
+            .expect("registered");
+        let rec = scenario.run();
+        assert!(rec.counters.get("ops").unwrap_or(0) > 0, "solver did no work");
+        assert!(
+            rec.counters.get("spill_reads").unwrap_or(0) > 0,
+            "spill backend never touched disk: {:?}",
+            rec.counters
+        );
+        assert_eq!(rec.counters.get("scratch_grows"), Some(0), "steady state must not grow");
+    }
+}

@@ -1,0 +1,247 @@
+//! The shared workload builders behind both the cost-model scenarios and
+//! the wall-clock bench sweeps.
+//!
+//! Before this module, `benches/bench_runtime.rs` carried its own copies
+//! of "run one MABSplit node", "run a BanditMIPS query batch", and the
+//! three warm-vs-cold refresh legs — and the perf-gate would have needed
+//! a third copy. Now one definition serves all consumers: the scenario
+//! registry ([`super::scenario`]) runs these for deterministic
+//! [`crate::harness::record::CostRecord`]s, and the benches run exactly
+//! the same code with a stopwatch around it, so a wall-clock trend line
+//! and a cost-model baseline always describe the same workload.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::distance::Metric;
+use crate::data::{LabeledDataset, Matrix};
+use crate::forest::histogram::Impurity;
+use crate::forest::split::{
+    feature_ranges_view, make_edges, refresh_split, solve_exact_cached, solve_exactly,
+    solve_mab_threaded, Split, SplitContext, TrainSet,
+};
+use crate::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
+use crate::metrics::OpCounter;
+use crate::mips::banditmips::{bandit_mips, BanditMipsConfig};
+use crate::mips::refresh::{refresh as mips_refresh, solve_model};
+use crate::store::{DatasetView, ViewPointSet};
+use crate::util::digest::fnv1a_u64s;
+use crate::util::rng::Rng;
+use crate::util::testkit::RefreshFixture;
+
+/// One MABSplit node solve: the labels, row set, feature set, and solver
+/// knobs — the data view itself is supplied per run so the same workload
+/// sweeps across substrates.
+pub struct SplitWorkload {
+    pub y: Vec<f32>,
+    pub n_classes: usize,
+    pub rows: Vec<usize>,
+    pub features: Vec<usize>,
+    pub bins: usize,
+    pub batch_size: usize,
+    pub delta: f64,
+    pub seed: u64,
+}
+
+impl SplitWorkload {
+    /// The benches' standard root-node split over a whole dataset
+    /// (bins 10, batch 100, δ 0.01, seed 77).
+    pub fn for_dataset(ds: &LabeledDataset) -> SplitWorkload {
+        SplitWorkload {
+            y: ds.y.clone(),
+            n_classes: ds.n_classes,
+            rows: (0..ds.x.n).collect(),
+            features: (0..ds.x.d).collect(),
+            bins: 10,
+            batch_size: 100,
+            delta: 0.01,
+            seed: 77,
+        }
+    }
+
+    /// Run MABSplit on `x` (which must hold the dataset this workload was
+    /// built from). Edge construction from the view's feature ranges is
+    /// part of the measured work. Insertions land on `counter`.
+    pub fn run_mab(&self, x: &dyn DatasetView, threads: usize, counter: &OpCounter) -> Split {
+        let ranges = feature_ranges_view(x);
+        let mut rng = Rng::new(1);
+        let ctx = SplitContext {
+            ds: TrainSet { x, y: &self.y, n_classes: self.n_classes },
+            rows: &self.rows,
+            features: &self.features,
+            edges: make_edges(&self.features, &ranges, self.bins, false, &mut rng),
+            impurity: Impurity::Gini,
+            counter,
+        };
+        solve_mab_threaded(&ctx, self.batch_size, self.delta, self.seed, threads).expect("split")
+    }
+}
+
+/// A BanditMIPS query batch: the queries plus a config template whose
+/// seed advances by one per query (`seed + qi`), exactly as the bench
+/// sweeps always did.
+pub struct MipsWorkload {
+    pub queries: Matrix,
+    pub cfg: BanditMipsConfig,
+}
+
+impl MipsWorkload {
+    pub fn new(queries: Matrix, cfg: BanditMipsConfig) -> MipsWorkload {
+        MipsWorkload { queries, cfg }
+    }
+
+    /// Answer every query against `x`; coordinate multiplications land on
+    /// `counter`. Returns per-query atom lists, best first.
+    pub fn run(&self, x: &dyn DatasetView, counter: &OpCounter) -> Vec<Vec<usize>> {
+        let mut answers = Vec::with_capacity(self.queries.n);
+        for qi in 0..self.queries.n {
+            let cfg = BanditMipsConfig { seed: self.cfg.seed + qi as u64, ..self.cfg.clone() };
+            answers.push(bandit_mips(x, self.queries.row(qi), &cfg, counter).atoms);
+        }
+        answers
+    }
+
+    /// Digest of a full answer batch (lengths folded in, so `[[1,2]]`
+    /// and `[[1],[2]]` cannot collide).
+    pub fn digest(answers: &[Vec<usize>]) -> u64 {
+        fnv1a_u64s(answers.iter().flat_map(|a| {
+            std::iter::once(a.len() as u64).chain(a.iter().map(|&i| i as u64))
+        }))
+    }
+}
+
+/// A root-node split context with equal-width edges from the view's
+/// stats-backed feature ranges (shared by the refresh legs and the
+/// live-plane bench sweep).
+pub fn root_ctx<'a>(
+    x: &'a dyn DatasetView,
+    y: &'a [f32],
+    n_classes: usize,
+    rows: &'a [usize],
+    features: &'a [usize],
+    counter: &'a OpCounter,
+) -> SplitContext<'a> {
+    SplitContext {
+        ds: TrainSet { x, y, n_classes },
+        rows,
+        features,
+        edges: make_edges(features, &feature_ranges_view(x), 10, false, &mut Rng::new(1)),
+        impurity: Impurity::Gini,
+        counter,
+    }
+}
+
+/// Both legs of one warm-vs-cold refresh measurement. The cold answer
+/// is pinned indirectly: `matches` records warm == cold, and the warm
+/// answer's digest is what the perf-gate commits.
+pub struct RefreshLegs {
+    pub cold_ops: u64,
+    pub warm_ops: u64,
+    pub cold_wall_s: f64,
+    pub warm_wall_s: f64,
+    /// Warm answer identical to the cold answer.
+    pub matches: bool,
+    pub warm_digest: u64,
+}
+
+/// BanditMIPS standing query: cold solve on the post-append view vs
+/// warm-started [`mips_refresh`] from a model built on the base view.
+/// `full_cold` and `full_warm` must hold identical contents; they are
+/// separate parameters so a caller metering store counters can hand each
+/// leg its own store.
+pub fn refresh_mips(
+    fx: &RefreshFixture,
+    base: &dyn DatasetView,
+    full_cold: &dyn DatasetView,
+    full_warm: &dyn DatasetView,
+    threads: usize,
+) -> RefreshLegs {
+    let d = fx.base.x.d;
+    let cfg = BanditMipsConfig { k: 3, batch_size: d.max(32), threads, ..Default::default() };
+    let mut rq = Rng::new(fx.seed ^ 0x9E00);
+    let qi = rq.below(fx.base.x.n);
+    let q: Vec<f32> = fx.base.x.row(qi).iter().map(|&v| v * 1.25).collect();
+    let c_prev = OpCounter::new();
+    let (_, model) = solve_model(base, &q, &cfg, &c_prev);
+    let c_cold = OpCounter::new();
+    let t0 = Instant::now();
+    let (cold, _) = solve_model(full_cold, &q, &cfg, &c_cold);
+    let cold_wall_s = t0.elapsed().as_secs_f64();
+    let c_warm = OpCounter::new();
+    let t0 = Instant::now();
+    let (warm, _) = mips_refresh(full_warm, &q, &model, &cfg, &c_warm);
+    RefreshLegs {
+        cold_ops: c_cold.get(),
+        warm_ops: c_warm.get(),
+        cold_wall_s,
+        warm_wall_s: t0.elapsed().as_secs_f64(),
+        matches: warm.atoms == cold.atoms,
+        warm_digest: warm.digest(),
+    }
+}
+
+/// BanditPAM: cold re-cluster of the post-append view vs warm-started
+/// [`bandit_pam_refresh`] from the base clustering. Only meaningful on
+/// clusterable fixtures.
+pub fn refresh_banditpam(
+    fx: &RefreshFixture,
+    base: Arc<dyn DatasetView>,
+    full_cold: Arc<dyn DatasetView>,
+    full_warm: Arc<dyn DatasetView>,
+    threads: usize,
+) -> RefreshLegs {
+    let mut cfg = BanditPamConfig::new(fx.k);
+    cfg.km.seed = fx.seed;
+    cfg.threads = threads;
+    let prev = bandit_pam(&ViewPointSet::new(base, Metric::L2), &cfg);
+    let t0 = Instant::now();
+    let cold = bandit_pam(&ViewPointSet::new(full_cold, Metric::L2), &cfg);
+    let cold_wall_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let warm = bandit_pam_refresh(&ViewPointSet::new(full_warm, Metric::L2), &prev.medoids, &cfg);
+    RefreshLegs {
+        cold_ops: cold.dist_calls,
+        warm_ops: warm.dist_calls,
+        cold_wall_s,
+        warm_wall_s: t0.elapsed().as_secs_f64(),
+        matches: warm.medoids == cold.medoids,
+        warm_digest: warm.digest(),
+    }
+}
+
+/// MABSplit node: cold exact split of the post-append view vs
+/// [`refresh_split`] over a cache built on the base view (insert only the
+/// appended rows). `full` is the caller's materialized `fx.full()` —
+/// every caller already has one, so it is not recomputed here.
+pub fn refresh_split_node(
+    fx: &RefreshFixture,
+    full: &LabeledDataset,
+    base: &dyn DatasetView,
+    full_cold: &dyn DatasetView,
+    full_warm: &dyn DatasetView,
+) -> RefreshLegs {
+    let features: Vec<usize> = (0..fx.base.x.d).collect();
+    let rows_a: Vec<usize> = (0..fx.base.x.n).collect();
+    let rows_b: Vec<usize> = (0..full.x.n).collect();
+    let new_rows: Vec<usize> = (fx.base.x.n..full.x.n).collect();
+    let c_prev = OpCounter::new();
+    let ctx_a = root_ctx(base, &full.y, full.n_classes, &rows_a, &features, &c_prev);
+    let (_, mut cache) = solve_exact_cached(&ctx_a).expect("base split");
+    let c_cold = OpCounter::new();
+    let ctx_b = root_ctx(full_cold, &full.y, full.n_classes, &rows_b, &features, &c_cold);
+    let t0 = Instant::now();
+    let cold = solve_exactly(&ctx_b).expect("cold split");
+    let cold_wall_s = t0.elapsed().as_secs_f64();
+    let c_warm = OpCounter::new();
+    let ts_b = TrainSet { x: full_warm, y: &full.y, n_classes: full.n_classes };
+    let t0 = Instant::now();
+    let warm = refresh_split(&mut cache, &ts_b, &rows_b, &new_rows, &c_warm).expect("warm split");
+    RefreshLegs {
+        cold_ops: c_cold.get(),
+        warm_ops: c_warm.get(),
+        cold_wall_s,
+        warm_wall_s: t0.elapsed().as_secs_f64(),
+        matches: warm.digest() == cold.digest(),
+        warm_digest: warm.digest(),
+    }
+}

@@ -128,8 +128,9 @@ mod tests {
     fn fused_element_kernels_match_full_chunk_decode_bitwise() {
         let mut rng = Rng::new(0xF05E);
         for len in [1usize, 7, 16, 100, 255] {
-            let vals: Vec<f32> =
-                (0..len).map(|_| (rng.normal() * 10.0f64.powi(rng.below(5) as i32 - 2)) as f32).collect();
+            let vals: Vec<f32> = (0..len)
+                .map(|_| (rng.normal() * 10.0f64.powi(rng.below(5) as i32 - 2)) as f32)
+                .collect();
             for codec in [Codec::F32, Codec::F16, Codec::I8] {
                 let mut bytes = Vec::new();
                 codec.encode(&vals, &mut bytes);

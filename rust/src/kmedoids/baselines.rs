@@ -143,7 +143,8 @@ pub fn clara<P: PointSet + ?Sized>(
     for _ in 0..n_samples {
         let sample = rng.sample_without_replacement(n, sample_size.min(n));
         let sub = SubsetPointSet { inner: ps, idx: &sample };
-        let sub_res = pam(&sub, &KmConfig { k: cfg.k, max_swaps: cfg.max_swaps, seed: cfg.seed }, SwapMode::FastPam1);
+        let sub_cfg = KmConfig { k: cfg.k, max_swaps: cfg.max_swaps, seed: cfg.seed };
+        let sub_res = pam(&sub, &sub_cfg, SwapMode::FastPam1);
         let medoids: Vec<usize> = sub_res.medoids.iter().map(|&i| sample[i]).collect();
         let l = loss(ps, &medoids);
         if l < best_loss {

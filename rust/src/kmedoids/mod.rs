@@ -50,6 +50,21 @@ pub struct KmResult {
     pub dist_calls_per_iter: f64,
 }
 
+impl KmResult {
+    /// FNV-1a digest of the *answer* (medoids + exact loss bits) — what
+    /// the perf-gate pins so a cost regression fix can never silently
+    /// change the clustering. Cost fields are deliberately excluded:
+    /// they are tracked as counters, not as part of the answer.
+    pub fn digest(&self) -> u64 {
+        crate::util::digest::fnv1a_u64s(
+            self.medoids
+                .iter()
+                .map(|&m| m as u64)
+                .chain(std::iter::once(self.loss.to_bits())),
+        )
+    }
+}
+
 /// Exact clustering loss (Eq. 2.1). Counts its distance evaluations.
 /// Evaluates one batched [`PointSet::dist_batch`] sweep per medoid (the
 /// medoid's row gathered once; chunked stores serve block-scheduled

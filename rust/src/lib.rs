@@ -29,6 +29,12 @@
 //! and all three chapter solvers issue block-scheduled kernel calls —
 //! one chunk touch per batch instead of one per pull — while staying
 //! bit-identical to the scalar path on F32 data.
+//!
+//! Holding all of it in place is [`harness`]: the perf-gate. A registry
+//! of deterministic scenarios turns the op/cache/scratch counters into
+//! schema-versioned cost records, diffed in CI against committed
+//! baselines (`benches/baselines/`) by `repro perfgate check` — so every
+//! complexity win above is pinned, machine-independently, per PR.
 
 pub mod bandit;
 pub mod coordinator;
@@ -36,6 +42,7 @@ pub mod data;
 pub mod exec;
 pub mod experiments;
 pub mod forest;
+pub mod harness;
 pub mod kernels;
 pub mod kmedoids;
 pub mod metrics;

@@ -6,6 +6,8 @@
 //! repro exp <id>|all [--seed S]   # regenerate a paper table/figure
 //! repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]
 //! repro check-artifacts           # load + smoke-test the AOT bundle
+//! repro perfgate <run|baseline|check|list> [--tier smoke|full]
+//!               [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]
 //! ```
 
 use std::sync::Arc;
@@ -25,12 +27,15 @@ fn main() {
         Some("exp") => cmd_exp(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("check-artifacts") => cmd_check_artifacts(),
+        Some("perfgate") => cmd_perfgate(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|exp|serve|check-artifacts> [...]\n\
+                "usage: repro <list|exp|serve|check-artifacts|perfgate> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
-                 repro check-artifacts"
+                 repro check-artifacts\n  \
+                 repro perfgate <run|baseline|check|list> [--tier smoke|full] \
+                 [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]"
             );
             2
         }
@@ -146,6 +151,139 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     server.shutdown();
     0
+}
+
+/// The perf-gate CLI (see `rust/src/harness/`):
+///
+/// * `run` — execute a tier, write its cost-model records (default
+///   `BENCH_perfgate.json`);
+/// * `baseline` — execute a tier and stamp the committed baseline file
+///   (`benches/baselines/<tier>.json` by default);
+/// * `check` — execute a tier, write the records, and diff them against
+///   the committed baseline; exits non-zero on any regression,
+///   unstamped improvement, digest change, or structural drift beyond
+///   `--tolerance` (a fraction; default 0 = exact). A missing baseline
+///   file fails too, unless `--allow-unstamped` is passed (the CI
+///   bootstrap mode — otherwise deleting the baseline would silently
+///   disarm the gate).
+/// * `list` — print the tier's scenario names.
+fn cmd_perfgate(args: &[String]) -> i32 {
+    use adaptive_sampling::harness::{self, RecordSet, Tier};
+
+    let usage = || {
+        eprintln!(
+            "usage: repro perfgate <run|baseline|check|list> [--tier smoke|full]\n\
+             \u{20}                    [--tolerance F] [--out FILE] [--dir DIR] \
+             [--allow-unstamped]"
+        );
+        2
+    };
+    let Some(sub) = args.first().map(|s| s.as_str()) else {
+        return usage();
+    };
+    let tier = match Tier::parse(flag_value(args, "--tier").unwrap_or("smoke")) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("perfgate: {e}");
+            return 2;
+        }
+    };
+    let out_path = flag_value(args, "--out").unwrap_or("BENCH_perfgate.json");
+    let baseline_dir =
+        std::path::PathBuf::from(flag_value(args, "--dir").unwrap_or("benches/baselines"));
+    let baseline_path = baseline_dir.join(format!("{}.json", tier.name()));
+
+    match sub {
+        "list" => {
+            for scenario in harness::scenarios_for(tier) {
+                println!("{}", scenario.name());
+            }
+            0
+        }
+        "run" => {
+            let set = harness::run_tier(tier);
+            if let Err(e) = set.write_file(std::path::Path::new(out_path)) {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+            println!("perfgate: wrote {} ({} scenarios)", out_path, set.records.len());
+            0
+        }
+        "baseline" => {
+            let set = harness::run_tier(tier);
+            if let Err(e) = std::fs::create_dir_all(&baseline_dir) {
+                eprintln!("perfgate: create {}: {e}", baseline_dir.display());
+                return 1;
+            }
+            if let Err(e) = set.write_file(&baseline_path) {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+            println!(
+                "perfgate: stamped {} ({} scenarios) — commit this file",
+                baseline_path.display(),
+                set.records.len()
+            );
+            0
+        }
+        "check" => {
+            let tolerance: f64 = match flag_value(args, "--tolerance").map(|s| s.parse::<f64>()) {
+                None => 0.0,
+                Some(Ok(f)) if (0.0..=1.0).contains(&f) => f,
+                Some(_) => {
+                    eprintln!("perfgate: --tolerance wants a fraction in [0, 1]");
+                    return 2;
+                }
+            };
+            let set = harness::run_tier(tier);
+            if let Err(e) = set.write_file(std::path::Path::new(out_path)) {
+                eprintln!("perfgate: {e}");
+                return 1;
+            }
+            if !baseline_path.exists() {
+                let allow = args.iter().any(|a| a == "--allow-unstamped");
+                println!(
+                    "perfgate: UNSTAMPED — no baseline at {}.\n\
+                     The run itself passed and its records are in {}.\n\
+                     To arm the gate: `repro perfgate baseline --tier {}` on a trusted\n\
+                     machine, then commit the stamped file (see benches/baselines/README.md).",
+                    baseline_path.display(),
+                    out_path,
+                    tier.name()
+                );
+                if allow {
+                    return 0;
+                }
+                eprintln!(
+                    "perfgate: refusing to pass without a baseline \
+                     (pass --allow-unstamped to bootstrap)"
+                );
+                return 1;
+            }
+            let baseline = match RecordSet::read_file(&baseline_path) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("perfgate: baseline unreadable: {e}");
+                    return 1;
+                }
+            };
+            let report = harness::compare(&set, &baseline, tolerance);
+            print!("{}", report.summary());
+            if report.passed() {
+                0
+            } else {
+                eprintln!(
+                    "perfgate: cost model drifted from {} (tolerance {tolerance}).\n\
+                     If this change is intentional, re-stamp: \
+                     `repro perfgate baseline --tier {}` and commit the diff.",
+                    baseline_path.display(),
+                    tier.name()
+                );
+                1
+            }
+        }
+        _ => usage(),
+    }
 }
 
 fn cmd_check_artifacts() -> i32 {

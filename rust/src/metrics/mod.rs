@@ -142,6 +142,54 @@ impl std::fmt::Display for CacheCounters {
     }
 }
 
+/// An ordered, labeled set of counter totals — the cost-model payload a
+/// perf-gate scenario reports (see [`crate::harness`]). Entries keep
+/// insertion order so serialized records are byte-stable, and values are
+/// exact `u64` totals (never wall-clock), so two runs of a deterministic
+/// workload produce `==` sets.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CounterSet {
+    entries: Vec<(String, u64)>,
+}
+
+impl CounterSet {
+    pub fn new() -> CounterSet {
+        CounterSet::default()
+    }
+
+    /// Set `name` to `value`, overwriting an existing entry in place (its
+    /// position is preserved) or appending a new one.
+    pub fn set(&mut self, name: &str, value: u64) {
+        match self.entries.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v = value,
+            None => self.entries.push((name.to_string(), value)),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.entries.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.entries.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Absorb a [`CacheCounters`] snapshot under standard names.
+    pub fn set_cache(&mut self, c: CacheCounters) {
+        self.set("cache_hits", c.hits);
+        self.set("cache_misses", c.misses);
+        self.set("cache_evictions", c.evictions);
+    }
+}
+
 /// Latency recorder for the serving coordinator: stores microsecond
 /// samples and reports percentiles/throughput.
 #[derive(Debug, Default, Clone)]
@@ -258,6 +306,24 @@ mod tests {
         assert!((s.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
         assert_eq!(CacheCounters::default().hit_rate(), 1.0);
         assert!(!format!("{s}").is_empty());
+    }
+
+    #[test]
+    fn counter_set_preserves_order_and_overwrites_in_place() {
+        let mut s = CounterSet::new();
+        s.set("ops", 10);
+        s.set("decodes", 3);
+        s.set("ops", 12);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("ops"), Some(12));
+        assert_eq!(s.get("missing"), None);
+        let names: Vec<&str> = s.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["ops", "decodes"]);
+        s.set_cache(CacheCounters { hits: 5, misses: 2, evictions: 1 });
+        assert_eq!(s.get("cache_misses"), Some(2));
+        assert_eq!(s.len(), 5);
+        let t = s.clone();
+        assert_eq!(s, t);
     }
 
     #[test]

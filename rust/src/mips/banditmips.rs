@@ -86,6 +86,15 @@ pub struct MipsAnswer {
     pub samples: u64,
 }
 
+impl MipsAnswer {
+    /// FNV-1a digest of the returned atoms (order-sensitive: best
+    /// first) — the answer the perf-gate pins next to the sample
+    /// counts. `samples` is a cost, not an answer, so it is excluded.
+    pub fn digest(&self) -> u64 {
+        crate::util::digest::fnv1a_u64s(self.atoms.iter().map(|&a| a as u64))
+    }
+}
+
 /// Run BanditMIPS for one query. Generic over the dataset substrate
 /// (dense [`Matrix`] or [`crate::store::ColumnStore`]): coordinate pulls
 /// go through [`DatasetView::read_row_at`], so a columnar store serves

@@ -299,7 +299,7 @@ impl ColumnStore {
         budget_bytes: usize,
         preview: Vec<Vec<f32>>,
     ) -> ColumnStore {
-        let n_blocks = if n == 0 { 0 } else { (n + rows_per_chunk - 1) / rows_per_chunk };
+        let n_blocks = if n == 0 { 0 } else { n.div_ceil(rows_per_chunk) };
         debug_assert_eq!(stats.len(), d * n_blocks);
         let cache = match backing {
             Backing::Decoded(_) => None,

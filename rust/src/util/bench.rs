@@ -4,8 +4,14 @@
 //! from their `main()`. The harness warms up, then runs timed iterations
 //! until a wall-clock budget or iteration cap is reached, and reports
 //! mean / stddev / min per iteration plus an ops-per-second figure.
+//! [`Bencher::write_json`] dumps the collected results as a `BENCH_*.json`
+//! trend file through the canonical writer ([`crate::util::json`]), so
+//! every bench shares one JSON dialect with the perf-gate's cost-model
+//! records.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One benchmark's collected timings.
 pub struct BenchResult {
@@ -106,6 +112,30 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write every collected result to `path` as a `BENCH_*.json` trend
+    /// file (`{"bench": <name>, "results": [...]}`). Failures are
+    /// reported, not fatal: a read-only checkout still benches.
+    pub fn write_json(&self, bench: &str, path: &str) {
+        let mut doc = Json::obj();
+        doc.push("bench", Json::Str(bench.to_string()));
+        let rows = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut row = Json::obj();
+                row.push("name", Json::Str(r.name.clone()));
+                row.push("iters", Json::U64(r.iters as u64));
+                row.push("mean_ns", Json::F64(r.mean_ns));
+                row.push("p50_ns", Json::F64(r.p50_ns));
+                row.push("min_ns", Json::F64(r.min_ns));
+                row.push("std_ns", Json::F64(r.std_ns));
+                row
+            })
+            .collect();
+        doc.push("results", Json::Arr(rows));
+        crate::util::json::write_json_file(path, &doc);
+    }
 }
 
 #[cfg(test)]
@@ -122,5 +152,14 @@ mod tests {
         });
         assert!(r.iters > 0);
         assert!(r.mean_ns >= 0.0);
+        // JSON dump round-trips through the canonical parser.
+        let dir = std::env::temp_dir().join("as_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        b.write_json("unit", path.to_str().unwrap());
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(doc.get("results").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

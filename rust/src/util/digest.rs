@@ -1,0 +1,62 @@
+//! FNV-1a folding over `u64` words — the answer-digest primitive.
+//!
+//! The perf-gate harness pins each scenario's *answer* (medoids, split,
+//! returned atoms) next to its op-counter totals, so a perf "win" that
+//! silently changes what a solver returns is caught by the same diff
+//! that guards the cost model. Digests fold whatever identifies the
+//! answer — indices, `f32::to_bits` words, lengths — through one FNV-1a
+//! stream; they are stable across platforms and sensitive to any single
+//! changed word. (Byte-level f32 fingerprints live in
+//! [`crate::util::testkit::fingerprint_bits`]; this is the word-level
+//! sibling for already-discrete answers.)
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Fold a byte stream into one FNV-1a 64 digest — the single primitive
+/// behind both [`fnv1a_u64s`] and
+/// [`crate::util::testkit::fingerprint_bits`]. An empty stream digests
+/// to the FNV offset basis.
+pub fn fnv1a_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold a stream of `u64` words into one FNV-1a digest, byte by byte in
+/// little-endian order.
+pub fn fnv1a_u64s(words: impl IntoIterator<Item = u64>) -> u64 {
+    fnv1a_bytes(words.into_iter().flat_map(u64::to_le_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_deterministic_and_order_sensitive() {
+        let a = fnv1a_u64s([1u64, 2, 3]);
+        assert_eq!(a, fnv1a_u64s([1u64, 2, 3]));
+        assert_ne!(a, fnv1a_u64s([3u64, 2, 1]));
+        assert_ne!(a, fnv1a_u64s([1u64, 2]));
+        assert_eq!(fnv1a_u64s([]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn u64_fold_equals_byte_fold() {
+        let words = [0x0123456789ABCDEFu64, 42];
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        assert_eq!(fnv1a_u64s(words), fnv1a_bytes(bytes));
+        assert_eq!(fnv1a_bytes([]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn digest_sees_single_bit_flips() {
+        let base = fnv1a_u64s([0xDEADBEEFu64, 42]);
+        assert_ne!(base, fnv1a_u64s([0xDEADBEEEu64, 42]));
+        assert_ne!(base, fnv1a_u64s([0xDEADBEEFu64, 43]));
+    }
+}

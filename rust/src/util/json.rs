@@ -1,0 +1,417 @@
+//! Minimal JSON tree + canonical writer + parser (serde is unavailable
+//! offline) — the one JSON dialect behind every `BENCH_*.json` trend
+//! file and the perf-gate's cost records (re-exported as
+//! [`crate::harness::json`]).
+//!
+//! The perf-gate's contract is *byte-identical* records for identical
+//! runs, so serialization must be canonical: objects keep insertion
+//! order, the pretty printer is deterministic (two-space indent, one
+//! member per line, `{}`/`[]` for empty containers), and cost records
+//! restrict themselves to `u64`/string/bool values so no float
+//! formatting ambiguity can leak into a diff. Floats are still supported
+//! for the wall-clock bench files (`BENCH_*.json`), serialized via
+//! Rust's shortest-round-trip `{:?}` so `parse ∘ write` is the identity
+//! on finite values; non-finite floats serialize as `null`.
+//!
+//! Known limitation: the parser rejects `\uXXXX` surrogate *pairs*
+//! (astral characters escaped the JSON way by external tooling). The
+//! writer never produces them — non-ASCII text is written as raw
+//! UTF-8 — and perf-gate records are ASCII, so self-produced files
+//! always round-trip; hand-edited baselines should use raw UTF-8 too.
+
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// A JSON value. Object members keep insertion order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Unsigned integer — the only numeric type cost records use.
+    U64(u64),
+    /// Finite float (bench wall-clocks); non-finite writes as `null`.
+    F64(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// An empty object, to be filled with [`Json::push`].
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a member to an object (panics on non-objects: builder
+    /// misuse is a programming error, not input data).
+    pub fn push(&mut self, key: &str, value: Json) -> &mut Json {
+        match self {
+            Json::Obj(members) => members.push((key.to_string(), value)),
+            other => panic!("Json::push on non-object {other:?}"),
+        }
+        self
+    }
+
+    /// Object member by key (`None` for non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            Json::U64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Canonical pretty form with a trailing newline — what every
+    /// perf-gate and bench file on disk contains.
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::U64(v) => out.push_str(&v.to_string()),
+            Json::F64(v) => {
+                if v.is_finite() {
+                    // {:?} is the shortest representation that parses
+                    // back to the same f64, and always keeps a `.`/`e`
+                    // so the reader never mistakes it for an integer.
+                    out.push_str(&format!("{v:?}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    item.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                if members.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut at = 0usize;
+        let value = parse_value(bytes, &mut at)?;
+        skip_ws(bytes, &mut at);
+        if at != bytes.len() {
+            bail!("trailing garbage at byte {at}");
+        }
+        Ok(value)
+    }
+}
+
+/// Write `doc` to `path` in canonical form, reporting the outcome on
+/// stdout/stderr without failing the caller — the shared tail of every
+/// `BENCH_*.json` trend writer (a read-only checkout still benches).
+pub fn write_json_file(path: &str, doc: &Json) {
+    match std::fs::write(path, doc.to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn push_indent(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], at: &mut usize) {
+    while *at < bytes.len() && matches!(bytes[*at], b' ' | b'\t' | b'\n' | b'\r') {
+        *at += 1;
+    }
+}
+
+fn expect(bytes: &[u8], at: &mut usize, want: u8) -> Result<()> {
+    if bytes.get(*at) == Some(&want) {
+        *at += 1;
+        Ok(())
+    } else {
+        bail!("byte {}: expected {:?}, found {:?}", *at, want as char, peek(bytes, *at))
+    }
+}
+
+fn peek(bytes: &[u8], at: usize) -> Option<char> {
+    bytes.get(at).map(|&b| b as char)
+}
+
+fn parse_value(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    skip_ws(bytes, at);
+    match peek(bytes, *at) {
+        Some('{') => parse_obj(bytes, at),
+        Some('[') => parse_arr(bytes, at),
+        Some('"') => Ok(Json::Str(parse_string(bytes, at)?)),
+        Some('t') => parse_lit(bytes, at, "true", Json::Bool(true)),
+        Some('f') => parse_lit(bytes, at, "false", Json::Bool(false)),
+        Some('n') => parse_lit(bytes, at, "null", Json::Null),
+        Some(c) if c == '-' || c.is_ascii_digit() => parse_number(bytes, at),
+        other => bail!("byte {}: unexpected {:?}", *at, other),
+    }
+}
+
+fn parse_lit(bytes: &[u8], at: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*at..].starts_with(lit.as_bytes()) {
+        *at += lit.len();
+        Ok(value)
+    } else {
+        bail!("byte {}: expected {lit}", *at)
+    }
+}
+
+fn parse_number(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    let start = *at;
+    while *at < bytes.len()
+        && matches!(bytes[*at], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *at += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*at]).expect("ascii number run");
+    if !text.contains(['.', 'e', 'E', '-', '+']) {
+        if let Ok(v) = text.parse::<u64>() {
+            return Ok(Json::U64(v));
+        }
+    }
+    text.parse::<f64>()
+        .map(Json::F64)
+        .map_err(|e| anyhow!("byte {start}: bad number {text:?}: {e}"))
+}
+
+fn parse_string(bytes: &[u8], at: &mut usize) -> Result<String> {
+    expect(bytes, at, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*at) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *at += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *at += 1;
+                match bytes.get(*at) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*at + 1..*at + 5)
+                            .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|_| anyhow!("bad \\u escape"))?,
+                            16,
+                        )
+                        .map_err(|e| anyhow!("bad \\u escape: {e}"))?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow!("\\u{code:04x} is not a char"))?,
+                        );
+                        *at += 4;
+                    }
+                    other => bail!("unknown escape {other:?}"),
+                }
+                *at += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (multi-byte sequences pass
+                // through unescaped).
+                let rest = std::str::from_utf8(&bytes[*at..])
+                    .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                let c = rest.chars().next().expect("non-empty rest");
+                out.push(c);
+                *at += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_obj(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    expect(bytes, at, b'{')?;
+    let mut members = Vec::new();
+    skip_ws(bytes, at);
+    if peek(bytes, *at) == Some('}') {
+        *at += 1;
+        return Ok(Json::Obj(members));
+    }
+    loop {
+        skip_ws(bytes, at);
+        let key = parse_string(bytes, at)?;
+        skip_ws(bytes, at);
+        expect(bytes, at, b':')?;
+        let value = parse_value(bytes, at)?;
+        members.push((key, value));
+        skip_ws(bytes, at);
+        match peek(bytes, *at) {
+            Some(',') => *at += 1,
+            Some('}') => {
+                *at += 1;
+                return Ok(Json::Obj(members));
+            }
+            other => bail!("byte {}: expected ',' or '}}', found {other:?}", *at),
+        }
+    }
+}
+
+fn parse_arr(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    expect(bytes, at, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, at);
+    if peek(bytes, *at) == Some(']') {
+        *at += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, at)?);
+        skip_ws(bytes, at);
+        match peek(bytes, *at) {
+            Some(',') => *at += 1,
+            Some(']') => {
+                *at += 1;
+                return Ok(Json::Arr(items));
+            }
+            other => bail!("byte {}: expected ',' or ']', found {other:?}", *at),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        let mut rec = Json::obj();
+        rec.push("name", Json::Str("mips/cold".into()));
+        rec.push("ops", Json::U64(12345));
+        rec.push("ok", Json::Bool(true));
+        let mut doc = Json::obj();
+        doc.push("schema", Json::U64(1));
+        doc.push("records", Json::Arr(vec![rec, Json::Null]));
+        doc.push("empty_obj", Json::obj());
+        doc.push("empty_arr", Json::Arr(vec![]));
+        doc
+    }
+
+    #[test]
+    fn write_parse_rewrite_is_byte_identical() {
+        let doc = sample();
+        let text = doc.to_pretty_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+        assert_eq!(back.to_pretty_string(), text);
+    }
+
+    #[test]
+    fn accessors_navigate_the_tree() {
+        let doc = sample();
+        assert_eq!(doc.get("schema").and_then(Json::as_u64), Some(1));
+        let recs = doc.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("mips/cold"));
+        assert_eq!(recs[0].get("missing"), None);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), None);
+    }
+
+    #[test]
+    fn strings_with_escapes_round_trip() {
+        let doc = Json::Str("a \"b\"\n\tc \\ d\u{1}é".into());
+        let text = doc.to_pretty_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn floats_round_trip_and_nonfinite_degrade_to_null() {
+        for v in [0.5f64, 1.0, 3.125e-7, -2.25, 123456.75] {
+            let text = Json::F64(v).to_pretty_string();
+            match Json::parse(&text).unwrap() {
+                Json::F64(back) => assert_eq!(back.to_bits(), v.to_bits(), "{text}"),
+                other => panic!("{v} parsed as {other:?}"),
+            }
+        }
+        assert_eq!(Json::parse(&Json::F64(f64::NAN).to_pretty_string()).unwrap(), Json::Null);
+        // Integer-looking floats keep their dot, so the parser keeps the
+        // u64/f64 distinction stable across a round trip.
+        assert_eq!(Json::F64(2.0).to_pretty_string().trim(), "2.0");
+        assert_eq!(Json::parse("7").unwrap(), Json::U64(7));
+        assert_eq!(Json::parse("-7").unwrap(), Json::F64(-7.0));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in ["{", "[1,", "{\"a\" 1}", "tru", "\"unterminated", "1 2", "{]}"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+        assert!(Json::parse(" { \"a\" : [ 1 , 2 ] } ").is_ok());
+    }
+}

@@ -4,7 +4,9 @@
 //! `criterion`, `proptest`, and `anyhow`.
 
 pub mod bench;
+pub mod digest;
 pub mod error;
+pub mod json;
 pub mod linalg;
 pub mod proptest;
 pub mod rng;

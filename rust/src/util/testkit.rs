@@ -194,25 +194,29 @@ impl RefreshFixture {
 /// The fixed-seed refresh corpus: every warm-started `refresh` acceptance
 /// test (and the `BENCH_live` sweep) iterates exactly these fixtures.
 pub fn refresh_corpus() -> Vec<RefreshFixture> {
-    vec![
-        RefreshFixture::blobs("small-clusterable", 120, 16, 3, 12, 0xF1),
-        RefreshFixture::blobs("medium-clusterable", 420, 24, 4, 21, 0xF2),
-        RefreshFixture::iid("small-adversarial", 140, 16, 7, 0xF3),
-        RefreshFixture::iid("medium-adversarial", 400, 32, 16, 0xF4),
-    ]
+    (0..4).map(refresh_corpus_at).collect()
+}
+
+/// One corpus fixture by index, without constructing its siblings (the
+/// perf-gate scenarios replay single fixtures). Indices match
+/// [`refresh_corpus`] order; panics past the end so a registry typo
+/// fails loudly.
+pub fn refresh_corpus_at(idx: usize) -> RefreshFixture {
+    match idx {
+        0 => RefreshFixture::blobs("small-clusterable", 120, 16, 3, 12, 0xF1),
+        1 => RefreshFixture::blobs("medium-clusterable", 420, 24, 4, 21, 0xF2),
+        2 => RefreshFixture::iid("small-adversarial", 140, 16, 7, 0xF3),
+        3 => RefreshFixture::iid("medium-adversarial", 400, 32, 16, 0xF4),
+        other => panic!("refresh corpus has 4 fixtures, asked for {other}"),
+    }
 }
 
 /// FNV-1a 64 over the exact bit patterns of `vals` — the golden-trace
 /// fingerprint (stable across platforms, sensitive to a single ULP).
+/// Same primitive as the perf-gate's answer digests
+/// ([`crate::util::digest::fnv1a_bytes`]).
 pub fn fingerprint_bits(vals: &[f32]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for v in vals {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    }
-    h
+    crate::util::digest::fnv1a_bytes(vals.iter().flat_map(|v| v.to_bits().to_le_bytes()))
 }
 
 /// Fingerprint of a whole view, rows in order (shape folded in so an
@@ -364,7 +368,9 @@ pub fn store_options_from_env() -> Option<StoreOptions> {
         Some("column-i8-spill") => {
             Some(StoreOptions::with_codec(Codec::I8).spill_to_temp(1 << 20))
         }
-        Some(other) => panic!("AS_TEST_STORE={other:?}: want matrix|column-f32|column-f16|column-i8-spill"),
+        Some(other) => {
+            panic!("AS_TEST_STORE={other:?}: want matrix|column-f32|column-f16|column-i8-spill")
+        }
     }
 }
 

@@ -30,7 +30,12 @@ use adaptive_sampling::util::testkit::{self, ScalarView};
 
 /// Compare every batched hook against the ScalarView defaults, bit for
 /// bit, over the given view.
-fn assert_batched_hooks_match_scalar(v: &dyn DatasetView, rows: &[usize], cols: &[usize], seed: u64) {
+fn assert_batched_hooks_match_scalar(
+    v: &dyn DatasetView,
+    rows: &[usize],
+    cols: &[usize],
+    seed: u64,
+) {
     let scalar = ScalarView(v);
     let d = v.n_cols();
     let mut rng = Rng::new(seed);
@@ -197,7 +202,8 @@ fn live_snapshot_and_row_subset_hooks_match_scalar() {
     // hooks must still be bit-identical to the scalar defaults.
     let a = testkit::gaussian(70, 6, 41);
     let b = testkit::gaussian(40, 6, 42);
-    let live = LiveStore::new(6, StoreOptions { rows_per_chunk: 16, ..Default::default() }).unwrap();
+    let live =
+        LiveStore::new(6, StoreOptions { rows_per_chunk: 16, ..Default::default() }).unwrap();
     live.commit_batch(&a).unwrap();
     live.commit_batch(&b).unwrap();
     let snap = live.delete_rows(&[0, 35, 80]).unwrap();

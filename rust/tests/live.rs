@@ -21,7 +21,9 @@ use adaptive_sampling::forest::{
 };
 use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
 use adaptive_sampling::metrics::OpCounter;
-use adaptive_sampling::mips::banditmips::{bandit_mips, bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use adaptive_sampling::mips::banditmips::{
+    bandit_mips, bandit_mips_warm, BanditMipsConfig, SampleStrategy,
+};
 use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
 use adaptive_sampling::mips::naive_mips;
 use adaptive_sampling::store::{
