@@ -19,8 +19,16 @@
 //!    {F32, F16, I8} × {RAM, spill}, written to `BENCH_kernels.json`.
 //!    The scalar leg runs the same solver through `testkit::ScalarView`,
 //!    so the wall-clock gap IS the kernel layer's win; answers and op
-//!    counts are asserted identical between the legs.
-//! 4. **PJRT benches** (skipped with a message when `make artifacts`
+//!    counts are asserted identical between the legs (the I8 legs pin
+//!    `int_domain: false` — the bitwise scalar≡batched contract is a
+//!    decode-to-f32 property).
+//! 4. **Integer-domain sweep** (always runs): the same I8 store bytes
+//!    served with `int_domain` off vs on — the documented I8 exception
+//!    (see `kernels/` module docs) — written to `BENCH_intdomain.json`.
+//!    MABSplit is asserted split-identical between the domains (LUT
+//!    binning is digest-neutral); BanditMIPS answers may legitimately
+//!    differ and the agreement is recorded, not asserted.
+//! 5. **PJRT benches** (skipped with a message when `make artifacts`
 //!    hasn't been run): artifact execute round-trips.
 
 use std::sync::Arc;
@@ -234,8 +242,15 @@ fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
         let mut out = Vec::new();
         for codec in [Codec::F32, Codec::F16, Codec::I8] {
             for spill in [false, true] {
-                let mut opts =
-                    StoreOptions { codec, rows_per_chunk: 1024, ..Default::default() };
+                // int_domain off: this sweep's identity assertions pin
+                // the decode-to-f32 contract; the integer domain is
+                // swept (and compared) separately in int_domain_sweep.
+                let mut opts = StoreOptions {
+                    codec,
+                    rows_per_chunk: 1024,
+                    int_domain: false,
+                    ..Default::default()
+                };
                 if spill {
                     opts = opts.spill_to_temp(budget);
                 }
@@ -330,6 +345,95 @@ fn kernel_sweep(quick: bool) -> Vec<KernelPoint> {
     points
 }
 
+struct IntDomainPoint {
+    solver: &'static str,
+    /// "f32dom" (decode-to-f32 pulls) or "int" (integer-domain pulls).
+    mode: &'static str,
+    wall_s: f64,
+    ops: u64,
+    decode_ops: u64,
+    /// Whether this leg reproduced the f32-domain answer exactly
+    /// (trivially true for the f32dom leg itself).
+    matches_f32dom: bool,
+}
+
+/// Integer-domain vs decode-to-f32 sweep on the I8 codec: identical
+/// store bytes, only `StoreOptions::int_domain` toggled (see module
+/// docs, point 4). The wall-clock gap is the win from folding the
+/// affine correction out of the per-element loop.
+fn int_domain_sweep(quick: bool) -> Vec<IntDomainPoint> {
+    let mut points = Vec::new();
+    let i8_opts = |int_domain: bool| StoreOptions {
+        codec: Codec::I8,
+        rows_per_chunk: 1024,
+        int_domain,
+        ..Default::default()
+    };
+
+    // --- BanditMIPS: answers may legitimately differ between domains.
+    let (na, da) = if quick { (100, 4_000) } else { (200, 20_000) };
+    let (atoms, queries) = adaptive_sampling::data::synthetic::normal_custom(na, da, 6, 15);
+    let mips_wl = MipsWorkload::new(
+        queries,
+        BanditMipsConfig { seed: 7, threads: 1, ..Default::default() },
+    );
+    let mut f32dom_answers = None;
+    for (mode, int) in [("f32dom", false), ("int", true)] {
+        let cs = ColumnStore::from_matrix(&atoms, &i8_opts(int)).expect("store build");
+        let c = OpCounter::new();
+        let t0 = Instant::now();
+        let answers = mips_wl.run(&cs, &c);
+        let wall = t0.elapsed().as_secs_f64();
+        let matches = match &f32dom_answers {
+            None => {
+                f32dom_answers = Some(answers);
+                true
+            }
+            Some(prev) => *prev == answers,
+        };
+        points.push(IntDomainPoint {
+            solver: "banditmips",
+            mode,
+            wall_s: wall,
+            ops: c.get(),
+            decode_ops: cs.decode_ops(),
+            matches_f32dom: matches,
+        });
+    }
+
+    // --- MABSplit: LUT binning is digest-neutral, so the split (and
+    // the insertion count) must be identical — asserted, not recorded.
+    let n = if quick { 4_000 } else { 20_000 };
+    let ds = make_classification(n, 10, 3, 2, 2.5, 7);
+    let split_wl = SplitWorkload::for_dataset(&ds);
+    let mut f32dom_split = None;
+    for (mode, int) in [("f32dom", false), ("int", true)] {
+        let cs = ColumnStore::from_matrix(&ds.x, &i8_opts(int)).expect("store build");
+        let c = OpCounter::new();
+        let t0 = Instant::now();
+        let split = split_wl.run_mab(&cs, 1, &c).digest();
+        let wall = t0.elapsed().as_secs_f64();
+        match f32dom_split {
+            None => f32dom_split = Some((split, c.get())),
+            Some(prev) => assert_eq!(
+                (split, c.get()),
+                prev,
+                "mabsplit: integer-domain binning changed the split"
+            ),
+        }
+        points.push(IntDomainPoint {
+            solver: "mabsplit",
+            mode,
+            wall_s: wall,
+            ops: c.get(),
+            decode_ops: cs.decode_ops(),
+            matches_f32dom: true,
+        });
+    }
+
+    points
+}
+
 fn write_bench_json(path: &str, bench: &str, rows: Vec<Json>) {
     let mut doc = Json::obj();
     doc.push("bench", Json::Str(bench.to_string()));
@@ -383,6 +487,34 @@ fn write_live_json(points: &[LivePoint]) {
         })
         .collect();
     write_bench_json("BENCH_live.json", "live_refresh_sweep", rows);
+}
+
+fn write_intdomain_json(points: &[IntDomainPoint]) {
+    let f32dom_wall = |solver: &str| {
+        points
+            .iter()
+            .find(|p| p.solver == solver && p.mode == "f32dom")
+            .map(|p| p.wall_s)
+    };
+    let rows = points
+        .iter()
+        .map(|p| {
+            let mut row = Json::obj();
+            row.push("solver", Json::Str(p.solver.to_string()));
+            row.push("mode", Json::Str(p.mode.to_string()));
+            row.push("wall_s", Json::F64(p.wall_s));
+            row.push("ops", Json::U64(p.ops));
+            row.push("decode_ops", Json::U64(p.decode_ops));
+            row.push("matches_f32dom", Json::Bool(p.matches_f32dom));
+            if let ("int", Some(fw)) = (p.mode, f32dom_wall(p.solver)) {
+                if p.wall_s > 0.0 {
+                    row.push("speedup_vs_f32dom", Json::F64(fw / p.wall_s));
+                }
+            }
+            row
+        })
+        .collect();
+    write_bench_json("BENCH_intdomain.json", "int_domain_sweep", rows);
 }
 
 fn write_store_json(points: &[StorePoint]) {
@@ -453,6 +585,21 @@ fn main() {
         );
     }
     write_kernels_json(&kernel_points);
+
+    println!("\ninteger-domain sweep: I8 decode-to-f32 vs integer-domain pulls");
+    let int_points = int_domain_sweep(quick);
+    for p in &int_points {
+        println!(
+            "intdomain/{:<10} {:<7} wall={:>9.2}ms ops={:<12} decode={:<12} matches_f32dom={}",
+            p.solver,
+            p.mode,
+            p.wall_s * 1e3,
+            p.ops,
+            p.decode_ops,
+            p.matches_f32dom
+        );
+    }
+    write_intdomain_json(&int_points);
 
     let dir = ArtifactStore::default_dir();
     if !dir.join("manifest.txt").exists() {

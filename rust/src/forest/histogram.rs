@@ -161,6 +161,37 @@ impl ClassHistogram {
         }
     }
 
+    /// Batched fill straight from an I8 chunk run
+    /// ([`crate::store::ColBlock::I8`]): bins, counts, and counter totals
+    /// are identical to decoding each code to f32 and calling
+    /// [`ClassHistogram::fill`] — `bin_of(header.decode(u))` is the same
+    /// expression — so split decisions and answer digests are unchanged.
+    /// The decode runs at most 256 times per run (a code→bin LUT)
+    /// instead of once per element.
+    pub fn fill_i8(
+        &mut self,
+        h: &crate::kernels::quant::I8Header,
+        codes: &[u8],
+        classes: impl Iterator<Item = usize>,
+        counter: &OpCounter,
+    ) {
+        counter.add(codes.len() as u64);
+        if codes.len() >= 256 {
+            let mut lut = [0usize; 256];
+            for (u, slot) in lut.iter_mut().enumerate() {
+                *slot = self.edges.bin_of(h.decode(u as u8));
+            }
+            for (&u, class) in codes.iter().zip(classes) {
+                self.counts[lut[u as usize] * self.k + class] += 1.0;
+                self.total += 1.0;
+            }
+        } else {
+            for (&u, class) in codes.iter().zip(classes) {
+                self.insert_uncounted(h.decode(u), class);
+            }
+        }
+    }
+
     /// Weighted-impurity objective μ_ft (Eq. 3.3, normalized by total) and
     /// its delta-method standard error (§B.3) for *every* threshold in one
     /// prefix-sum scan. Threshold index t means "split after bin t"
@@ -307,6 +338,37 @@ impl MomentHistogram {
         }
     }
 
+    /// Batched fill straight from an I8 chunk run (see
+    /// [`ClassHistogram::fill_i8`]): bins and moment sums accumulate in
+    /// the same order as decode-then-[`MomentHistogram::fill`], so the
+    /// f64 state is bit-identical.
+    pub fn fill_i8(
+        &mut self,
+        h: &crate::kernels::quant::I8Header,
+        codes: &[u8],
+        ys: impl Iterator<Item = f64>,
+        counter: &OpCounter,
+    ) {
+        counter.add(codes.len() as u64);
+        if codes.len() >= 256 {
+            let mut lut = [0usize; 256];
+            for (u, slot) in lut.iter_mut().enumerate() {
+                *slot = self.edges.bin_of(h.decode(u as u8));
+            }
+            for (&u, y) in codes.iter().zip(ys) {
+                let m = &mut self.moments[lut[u as usize]];
+                m.0 += 1.0;
+                m.1 += y;
+                m.2 += y * y;
+                self.total += 1.0;
+            }
+        } else {
+            for (&u, y) in codes.iter().zip(ys) {
+                self.insert_uncounted(h.decode(u), y);
+            }
+        }
+    }
+
     /// Weighted child MSE for every threshold + a CI scale: the standard
     /// error of the weighted-variance plug-in, approximated by
     /// √(Var̂(y)·2/n) per §B.3's "derived similarly" remark.
@@ -434,6 +496,35 @@ mod tests {
         let l = large.scan_thresholds(Impurity::Gini)[1].1;
         assert!(l < s, "SE must shrink with n: {s} -> {l}");
         assert!(l < 0.05);
+    }
+
+    #[test]
+    fn i8_fill_is_bit_identical_to_decode_then_fill() {
+        // Digest neutrality of the integer-domain MABSplit scan: both the
+        // LUT branch (≥256 codes) and the short-run branch must land every
+        // code in the same bin as decode-to-f32 + fill.
+        let h = crate::kernels::quant::I8Header { min: -1.25, scale: 0.02 };
+        for n in [7usize, 300] {
+            let codes: Vec<u8> = (0..n).map(|i| ((i * 37) % 256) as u8).collect();
+            let vals: Vec<f32> = codes.iter().map(|&u| h.decode(u)).collect();
+            let edges = BinEdges::equal_width(-1.5, 4.5, 10);
+            let (ca, cb) = (OpCounter::new(), OpCounter::new());
+            let mut a = ClassHistogram::new(edges.clone(), 3);
+            let mut b = ClassHistogram::new(edges.clone(), 3);
+            a.fill(&vals, (0..n).map(|i| i % 3), &ca);
+            b.fill_i8(&h, &codes, (0..n).map(|i| i % 3), &cb);
+            assert_eq!(ca.get(), cb.get(), "n={n}: insertion counts");
+            assert_eq!(a.counts, b.counts, "n={n}: class bins diverged");
+            let mut am = MomentHistogram::new(edges.clone());
+            let mut bm = MomentHistogram::new(edges);
+            am.fill(&vals, (0..n).map(|i| i as f64 * 0.5), &ca);
+            bm.fill_i8(&h, &codes, (0..n).map(|i| i as f64 * 0.5), &cb);
+            for (x, y) in am.moments.iter().zip(&bm.moments) {
+                assert_eq!(x.0.to_bits(), y.0.to_bits(), "n={n}");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "n={n}");
+                assert_eq!(x.2.to_bits(), y.2.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]

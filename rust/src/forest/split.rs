@@ -89,11 +89,14 @@ pub struct SplitContext<'a> {
 }
 
 /// Fill one feature's classification histogram from a chunk-aligned
-/// column sweep ([`DatasetView::for_each_col_block`]): on a
+/// column sweep ([`DatasetView::for_each_col_block_quant`]): on a
 /// [`crate::store::ColumnStore`] each chunk is decoded element-fused
 /// into an arena run buffer (no full-chunk `Vec<f32>`), and insertions
 /// are counted once per run — totals and bin state identical to the
-/// per-element path.
+/// per-element path. An integer-domain I8 store hands the raw codes
+/// plus the run's header instead, and the histogram bins them through
+/// a code→bin LUT ([`ClassHistogram::fill_i8`]) — same bins, same
+/// digests, at most 256 decodes per run.
 fn fill_class(
     h: &mut ClassHistogram,
     x: &dyn DatasetView,
@@ -102,9 +105,15 @@ fn fill_class(
     y: &[f32],
     counter: &OpCounter,
 ) {
-    x.for_each_col_block(feature, rows, &mut |start, vals| {
-        let classes = rows[start..start + vals.len()].iter().map(|&r| y[r] as usize);
-        h.fill(vals, classes, counter);
+    x.for_each_col_block_quant(feature, rows, &mut |start, block| match block {
+        crate::store::ColBlock::F32(vals) => {
+            let classes = rows[start..start + vals.len()].iter().map(|&r| y[r] as usize);
+            h.fill(vals, classes, counter);
+        }
+        crate::store::ColBlock::I8 { header, codes } => {
+            let classes = rows[start..start + codes.len()].iter().map(|&r| y[r] as usize);
+            h.fill_i8(&header, codes, classes, counter);
+        }
     });
 }
 
@@ -117,9 +126,15 @@ fn fill_moment(
     y: &[f32],
     counter: &OpCounter,
 ) {
-    x.for_each_col_block(feature, rows, &mut |start, vals| {
-        let ys = rows[start..start + vals.len()].iter().map(|&r| y[r] as f64);
-        h.fill(vals, ys, counter);
+    x.for_each_col_block_quant(feature, rows, &mut |start, block| match block {
+        crate::store::ColBlock::F32(vals) => {
+            let ys = rows[start..start + vals.len()].iter().map(|&r| y[r] as f64);
+            h.fill(vals, ys, counter);
+        }
+        crate::store::ColBlock::I8 { header, codes } => {
+            let ys = rows[start..start + codes.len()].iter().map(|&r| y[r] as f64);
+            h.fill_i8(&header, codes, ys, counter);
+        }
     });
 }
 

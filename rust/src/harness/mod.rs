@@ -14,16 +14,18 @@
 //! | [`workloads`] | the workload builders themselves, shared with the wall-clock bench sweeps so both describe the same code |
 //! | [`record`] | schema-versioned [`record::CostRecord`]/[`record::RecordSet`]: counter totals + answer digests, byte-stable serialization |
 //! | [`gate`] | [`gate::compare`]: exact (or toleranced) diff against a committed baseline; regressions *and* unstamped improvements fail |
+//! | [`trend`] | wall-clock trendlines: `repro bench` stopwatch runs appended to schema-versioned `BENCH_*.json` series — evidence uploaded by CI, never a gate |
 //! | [`json`] | canonical zero-dependency JSON read/write under it all (lives in [`crate::util::json`] so `util`/benches never depend upward) |
 //!
-//! Driven by `repro perfgate <run|baseline|check|list>` (see
-//! `rust/src/main.rs`); baselines live in `benches/baselines/<tier>.json`
-//! and are re-stamped with `repro perfgate baseline` whenever a cost
-//! change is intentional.
+//! Driven by `repro perfgate <run|baseline|check|list>` and
+//! `repro bench <run|list>` (see `rust/src/main.rs`); baselines live in
+//! `benches/baselines/<tier>.json` and are re-stamped with
+//! `repro perfgate baseline` whenever a cost change is intentional.
 
 pub mod gate;
 pub mod record;
 pub mod scenario;
+pub mod trend;
 pub mod workloads;
 
 pub use crate::util::json;
@@ -31,3 +33,4 @@ pub use crate::util::json;
 pub use gate::{compare, GateReport, Verdict};
 pub use record::{CostRecord, RecordSet, SCHEMA_VERSION};
 pub use scenario::{registry, run_tier, scenarios_for, Scenario, Tier};
+pub use trend::{BenchRun, TrendFile, TrendPoint, TREND_SCHEMA_VERSION};

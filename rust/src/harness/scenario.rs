@@ -75,6 +75,13 @@ impl Tier {
 pub enum Backend {
     Matrix,
     ColumnF32,
+    /// In-RAM encoded I8, integer-domain reductions (the default
+    /// [`StoreOptions::int_domain`] path — its own digest baselines).
+    ColumnI8,
+    /// In-RAM encoded I8 with `int_domain` pinned off: the decode-to-f32
+    /// fused chain, digest-identical to the spilled I8 path. The bench
+    /// trajectory measures `column-i8` against this.
+    ColumnI8F32dom,
     ColumnI8Spill,
 }
 
@@ -83,6 +90,8 @@ impl Backend {
         match self {
             Backend::Matrix => "matrix",
             Backend::ColumnF32 => "column-f32",
+            Backend::ColumnI8 => "column-i8",
+            Backend::ColumnI8F32dom => "column-i8-f32dom",
             Backend::ColumnI8Spill => "column-i8-spill",
         }
     }
@@ -94,6 +103,15 @@ impl Backend {
         match self {
             Backend::Matrix => None,
             Backend::ColumnF32 => Some(StoreOptions { rows_per_chunk: 64, ..Default::default() }),
+            Backend::ColumnI8 => {
+                Some(StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() })
+            }
+            Backend::ColumnI8F32dom => Some(StoreOptions {
+                codec: Codec::I8,
+                rows_per_chunk: 64,
+                int_domain: false,
+                ..Default::default()
+            }),
             Backend::ColumnI8Spill => Some(
                 StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() }
                     .spill_to_temp((raw_bytes / 4).max(4096)),
@@ -188,6 +206,15 @@ impl Scenario {
     /// Execute the scenario and collect its deterministic cost record
     /// (see module docs for the warm-up + counter-selection discipline).
     pub fn run(&self) -> CostRecord {
+        self.run_timed().0
+    }
+
+    /// [`Scenario::run`] plus a stopwatch over the measured pass — the
+    /// wall-clock half of the bench trajectory (`repro bench`). The
+    /// record is byte-identical to `run()`'s: timing wraps the measured
+    /// execution but never reaches the arithmetic, and the warm-up pass
+    /// is excluded from the clock.
+    pub fn run_timed(&self) -> (CostRecord, f64) {
         if self.threads == 1 {
             // Warm-up: scratch arenas to steady state. Multi-threaded
             // scenarios skip it — the only counters recorded there (ops,
@@ -195,12 +222,14 @@ impl Scenario {
             let _ = self.execute();
         }
         let grows0 = crate::kernels::scratch::grow_events();
+        let t0 = std::time::Instant::now();
         let out = self.execute();
+        let wall_s = t0.elapsed().as_secs_f64();
         let mut counters = out.counters;
         if self.threads == 1 {
             counters.set("scratch_grows", crate::kernels::scratch::grow_events() - grows0);
         }
-        CostRecord { scenario: self.name(), counters, digest: out.digest }
+        (CostRecord { scenario: self.name(), counters, digest: out.digest }, wall_s)
     }
 
     fn execute(&self) -> ExecOut {
@@ -374,6 +403,23 @@ pub fn registry() -> Vec<Scenario> {
             tier: Tier::Smoke,
         });
     }
+    // …plus the in-RAM I8 pair: the integer-domain path (its own digest
+    // baselines — the documented codec-level semantics change) against
+    // the decode-to-f32 fused chain on identical bytes. Appended after
+    // the original smoke block so pre-existing baseline ordering is
+    // untouched; the bench trajectory compares the pair's wall-clock.
+    for &family in &families {
+        for backend in [Backend::ColumnI8, Backend::ColumnI8F32dom] {
+            v.push(Scenario {
+                family,
+                path: PathKind::Cold,
+                scale: Scale::Sm,
+                backend,
+                threads: 1,
+                tier: Tier::Smoke,
+            });
+        }
+    }
     // Full (nightly) additions: refresh on the remaining backends,
     // threaded columnar cold runs, and medium-scale cuts.
     for &family in &families {
@@ -481,6 +527,28 @@ mod tests {
             let b = scenario.run();
             assert_eq!(a, b, "{name}: records differ across identical runs");
         }
+    }
+
+    #[test]
+    fn integer_domain_digest_contract() {
+        let rec = |name: &str| {
+            registry().into_iter().find(|s| s.name() == name).expect("registered").run()
+        };
+        // The f32-domain fused chain is digest- and ops-identical to the
+        // spilled decode chain: same arithmetic, different plumbing.
+        for fam in ["banditmips", "banditpam", "mabsplit"] {
+            let fused = rec(&format!("{fam}/cold/sm/column-i8-f32dom/t1"));
+            let spilled = rec(&format!("{fam}/cold/sm/column-i8-spill/t1"));
+            assert_eq!(fused.digest, spilled.digest, "{fam}: fused vs spilled digest");
+            assert_eq!(fused.counters.get("ops"), spilled.counters.get("ops"), "{fam}: ops");
+        }
+        // The MABSplit integer path is digest-neutral by construction:
+        // binning through the code→bin LUT evaluates the exact decode
+        // expression, so split decisions and insertion counts can't move.
+        let int = rec("mabsplit/cold/sm/column-i8/t1");
+        let f32dom = rec("mabsplit/cold/sm/column-i8-f32dom/t1");
+        assert_eq!(int.digest, f32dom.digest, "mabsplit int path must be digest-neutral");
+        assert_eq!(int.counters.get("ops"), f32dom.counters.get("ops"));
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Wall-clock bench trendlines — the stopwatch half of the perf story.
+//!
+//! The perf-gate ([`super::record`], [`super::gate`]) pins the
+//! *machine-independent* cost model: op counts and answer digests,
+//! compared exactly. This module records the machine-*dependent* half —
+//! how fast those ops actually run — as an append-per-run trendline
+//! file (`BENCH_trend.json` and friends): each `repro bench run`
+//! appends one [`BenchRun`] holding, per scenario, the solver op total,
+//! the measured wall seconds, and the derived ops/sec and ns/op.
+//!
+//! Trendlines are **evidence, not a gate**: wall-clock varies across
+//! machines and runs, so CI uploads the series as an artifact and
+//! prints a delta table in the job summary instead of failing on
+//! drift. The committed perf-gate baselines stay the only hard check.
+//!
+//! File format (kind `bench_trend`, schema [`TREND_SCHEMA_VERSION`]):
+//!
+//! ```json
+//! {
+//!   "kind": "bench_trend",
+//!   "schema": 1,
+//!   "runs": [
+//!     {
+//!       "label": "<free-form, e.g. git SHA>",
+//!       "tier": "smoke",
+//!       "points": [
+//!         {"scenario": "...", "ops": 123, "wall_s": 0.5,
+//!          "ops_per_sec": 246.0, "ns_per_op": 4065040.6,
+//!          "digest": "0x..."}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Numbers are written through the canonical [`super::json`] writer
+//! (shortest-round-trip floats), so `parse ∘ serialize` is the identity
+//! and appending never perturbs earlier runs' bytes. No timestamps are
+//! recorded — runs are ordered by position, identified by `label`.
+
+use crate::harness::record::CostRecord;
+use crate::harness::scenario::{scenarios_for, Tier};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{anyhow, bail};
+
+/// Bump when the trendline layout changes incompatibly; an existing
+/// file with a different schema is left untouched and reported, never
+/// silently rewritten.
+pub const TREND_SCHEMA_VERSION: u64 = 1;
+
+/// One scenario's stopwatch measurement within a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrendPoint {
+    pub scenario: String,
+    /// Solver op total (`ops`, or `warm_ops + cold_ops` for refresh
+    /// scenarios) — the denominator tying wall-clock to the cost model.
+    pub ops: u64,
+    /// Measured wall seconds of the scenario's measured pass.
+    pub wall_s: f64,
+    /// Answer digest, for cross-referencing against perf-gate records.
+    pub digest: u64,
+}
+
+impl TrendPoint {
+    /// Derive a point from a finished scenario record + its stopwatch.
+    pub fn from_record(rec: &CostRecord, wall_s: f64) -> TrendPoint {
+        let ops = match rec.counters.get("ops") {
+            Some(v) => v,
+            None => {
+                rec.counters.get("warm_ops").unwrap_or(0)
+                    + rec.counters.get("cold_ops").unwrap_or(0)
+            }
+        };
+        TrendPoint { scenario: rec.scenario.clone(), ops, wall_s, digest: rec.digest }
+    }
+
+    /// Throughput in solver ops per second (0 when unmeasurable).
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ops as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Cost per solver op in nanoseconds (0 when no ops ran).
+    pub fn ns_per_op(&self) -> f64 {
+        if self.ops > 0 {
+            self.wall_s * 1e9 / self.ops as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut p = Json::obj();
+        p.push("scenario", Json::Str(self.scenario.clone()));
+        p.push("ops", Json::U64(self.ops));
+        p.push("wall_s", Json::F64(self.wall_s));
+        p.push("ops_per_sec", Json::F64(self.ops_per_sec()));
+        p.push("ns_per_op", Json::F64(self.ns_per_op()));
+        p.push("digest", Json::Str(format!("{:#018x}", self.digest)));
+        p
+    }
+
+    fn from_json(json: &Json) -> Result<TrendPoint> {
+        let scenario = json
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trend point missing \"scenario\""))?
+            .to_string();
+        let ops = json
+            .get("ops")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("{scenario}: missing \"ops\""))?;
+        let wall_s = json
+            .get("wall_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("{scenario}: missing \"wall_s\""))?;
+        let digest_text = json
+            .get("digest")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{scenario}: missing \"digest\""))?;
+        let digest = digest_text
+            .strip_prefix("0x")
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .ok_or_else(|| anyhow!("{scenario}: bad digest {digest_text:?}"))?;
+        Ok(TrendPoint { scenario, ops, wall_s, digest })
+    }
+}
+
+/// One `repro bench run` invocation's measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRun {
+    /// Free-form run label (CI passes the commit SHA); empty = unlabeled.
+    pub label: String,
+    pub tier: String,
+    pub points: Vec<TrendPoint>,
+}
+
+impl BenchRun {
+    fn to_json(&self) -> Json {
+        let mut run = Json::obj();
+        run.push("label", Json::Str(self.label.clone()));
+        run.push("tier", Json::Str(self.tier.clone()));
+        run.push("points", Json::Arr(self.points.iter().map(TrendPoint::to_json).collect()));
+        run
+    }
+
+    fn from_json(json: &Json) -> Result<BenchRun> {
+        let label = json
+            .get("label")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("run missing \"label\""))?
+            .to_string();
+        let tier = json
+            .get("tier")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("run missing \"tier\""))?
+            .to_string();
+        let points = json
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("run missing \"points\""))?
+            .iter()
+            .map(TrendPoint::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchRun { label, tier, points })
+    }
+
+    pub fn find(&self, scenario: &str) -> Option<&TrendPoint> {
+        self.points.iter().find(|p| p.scenario == scenario)
+    }
+}
+
+/// A whole trendline file: an ordered series of runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrendFile {
+    pub schema: u64,
+    pub runs: Vec<BenchRun>,
+}
+
+impl TrendFile {
+    pub fn new() -> TrendFile {
+        TrendFile { schema: TREND_SCHEMA_VERSION, runs: Vec::new() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.push("kind", Json::Str("bench_trend".into()));
+        doc.push("schema", Json::U64(self.schema));
+        doc.push("runs", Json::Arr(self.runs.iter().map(BenchRun::to_json).collect()));
+        doc
+    }
+
+    pub fn from_json(json: &Json) -> Result<TrendFile> {
+        match json.get("kind").and_then(Json::as_str) {
+            Some("bench_trend") => {}
+            other => bail!("not a bench trendline file (kind = {other:?})"),
+        }
+        let schema =
+            json.get("schema").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing schema"))?;
+        if schema != TREND_SCHEMA_VERSION {
+            bail!("trend schema {schema} (this binary speaks {TREND_SCHEMA_VERSION})");
+        }
+        let runs = json
+            .get("runs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing runs array"))?
+            .iter()
+            .map(BenchRun::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrendFile { schema, runs })
+    }
+
+    /// Canonical file contents (trailing newline included).
+    pub fn serialize(&self) -> String {
+        self.to_json().to_pretty_string()
+    }
+
+    pub fn parse(text: &str) -> Result<TrendFile> {
+        TrendFile::from_json(&Json::parse(text)?)
+    }
+
+    /// Load `path`, or a fresh empty trendline when the file does not
+    /// exist yet. A file that exists but fails to parse (foreign kind,
+    /// newer schema, mangled bytes) is an error — never overwritten.
+    pub fn load_or_new(path: &std::path::Path) -> Result<TrendFile> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => TrendFile::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(TrendFile::new()),
+            Err(e) => Err(anyhow!("read {}: {e}", path.display())),
+        }
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.serialize())
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))
+    }
+
+    /// Markdown delta table of the latest run against its predecessor
+    /// (per-scenario, matched by name) — the CI job-summary payload.
+    /// With a single run the delta column reads `—`.
+    pub fn delta_table(&self) -> String {
+        let Some(last) = self.runs.last() else {
+            return String::from("(no bench runs recorded)\n");
+        };
+        let prev = self.runs.len().checked_sub(2).map(|i| &self.runs[i]);
+        let mut out = String::new();
+        let label = if last.label.is_empty() { "(unlabeled)" } else { &last.label };
+        out.push_str(&format!("bench run `{label}` (tier {}):\n\n", last.tier));
+        out.push_str("| scenario | ops | wall ms | ops/sec | ns/op | Δ ops/sec |\n");
+        out.push_str("|---|---:|---:|---:|---:|---:|\n");
+        for p in &last.points {
+            let delta = match prev.and_then(|r| r.find(&p.scenario)) {
+                Some(q) if q.ops_per_sec() > 0.0 => {
+                    let pct = (p.ops_per_sec() / q.ops_per_sec() - 1.0) * 100.0;
+                    format!("{pct:+.1}%")
+                }
+                _ => "—".to_string(),
+            };
+            out.push_str(&format!(
+                "| {} | {} | {:.3} | {:.0} | {:.1} | {} |\n",
+                p.scenario,
+                p.ops,
+                p.wall_s * 1e3,
+                p.ops_per_sec(),
+                p.ns_per_op(),
+                delta
+            ));
+        }
+        out
+    }
+}
+
+impl Default for TrendFile {
+    fn default() -> Self {
+        TrendFile::new()
+    }
+}
+
+/// Execute a tier with the stopwatch on and collect one [`BenchRun`]
+/// (per-scenario progress on stderr, like the perf-gate runner).
+pub fn run_tier_timed(tier: Tier, label: &str) -> BenchRun {
+    let mut run =
+        BenchRun { label: label.to_string(), tier: tier.name().to_string(), points: Vec::new() };
+    for scenario in scenarios_for(tier) {
+        eprintln!("bench: running {}", scenario.name());
+        let (rec, wall_s) = scenario.run_timed();
+        run.points.push(TrendPoint::from_record(&rec, wall_s));
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CounterSet;
+
+    fn point(name: &str, ops: u64, wall_s: f64) -> TrendPoint {
+        TrendPoint { scenario: name.to_string(), ops, wall_s, digest: 0xABC0 ^ ops }
+    }
+
+    fn run(label: &str, points: Vec<TrendPoint>) -> BenchRun {
+        BenchRun { label: label.to_string(), tier: "smoke".to_string(), points }
+    }
+
+    #[test]
+    fn trend_round_trip_is_byte_identical() {
+        let mut tf = TrendFile::new();
+        tf.runs.push(run("r1", vec![point("a/b/c/d/t1", 1000, 0.25)]));
+        tf.runs.push(run("r2", vec![point("a/b/c/d/t1", 1000, 0.20)]));
+        let text = tf.serialize();
+        let back = TrendFile::parse(&text).unwrap();
+        assert_eq!(back, tf);
+        assert_eq!(back.serialize(), text, "serialize ∘ parse must be the identity on bytes");
+    }
+
+    #[test]
+    fn derived_rates_follow_ops_and_wall() {
+        let p = point("x", 2_000, 0.5);
+        assert!((p.ops_per_sec() - 4000.0).abs() < 1e-9);
+        assert!((p.ns_per_op() - 250_000.0).abs() < 1e-6);
+        let zero_wall = point("x", 10, 0.0);
+        assert_eq!(zero_wall.ops_per_sec(), 0.0);
+        let zero_ops = point("x", 0, 1.0);
+        assert_eq!(zero_ops.ns_per_op(), 0.0);
+    }
+
+    #[test]
+    fn refresh_records_sum_warm_and_cold_ops() {
+        let mut counters = CounterSet::new();
+        counters.set("warm_ops", 40);
+        counters.set("cold_ops", 60);
+        let rec = CostRecord { scenario: "f/refresh/sm/b/t1".into(), counters, digest: 7 };
+        let p = TrendPoint::from_record(&rec, 0.1);
+        assert_eq!(p.ops, 100);
+    }
+
+    #[test]
+    fn delta_table_compares_last_two_runs() {
+        let mut tf = TrendFile::new();
+        tf.runs.push(run("old", vec![point("s1", 1000, 0.50), point("s2", 500, 0.10)]));
+        tf.runs.push(run("new", vec![point("s1", 1000, 0.25), point("s3", 10, 0.01)]));
+        let table = tf.delta_table();
+        assert!(table.contains("bench run `new`"), "{table}");
+        assert!(table.contains("+100.0%"), "s1 doubled throughput: {table}");
+        assert!(table.contains("| s3 | 10 |"), "{table}");
+        assert!(table.contains("| —"), "unmatched scenario shows a dash: {table}");
+        // One-run files still render (all deltas dashed).
+        let mut single = TrendFile::new();
+        single.runs.push(run("only", vec![point("s1", 10, 0.1)]));
+        assert!(single.delta_table().contains("| — |"));
+        assert!(TrendFile::new().delta_table().contains("no bench runs"));
+    }
+
+    #[test]
+    fn parser_rejects_foreign_kind_and_future_schema() {
+        assert!(TrendFile::parse("{}").is_err());
+        assert!(TrendFile::parse("{\"kind\": \"perfgate_cost_model\"}").is_err());
+        let future = TrendFile::new().serialize().replace("\"schema\": 1", "\"schema\": 99");
+        assert!(TrendFile::parse(&future).is_err(), "future schema must refuse, not mangle");
+    }
+}

@@ -45,9 +45,27 @@
 //! [`quant::f16_to_f32`]), so a fused read is bit-identical to
 //! decode-then-read — the codec `error_bound` contract is inherited, not
 //! re-derived.
+//!
+//! # The documented I8 exception: integer-domain reductions
+//!
+//! The one *deliberate* departure from rule 1 is the integer-domain I8
+//! path ([`reduce::dot_u8_i8`] + [`quant::quantize_weights`], enabled by
+//! `StoreOptions::int_domain` on in-RAM encoded I8 stores). Instead of
+//! decoding each element to f32 and reducing in float, it applies the
+//! affine header algebra once per chunk run — `⟨row, q⟩ over a chunk =
+//! base + W·Σ u_c·w8_c`, with the per-column weights `q_c·scale_c`
+//! snapped onto an i8 grid of step `W` — and accumulates the u8×i8
+//! products exactly in i32. The result is *not* bit-identical to the
+//! decode-to-f32 chain: it is a codec-level semantics change, bounded by
+//! the documented envelope `(W/2)·Σ u_c` per chunk run, with its own
+//! perf-gate digest baselines. F32 and F16 paths are untouched and stay
+//! bit-identical; within the I8 integer path, determinism still holds —
+//! identical answers for a fixed seed at any thread count, because i32
+//! accumulation is exact and the per-run quantization depends only on
+//! the chunk headers and the query.
 
 pub mod quant;
 pub mod reduce;
 pub mod scratch;
 
-pub use reduce::{cosine, dot_f32, l1, l2, l2_sq, LANES};
+pub use reduce::{cosine, dot_f32, dot_u8_i8, l1, l2, l2_sq, LANES};

@@ -27,6 +27,15 @@ pub struct I8Header {
     pub scale: f64,
 }
 
+impl I8Header {
+    /// Decode one u8 code — the codec's exact decode expression
+    /// (`(min + scale·u)` in f64, cast to f32).
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        (self.min + self.scale * code as f64) as f32
+    }
+}
+
 /// Parse the 12-byte I8 chunk header.
 #[inline]
 pub fn i8_header(bytes: &[u8]) -> I8Header {
@@ -46,7 +55,40 @@ pub fn i8_payload(bytes: &[u8]) -> &[u8] {
 /// expression, one element at a time.
 #[inline]
 pub fn i8_at(h: &I8Header, payload: &[u8], k: usize) -> f32 {
-    (h.min + h.scale * payload[k] as f64) as f32
+    h.decode(payload[k])
+}
+
+/// Quantize per-column f64 weights onto the i8 grid for the
+/// integer-domain dot: `out[c] = round(w[c] / W)` clamped to
+/// `[-127, 127]`, where the returned step `W = max|w| / 127`. All-zero
+/// (or empty) weights return `W = 0` with a zeroed grid — the caller
+/// short-circuits to the affine base term. Non-finite weights saturate
+/// through Rust's defined float→int `as` cast (NaN → 0), so a poisoned
+/// query degrades, never UB.
+///
+/// This is the *documented I8 semantics change* of the integer-domain
+/// path: downstream dots become `base + W·Σ u·out[c]`, whose rounding
+/// differs from the per-element f32 decode chain. The absolute error of
+/// the weighted sum is bounded by `(W/2)·Σ u_c` (each weight moves by at
+/// most `W/2`, each code is at most 255).
+pub fn quantize_weights(w: &[f64], out: &mut [i8]) -> f64 {
+    debug_assert_eq!(w.len(), out.len());
+    let mut max_abs = 0f64;
+    for &v in w {
+        // NaN fails the comparison and is skipped (treated as 0 below).
+        if v.abs() > max_abs {
+            max_abs = v.abs();
+        }
+    }
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        out.fill(0);
+        return if max_abs == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    let step = max_abs / 127.0;
+    for (slot, &v) in out.iter_mut().zip(w) {
+        *slot = (v / step).round().clamp(-127.0, 127.0) as i8;
+    }
+    step
 }
 
 /// Element `k` of an F32 chunk (raw little-endian bytes).
@@ -123,6 +165,67 @@ mod tests {
     use super::*;
     use crate::store::Codec;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_round_trip_is_exhaustive_over_all_bit_patterns() {
+        // Every one of the 65 536 binary16 patterns: decode to f32 and
+        // re-encode. Zeros, subnormals, normals, and infinities are
+        // exactly representable in f32, so the round trip must be the
+        // identity on their bits; NaNs canonicalize to the quiet
+        // pattern, so for them the *class* and sign must survive.
+        let (mut nans, mut subnormals, mut infs) = (0u32, 0u32, 0u32);
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            let (exp, mant) = ((h >> 10) & 0x1f, h & 0x3ff);
+            if exp == 0x1f && mant != 0 {
+                nans += 1;
+                assert!(f.is_nan(), "{h:#06x} decoded to non-NaN {f}");
+                let back = f32_to_f16(f);
+                assert_eq!(back & 0x8000, h & 0x8000, "{h:#06x}: NaN sign lost");
+                assert_eq!(back & 0x7c00, 0x7c00, "{h:#06x}: NaN exponent lost");
+                assert_ne!(back & 0x3ff, 0, "{h:#06x}: NaN collapsed to inf");
+                continue;
+            }
+            if exp == 0x1f {
+                infs += 1;
+                assert!(f.is_infinite(), "{h:#06x}");
+            }
+            if exp == 0 && mant != 0 {
+                subnormals += 1;
+                assert!(f != 0.0 && f.abs() < 6.2e-5, "{h:#06x} decoded to {f}");
+            }
+            if exp == 0 && mant == 0 {
+                assert_eq!(f.to_bits(), (h as u32) << 16, "{h:#06x}: wrong zero");
+            }
+            let back = f32_to_f16(f);
+            assert_eq!(back, h, "{h:#06x} → {f} → {back:#06x}");
+        }
+        assert_eq!((nans, subnormals, infs), (2 * 1023, 2 * 1023, 2));
+    }
+
+    #[test]
+    fn weight_quantization_grid_and_step() {
+        // Max-magnitude weight lands exactly on ±127; zeros stay zero.
+        let w = [1.0f64, -0.5, 0.0, 0.25];
+        let mut grid = [0i8; 4];
+        let step = quantize_weights(&w, &mut grid);
+        assert_eq!(step, 1.0 / 127.0);
+        assert_eq!(grid, [127, -64, 0, 32]);
+        // Reconstruction error per weight is within step/2.
+        for (&v, &g) in w.iter().zip(&grid) {
+            assert!((v - step * g as f64).abs() <= step / 2.0 + 1e-15);
+        }
+        // All-zero weights short-circuit.
+        let step = quantize_weights(&[0.0, -0.0], &mut grid[..2]);
+        assert_eq!(step, 0.0);
+        assert_eq!(&grid[..2], &[0, 0]);
+        // Empty input is a no-op, not a panic.
+        assert_eq!(quantize_weights(&[], &mut []), 0.0);
+        // Non-finite weights saturate deterministically instead of UB.
+        let step = quantize_weights(&[f64::INFINITY, 1.0], &mut grid[..2]);
+        assert!(step.is_infinite());
+        assert_eq!(&grid[..2], &[0, 0]);
+    }
 
     #[test]
     fn fused_element_kernels_match_full_chunk_decode_bitwise() {

@@ -35,6 +35,36 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Integer-domain dot product: u8 codes × i8 weights accumulated in
+/// i32 — the quantized hot path's reduction. Same fixed-lane shape as
+/// [`dot_f32`] (element `c` into lane `c % LANES`, lanes folded in lane
+/// order, serial tail); integer addition is exact, so the lane shape
+/// here is purely for autovectorization, not for determinism.
+///
+/// Overflow headroom: `|u·w| ≤ 255·127 = 32 385`, so one i32 lane holds
+/// over 66 000 products before it can wrap; with 8 lanes the reduction
+/// is exact for any slice up to ≈ 530 000 elements — far beyond a chunk
+/// run (`rows_per_chunk ≤ 16·1024` after normalization).
+#[inline]
+pub fn dot_u8_i8(u: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(u.len(), w.len());
+    debug_assert!(u.len() < 530_000, "dot_u8_i8: i32 lanes could overflow");
+    let n = u.len();
+    let chunks = n / LANES;
+    let mut acc = [0i32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            acc[l] += u[i + l] as i32 * w[i + l] as i32;
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for i in chunks * LANES..n {
+        s += u[i] as i32 * w[i] as i32;
+    }
+    s
+}
+
 /// The shared pairwise lane reduction: f32 lanes over the full chunks,
 /// lane totals widened to f64 and summed in lane order, f64 tail.
 macro_rules! lane_reduce {
@@ -137,6 +167,21 @@ mod tests {
             assert!((l2_sq(&a, &b) - l2_naive).abs() < 1e-3, "l2_sq len {len}");
             assert!((l2(&a, &b) - l2_naive.sqrt()).abs() < 1e-4, "l2 len {len}");
         }
+    }
+
+    #[test]
+    fn integer_dot_matches_naive_across_tail_lengths() {
+        let mut r = Rng::new(91);
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 63, 64, 65, 1000] {
+            let u: Vec<u8> = (0..len).map(|_| r.below(256) as u8).collect();
+            let w: Vec<i8> = (0..len).map(|_| r.below(255) as i32 - 127).map(|v| v as i8).collect();
+            let naive: i32 = u.iter().zip(&w).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_u8_i8(&u, &w), naive, "len {len}");
+        }
+        // Extremes: every product at its magnitude ceiling, both signs.
+        let u = vec![255u8; 1024];
+        assert_eq!(dot_u8_i8(&u, &vec![127i8; 1024]), 1024 * 255 * 127);
+        assert_eq!(dot_u8_i8(&u, &vec![-127i8; 1024]), -1024 * 255 * 127);
     }
 
     #[test]

@@ -29,6 +29,8 @@ struct Pool {
     f32s: Vec<Vec<f32>>,
     f64s: Vec<Vec<f64>>,
     idxs: Vec<Vec<usize>>,
+    u8s: Vec<Vec<u8>>,
+    i8s: Vec<Vec<i8>>,
 }
 
 /// Arena growths observed by the *current thread* so far (monotone).
@@ -85,6 +87,8 @@ macro_rules! buf_kind {
 buf_kind!(F32Buf, f32_buf, f32, f32s, 0.0f32);
 buf_kind!(F64Buf, f64_buf, f64, f64s, 0.0f64);
 buf_kind!(IdxBuf, idx_buf, usize, idxs, 0usize);
+buf_kind!(U8Buf, u8_buf, u8, u8s, 0u8);
+buf_kind!(I8Buf, i8_buf, i8, i8s, 0i8);
 
 /// An identity index buffer `[0, 1, …, n)` from the arena — the "all
 /// rows" argument of the batched hooks.
@@ -136,5 +140,11 @@ mod tests {
         assert_eq!(&**idx, &[0, 0, 7]);
         let id = iota(4);
         assert_eq!(&**id, &[0, 1, 2, 3]);
+        let mut u = u8_buf(3);
+        let mut w = i8_buf(3);
+        u[1] = 255;
+        w[1] = -128;
+        assert_eq!(&**u, &[0, 255, 0]);
+        assert_eq!(&**w, &[0, -128, 0]);
     }
 }

@@ -8,6 +8,7 @@
 //! repro check-artifacts           # load + smoke-test the AOT bundle
 //! repro perfgate <run|baseline|check|list> [--tier smoke|full]
 //!               [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]
+//! repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]
 //! ```
 
 use std::sync::Arc;
@@ -28,14 +29,16 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("perfgate") => cmd_perfgate(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|exp|serve|check-artifacts|perfgate> [...]\n\
+                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
                  repro check-artifacts\n  \
                  repro perfgate <run|baseline|check|list> [--tier smoke|full] \
-                 [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]"
+                 [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]\n  \
+                 repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]"
             );
             2
         }
@@ -281,6 +284,69 @@ fn cmd_perfgate(args: &[String]) -> i32 {
                 );
                 1
             }
+        }
+        _ => usage(),
+    }
+}
+
+/// The wall-clock bench CLI (see `rust/src/harness/trend.rs`):
+///
+/// * `run` — execute a tier with the stopwatch on and append one run to
+///   the trendline file (default `BENCH_trend.json`), then print the
+///   delta table against the previous run. Trendlines are evidence, not
+///   a gate: nothing here exits non-zero on slow numbers.
+/// * `list` — print the tier's scenario names (same registry as the
+///   perf-gate, so every stopwatch point has a matching cost record).
+fn cmd_bench(args: &[String]) -> i32 {
+    use adaptive_sampling::harness::{self, trend, Tier, TrendFile};
+
+    let usage = || {
+        eprintln!(
+            "usage: repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]"
+        );
+        2
+    };
+    let Some(sub) = args.first().map(|s| s.as_str()) else {
+        return usage();
+    };
+    let tier = match Tier::parse(flag_value(args, "--tier").unwrap_or("smoke")) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench: {e}");
+            return 2;
+        }
+    };
+    match sub {
+        "list" => {
+            for scenario in harness::scenarios_for(tier) {
+                println!("{}", scenario.name());
+            }
+            0
+        }
+        "run" => {
+            let out_path = std::path::PathBuf::from(
+                flag_value(args, "--out").unwrap_or("BENCH_trend.json"),
+            );
+            let label = flag_value(args, "--label").unwrap_or("");
+            let mut file = match TrendFile::load_or_new(&out_path) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("bench: {e}");
+                    return 1;
+                }
+            };
+            file.runs.push(trend::run_tier_timed(tier, label));
+            if let Err(e) = file.write_file(&out_path) {
+                eprintln!("bench: {e}");
+                return 1;
+            }
+            println!(
+                "bench: appended run to {} ({} runs total)\n",
+                out_path.display(),
+                file.runs.len()
+            );
+            print!("{}", file.delta_table());
+            0
         }
         _ => usage(),
     }

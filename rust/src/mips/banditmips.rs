@@ -22,16 +22,18 @@
 //!
 //! Pulls are **block-scheduled** ([`crate::kernels`]): within a shard,
 //! surviving arms are tiled into row blocks and each tile's coordinate
-//! pulls are gathered with one [`DatasetView::gather_block`] kernel call
-//! — every storage chunk is touched once per tile per round instead of
-//! once per (arm, coordinate), and the quantized stores serve the gather
-//! straight from encoded bytes. Per-arm (Σv, Σv²) still folds in batch
-//! order, so answers and sample counts stay bit-identical to the scalar
-//! per-pull path.
+//! pulls fold through one [`DatasetView::mips_fold_block`] hook call —
+//! every storage chunk is touched once per tile per round instead of
+//! once per (arm, coordinate), and the quantized stores serve the fold
+//! straight from encoded bytes. On every substrate except an
+//! integer-domain I8 store the hook's default is a gather + f64 fold in
+//! batch order, so answers and sample counts stay bit-identical to the
+//! scalar per-pull path; the integer-domain store hoists the chunk
+//! header affines per run instead (the documented codec-level
+//! exception).
 
 use crate::bandit::{successive_elimination, AdaptiveArms, ArmStats, BanditConfig, ParCtx, Sampling};
 use crate::data::Matrix;
-use crate::kernels::scratch;
 use crate::metrics::OpCounter;
 use crate::store::DatasetView;
 use crate::util::rng::Rng;
@@ -254,13 +256,15 @@ impl<'a, V: DatasetView + ?Sized> MipsArms<'a, V> {
     }
 
     /// Per-arm (Σv, Σv²) deltas for one contiguous shard of arms,
-    /// block-scheduled: the shard's arms are tiled into row blocks, each
-    /// tile's coordinate pulls are gathered with ONE
-    /// [`DatasetView::gather_block`] kernel call (arena scratch, every
-    /// chunk touched once per tile), and each arm's delta then folds its
-    /// gathered row in batch order — the same values in the same order as
-    /// the scalar per-pull loop, so results are bit-identical for any
-    /// tile or shard boundary.
+    /// block-scheduled: the shard's arms are tiled into row blocks and
+    /// each tile's fold runs through ONE
+    /// [`DatasetView::mips_fold_block`] hook call. On most substrates
+    /// that is the default gather + f64 fold (arena scratch, every chunk
+    /// touched once per tile — the same values in the same order as the
+    /// scalar per-pull loop, so results are bit-identical for any tile
+    /// or shard boundary). An integer-domain I8 store instead folds the
+    /// raw codes with per-run hoisted header affines — the documented
+    /// codec-level exception.
     fn shard_deltas(&self, arms: &[usize], batch: &[usize], qw: &[f64]) -> Vec<(f64, f64)> {
         let b = batch.len();
         let mut out = Vec::with_capacity(arms.len());
@@ -268,23 +272,11 @@ impl<'a, V: DatasetView + ?Sized> MipsArms<'a, V> {
             out.resize(arms.len(), (0.0, 0.0));
             return out;
         }
-        // Tile so the gathered block stays within ~64 KiB of f32 scratch
+        // Tile so the folded block stays within ~64 KiB of f32 scratch
         // (and never over-sizes past the shard's own arm count).
         let tile = ((1usize << 16) / 4 / b).clamp(1, 64).min(arms.len().max(1));
-        let mut block = scratch::f32_buf(tile * b);
         for tile_arms in arms.chunks(tile) {
-            let m = tile_arms.len();
-            self.atoms.gather_block(tile_arms, batch, &mut block[..m * b]);
-            for row in block[..m * b].chunks_exact(b) {
-                let mut s = 0.0;
-                let mut s2 = 0.0;
-                for (&x, &qj) in row.iter().zip(qw) {
-                    let v = -(qj * x as f64);
-                    s += v;
-                    s2 += v * v;
-                }
-                out.push((s, s2));
-            }
+            self.atoms.mips_fold_block(tile_arms, batch, qw, &mut out);
         }
         out
     }

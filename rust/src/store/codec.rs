@@ -128,11 +128,11 @@ impl Codec {
                 }
             }
             Codec::I8 => {
-                let min =
-                    f32::from_le_bytes(bytes[0..4].try_into().unwrap()) as f64;
-                let scale = f64::from_le_bytes(bytes[4..12].try_into().unwrap());
-                for &q in &bytes[12..12 + len] {
-                    out.push((min + scale * q as f64) as f32);
+                // Header algebra hoisted: parse once per chunk, then run
+                // the same affine expression the fused readers use.
+                let h = crate::kernels::quant::i8_header(bytes);
+                for &q in &crate::kernels::quant::i8_payload(bytes)[..len] {
+                    out.push(h.decode(q));
                 }
             }
         }

@@ -93,6 +93,16 @@ pub struct StoreOptions {
     pub preview_rows: usize,
     /// Seed for the preview reservoir.
     pub seed: u64,
+    /// Run the batched reductions of an in-RAM encoded I8 store in the
+    /// integer domain (i32 accumulation over raw u8 codes, affine header
+    /// algebra hoisted once per chunk run) instead of decoding each
+    /// element to f32 first. This is the *documented* I8 semantics
+    /// change (see the [`crate::kernels`] module docs): answers may
+    /// differ from the decode-to-f32 chain within the published
+    /// envelope, but stay deterministic at any thread count. Ignored —
+    /// always the f32 chain — for F32/F16 codecs and for spilled
+    /// backings (whose LRU decode cache is the resident copy anyway).
+    pub int_domain: bool,
 }
 
 impl Default for StoreOptions {
@@ -104,6 +114,7 @@ impl Default for StoreOptions {
             spill_dir: None,
             preview_rows: 32,
             seed: 0x570E, // "STOE"
+            int_domain: true,
         }
     }
 }
@@ -272,6 +283,8 @@ pub struct ColumnStore {
     rows_per_chunk: usize,
     n_blocks: usize,
     codec: Codec,
+    /// See [`StoreOptions::int_domain`].
+    int_domain: bool,
     /// Per-chunk stats, indexed `col * n_blocks + block`.
     stats: Vec<ChunkStats>,
     backing: Backing,
@@ -294,6 +307,7 @@ impl ColumnStore {
         d: usize,
         rows_per_chunk: usize,
         codec: Codec,
+        int_domain: bool,
         stats: Vec<ChunkStats>,
         backing: Backing,
         budget_bytes: usize,
@@ -311,6 +325,7 @@ impl ColumnStore {
             rows_per_chunk,
             n_blocks,
             codec,
+            int_domain,
             stats,
             backing,
             cache,
@@ -334,6 +349,106 @@ impl ColumnStore {
 
     pub fn codec(&self) -> Codec {
         self.codec
+    }
+
+    /// True when the batched reductions run in the integer domain: I8
+    /// codec, encoded-in-RAM backing, and [`StoreOptions::int_domain`]
+    /// set. Spilled I8 stores always keep the f32 decode chain — their
+    /// LRU cache is the resident copy, so there are no raw codes to fold.
+    #[inline]
+    pub fn int_domain(&self) -> bool {
+        self.int_domain
+            && matches!(self.codec, Codec::I8)
+            && matches!(self.backing, Backing::Encoded(_))
+    }
+
+    /// Encoded bytes of chunk `(col, block)` — only valid on the
+    /// in-RAM encoded backing (the integer path checks first).
+    #[inline]
+    fn raw_chunk(&self, col: usize, block: usize) -> &[u8] {
+        match &self.backing {
+            Backing::Encoded(bytes) => &bytes[col * self.n_blocks + block],
+            _ => unreachable!("raw_chunk needs the in-RAM encoded backing"),
+        }
+    }
+
+    /// Integer-domain `dot_batch` (see [`StoreOptions::int_domain`]).
+    /// Per chunk run the per-column affine headers fold into the query
+    /// once — `⟨row, q⟩ = base + Σ_c (q_c·scale_c)·u_c` with
+    /// `base = Σ_c q_c·min_c` — the folded weights snap onto an i8 grid
+    /// of step `W`, and the raw u8 codes accumulate against that grid
+    /// exactly in i32 ([`crate::kernels::dot_u8_i8`]). Error vs the
+    /// decode-to-f32 chain is bounded by `(W/2)·Σ u_c` per run.
+    fn dot_batch_i8(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        let d = self.d;
+        let rpc = self.rows_per_chunk;
+        let mut w = scratch::f64_buf(d);
+        let mut w8 = scratch::i8_buf(d);
+        let mut codes = scratch::u8_buf(tile_rows(d, rows.len()) * d);
+        for_each_chunk_run(rows, rpc, |b, i, e| {
+            // Header algebra once per run per column, not per element.
+            let mut base = 0.0f64;
+            for c in 0..d {
+                let h = quant::i8_header(self.raw_chunk(c, b));
+                let qc = q[c] as f64;
+                base += qc * h.min;
+                w[c] = qc * h.scale;
+            }
+            let step = quant::quantize_weights(&w, &mut w8);
+            // Decode accounting matches the fused f32 chain: every
+            // touched element is charged, whichever domain folds it.
+            self.decode_ops.add(((e - i) * d) as u64);
+            if step == 0.0 {
+                for slot in &mut out[i..e] {
+                    *slot = base;
+                }
+                return;
+            }
+            let run = &rows[i..e];
+            let tile = tile_rows(d, run.len());
+            let mut at = i;
+            for chunk in run.chunks(tile) {
+                let m = chunk.len();
+                for c in 0..d {
+                    let p = quant::i8_payload(self.raw_chunk(c, b));
+                    for (k, &r) in chunk.iter().enumerate() {
+                        codes[k * d + c] = p[r % rpc];
+                    }
+                }
+                for (k, row) in codes[..m * d].chunks_exact(d).enumerate() {
+                    out[at + k] = base + step * crate::kernels::dot_u8_i8(row, &w8) as f64;
+                }
+                at += m;
+            }
+        });
+    }
+
+    /// Integer-hosted L2 for `dist_point_batch`: column-major over chunk
+    /// runs with the affine hoisted to `a = x_c − min_c`, so the inner
+    /// loop is one multiply-subtract per raw code (no f32 rounding
+    /// cast); squared sums accumulate in f64, sqrt lands once per row.
+    fn dist_l2_batch_i8(&self, x: &[f32], js: &[usize], out: &mut [f64]) {
+        let rpc = self.rows_per_chunk;
+        for slot in out.iter_mut() {
+            *slot = 0.0;
+        }
+        for c in 0..self.d {
+            let xc = x[c] as f64;
+            for_each_chunk_run(js, rpc, |b, i, e| {
+                let raw = self.raw_chunk(c, b);
+                let h = quant::i8_header(raw);
+                let p = quant::i8_payload(raw);
+                let a = xc - h.min;
+                for (k, &r) in js[i..e].iter().enumerate() {
+                    let t = a - h.scale * p[r % rpc] as f64;
+                    out[i + k] += t * t;
+                }
+            });
+        }
+        self.decode_ops.add((js.len() * self.d) as u64);
+        for slot in out.iter_mut() {
+            *slot = slot.sqrt();
+        }
     }
 
     /// Rows per (full) chunk.
@@ -582,6 +697,10 @@ impl DatasetView for ColumnStore {
     }
 
     fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        if self.int_domain() {
+            self.dot_batch_i8(rows, q, out);
+            return;
+        }
         // Cache-tiled: gather a row tile once (chunk-batched), then run
         // the standard lane reduction per row — bit-identical to the
         // scalar `dot` hook on the same values.
@@ -606,6 +725,10 @@ impl DatasetView for ColumnStore {
         js: &[usize],
         out: &mut [f64],
     ) {
+        if self.int_domain() && matches!(metric, crate::data::distance::Metric::L2) {
+            self.dist_l2_batch_i8(x, js, out);
+            return;
+        }
         let d = self.d;
         let tile = tile_rows(d, js.len());
         let mut buf = scratch::f32_buf(tile * d);
@@ -626,6 +749,87 @@ impl DatasetView for ColumnStore {
             let n = e - i;
             self.gather_col_run(col, b, &rows[i..e], &mut buf[..n], 0, 1);
             f(i, &buf[..n]);
+        });
+    }
+
+    fn for_each_col_block_quant(
+        &self,
+        col: usize,
+        rows: &[usize],
+        f: &mut dyn FnMut(usize, crate::store::ColBlock),
+    ) {
+        if !self.int_domain() {
+            self.for_each_col_block(col, rows, &mut |start, vals| {
+                f(start, crate::store::ColBlock::F32(vals))
+            });
+            return;
+        }
+        // Hand the consumer the raw codes plus the run's header: one
+        // header parse per run, decode deferred to the consumer (which
+        // may LUT it — MABSplit's histogram fill does).
+        let rpc = self.rows_per_chunk;
+        let mut codes = scratch::u8_buf(rows.len());
+        for_each_chunk_run(rows, rpc, |b, i, e| {
+            let raw = self.raw_chunk(col, b);
+            let h = quant::i8_header(raw);
+            let p = quant::i8_payload(raw);
+            let n = e - i;
+            for (k, &r) in rows[i..e].iter().enumerate() {
+                codes[k] = p[r % rpc];
+            }
+            self.decode_ops.add(n as u64);
+            f(i, crate::store::ColBlock::I8 { header: h, codes: &codes[..n] });
+        });
+    }
+
+    fn mips_fold_block(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        qw: &[f64],
+        out: &mut Vec<(f64, f64)>,
+    ) {
+        if !self.int_domain() || cols.is_empty() {
+            crate::store::default_mips_fold(self, rows, cols, qw, out);
+            return;
+        }
+        // Affine hoist per run: v_j = a_j + w_j·u with a_j = −qw_j·min_j
+        // and w_j = −qw_j·scale_j. The fold needs per-element v for the
+        // second moment, so it stays in f64 — but it skips the decode
+        // chain's f32 rounding cast, which is exactly the documented
+        // envelope of the integer-domain path.
+        let b = cols.len();
+        let rpc = self.rows_per_chunk;
+        let mut aff = scratch::f64_buf(2 * b);
+        let mut codes = scratch::u8_buf(tile_rows(b, rows.len()) * b);
+        for_each_chunk_run(rows, rpc, |blk, i, e| {
+            let (a, w) = aff.split_at_mut(b);
+            for (j, &c) in cols.iter().enumerate() {
+                let h = quant::i8_header(self.raw_chunk(c, blk));
+                a[j] = -(qw[j] * h.min);
+                w[j] = -(qw[j] * h.scale);
+            }
+            self.decode_ops.add(((e - i) * b) as u64);
+            let run = &rows[i..e];
+            let tile = tile_rows(b, run.len());
+            for chunk in run.chunks(tile) {
+                let m = chunk.len();
+                for (j, &c) in cols.iter().enumerate() {
+                    let p = quant::i8_payload(self.raw_chunk(c, blk));
+                    for (k, &r) in chunk.iter().enumerate() {
+                        codes[k * b + j] = p[r % rpc];
+                    }
+                }
+                for row in codes[..m * b].chunks_exact(b) {
+                    let (mut s, mut s2) = (0.0f64, 0.0f64);
+                    for ((&u, &aj), &wj) in row.iter().zip(&*a).zip(&*w) {
+                        let v = aj + wj * u as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                    out.push((s, s2));
+                }
+            }
         });
     }
 
@@ -836,6 +1040,42 @@ mod tests {
         assert!((s.mean() - 2.0).abs() < 1e-12);
         let s = cs.chunk_stats(1, 0);
         assert_eq!((s.min, s.max), (-5.0, 5.0));
+    }
+
+    #[test]
+    fn integer_domain_dot_stays_within_the_weight_grid_envelope() {
+        // The int-domain dot may drift from the decode-to-f32 chain, but
+        // only within the documented per-run envelope (W/2)·Σ u_c.
+        let m = random_matrix(200, 6, 33);
+        let base = StoreOptions { codec: Codec::I8, rows_per_chunk: 64, ..Default::default() };
+        let f32dom =
+            ColumnStore::from_matrix(&m, &StoreOptions { int_domain: false, ..base.clone() })
+                .unwrap();
+        let intdom = ColumnStore::from_matrix(&m, &base).unwrap();
+        assert!(intdom.int_domain(), "RAM-encoded I8 + default opts takes the int path");
+        assert!(!f32dom.int_domain(), "int_domain=false pins the f32 chain");
+        let q: Vec<f32> = (0..m.d).map(|c| (c as f32 - 2.5) * 0.7).collect();
+        let rows: Vec<usize> = (0..m.n).collect();
+        let (mut a, mut b) = (vec![0f64; m.n], vec![0f64; m.n]);
+        f32dom.dot_batch(&rows, &q, &mut a);
+        intdom.dot_batch(&rows, &q, &mut b);
+        // Loose but sound bound: W from the largest per-chunk scale, each
+        // of the d codes at most 255, plus the f32 chain's own rounding.
+        let mut w_max = 0f64;
+        for c in 0..m.d {
+            for blk in 0..intdom.n_blocks() {
+                let s = intdom.chunk_stats(c, blk);
+                let scale = (s.max as f64 - s.min as f64) / 255.0;
+                w_max = w_max.max((q[c] as f64 * scale).abs());
+            }
+        }
+        let bound = 0.5 * (w_max / 127.0) * 255.0 * m.d as f64 + 1e-3;
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() <= bound, "row {i}: {x} vs {y} (bound {bound})");
+        }
+        // Both chains charge identical decode accounting.
+        assert_eq!(f32dom.decode_ops(), intdom.decode_ops());
+        assert_eq!(intdom.chunk_decodes(), 0, "int path never materializes a chunk");
     }
 
     #[test]

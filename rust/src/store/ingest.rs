@@ -261,6 +261,7 @@ impl StoreBuilder {
             d,
             self.rows_per_chunk,
             self.opts.codec,
+            self.opts.int_domain,
             stats,
             backing,
             self.opts.budget_bytes,

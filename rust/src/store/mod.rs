@@ -22,10 +22,11 @@
 //! the distance hooks ([`DatasetView::dist`], [`DatasetView::dot`]), and
 //! the batched kernel hooks ([`DatasetView::dot_batch`],
 //! [`DatasetView::dist_point_batch`], [`DatasetView::gather_block`],
-//! [`DatasetView::gather_rows`], [`DatasetView::for_each_col_block`]) —
-//! defaulting to bit-exact scalar loops, overridden by every substrate
-//! here so each chunk is touched once per batch instead of once per
-//! pull (see [`crate::kernels`]).
+//! [`DatasetView::gather_rows`], [`DatasetView::for_each_col_block`],
+//! [`DatasetView::for_each_col_block_quant`],
+//! [`DatasetView::mips_fold_block`]) — defaulting to bit-exact scalar
+//! loops, overridden by every substrate here so each chunk is touched
+//! once per batch instead of once per pull (see [`crate::kernels`]).
 //! Both the legacy dense [`Matrix`] and [`ColumnStore`] implement it, so
 //! BanditPAM (via [`ViewPointSet`]), MABSplit (whose per-feature
 //! histogram shards become true column scans) and BanditMIPS (whose
@@ -38,7 +39,12 @@
 //! bit-identical results *and op-counter totals* on a `Matrix` and on a
 //! `ColumnStore(F32)` — in RAM or spilled, at any thread count. Lossy
 //! codecs (`F16`, `I8`) trade that exactness for 2–4× smaller residency;
-//! their decode cost is visible on [`ColumnStore::decode_ops`].
+//! their decode cost is visible on [`ColumnStore::decode_ops`]. In-RAM
+//! encoded I8 stores additionally take the *integer-domain* reduction
+//! path by default ([`StoreOptions::int_domain`]): a documented
+//! codec-level semantics change whose answers may differ from the
+//! decode-to-f32 chain within a per-chunk envelope, still deterministic
+//! at any thread count (see the [`crate::kernels`] module docs).
 
 pub mod codec;
 pub mod column;
@@ -67,6 +73,55 @@ thread_local! {
         RefCell::new((Vec::new(), Vec::new()));
     /// Scratch row for the default inner-product hook.
     static ROW_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// One run of column values delivered by
+/// [`DatasetView::for_each_col_block_quant`]: decoded f32 values, or —
+/// on the integer-domain I8 path — the chunk's affine header plus the
+/// raw u8 codes, so consumers (the MABSplit histogram fills) can decode
+/// through a 256-entry bin LUT once per chunk run instead of once per
+/// element. The I8 form carries exactly the information the decoded
+/// form would: `value[k] = header.decode(codes[k])` bit for bit.
+pub enum ColBlock<'a> {
+    /// Decoded values (every non-integer-domain substrate).
+    F32(&'a [f32]),
+    /// Affine header + raw u8 codes (in-RAM encoded I8, `int_domain`).
+    I8 {
+        header: crate::kernels::quant::I8Header,
+        codes: &'a [u8],
+    },
+}
+
+/// Shared default body of [`DatasetView::mips_fold_block`], as a free
+/// function so trait overrides can fall back to it (a trait impl cannot
+/// call the default method it is overriding): gather the tile into an
+/// arena buffer and fold each row exactly as the scalar path does —
+/// `v_j = −(qw[j]·x)` accumulated in coordinate order — so the result
+/// is bit-identical to the pre-hook BanditMIPS tile fold on every
+/// backing.
+pub(crate) fn default_mips_fold<V: DatasetView + ?Sized>(
+    view: &V,
+    rows: &[usize],
+    cols: &[usize],
+    qw: &[f64],
+    out: &mut Vec<(f64, f64)>,
+) {
+    let b = cols.len();
+    if b == 0 {
+        out.extend(rows.iter().map(|_| (0.0, 0.0)));
+        return;
+    }
+    let mut block = crate::kernels::scratch::f32_buf(rows.len() * b);
+    view.gather_block(rows, cols, &mut block);
+    for row in block.chunks_exact(b) {
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for (&x, &qj) in row.iter().zip(qw) {
+            let v = -(qj * x as f64);
+            s += v;
+            s2 += v * v;
+        }
+        out.push((s, s2));
+    }
 }
 
 /// Read access to an `n × d` dataset of `f32`s (see module docs).
@@ -248,6 +303,42 @@ pub trait DatasetView: Send + Sync {
         let mut vals = crate::kernels::scratch::f32_buf(rows.len());
         self.read_col(col, rows, &mut vals);
         f(0, &vals);
+    }
+
+    /// Column visit in quantized form: like
+    /// [`DatasetView::for_each_col_block`], but each run arrives as a
+    /// [`ColBlock`] — raw u8 codes plus the chunk's affine header on the
+    /// integer-domain I8 path, decoded f32 values everywhere else. Run
+    /// starts and lengths are identical to `for_each_col_block`'s, and
+    /// decoding an I8 run element-wise reproduces the f32 run bit for
+    /// bit, so consumers that only *bin* values (histogram fills) get
+    /// identical results either way — the I8 form is purely a speed win.
+    fn for_each_col_block_quant(
+        &self,
+        col: usize,
+        rows: &[usize],
+        f: &mut dyn FnMut(usize, ColBlock),
+    ) {
+        self.for_each_col_block(col, rows, &mut |start, vals| f(start, ColBlock::F32(vals)));
+    }
+
+    /// One BanditMIPS tile fold: for each row of `rows` push
+    /// `(Σ_j v_j, Σ_j v_j²)` over `j` in `0..cols.len()`, where
+    /// `v_j = −(qw[j] · x[row, cols[j]])` — the per-arm mean/variance
+    /// deltas of one block-scheduled pull. `qw[j]` is the caller's query
+    /// weight for coordinate `cols[j]`. The default gathers the tile and
+    /// folds in coordinate order, bit-identical to the scalar path on
+    /// every backing; integer-domain I8 stores override it with the
+    /// affine-hoisted fold (the *documented* I8 semantics change — see
+    /// the [`crate::kernels`] module docs).
+    fn mips_fold_block(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        qw: &[f64],
+        out: &mut Vec<(f64, f64)>,
+    ) {
+        default_mips_fold(self, rows, cols, qw, out)
     }
 
     /// Per-block upper bounds on `⟨row, q⟩` over a contiguous row range,
@@ -500,6 +591,27 @@ impl<'a, V: DatasetView + ?Sized> DatasetView for RowSubsetView<'a, V> {
         // preserves one-for-one.
         let translated = self.translate(rows);
         self.base.for_each_col_block(col, &translated, f);
+    }
+
+    fn for_each_col_block_quant(
+        &self,
+        col: usize,
+        rows: &[usize],
+        f: &mut dyn FnMut(usize, ColBlock),
+    ) {
+        let translated = self.translate(rows);
+        self.base.for_each_col_block_quant(col, &translated, f);
+    }
+
+    fn mips_fold_block(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        qw: &[f64],
+        out: &mut Vec<(f64, f64)>,
+    ) {
+        let translated = self.translate(rows);
+        self.base.mips_fold_block(&translated, cols, qw, out);
     }
 
     fn version(&self) -> u64 {

@@ -67,6 +67,16 @@ impl Json {
         }
     }
 
+    /// Numeric value as f64 (accepts both `F64` and `U64` members — the
+    /// bench trendline reader treats every number as a measurement).
+    pub fn as_f64(&self) -> Option<f64> {
+        match *self {
+            Json::F64(v) => Some(v),
+            Json::U64(v) => Some(v as f64),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

@@ -169,7 +169,11 @@ fn fused_quantized_reads_match_decode_path_bitwise_and_error_bound() {
     // error_bound of the original values.
     let m = testkit::gaussian(300, 9, 31);
     for codec in [Codec::I8, Codec::F16] {
-        let opts = StoreOptions { codec, rows_per_chunk: 64, ..Default::default() };
+        // int_domain pinned off: this test is the bitwise contract of the
+        // decode-to-f32 chain (the integer-domain path is exercised — and
+        // envelope-bounded — separately below).
+        let opts =
+            StoreOptions { codec, rows_per_chunk: 64, int_domain: false, ..Default::default() };
         let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
         let rows: Vec<usize> = (0..m.n).step_by(3).collect();
         let cols: Vec<usize> = (0..m.d).collect();
@@ -359,6 +363,62 @@ fn quantized_serving_path_is_allocation_and_decode_free_in_steady_state() {
     // The LRU cache was never consulted on the fused path.
     let cache = cs.cache_counters();
     assert_eq!((cache.hits, cache.misses), (0, 0), "fused path bypasses the cache");
+}
+
+#[test]
+fn prop_integer_domain_dot_within_envelope_and_thread_invariant() {
+    // Satellite acceptance: the i32-domain dot stays within the
+    // documented envelope of the decode-to-f32 chain — per chunk run,
+    // (W/2)·Σ u_c with W the weight-grid step, bounded here via each
+    // block's own stats (u ≤ 255 per element) — and the integer path
+    // keeps the determinism contract: bit-identical answers, samples,
+    // and op totals at threads {1, 8}.
+    prop_check(
+        0x1D07,
+        12,
+        |r| (16 + r.below(200), 1 + r.below(24), r.next_u64()),
+        |&(n, d, seed)| {
+            let m = testkit::gaussian(n, d, seed);
+            let mk = |int_domain: bool| {
+                ColumnStore::from_matrix(
+                    &m,
+                    &StoreOptions {
+                        codec: Codec::I8,
+                        rows_per_chunk: 32,
+                        int_domain,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| e.to_string())
+            };
+            let f32dom = mk(false)?;
+            let intdom = mk(true)?;
+            let mut rng = Rng::new(seed ^ 0x17);
+            let q: Vec<f32> = (0..d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let rows: Vec<usize> = (0..n).collect();
+            let (mut a, mut b) = (vec![0f64; n], vec![0f64; n]);
+            f32dom.dot_batch(&rows, &q, &mut a);
+            intdom.dot_batch(&rows, &q, &mut b);
+            for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+                let blk = r / intdom.chunk_rows();
+                let mut w_max = 0f64;
+                for c in 0..d {
+                    let s = intdom.chunk_stats(c, blk);
+                    let scale = ((s.max as f64) - (s.min as f64)) / 255.0;
+                    w_max = w_max.max((q[c] as f64 * scale).abs());
+                }
+                let bound = 0.5 * (w_max / 127.0) * 255.0 * d as f64 + 1e-3;
+                if (x - y).abs() > bound {
+                    return Err(format!("row {r}: f32dom {x} vs intdom {y} (bound {bound})"));
+                }
+            }
+            let seq = run_mips(&intdom, &q, 1);
+            if run_mips(&intdom, &q, 8) != seq {
+                return Err("int-domain MIPS diverged at threads=8".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
