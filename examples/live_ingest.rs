@@ -26,7 +26,7 @@ use adaptive_sampling::forest::{
     Impurity, Solver, SplitContext, TrainSet,
 };
 use adaptive_sampling::kmedoids::banditpam::{bandit_pam, bandit_pam_refresh, BanditPamConfig};
-use adaptive_sampling::metrics::{LatencyRecorder, OpCounter};
+use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::mips::banditmips::BanditMipsConfig;
 use adaptive_sampling::mips::refresh::{refresh as mips_refresh, solve_model};
 use adaptive_sampling::store::{
@@ -84,14 +84,12 @@ fn main() {
         .collect();
 
     let t0 = std::time::Instant::now();
-    let mut lat = LatencyRecorder::new();
     let (mut v_lo, mut v_hi) = (u64::MAX, 0u64);
     let mut total_samples = 0u64;
     for window in queries.chunks(32) {
         let receivers: Vec<_> = window.iter().map(|q| server.submit(q.clone())).collect();
         for rx in receivers {
             let resp = rx.recv().expect("response");
-            lat.record(resp.latency);
             total_samples += resp.samples;
             v_lo = v_lo.min(resp.version);
             v_hi = v_hi.max(resp.version);
@@ -107,7 +105,6 @@ fn main() {
         "served {n_queries} queries in {wall:.2}s ({:.0} qps) across versions {v_lo}..={v_hi} (last pinned {last})",
         n_queries as f64 / wall
     );
-    println!("latency: {}", lat.summary());
     println!(
         "final state: version {} with {} rows in {} segments; mean samples/query {:.0}",
         DatasetView::version(&*final_snap),
@@ -115,16 +112,21 @@ fn main() {
         final_snap.n_segments(),
         total_samples as f64 / n_queries as f64
     );
-    // Kernel-layer observability: on quantized in-RAM segments the fused
-    // read path leaves the decoded-chunk LRU untouched (decode-free
-    // serving); with --store=...,spill the hit/miss split shows how well
-    // the cache amortizes disk reads.
-    println!(
-        "decoded-chunk LRU (all segments): {} | full-chunk decodes={} spill_reads={}",
-        final_snap.cache_counters(),
-        final_snap.chunk_decodes(),
-        final_snap.spill_reads()
-    );
+    // One registry printer for everything operational: serve.* instruments
+    // (latency histogram, query/batch counters) come straight from the
+    // coordinator, live.* from the ingest path, and the store counters are
+    // folded in as gauges. Kernel-layer observability: on quantized in-RAM
+    // segments the fused read path leaves the decoded-chunk LRU untouched
+    // (decode-free serving, store.chunk_decodes=0); with --store=...,spill
+    // the hit/miss split shows how well the cache amortizes disk reads.
+    let obs = adaptive_sampling::obs::registry();
+    let cache = final_snap.cache_counters();
+    obs.gauge("store.cache_hits").set(cache.hits);
+    obs.gauge("store.cache_misses").set(cache.misses);
+    obs.gauge("store.cache_evictions").set(cache.evictions);
+    obs.gauge("store.chunk_decodes").set(final_snap.chunk_decodes());
+    obs.gauge("store.spill_reads").set(final_snap.spill_reads());
+    println!("\nmetrics snapshot:\n{}", obs.snapshot().render());
 
     // ---- warm-started refresh: BanditMIPS standing query --------------
     println!("\n== refresh: BanditMIPS standing query ==");

@@ -19,12 +19,11 @@
 //! `spill`, item chunks stream from a temp file through a bounded cache
 //! (the out-of-core path end to end).
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
 use adaptive_sampling::data::synthetic::lowrank_like;
-use adaptive_sampling::metrics::{LatencyRecorder, OpCounter};
+use adaptive_sampling::metrics::OpCounter;
 use adaptive_sampling::mips::naive_mips;
 use adaptive_sampling::runtime::service::PjrtHandle;
 use adaptive_sampling::runtime::ArtifactStore;
@@ -106,7 +105,6 @@ fn main() {
     // reflects service time + bounded queueing, not a 400-deep backlog.
     let inflight = 32;
     let t0 = std::time::Instant::now();
-    let mut lat = LatencyRecorder::new();
     let mut hits = 0usize;
     let mut total_samples = 0u64;
     let mut canary_ok = 0usize;
@@ -115,7 +113,6 @@ fn main() {
         let receivers: Vec<_> = chunk_q.iter().map(|q| server.submit(q.clone())).collect();
         for (rx, &want) in receivers.into_iter().zip(chunk_t) {
             let resp = rx.recv().expect("response");
-            lat.record(resp.latency);
             total_samples += resp.samples;
             if resp.top_atoms.first() == Some(&want) {
                 hits += 1;
@@ -129,7 +126,6 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("served {n_queries} queries in {wall:.2}s ({:.0} qps)", n_queries as f64 / wall);
-    println!("latency: {}", lat.summary());
     println!(
         "recall@1 vs exact: {:.3} ({hits}/{n_queries})",
         hits as f64 / n_queries as f64
@@ -143,26 +139,26 @@ fn main() {
     if canary_total > 0 {
         println!("PJRT canary validation: {canary_ok}/{canary_total} agreements");
     }
-    println!(
-        "dispatcher batches: {}",
-        server.stats.batches.load(Ordering::Relaxed)
-    );
+
+    // Everything operational comes from the one registry printer: the
+    // serve.* instruments the coordinator records on its own (latency
+    // histogram, query/batch/sample counters, last pinned version), plus
+    // the store counters folded in as gauges. The decode-free quantized
+    // path stays observable here: in-RAM encoded stores serve the whole
+    // run with store.chunk_decodes=0 and an untouched LRU (the fused
+    // kernels read encoded bytes in place); spilled stores show the
+    // cache doing its disk-amortization job.
+    let obs = adaptive_sampling::obs::registry();
     if let Some(cs) = &column {
-        println!(
-            "store counters: decode_ops={} spill_reads={} cache_resident={}B",
-            cs.decode_ops(),
-            cs.spill_reads(),
-            cs.cache_resident_bytes()
-        );
-        // The decode-free quantized path made observable: in-RAM encoded
-        // stores serve the whole run with chunk_decodes=0 and an untouched
-        // LRU (the fused kernels read encoded bytes in place); spilled
-        // stores show the cache doing its disk-amortization job.
-        println!(
-            "decoded-chunk LRU: {} | full-chunk decodes={}",
-            cs.cache_counters(),
-            cs.chunk_decodes()
-        );
+        obs.gauge("store.decode_ops").set(cs.decode_ops());
+        obs.gauge("store.spill_reads").set(cs.spill_reads());
+        obs.gauge("store.chunk_decodes").set(cs.chunk_decodes());
+        obs.gauge("store.cache_resident_bytes").set(cs.cache_resident_bytes() as u64);
+        let cache = cs.cache_counters();
+        obs.gauge("store.cache_hits").set(cache.hits);
+        obs.gauge("store.cache_misses").set(cache.misses);
+        obs.gauge("store.cache_evictions").set(cache.evictions);
     }
+    println!("\nmetrics snapshot:\n{}", obs.snapshot().render());
     server.shutdown();
 }

@@ -433,6 +433,29 @@ impl<'p> Engine<'p> {
             }
             alive = kept;
             debug_assert!(!alive.is_empty(), "eliminated every arm");
+
+            // Sampling telemetry: one record per elimination round, seen
+            // *after* this round's eliminations (so the arms-alive series
+            // is monotone non-increasing). Pure reads of loop state and
+            // the scoreboard — no RNG, counter, or arithmetic is touched,
+            // which is what keeps tracing perturbation-free (see
+            // `crate::obs`).
+            if crate::obs::enabled() {
+                let mut min_ci = f64::INFINITY;
+                let mut sum_ci = 0.0;
+                for &a in &alive {
+                    min_ci = min_ci.min(sb.half[a]);
+                    sum_ci += sb.half[a];
+                }
+                crate::obs::emit_round(crate::obs::RoundTrace {
+                    round: rounds - 1,
+                    arms_alive: alive.len(),
+                    pulls: batch.len(),
+                    n_used: n_used as u64,
+                    min_ci,
+                    mean_ci: sum_ci / alive.len() as f64,
+                });
+            }
         }
 
         let survivors_at_end = alive.len();

@@ -209,15 +209,27 @@ fn serve_batch(
     rng: &mut Rng,
     stats: &ServerStats,
 ) {
+    let _batch_span = crate::obs::span("serve.batch");
+    // Registry instruments (operational telemetry, never gated): resolved
+    // once per batch, recorded lock-free per query.
+    let obs = crate::obs::registry();
+    let latency_us = obs.histogram("serve.latency_us");
+    let queries_ctr = obs.counter("serve.queries");
+    let samples_ctr = obs.counter("serve.samples");
+    obs.counter("serve.batches").incr();
     // Pin ONE snapshot for the whole batch: every query in it reads a
     // single consistent dataset version while the ingest thread keeps
     // committing and swapping newer ones in (static substrates pin to
     // themselves; see `store::pin`).
-    let pinned = crate::store::pin(atoms);
+    let pinned = {
+        let _span = crate::obs::span("serve.pin");
+        crate::store::pin(atoms)
+    };
     let version = pinned.version();
     // fetch_max, not store: concurrent batch workers may pin out of order,
     // and the field is documented monotone.
     stats.last_version.fetch_max(version, Ordering::Relaxed);
+    obs.gauge("serve.last_version").set_max(version);
     // Shared warm-start coordinate cache for the batch (§4.3.1).
     let d = pinned.n_cols();
     let warm = if cfg.warm_coords > 0 && batch.len() > 1 {
@@ -226,6 +238,7 @@ fn serve_batch(
         Vec::new()
     };
     for req in batch {
+        let _query_span = crate::obs::span("serve.query");
         let served = stats.served.fetch_add(1, Ordering::Relaxed);
         // Per-request counter: the global one is shared across workers, so
         // window deltas would overcount under concurrency.
@@ -234,9 +247,13 @@ fn serve_batch(
         let (top, validated) =
             answer(&*pinned, cfg, backend, &req.query, &warm, served, seed, &local, stats);
         stats.samples.add(local.get());
+        queries_ctr.incr();
+        samples_ctr.add(local.get());
+        let latency = req.submitted.elapsed();
+        latency_us.record(latency.as_micros() as u64);
         let _ = req.respond.send(QueryResponse {
             top_atoms: top,
-            latency: req.submitted.elapsed(),
+            latency,
             samples: local.get(),
             validated,
             version,

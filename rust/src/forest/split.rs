@@ -351,7 +351,10 @@ pub fn solve_mab_threaded(
         seed,
         threads,
     };
-    let r = successive_elimination(&mut arms, &bcfg);
+    let r = {
+        let _span = crate::obs::span("solver.mabsplit");
+        successive_elimination(&mut arms, &bcfg)
+    };
     let best = r.best[0];
     let fi = arm_offsets.partition_point(|&o| o <= best) - 1;
     let t = best - arm_offsets[fi];

@@ -76,6 +76,7 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
     ps: &P,
     cfg: &BanditPamConfig,
 ) -> (KmResult, BanditPamStats) {
+    let _span = crate::obs::span("solver.banditpam");
     let before = ps.counter().get();
     let n = ps.len();
     let k = cfg.km.k;
@@ -85,12 +86,18 @@ pub fn bandit_pam_instrumented<P: PointSet + ?Sized>(
     // ---------------- BUILD ----------------
     let mut medoids: Vec<usize> = Vec::with_capacity(k);
     let mut d1 = vec![f64::INFINITY; n];
-    for step in 0..k {
-        stats.build_sigmas.push(build_step(ps, cfg, &mut medoids, &mut d1, step));
+    {
+        let _span = crate::obs::span("solver.banditpam.build");
+        for step in 0..k {
+            stats.build_sigmas.push(build_step(ps, cfg, &mut medoids, &mut d1, step));
+        }
     }
 
     // ---------------- SWAP ----------------
-    let swaps = swap_phase(ps, cfg, &mut medoids);
+    let swaps = {
+        let _span = crate::obs::span("solver.banditpam.swap");
+        swap_phase(ps, cfg, &mut medoids)
+    };
     (finish(ps, medoids, swaps, before), stats)
 }
 
@@ -111,6 +118,7 @@ pub fn bandit_pam_refresh<P: PointSet + ?Sized>(
     prev_medoids: &[usize],
     cfg: &BanditPamConfig,
 ) -> KmResult {
+    let _span = crate::obs::span("solver.banditpam_refresh");
     let before = ps.counter().get();
     let n = ps.len();
     let k = cfg.km.k;

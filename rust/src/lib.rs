@@ -35,6 +35,15 @@
 //! schema-versioned cost records, diffed in CI against committed
 //! baselines (`benches/baselines/`) by `repro perfgate check` — so every
 //! complexity win above is pinned, machine-independently, per PR.
+//!
+//! Watching it all run is [`obs`]: zero-dependency observability. The
+//! engine emits per-round sampling telemetry (arms alive, CI widths),
+//! a process-wide metrics registry unifies counters/gauges/log-scale
+//! histograms behind one byte-stable snapshot, and RAII spans trace the
+//! serving and ingest paths into bounded per-thread rings (`repro
+//! trace` / `repro metrics`) — all under a test-enforced contract that
+//! enabling instrumentation changes no answer digest and no gated op
+//! count.
 
 pub mod bandit;
 pub mod coordinator;
@@ -47,6 +56,7 @@ pub mod kernels;
 pub mod kmedoids;
 pub mod metrics;
 pub mod mips;
+pub mod obs;
 pub mod runtime;
 pub mod store;
 pub mod util;

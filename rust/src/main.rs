@@ -9,6 +9,8 @@
 //! repro perfgate <run|baseline|check|list> [--tier smoke|full]
 //!               [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]
 //! repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]
+//! repro trace [--scenario NAME] [--out FILE]   # traced scenario -> JSON
+//! repro metrics [--queries N] [--out FILE]     # serving workload -> registry snapshot
 //! ```
 
 use std::sync::Arc;
@@ -30,15 +32,19 @@ fn main() {
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("perfgate") => cmd_perfgate(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("metrics") => cmd_metrics(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench> [...]\n\
+                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench|trace|metrics> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
                  repro check-artifacts\n  \
                  repro perfgate <run|baseline|check|list> [--tier smoke|full] \
                  [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]\n  \
-                 repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]"
+                 repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]\n  \
+                 repro trace [--scenario NAME] [--out FILE]\n  \
+                 repro metrics [--queries N] [--out FILE]"
             );
             2
         }
@@ -350,6 +356,137 @@ fn cmd_bench(args: &[String]) -> i32 {
         }
         _ => usage(),
     }
+}
+
+/// `repro trace` — run one perf-gate scenario with tracing enabled and
+/// write the drained span/round-telemetry document to disk. Exits
+/// non-zero if the written JSON fails to re-parse, spans don't nest, or
+/// any solver's arms-alive series isn't monotone non-increasing — the
+/// structural invariants CI's obs-smoke step leans on.
+fn cmd_trace(args: &[String]) -> i32 {
+    use adaptive_sampling::harness;
+    use adaptive_sampling::obs;
+    use adaptive_sampling::util::json::Json;
+
+    let name = flag_value(args, "--scenario").unwrap_or("banditmips/cold/sm/matrix/t1");
+    let out_path = flag_value(args, "--out").unwrap_or("BENCH_trace.json");
+    let Some(scenario) = harness::registry().into_iter().find(|s| s.name() == name) else {
+        eprintln!("trace: unknown scenario {name:?} (names: `repro perfgate list --tier full`)");
+        return 2;
+    };
+
+    // Discard anything buffered, run traced, drain.
+    obs::set_enabled(false);
+    drop(obs::drain());
+    obs::set_enabled(true);
+    let record = scenario.run();
+    obs::set_enabled(false);
+    let doc = obs::drain();
+
+    let text = doc.to_pretty_string();
+    if let Err(e) = std::fs::write(out_path, &text) {
+        eprintln!("trace: write {out_path}: {e}");
+        return 1;
+    }
+    // Validate the re-parsed bytes: what's on disk is what must hold up.
+    let parsed = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("trace: wrote unparseable JSON: {e:#}");
+            return 1;
+        }
+    };
+    let stats = match obs::validate(&parsed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace: invalid trace: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "trace: {name} — {} spans, {} rounds, max depth {}, dropped {} \
+         (answer digest {:#018x})",
+        stats.spans, stats.rounds, stats.max_depth, stats.dropped, record.digest
+    );
+    let mut bad = false;
+    for (span, series) in obs::arms_alive_series(&parsed) {
+        let shown: Vec<String> = series.iter().map(u64::to_string).collect();
+        println!("  span {span}: arms alive per round: {}", shown.join(" "));
+        if !series.windows(2).all(|w| w[1] <= w[0]) {
+            eprintln!("trace: span {span}: arms-alive series is not monotone non-increasing");
+            bad = true;
+        }
+    }
+    println!("trace: wrote {out_path}");
+    if bad {
+        1
+    } else {
+        0
+    }
+}
+
+/// `repro metrics` — exercise the serving + live-ingest path on a small
+/// synthetic workload, then print (and optionally write) the unified
+/// registry snapshot: the same instruments and printer the examples use.
+fn cmd_metrics(args: &[String]) -> i32 {
+    use adaptive_sampling::obs;
+    use adaptive_sampling::store::{LiveStore, StoreOptions};
+
+    let n_queries: usize =
+        flag_value(args, "--queries").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let out = flag_value(args, "--out");
+
+    let (n0, d) = (256usize, 64usize);
+    let live = match LiveStore::new(d, StoreOptions::default()) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("metrics: {e:#}");
+            return 1;
+        }
+    };
+    let items = lowrank_like(n0, d, 15, 7);
+    if let Err(e) = live.commit_batch(&items) {
+        eprintln!("metrics: {e:#}");
+        return 1;
+    }
+
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_timeout_us: 200,
+        warm_coords: 32,
+        validate_every: 0,
+        ..Default::default()
+    };
+    println!("metrics: serving {n_queries} queries over a live {n0}x{d} store");
+    let server = MipsServer::start(live.clone(), cfg, Backend::NativeBandit);
+    let mut rng = Rng::new(7);
+    let receivers: Vec<_> = (0..n_queries)
+        .map(|i| {
+            // Interleave a few ingest commits so live.* instruments move.
+            if i % 16 == 8 {
+                let _ = live.commit_batch(&lowrank_like(16, d, 15, 1_000 + i as u64));
+            }
+            let base = items.row(rng.below(n0));
+            let q: Vec<f32> = base.iter().map(|&v| v + 0.3 * rng.normal() as f32).collect();
+            server.submit(q)
+        })
+        .collect();
+    for rx in receivers {
+        let _ = rx.recv().expect("response");
+    }
+    server.shutdown();
+
+    let snap = obs::registry().snapshot();
+    print!("{}", snap.render());
+    if let Some(path) = out {
+        if let Err(e) = std::fs::write(path, snap.to_json().to_pretty_string()) {
+            eprintln!("metrics: write {path}: {e}");
+            return 1;
+        }
+        println!("metrics: wrote snapshot to {path}");
+    }
+    0
 }
 
 fn cmd_check_artifacts() -> i32 {

@@ -190,40 +190,72 @@ impl CounterSet {
     }
 }
 
-/// Latency recorder for the serving coordinator: stores microsecond
-/// samples and reports percentiles/throughput.
+/// Latency recorder for the serving coordinator: microsecond samples in
+/// a **bounded** fixed-bucket log-scale histogram
+/// ([`crate::obs::LogHistogram`]) — memory stays O(1) no matter how long
+/// the server runs, and recorders merge shard-style (elementwise bucket
+/// addition). Percentiles are bucket upper bounds, within ~25% relative
+/// error at every scale (exact below 8µs).
+///
+/// [`LatencyRecorder::exact`] additionally keeps the raw f64 samples
+/// (unbounded `Vec` — tests only) so percentile assertions can be tight;
+/// merging an exact recorder with a histogram-only one degrades the
+/// result to histogram-only.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
-    samples_us: Vec<f64>,
+    hist: crate::obs::LogHistogram,
+    exact: Option<Vec<f64>>,
 }
 
 impl LatencyRecorder {
+    /// Histogram-backed recorder (the serving default: bounded memory).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Exact-sample mode: raw samples kept alongside the histogram, for
+    /// tests that assert tight percentiles. Unbounded — never use on the
+    /// serving path.
+    pub fn exact() -> Self {
+        LatencyRecorder { hist: crate::obs::LogHistogram::new(), exact: Some(Vec::new()) }
+    }
+
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        let us = d.as_secs_f64() * 1e6;
+        self.hist.record(us.round() as u64);
+        if let Some(samples) = &mut self.exact {
+            samples.push(us);
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.samples_us.len()
+        self.hist.count() as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
+        self.hist.is_empty()
     }
 
     pub fn merge(&mut self, other: &LatencyRecorder) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.hist.merge(&other.hist);
+        match (&mut self.exact, &other.exact) {
+            (Some(dst), Some(src)) => dst.extend_from_slice(src),
+            (exact, _) => *exact = None,
+        }
     }
 
     pub fn p(&self, q: f64) -> f64 {
-        crate::util::stats::quantile(&self.samples_us, q)
+        match &self.exact {
+            Some(samples) => crate::util::stats::quantile(samples, q),
+            None => self.hist.quantile(q) as f64,
+        }
     }
 
     pub fn mean_us(&self) -> f64 {
-        crate::util::stats::mean(&self.samples_us)
+        match &self.exact {
+            Some(samples) => crate::util::stats::mean(samples),
+            None => self.hist.mean(),
+        }
     }
 
     /// Human summary: "n=..., mean=..µs p50=..µs p95=..µs p99=..µs".
@@ -327,13 +359,50 @@ mod tests {
     }
 
     #[test]
-    fn latency_percentiles() {
-        let mut l = LatencyRecorder::new();
+    fn latency_percentiles_exact_mode() {
+        let mut l = LatencyRecorder::exact();
         for i in 1..=100 {
             l.record(Duration::from_micros(i));
         }
         assert!((l.p(0.5) - 50.5).abs() < 1.0);
         assert!(l.p(0.99) > 98.0);
         assert!(!l.summary().is_empty());
+    }
+
+    #[test]
+    fn latency_histogram_mode_is_bounded_and_close() {
+        let mut l = LatencyRecorder::new();
+        for i in 1..=1000 {
+            l.record(Duration::from_micros(i));
+        }
+        assert_eq!(l.len(), 1000);
+        // Bucket upper bounds: within the layout's ~25% relative error.
+        let p50 = l.p(0.5);
+        assert!((450.0..=650.0).contains(&p50), "p50={p50}");
+        assert!(l.p(0.99) >= 950.0);
+        assert!((l.mean_us() - 500.5).abs() < 1.0);
+        // Quantiles are monotone in q.
+        assert!(l.p(0.5) <= l.p(0.95));
+        assert!(l.p(0.95) <= l.p(0.99));
+    }
+
+    #[test]
+    fn latency_merge_degrades_exact_to_histogram() {
+        let mut a = LatencyRecorder::exact();
+        let mut b = LatencyRecorder::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        // The merged recorder is histogram-backed (b had no raw samples),
+        // so percentiles come from buckets but cover both inputs.
+        assert!(a.p(0.0) >= 10.0);
+        assert!(a.p(1.0) >= 1000.0);
+        let mut c = LatencyRecorder::exact();
+        c.record(Duration::from_micros(20));
+        let mut d = LatencyRecorder::exact();
+        d.record(Duration::from_micros(40));
+        c.merge(&d);
+        assert!((c.p(0.5) - 30.0).abs() < 10.1); // exact path retained
     }
 }

@@ -211,7 +211,10 @@ pub fn bandit_mips_seeded<V: DatasetView + ?Sized>(
         seed: cfg.seed,
         threads: cfg.threads,
     };
-    let r = successive_elimination(&mut arms, &bcfg);
+    let r = {
+        let _span = crate::obs::span("solver.banditmips");
+        successive_elimination(&mut arms, &bcfg)
+    };
     MipsAnswer { atoms: r.best, samples: counter.get() - before }
 }
 

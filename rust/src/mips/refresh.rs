@@ -99,6 +99,7 @@ pub fn refresh<V: DatasetView + ?Sized>(
     cfg: &BanditMipsConfig,
     counter: &OpCounter,
 ) -> (MipsAnswer, MipsModel) {
+    let _span = crate::obs::span("solver.mips_refresh");
     assert_eq!(atoms.n_cols(), q.len());
     let n = atoms.n_rows();
     let d = atoms.n_cols() as u64;

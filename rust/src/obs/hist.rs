@@ -1,0 +1,352 @@
+//! Fixed-bucket log-scale histograms (HdrHistogram-lite).
+//!
+//! One bucket layout serves every latency/size distribution in the
+//! process: values 0..8 get exact unit buckets, and every octave above
+//! is split into 4 sub-buckets keyed by the top two mantissa bits, so
+//! relative resolution is bounded by ~25% at every scale up to
+//! `u64::MAX`. The layout is *fixed* — [`BUCKETS`] is a compile-time
+//! constant — which is what makes histograms mergeable across shards
+//! (elementwise bucket addition, associative and commutative, the same
+//! discipline as [`crate::metrics::ShardCounters`]) and byte-stably
+//! serializable (a sparse `[index, count]` list in index order).
+//!
+//! Two flavors share the layout: [`LogHistogram`] is a plain `&mut`
+//! value type (snapshots, merging, serialization) and
+//! [`AtomicHistogram`] is the lock-free `&self` recorder the
+//! process-wide registry hands to serving threads.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total number of buckets in the fixed layout: 4 exact unit buckets
+/// (values 0..4), then 4 sub-buckets per octave for octaves 2..=63.
+/// The maximum index, `bucket_of(u64::MAX)`, is `(63 - 1) * 4 + 3 = 251`.
+pub const BUCKETS: usize = 252;
+
+/// Bucket index for a value. Exact for `v < 8`; above that, the index is
+/// `(msb - 1) * 4 + top-two-mantissa-bits`, monotone non-decreasing in `v`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 2 here
+    let sub = ((v >> (msb - 2)) & 3) as usize;
+    (msb - 1) * 4 + sub
+}
+
+/// Inclusive `(lo, hi)` value range of bucket `idx`. Inverse of
+/// [`bucket_of`]: `bucket_of(lo) == idx == bucket_of(hi)` and every value
+/// in between maps to `idx`.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    debug_assert!(idx < BUCKETS);
+    if idx < 8 {
+        // Values 0..8 have dedicated unit buckets (the two layout
+        // branches in `bucket_of` agree on 4..8).
+        return (idx as u64, idx as u64);
+    }
+    let msb = idx / 4 + 1;
+    let sub = (idx % 4) as u64;
+    let width = 1u64 << (msb - 2);
+    let lo = (1u64 << msb) + sub * width;
+    (lo, lo.saturating_add(width - 1))
+}
+
+/// A bounded, mergeable log-scale histogram. Memory is a fixed
+/// `BUCKETS`-entry table regardless of how many samples are recorded —
+/// this is what backs [`crate::metrics::LatencyRecorder`] on the serving
+/// path, where an unbounded sample vector would grow forever.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { buckets: vec![0; BUCKETS], count: 0, sum: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Elementwise bucket addition — associative and commutative, so
+    /// shard-local histograms can merge in any grouping with identical
+    /// results (pinned by `rust/tests/obs.rs`).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Quantile estimate: the upper bound of the bucket containing the
+    /// `ceil(q * count)`-th sample. Exact for values < 8, within one
+    /// sub-bucket (~25% relative) above; monotone non-decreasing in `q`
+    /// because every bucket reports a fixed representative value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_bounds(idx).1;
+            }
+        }
+        bucket_bounds(BUCKETS - 1).1
+    }
+
+    /// Largest non-empty bucket's upper bound (0 when empty).
+    pub fn max(&self) -> u64 {
+        match self.buckets.iter().rposition(|&n| n > 0) {
+            Some(idx) => bucket_bounds(idx).1,
+            None => 0,
+        }
+    }
+
+    /// Sparse canonical JSON: only non-empty buckets, in index order, so
+    /// equal histograms serialize to identical bytes.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            if n > 0 {
+                pairs.push(Json::Arr(vec![Json::U64(idx as u64), Json::U64(n)]));
+            }
+        }
+        let mut o = Json::obj();
+        o.push("count", Json::U64(self.count));
+        o.push("sum", Json::U64(self.sum));
+        o.push("buckets", Json::Arr(pairs));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<LogHistogram, String> {
+        let mut h = LogHistogram::new();
+        h.count = j
+            .get("count")
+            .and_then(Json::as_u64)
+            .ok_or("histogram: missing u64 'count'")?;
+        h.sum = j.get("sum").and_then(Json::as_u64).ok_or("histogram: missing u64 'sum'")?;
+        let pairs = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or("histogram: missing array 'buckets'")?;
+        for p in pairs {
+            let pair = p.as_arr().ok_or("histogram: bucket entry is not an array")?;
+            let (idx, n) = match (
+                pair.first().and_then(Json::as_u64),
+                pair.get(1).and_then(Json::as_u64),
+            ) {
+                (Some(i), Some(n)) if pair.len() == 2 => (i, n),
+                _ => return Err("histogram: bucket entry is not [index, count]".into()),
+            };
+            if idx as usize >= BUCKETS {
+                return Err(format!("histogram: bucket index {idx} out of range"));
+            }
+            h.buckets[idx as usize] = n;
+        }
+        Ok(h)
+    }
+
+    /// Human summary in the [`crate::metrics::LatencyRecorder`] shape,
+    /// treating recorded values as microseconds.
+    pub fn summary_us(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.count,
+            self.mean(),
+            self.quantile(0.50) as f64,
+            self.quantile(0.95) as f64,
+            self.quantile(0.99) as f64
+        )
+    }
+}
+
+/// Lock-free recorder flavor for the process-wide registry: `record`
+/// takes `&self` (relaxed atomics, safe from any serving thread), and
+/// `snapshot` folds the live buckets into a plain [`LogHistogram`].
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Unlike [`LogHistogram::record`], the running
+    /// `sum` wraps on u64 overflow (`fetch_add` cannot saturate) — moot
+    /// at the microsecond/byte magnitudes the registry records.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for (dst, src) in h.buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        h.sum = self.sum.load(Ordering::Relaxed);
+        // A snapshot taken while another thread is mid-`record` could see
+        // the bucket increment before the count increment (relaxed
+        // ordering); derive the count from the buckets so a snapshot is
+        // always internally consistent.
+        h.count = h.buckets.iter().sum();
+        h
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..8u64 {
+            let idx = bucket_of(v);
+            assert_eq!(bucket_bounds(idx), (v, v));
+        }
+    }
+
+    #[test]
+    fn bounds_invert_bucket_of() {
+        let mut probes: Vec<u64> = (0..2048).collect();
+        for shift in 11..64 {
+            let base = 1u64 << shift;
+            probes.extend([base - 1, base, base + 1, base + base / 3]);
+        }
+        probes.push(u64::MAX);
+        for &v in &probes {
+            let idx = bucket_of(v);
+            assert!(idx < BUCKETS, "v={v} idx={idx}");
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v <= hi, "v={v} not in [{lo}, {hi}] (idx={idx})");
+            assert_eq!(bucket_of(lo), idx);
+            assert_eq!(bucket_of(hi), idx);
+        }
+        // Bucket ranges tile the u64 line contiguously.
+        for idx in 1..BUCKETS {
+            assert_eq!(bucket_bounds(idx - 1).1 + 1, bucket_bounds(idx).0, "gap at idx={idx}");
+        }
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for &v in &[100u64, 1_000, 65_537, 1 << 30, (1 << 40) + 12345] {
+            let (lo, hi) = bucket_bounds(bucket_of(v));
+            // Sub-bucket width is 2^(msb-2), i.e. <= 25% of the bucket's
+            // lower bound — quantile answers are within ~25% relative.
+            assert!((hi - lo) as f64 <= 0.25 * lo as f64 + 1.0, "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_exact_within_resolution() {
+        let mut h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!((450..=650).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((950..=1300).contains(&p99), "p99={p99}");
+        assert!(h.quantile(0.0) >= 1);
+        assert!(h.max() >= 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        // No u64::MAX here: at sum overflow the plain recorder saturates
+        // while the atomic one wraps (documented on `record`).
+        let a = AtomicHistogram::new();
+        let mut p = LogHistogram::new();
+        for v in [0u64, 1, 7, 8, 100, 1 << 20, 1 << 40] {
+            a.record(v);
+            p.record(v);
+        }
+        assert_eq!(a.snapshot(), p);
+        a.reset();
+        assert_eq!(a.snapshot(), LogHistogram::new());
+        let top = AtomicHistogram::new();
+        top.record(u64::MAX);
+        assert_eq!(top.snapshot().max(), u64::MAX);
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_stable() {
+        let mut h = LogHistogram::new();
+        for v in [3u64, 3, 50, 999, 1 << 33] {
+            h.record(v);
+        }
+        let s1 = h.to_json().to_pretty_string();
+        let parsed = LogHistogram::from_json(&Json::parse(&s1).unwrap()).unwrap();
+        assert_eq!(parsed, h);
+        assert_eq!(parsed.to_json().to_pretty_string(), s1);
+    }
+}

@@ -1,0 +1,55 @@
+//! Observability: sampling telemetry, a unified metrics registry, and
+//! structured tracing — zero dependencies, threaded through every layer.
+//!
+//! The thesis's claim is that confidence-bounded sampling replaces exact
+//! subroutines with "almost no degradation"; this module makes that
+//! claim *inspectable* instead of post-hoc. Three pillars:
+//!
+//! * **Sampling telemetry** ([`trace::RoundTrace`]): the bandit engine
+//!   emits one record per elimination round — arms alive, pulls, CI
+//!   widths, budget spent — so every query's adaptive-sampling behavior
+//!   is a time series, not just a final op total.
+//! * **Metrics registry** ([`registry::MetricsRegistry`]): process-wide
+//!   named counters, gauges, and fixed-bucket log-scale histograms
+//!   ([`hist::LogHistogram`]), mergeable across shards and serialized
+//!   byte-stably via [`crate::harness::json`]. `repro metrics` exports
+//!   it; the examples print it.
+//! * **Structured tracing** ([`trace::span`]): RAII spans (query →
+//!   snapshot pin → solver rounds; ingest → seal → publish) into
+//!   bounded per-thread ring buffers, drained to JSON by `repro trace`.
+//!
+//! **The no-perturbation contract.** Ring-buffer recording is gated on
+//! [`enabled`] (default **off**) and only ever *reads* solver state;
+//! registry instruments are disjoint from the gated cost-model
+//! counters. Enabling everything here changes no answer digest and no
+//! gated op count — `rust/tests/obs.rs` enforces this bit-exactly at
+//! threads {1, 8} across the smoke scenarios.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, LogHistogram};
+pub use registry::{registry, Gauge, MetricsRegistry, MetricsSnapshot};
+pub use trace::{
+    arms_alive_series, drain, emit_round, span, validate, RoundTrace, SpanGuard, TraceStats,
+};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn event recording (spans + round telemetry) on or off,
+/// process-wide. Off by default; `repro trace` and the obs tests turn
+/// it on. Registry instruments are not gated — they are always-on
+/// relaxed atomics, like the op counters they sit beside.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether event recording is on (one relaxed load — the entire cost of
+/// a disabled span or round emission).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}

@@ -1,0 +1,336 @@
+//! Process-wide metrics registry: named counters, gauges, and log-scale
+//! histograms behind one snapshot type.
+//!
+//! Before this module, operational numbers lived on scattered surfaces —
+//! [`crate::metrics::OpCounter`]s threaded through solver configs,
+//! `CacheCounters` snapshotted per store, ad-hoc `println!` dumps in the
+//! examples. The registry absorbs them behind one discipline:
+//!
+//! * **Register by name, record through an `Arc`.** `counter("x")`
+//!   returns the existing instrument or creates it; recording is a
+//!   relaxed atomic op, safe from any thread, no lock on the hot path.
+//! * **Snapshot, then serialize.** [`MetricsSnapshot`] is a plain value:
+//!   names sorted, serialized byte-stably through [`crate::harness::json`]
+//!   (same canonical-JSON discipline as the perf-gate records), mergeable
+//!   across processes/shards like [`crate::metrics::ShardCounters`].
+//! * **One printer.** [`MetricsSnapshot::render`] is the human format the
+//!   examples and `repro metrics` share — no duplicated dump code.
+//!
+//! Registry instruments are *operational* telemetry and deliberately
+//! disjoint from the gated cost-model counters: perf-gate scenarios keep
+//! reading their own `OpCounter`s, so nothing here can perturb a gated
+//! op count (see the no-perturbation contract in [`crate::obs`]).
+
+use super::hist::{AtomicHistogram, LogHistogram};
+use crate::metrics::OpCounter;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A last-value instrument (current live version, resident bytes, ...).
+/// `set` stores, `set_max` ratchets — both relaxed, both `&self`.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_max(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<OpCounter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<AtomicHistogram>>,
+}
+
+/// The process-wide instrument table. Use [`registry`] for the global
+/// instance; fresh instances exist only for tests.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+/// The global registry.
+pub fn registry() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::default)
+}
+
+impl MetricsRegistry {
+    /// Get-or-create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<OpCounter> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create the named histogram. By convention names ending in
+    /// `_us` record microseconds and names ending in `_bytes` record
+    /// sizes; [`MetricsSnapshot::render`] keys its units off the suffix.
+    pub fn histogram(&self, name: &str) -> Arc<AtomicHistogram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.hists.entry(name.to_string()).or_default().clone()
+    }
+
+    /// A point-in-time copy of every instrument, names sorted (the
+    /// `BTreeMap` iteration order), so equal states serialize to equal
+    /// bytes.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: inner.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+            gauges: inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect(),
+            hists: inner.hists.iter().map(|(n, h)| (n.clone(), h.snapshot())).collect(),
+        }
+    }
+
+    /// Zero every registered instrument (handles stay valid). Test-only
+    /// in spirit: serving code never resets.
+    pub fn reset(&self) {
+        let inner = self.inner.lock().unwrap();
+        for c in inner.counters.values() {
+            c.reset();
+        }
+        for g in inner.gauges.values() {
+            g.set(0);
+        }
+        for h in inner.hists.values() {
+            h.reset();
+        }
+    }
+}
+
+/// A plain, serializable copy of the registry at one instant. Field
+/// vectors are name-sorted; `to_json`/`from_json` round-trip byte-stably
+/// through the canonical [`crate::harness::json`] writer (pinned by
+/// `rust/tests/obs.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub hists: Vec<(String, LogHistogram)>,
+}
+
+const SNAPSHOT_KIND: &str = "metrics_snapshot";
+const SNAPSHOT_SCHEMA: u64 = 1;
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (n, v) in &self.counters {
+            counters.push(n, Json::U64(*v));
+        }
+        let mut gauges = Json::obj();
+        for (n, v) in &self.gauges {
+            gauges.push(n, Json::U64(*v));
+        }
+        let mut hists = Json::obj();
+        for (n, h) in &self.hists {
+            hists.push(n, h.to_json());
+        }
+        let mut o = Json::obj();
+        o.push("kind", Json::Str(SNAPSHOT_KIND.to_string()));
+        o.push("schema", Json::U64(SNAPSHOT_SCHEMA));
+        o.push("counters", counters);
+        o.push("gauges", gauges);
+        o.push("histograms", hists);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot, String> {
+        match j.get("kind").and_then(Json::as_str) {
+            Some(SNAPSHOT_KIND) => {}
+            other => return Err(format!("metrics snapshot: bad kind {other:?}")),
+        }
+        match j.get("schema").and_then(Json::as_u64) {
+            Some(SNAPSHOT_SCHEMA) => {}
+            other => return Err(format!("metrics snapshot: bad schema {other:?}")),
+        }
+        let members = |key: &str| -> Result<Vec<(String, Json)>, String> {
+            match j.get(key) {
+                Some(Json::Obj(members)) => Ok(members.clone()),
+                _ => Err(format!("metrics snapshot: missing object '{key}'")),
+            }
+        };
+        let mut snap = MetricsSnapshot::default();
+        for (n, v) in members("counters")? {
+            let v = v.as_u64().ok_or_else(|| format!("counter '{n}': not a u64"))?;
+            snap.counters.push((n, v));
+        }
+        for (n, v) in members("gauges")? {
+            let v = v.as_u64().ok_or_else(|| format!("gauge '{n}': not a u64"))?;
+            snap.gauges.push((n, v));
+        }
+        for (n, v) in members("histograms")? {
+            let h = LogHistogram::from_json(&v).map_err(|e| format!("histogram '{n}': {e}"))?;
+            snap.hists.push((n, h));
+        }
+        Ok(snap)
+    }
+
+    /// Merge another snapshot in (shard/process aggregation): counters
+    /// and histogram buckets add, gauges take the max — all three are
+    /// associative and commutative, so merge order never matters.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        fn merge_u64(dst: &mut Vec<(String, u64)>, src: &[(String, u64)], max: bool) {
+            for (n, v) in src {
+                match dst.iter_mut().find(|(dn, _)| dn == n) {
+                    Some((_, dv)) => *dv = if max { (*dv).max(*v) } else { *dv + *v },
+                    None => {
+                        let at = dst.partition_point(|(dn, _)| dn < n);
+                        dst.insert(at, (n.clone(), *v));
+                    }
+                }
+            }
+        }
+        merge_u64(&mut self.counters, &other.counters, false);
+        merge_u64(&mut self.gauges, &other.gauges, true);
+        for (n, h) in &other.hists {
+            match self.hists.iter_mut().find(|(dn, _)| dn == n) {
+                Some((_, dh)) => dh.merge(h),
+                None => {
+                    let at = self.hists.partition_point(|(dn, _)| dn < n);
+                    self.hists.insert(at, (n.clone(), h.clone()));
+                }
+            }
+        }
+    }
+
+    /// The one human-readable printer (examples + `repro metrics`).
+    /// Histogram units come from the name suffix: `_us` → µs, `_bytes`
+    /// → bytes, anything else unitless.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            let w = self.counters.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+            for (n, v) in &self.counters {
+                out.push_str(&format!("  {n:<w$}  {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            let w = self.gauges.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+            for (n, v) in &self.gauges {
+                out.push_str(&format!("  {n:<w$}  {v}\n"));
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms:\n");
+            let w = self.hists.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+            for (n, h) in &self.hists {
+                let unit = if n.ends_with("_us") {
+                    "µs"
+                } else if n.ends_with("_bytes") {
+                    "B"
+                } else {
+                    ""
+                };
+                out.push_str(&format!(
+                    "  {n:<w$}  n={} mean={:.1}{unit} p50={}{unit} p95={}{unit} p99={}{unit} max={}{unit}\n",
+                    h.count(),
+                    h.mean(),
+                    h.quantile(0.50),
+                    h.quantile(0.95),
+                    h.quantile(0.99),
+                    h.max(),
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no instruments registered)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instruments_are_shared_by_name() {
+        let r = MetricsRegistry::default();
+        r.counter("q").add(3);
+        r.counter("q").add(4);
+        assert_eq!(r.counter("q").get(), 7);
+        r.gauge("v").set(9);
+        r.gauge("v").set_max(5);
+        assert_eq!(r.gauge("v").get(), 9);
+        r.histogram("lat_us").record(100);
+        assert_eq!(r.histogram("lat_us").count(), 1);
+        r.reset();
+        assert_eq!(r.counter("q").get(), 0);
+        assert_eq!(r.gauge("v").get(), 0);
+        assert_eq!(r.histogram("lat_us").count(), 0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_renders() {
+        let r = MetricsRegistry::default();
+        r.counter("zeta").incr();
+        r.counter("alpha").incr();
+        r.gauge("mid").set(2);
+        r.histogram("lat_us").record(42);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "zeta"]);
+        let text = snap.render();
+        assert!(text.contains("alpha"));
+        assert!(text.contains("lat_us"));
+        assert!(text.contains("µs"));
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let mk = |c: u64, g: u64, h: u64| {
+            let r = MetricsRegistry::default();
+            r.counter("c").add(c);
+            r.gauge("g").set(g);
+            r.histogram("h").record(h);
+            r.snapshot()
+        };
+        let (a, b, c) = (mk(1, 5, 10), mk(2, 3, 1000), mk(4, 9, 7));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut c_ba = c.clone();
+        let mut ba = b.clone();
+        ba.merge(&a);
+        c_ba.merge(&ba);
+        assert_eq!(ab_c, c_ba);
+        assert_eq!(ab_c.counters, vec![("c".to_string(), 7)]);
+        assert_eq!(ab_c.gauges, vec![("g".to_string(), 9)]);
+        assert_eq!(ab_c.hists[0].1.count(), 3);
+    }
+
+    #[test]
+    fn merge_into_empty_keeps_sorted_names() {
+        let r = MetricsRegistry::default();
+        r.counter("b").incr();
+        r.counter("a").incr();
+        r.counter("c").incr();
+        let mut dst = MetricsSnapshot::default();
+        dst.merge(&r.snapshot());
+        let names: Vec<&str> = dst.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,489 @@
+//! Structured tracing: spans + per-round sampling telemetry into
+//! bounded per-thread ring buffers.
+//!
+//! Instrumented code opens a [`span`] (RAII guard; query → snapshot pin
+//! → solver rounds → merge on the serving path, ingest → seal → publish
+//! on the data path), and the bandit engine emits one [`RoundTrace`]
+//! per elimination round via [`emit_round`] — the sample-complexity
+//! time series the thesis argues about, attributed to the innermost
+//! open span on the emitting thread.
+//!
+//! Everything is gated on [`crate::obs::enabled`] (default **off**) and
+//! records into a bounded per-thread ring ([`RING_CAPACITY`] events;
+//! overflow drops the *oldest* events and counts them), so tracing can
+//! stay compiled-in on the serving path. [`drain`] collects every
+//! thread's ring into one canonical-JSON document (`repro trace` writes
+//! it to disk), and [`validate`] re-checks the structural invariants —
+//! spans nest properly per thread — that CI's obs-smoke step asserts.
+//!
+//! **No-perturbation contract:** recording reads pre-existing state
+//! (scoreboard CI widths, loop indices, a monotonic clock) and writes
+//! only to obs-owned rings. It never touches an [`crate::metrics`]
+//! `OpCounter`, an RNG, or any solver arithmetic, so enabling tracing
+//! changes no answer digest and no gated op count — enforced at threads
+//! {1, 8} by `rust/tests/obs.rs`.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity, in events. A smoke-tier solver query emits
+/// a few hundred events; long serving sessions wrap and keep the newest.
+pub const RING_CAPACITY: usize = 4096;
+
+/// One elimination round of a bandit run, as seen *after* the round's
+/// eliminations: `arms_alive` is the surviving-arm count (monotone
+/// non-increasing over a run), `pulls` the number of arms observed this
+/// round, `n_used` the per-arm sample count spent so far, and
+/// `min_ci`/`mean_ci` the surviving arms' confidence-interval half-widths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundTrace {
+    pub round: usize,
+    pub arms_alive: usize,
+    pub pulls: usize,
+    pub n_used: u64,
+    pub min_ci: f64,
+    pub mean_ci: f64,
+}
+
+#[derive(Clone, Debug)]
+enum Event {
+    SpanStart { id: u64, parent: u64, name: &'static str, t_ns: u64 },
+    SpanEnd { id: u64, t_ns: u64 },
+    Round { span: u64, trace: RoundTrace },
+}
+
+#[derive(Default)]
+struct Ring {
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.events.len() >= RING_CAPACITY {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// Every thread's ring, registered on that thread's first event so
+/// [`drain`] can collect from pool workers it never ran on.
+fn all_rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn push_event(ev: Event) {
+    LOCAL_RING.with(|cell| {
+        let mut local = cell.borrow_mut();
+        let ring = local.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring::default()));
+            all_rings().lock().unwrap().push(ring.clone());
+            ring
+        });
+        ring.lock().unwrap().push(ev);
+    });
+}
+
+/// Nanoseconds since the first obs timestamp in this process (a
+/// monotonic clock — never wall time, so traces are replay-stable).
+fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// RAII span guard: records `SpanEnd` (and pops the thread's span stack)
+/// on drop. Inert (id 0) when tracing was disabled at open time.
+#[must_use = "a span closes when the guard drops; binding to _ closes it immediately"]
+pub struct SpanGuard {
+    id: u64,
+}
+
+/// Open a span on the current thread. `name` is a static label like
+/// `"solver.banditmips"` or `"ingest.seal"`; nesting comes from open
+/// guards on the same thread. When tracing is disabled this returns an
+/// inert guard and records nothing.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { id: 0 };
+    }
+    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = SPAN_STACK.with(|s| s.borrow().last().copied().unwrap_or(0));
+    push_event(Event::SpanStart { id, parent, name, t_ns: now_ns() });
+    SPAN_STACK.with(|s| s.borrow_mut().push(id));
+    SpanGuard { id }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.id == 0 {
+            return;
+        }
+        SPAN_STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            // Guards drop in reverse open order on one thread, so the id
+            // is the top; be tolerant anyway (a mem::forget'd guard must
+            // not corrupt the stack for its siblings).
+            if stack.last() == Some(&self.id) {
+                stack.pop();
+            } else {
+                stack.retain(|&id| id != self.id);
+            }
+        });
+        push_event(Event::SpanEnd { id: self.id, t_ns: now_ns() });
+    }
+}
+
+/// Record one elimination round, attributed to the innermost open span
+/// on this thread (0 when none). No-op when tracing is disabled.
+pub fn emit_round(trace: RoundTrace) {
+    if !super::enabled() {
+        return;
+    }
+    let span = SPAN_STACK.with(|s| s.borrow().last().copied().unwrap_or(0));
+    push_event(Event::Round { span, trace });
+}
+
+const TRACE_KIND: &str = "obs_trace";
+const TRACE_SCHEMA: u64 = 1;
+
+fn event_to_json(ev: &Event) -> Json {
+    let mut o = Json::obj();
+    match ev {
+        Event::SpanStart { id, parent, name, t_ns } => {
+            o.push("ev", Json::Str("start".to_string()));
+            o.push("id", Json::U64(*id));
+            o.push("parent", Json::U64(*parent));
+            o.push("name", Json::Str((*name).to_string()));
+            o.push("t_ns", Json::U64(*t_ns));
+        }
+        Event::SpanEnd { id, t_ns } => {
+            o.push("ev", Json::Str("end".to_string()));
+            o.push("id", Json::U64(*id));
+            o.push("t_ns", Json::U64(*t_ns));
+        }
+        Event::Round { span, trace } => {
+            o.push("ev", Json::Str("round".to_string()));
+            o.push("span", Json::U64(*span));
+            o.push("round", Json::U64(trace.round as u64));
+            o.push("alive", Json::U64(trace.arms_alive as u64));
+            o.push("pulls", Json::U64(trace.pulls as u64));
+            o.push("n_used", Json::U64(trace.n_used));
+            o.push("min_ci", Json::F64(trace.min_ci));
+            o.push("mean_ci", Json::F64(trace.mean_ci));
+        }
+    }
+    o
+}
+
+/// Take every thread's buffered events (rings are emptied, drop counts
+/// reset) and return them as one canonical-JSON trace document:
+/// `{kind, schema, threads: [{thread, dropped, events: [...]}]}`.
+/// Threads with nothing to report are omitted.
+pub fn drain() -> Json {
+    let rings = all_rings().lock().unwrap();
+    let mut threads = Vec::new();
+    for (idx, ring) in rings.iter().enumerate() {
+        let (events, dropped) = {
+            let mut r = ring.lock().unwrap();
+            (std::mem::take(&mut r.events), std::mem::take(&mut r.dropped))
+        };
+        if events.is_empty() && dropped == 0 {
+            continue;
+        }
+        let mut t = Json::obj();
+        t.push("thread", Json::U64(idx as u64));
+        t.push("dropped", Json::U64(dropped));
+        t.push("events", Json::Arr(events.iter().map(event_to_json).collect()));
+        threads.push(t);
+    }
+    let mut doc = Json::obj();
+    doc.push("kind", Json::Str(TRACE_KIND.to_string()));
+    doc.push("schema", Json::U64(TRACE_SCHEMA));
+    doc.push("threads", Json::Arr(threads));
+    doc
+}
+
+/// Structural stats from a validated trace document.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    pub threads: usize,
+    pub spans: usize,
+    pub rounds: usize,
+    pub max_depth: usize,
+    pub dropped: u64,
+}
+
+/// Check a trace document's structural invariants: kind/schema match,
+/// and on every thread with no dropped events, spans nest — each `end`
+/// closes the innermost open span, every `round` is attributed to the
+/// innermost open span, and no span is left open at the end. Threads
+/// that dropped events get field checks only (their prefix was lost, so
+/// nesting cannot be replayed).
+pub fn validate(doc: &Json) -> Result<TraceStats, String> {
+    match doc.get("kind").and_then(Json::as_str) {
+        Some(TRACE_KIND) => {}
+        other => return Err(format!("trace: bad kind {other:?}")),
+    }
+    match doc.get("schema").and_then(Json::as_u64) {
+        Some(TRACE_SCHEMA) => {}
+        other => return Err(format!("trace: bad schema {other:?}")),
+    }
+    let threads = doc
+        .get("threads")
+        .and_then(Json::as_arr)
+        .ok_or("trace: missing array 'threads'")?;
+    let mut stats = TraceStats { threads: threads.len(), ..TraceStats::default() };
+    for t in threads {
+        let tid = t.get("thread").and_then(Json::as_u64).ok_or("trace: thread without id")?;
+        let dropped =
+            t.get("dropped").and_then(Json::as_u64).ok_or("trace: thread without 'dropped'")?;
+        stats.dropped += dropped;
+        let events =
+            t.get("events").and_then(Json::as_arr).ok_or("trace: thread without 'events'")?;
+        let mut stack: Vec<u64> = Vec::new();
+        for ev in events {
+            let kind = ev.get("ev").and_then(Json::as_str).ok_or("trace: event without 'ev'")?;
+            match kind {
+                "start" => {
+                    let id =
+                        ev.get("id").and_then(Json::as_u64).ok_or("trace: start without id")?;
+                    ev.get("name").and_then(Json::as_str).ok_or("trace: start without name")?;
+                    let parent = ev
+                        .get("parent")
+                        .and_then(Json::as_u64)
+                        .ok_or("trace: start without parent")?;
+                    if dropped == 0 && parent != stack.last().copied().unwrap_or(0) {
+                        return Err(format!(
+                            "trace: thread {tid}: span {id} parent {parent} is not the \
+                             innermost open span"
+                        ));
+                    }
+                    stack.push(id);
+                    stats.spans += 1;
+                    stats.max_depth = stats.max_depth.max(stack.len());
+                }
+                "end" => {
+                    let id = ev.get("id").and_then(Json::as_u64).ok_or("trace: end without id")?;
+                    if dropped == 0 {
+                        match stack.pop() {
+                            Some(top) if top == id => {}
+                            top => {
+                                return Err(format!(
+                                    "trace: thread {tid}: end of span {id} but innermost open \
+                                     span is {top:?}"
+                                ))
+                            }
+                        }
+                    } else {
+                        stack.retain(|&open| open != id);
+                    }
+                }
+                "round" => {
+                    let span =
+                        ev.get("span").and_then(Json::as_u64).ok_or("trace: round without span")?;
+                    for key in ["round", "alive", "pulls", "n_used"] {
+                        ev.get(key)
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| format!("trace: round without u64 '{key}'"))?;
+                    }
+                    if dropped == 0 && span != stack.last().copied().unwrap_or(0) {
+                        return Err(format!(
+                            "trace: thread {tid}: round attributed to span {span} but innermost \
+                             open span is {:?}",
+                            stack.last()
+                        ));
+                    }
+                    stats.rounds += 1;
+                }
+                other => return Err(format!("trace: unknown event kind '{other}'")),
+            }
+        }
+        if dropped == 0 && !stack.is_empty() {
+            return Err(format!("trace: thread {tid}: spans left open at drain: {stack:?}"));
+        }
+    }
+    Ok(stats)
+}
+
+/// Per-span arms-alive series, in event order: `(span id, [alive...])`
+/// for every span that recorded at least one round. The engine emits
+/// rounds after elimination, so each series is monotone non-increasing —
+/// the acceptance check behind `repro trace`.
+pub fn arms_alive_series(doc: &Json) -> Vec<(u64, Vec<u64>)> {
+    let mut series: Vec<(u64, Vec<u64>)> = Vec::new();
+    let Some(threads) = doc.get("threads").and_then(Json::as_arr) else {
+        return series;
+    };
+    for t in threads {
+        let Some(events) = t.get("events").and_then(Json::as_arr) else {
+            continue;
+        };
+        for ev in events {
+            if ev.get("ev").and_then(Json::as_str) != Some("round") {
+                continue;
+            }
+            let (Some(span), Some(alive)) = (
+                ev.get("span").and_then(Json::as_u64),
+                ev.get("alive").and_then(Json::as_u64),
+            ) else {
+                continue;
+            };
+            match series.iter_mut().find(|(s, _)| *s == span) {
+                Some((_, alives)) => alives.push(alive),
+                None => series.push((span, vec![alive])),
+            }
+        }
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The obs enabled flag and the ring registry are process-global;
+    // every test that toggles them serializes on this lock (shared
+    // convention with rust/tests/obs.rs, which runs in its own process).
+    fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    // Other crate tests may run concurrently in this process and emit
+    // their own events once a test here flips the global enabled flag,
+    // so every assertion below identifies *this* thread's entry by a
+    // marker it planted instead of assuming the drained doc contains
+    // only its own events. The strict whole-document validation lives
+    // in rust/tests/obs.rs, whose binary fully serializes obs state.
+    fn thread_with_span<'a>(doc: &'a Json, name: &str) -> Option<&'a Json> {
+        doc.get("threads").and_then(Json::as_arr)?.iter().find(|t| {
+            t.get("events").and_then(Json::as_arr).is_some_and(|evs| {
+                evs.iter().any(|e| e.get("name").and_then(Json::as_str) == Some(name))
+            })
+        })
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = obs_lock();
+        super::super::set_enabled(false);
+        drop(drain());
+        {
+            let _s = span("trace_test_disabled");
+            emit_round(RoundTrace {
+                round: 0,
+                arms_alive: 5,
+                pulls: 5,
+                n_used: 10,
+                min_ci: 0.5,
+                mean_ci: 1.0,
+            });
+        }
+        let doc = drain();
+        assert!(thread_with_span(&doc, "trace_test_disabled").is_none());
+    }
+
+    #[test]
+    fn spans_nest_and_validate() {
+        let _g = obs_lock();
+        super::super::set_enabled(true);
+        drop(drain());
+        {
+            let _q = span("trace_test_query");
+            {
+                let _p = span("trace_test_pin");
+            }
+            let _s = span("trace_test_solver");
+            emit_round(RoundTrace {
+                round: 0,
+                arms_alive: 8,
+                pulls: 10,
+                n_used: 16,
+                min_ci: 0.25,
+                mean_ci: 0.5,
+            });
+            emit_round(RoundTrace {
+                round: 1,
+                arms_alive: 3,
+                pulls: 8,
+                n_used: 32,
+                min_ci: 0.12,
+                mean_ci: 0.2,
+            });
+        }
+        super::super::set_enabled(false);
+        let doc = drain();
+        let text = doc.to_pretty_string();
+        let parsed = Json::parse(&text).unwrap();
+        // Validate this thread's entry alone (concurrent test threads
+        // may be mid-span at drain time).
+        let ours = thread_with_span(&parsed, "trace_test_query").expect("our thread").clone();
+        let mut sub = Json::obj();
+        sub.push("kind", Json::Str("obs_trace".to_string()));
+        sub.push("schema", Json::U64(1));
+        sub.push("threads", Json::Arr(vec![ours]));
+        let stats = validate(&sub).expect("trace validates");
+        assert_eq!(stats.spans, 3);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.max_depth, 2);
+        assert_eq!(stats.dropped, 0);
+        let series = arms_alive_series(&sub);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].1, vec![8, 3]);
+    }
+
+    #[test]
+    fn overflow_keeps_newest_and_counts_drops() {
+        let _g = obs_lock();
+        super::super::set_enabled(true);
+        drop(drain());
+        const MARK: u64 = 777_777_777;
+        let total = RING_CAPACITY + 100;
+        for i in 0..total {
+            emit_round(RoundTrace {
+                round: i,
+                arms_alive: 1,
+                pulls: 1,
+                n_used: MARK,
+                min_ci: 0.0,
+                mean_ci: 0.0,
+            });
+        }
+        super::super::set_enabled(false);
+        let doc = drain();
+        let threads = doc.get("threads").and_then(Json::as_arr).unwrap();
+        let ours = threads
+            .iter()
+            .find(|t| {
+                t.get("events").and_then(Json::as_arr).is_some_and(|evs| {
+                    evs.first().is_some_and(|e| {
+                        e.get("n_used").and_then(Json::as_u64) == Some(MARK)
+                    })
+                })
+            })
+            .expect("our ring");
+        assert_eq!(ours.get("dropped").and_then(Json::as_u64), Some(100));
+        let events = ours.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), RING_CAPACITY);
+        // Oldest were dropped: the first surviving round is #100, the
+        // last is the newest.
+        assert_eq!(events[0].get("round").and_then(Json::as_u64), Some(100));
+        assert_eq!(
+            events[events.len() - 1].get("round").and_then(Json::as_u64),
+            Some(total as u64 - 1)
+        );
+    }
+}

@@ -414,6 +414,11 @@ impl LiveStore {
 
     /// Publish `snap` as the current version. Writer lock must be held.
     fn publish(&self, snap: LiveSnapshot) -> Arc<LiveSnapshot> {
+        let _span = crate::obs::span("ingest.publish");
+        let obs = crate::obs::registry();
+        obs.counter("live.publishes").incr();
+        obs.gauge("live.version").set_max(snap.version);
+        obs.gauge("live.rows").set(snap.n as u64);
         let snap = Arc::new(snap);
         *self.current.lock().unwrap() = snap.clone();
         snap
@@ -429,13 +434,17 @@ impl LiveStore {
     /// publish misaligned chunks. The reset costs the reservoir preview
     /// accumulated so far — a warm-start hint, not data.
     pub fn commit_batch(&self, batch: &Matrix) -> Result<Arc<LiveSnapshot>> {
+        let _span = crate::obs::span("ingest.commit");
         let mut w = self.writer.lock().unwrap();
         if batch.n == 0 {
             return Ok(self.pin());
         }
-        let sealed = match w.builder.push_batch(batch) {
-            Ok(()) => w.builder.commit_batch(),
-            Err(e) => Err(e),
+        let sealed = {
+            let _span = crate::obs::span("ingest.seal");
+            match w.builder.push_batch(batch) {
+                Ok(()) => w.builder.commit_batch(),
+                Err(e) => Err(e),
+            }
         };
         let seg = match sealed {
             Ok(seg) => Arc::new(seg),
@@ -444,6 +453,9 @@ impl LiveStore {
                 return Err(e);
             }
         };
+        let obs = crate::obs::registry();
+        obs.counter("live.commits").incr();
+        obs.counter("live.rows_ingested").add(seg.n_rows() as u64);
         w.version += 1;
         w.next_id += seg.n_rows() as u64;
         let cur = self.pin();
@@ -480,10 +492,12 @@ impl LiveStore {
     /// current version — a delete of a missing row is a caller bug, not
     /// something to paper over. An empty id list is a no-op.
     pub fn delete_rows(&self, ids: &[u64]) -> Result<Arc<LiveSnapshot>> {
+        let _span = crate::obs::span("ingest.delete");
         let mut w = self.writer.lock().unwrap();
         if ids.is_empty() {
             return Ok(self.pin());
         }
+        crate::obs::registry().counter("live.deletes").add(ids.len() as u64);
         let cur = self.pin();
         let dead: HashSet<u64> = ids.iter().copied().collect();
         let mut rows = Vec::with_capacity(cur.n - dead.len().min(cur.n));
@@ -521,11 +535,13 @@ impl LiveStore {
     /// only as long as older pinned snapshots reference them; once those
     /// drop, their caches and spill files retire with them.
     pub fn compact(&self) -> Result<Arc<LiveSnapshot>> {
+        let _span = crate::obs::span("ingest.compact");
         let mut w = self.writer.lock().unwrap();
         let cur = self.pin();
         if cur.segments.len() <= 1 && cur.live.is_none() {
             return Ok(cur); // already compact
         }
+        crate::obs::registry().counter("live.compactions").incr();
         // A separate one-shot builder: the streaming writer's reservoir
         // must keep sampling the *stream*, not re-sample compacted rows.
         let mut b = StoreBuilder::new(self.d, self.opts.clone())?;

@@ -1,0 +1,196 @@
+//! Observability contract tests.
+//!
+//! The load-bearing claim of `src/obs` is the **no-perturbation
+//! contract**: enabling sampling telemetry and tracing changes no
+//! answer digest and no gated op count, at any thread count. This suite
+//! pins that bit-exactly across the smoke-tier scenario registry
+//! (threads {1, 8} included), plus the serialization and ring-buffer
+//! invariants the `repro trace` / `repro metrics` CLIs rely on.
+//!
+//! The obs enabled flag and the trace ring registry are process-global,
+//! so every test that toggles them serializes on [`obs_lock`] and
+//! drains before it starts. Tests here can therefore assert on whole
+//! drained documents — unlike the unit tests inside `src/obs`, which
+//! share their process with the rest of the crate's test threads.
+
+use adaptive_sampling::harness::{scenarios_for, Tier};
+use adaptive_sampling::obs::{self, trace, LogHistogram, MetricsRegistry, MetricsSnapshot};
+use adaptive_sampling::util::json::Json;
+use adaptive_sampling::util::rng::Rng;
+use std::sync::Mutex;
+
+fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// The acceptance criterion: instrumentation on vs off is invisible to
+// the deterministic cost model. Every smoke scenario (which spans the
+// three solver families, the store backends, cold + refresh paths, and
+// threads {1, 8}) must produce a bit-identical CostRecord — same
+// counters, same answer digest — with tracing enabled.
+// ---------------------------------------------------------------------
+#[test]
+fn instrumentation_changes_no_digest_or_op_count() {
+    let _g = obs_lock();
+    obs::set_enabled(false);
+    drop(obs::drain());
+    let scenarios = scenarios_for(Tier::Smoke);
+    assert!(scenarios.iter().any(|s| s.name().ends_with("/t1")), "smoke tier lost its t1 runs");
+    assert!(scenarios.iter().any(|s| s.name().ends_with("/t8")), "smoke tier lost its t8 runs");
+    let off: Vec<_> = scenarios.iter().map(|s| s.run()).collect();
+    obs::set_enabled(true);
+    let on: Vec<_> = scenarios.iter().map(|s| s.run()).collect();
+    obs::set_enabled(false);
+    drop(obs::drain());
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a, b, "{}: enabling observability perturbed the cost model", a.scenario);
+    }
+}
+
+// ---------------------------------------------------------------------
+// A traced BanditMIPS run drains to parseable JSON whose spans nest
+// strictly and whose per-span arms-alive series are monotone
+// non-increasing — the same checks `repro trace` enforces in CI.
+// ---------------------------------------------------------------------
+#[test]
+fn traced_banditmips_run_emits_monotone_round_telemetry() {
+    let _g = obs_lock();
+    let scenario = adaptive_sampling::harness::registry()
+        .into_iter()
+        .find(|s| s.name() == "banditmips/cold/sm/matrix/t1")
+        .expect("registered scenario");
+    obs::set_enabled(false);
+    drop(obs::drain());
+    obs::set_enabled(true);
+    let record = scenario.run();
+    obs::set_enabled(false);
+    let text = obs::drain().to_pretty_string();
+    let doc = Json::parse(&text).expect("trace parses back from its serialized form");
+    let stats = obs::validate(&doc).expect("trace validates");
+    assert_eq!(stats.dropped, 0, "smoke-sized run must fit the ring");
+    assert!(stats.spans >= 2, "expected solver spans from warm-up + measured passes: {stats:?}");
+    assert!(stats.rounds > 0, "bandit engine emitted no round telemetry");
+    assert!(record.counters.get("ops").unwrap_or(0) > 0, "solver did no work");
+    let series = obs::arms_alive_series(&doc);
+    assert!(!series.is_empty());
+    for (span, alives) in &series {
+        assert!(
+            alives.windows(2).all(|w| w[0] >= w[1]),
+            "span {span}: arms-alive series is not monotone non-increasing: {alives:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// MetricsSnapshot serializes byte-stably through the canonical JSON
+// writer: serialize ∘ parse ∘ serialize is the identity on bytes, the
+// same discipline as the perf-gate record files.
+// ---------------------------------------------------------------------
+#[test]
+fn metrics_snapshot_round_trips_byte_stably() {
+    let r = MetricsRegistry::default();
+    r.counter("serve.queries").add(12_345);
+    r.counter("serve.batches").add(99);
+    r.gauge("live.version").set(7);
+    r.gauge("store.cache_resident_bytes").set(1 << 20);
+    let h = r.histogram("serve.latency_us");
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        h.record(rng.below(2_000_000) as u64);
+    }
+    let snap = r.snapshot();
+    let text = snap.to_json().to_pretty_string();
+    let back = MetricsSnapshot::from_json(&Json::parse(&text).expect("snapshot parses"))
+        .expect("snapshot deserializes");
+    assert_eq!(back, snap);
+    assert_eq!(
+        back.to_json().to_pretty_string(),
+        text,
+        "serialize ∘ parse must be the identity on bytes"
+    );
+    let rendered = snap.render();
+    assert!(rendered.contains("serve.latency_us"));
+    assert!(rendered.contains("µs"));
+}
+
+// ---------------------------------------------------------------------
+// Histogram merge is associative (and order-insensitive), so per-shard
+// histograms can aggregate in any grouping; quantiles are monotone
+// non-decreasing in q by construction.
+// ---------------------------------------------------------------------
+#[test]
+fn histogram_merge_is_associative_and_quantiles_monotone() {
+    let mk = |seed: u64, n: usize| {
+        let mut rng = Rng::new(seed);
+        let mut h = LogHistogram::new();
+        for _ in 0..n {
+            h.record(rng.below(1_000_000_000) as u64);
+        }
+        h
+    };
+    let (a, b, c) = (mk(1, 400), mk(2, 250), mk(3, 777));
+    let mut ab_c = a.clone();
+    ab_c.merge(&b);
+    ab_c.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "merge must be associative");
+    let mut c_b_a = c.clone();
+    c_b_a.merge(&b);
+    c_b_a.merge(&a);
+    assert_eq!(ab_c, c_b_a, "merge must be order-insensitive");
+    assert_eq!(ab_c.count(), 400 + 250 + 777);
+    let mut prev = 0u64;
+    for i in 0..=100 {
+        let q = i as f64 / 100.0;
+        let v = ab_c.quantile(q);
+        assert!(v >= prev, "quantile({q}) = {v} < quantile of smaller q ({prev})");
+        prev = v;
+    }
+    assert_eq!(ab_c.quantile(1.0), ab_c.max());
+}
+
+// ---------------------------------------------------------------------
+// Ring overflow drops the *oldest* events, counts the drops, and the
+// drained document still validates (with nesting checks relaxed for
+// the thread whose prefix was lost).
+// ---------------------------------------------------------------------
+#[test]
+fn ring_overflow_keeps_newest_events_and_counts_drops() {
+    let _g = obs_lock();
+    obs::set_enabled(false);
+    drop(obs::drain());
+    obs::set_enabled(true);
+    let extra = 250usize;
+    let total = trace::RING_CAPACITY + extra;
+    for i in 0..total {
+        obs::emit_round(obs::RoundTrace {
+            round: i,
+            arms_alive: 1,
+            pulls: 1,
+            n_used: 1,
+            min_ci: 0.0,
+            mean_ci: 0.0,
+        });
+    }
+    obs::set_enabled(false);
+    let doc = obs::drain();
+    let threads = doc.get("threads").and_then(Json::as_arr).expect("threads array");
+    assert_eq!(threads.len(), 1, "only this thread emitted since the last drain");
+    let t = &threads[0];
+    assert_eq!(t.get("dropped").and_then(Json::as_u64), Some(extra as u64));
+    let events = t.get("events").and_then(Json::as_arr).expect("events array");
+    assert_eq!(events.len(), trace::RING_CAPACITY);
+    assert_eq!(events[0].get("round").and_then(Json::as_u64), Some(extra as u64));
+    assert_eq!(
+        events[events.len() - 1].get("round").and_then(Json::as_u64),
+        Some(total as u64 - 1)
+    );
+    let stats = obs::validate(&doc).expect("dropped-prefix trace still validates");
+    assert_eq!(stats.dropped, extra as u64);
+    assert_eq!(stats.rounds, trace::RING_CAPACITY);
+}
