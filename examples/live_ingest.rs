@@ -12,6 +12,9 @@
 //! cargo run --release --example live_ingest
 //! # live store over quantized, file-spilled segments:
 //! cargo run --release --example live_ingest -- --store=column,i8,spill
+//! # durable store: every commit logged to a manifest under the dir, so a
+//! # crash (or a second run) recovers where this one left off:
+//! cargo run --release --example live_ingest -- --data-dir=/tmp/live_demo
 //! ```
 
 use std::sync::atomic::Ordering;
@@ -46,7 +49,21 @@ fn main() {
     );
 
     // ---- versioned ingest under live serving --------------------------
-    let live = Arc::new(LiveStore::new(d, opts).expect("live store"));
+    // With --data-dir the store is durable: segments and a manifest log
+    // land under the directory, and a later `repro recover <dir>` (or a
+    // re-run of this example) replays them to the last complete version.
+    let cli: Vec<String> = std::env::args().collect();
+    let data_dir = cli.iter().find_map(|a| a.strip_prefix("--data-dir="));
+    let live = match data_dir {
+        Some(dir) => {
+            let path = std::path::Path::new(dir);
+            let store = LiveStore::open(d, opts, path).expect("durable store");
+            let v = DatasetView::version(&*store.pin());
+            println!("durable store at {dir}: opened at version {v}");
+            Arc::new(store)
+        }
+        None => Arc::new(LiveStore::new(d, opts).expect("live store")),
+    };
     let items = lowrank_like(n0, d, 15, 7);
     live.commit_batch(&items).expect("base commit");
 

@@ -86,12 +86,24 @@ pub struct RecordSet {
     pub schema: u64,
     /// Tier name (`"smoke"` / `"full"`).
     pub tier: String,
+    /// A provisional baseline was written on an untrusted machine (or by
+    /// hand) and is waiting for CI to re-stamp it: `check` still diffs
+    /// and reports against it, but drift is advisory, not a gate. The
+    /// flag is only serialized when set, so existing stamped baselines
+    /// parse (and re-serialize) unchanged. `perfgate baseline` always
+    /// writes the armed form.
+    pub provisional: bool,
     pub records: Vec<CostRecord>,
 }
 
 impl RecordSet {
     pub fn new(tier: &str) -> RecordSet {
-        RecordSet { schema: SCHEMA_VERSION, tier: tier.to_string(), records: Vec::new() }
+        RecordSet {
+            schema: SCHEMA_VERSION,
+            tier: tier.to_string(),
+            provisional: false,
+            records: Vec::new(),
+        }
     }
 
     pub fn find(&self, scenario: &str) -> Option<&CostRecord> {
@@ -103,6 +115,9 @@ impl RecordSet {
         doc.push("kind", Json::Str("perfgate_cost_model".into()));
         doc.push("schema", Json::U64(self.schema));
         doc.push("tier", Json::Str(self.tier.clone()));
+        if self.provisional {
+            doc.push("provisional", Json::Bool(true));
+        }
         doc.push("records", Json::Arr(self.records.iter().map(CostRecord::to_json).collect()));
         doc
     }
@@ -119,6 +134,7 @@ impl RecordSet {
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("missing tier"))?
             .to_string();
+        let provisional = matches!(json.get("provisional"), Some(Json::Bool(true)));
         let records = json
             .get("records")
             .and_then(Json::as_arr)
@@ -126,7 +142,7 @@ impl RecordSet {
             .iter()
             .map(CostRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(RecordSet { schema, tier, records })
+        Ok(RecordSet { schema, tier, provisional, records })
     }
 
     /// Canonical file contents (trailing newline included).
@@ -196,6 +212,22 @@ mod tests {
         for (a, b) in set.records.iter().zip(&back.records) {
             assert_eq!(a.digest, b.digest);
         }
+    }
+
+    #[test]
+    fn provisional_flag_round_trips_and_defaults_off() {
+        // Absent flag parses as armed — every pre-existing baseline file.
+        let armed = RecordSet::parse(&sample_set().serialize()).unwrap();
+        assert!(!armed.provisional);
+        assert!(!armed.serialize().contains("provisional"));
+        // Set flag survives the byte-identity contract.
+        let mut set = sample_set();
+        set.provisional = true;
+        let text = set.serialize();
+        assert!(text.contains("\"provisional\": true"));
+        let back = RecordSet::parse(&text).unwrap();
+        assert_eq!(back, set);
+        assert_eq!(back.serialize(), text);
     }
 
     #[test]

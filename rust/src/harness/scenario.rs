@@ -27,6 +27,7 @@
 //! "zero per-pull heap allocations" invariant — exactly 0 in steady
 //! state and independent of scenario order.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::anyhow;
@@ -41,7 +42,7 @@ use crate::harness::workloads::{
 use crate::kmedoids::banditpam::{bandit_pam, BanditPamConfig};
 use crate::metrics::{CounterSet, OpCounter};
 use crate::mips::banditmips::BanditMipsConfig;
-use crate::store::{Codec, ColumnStore, DatasetView, StoreOptions, ViewPointSet};
+use crate::store::{Codec, ColumnStore, DatasetView, LiveStore, StoreOptions, ViewPointSet};
 use crate::util::error::Result;
 use crate::util::testkit::{clusterable, refresh_corpus_at, RefreshFixture};
 
@@ -141,6 +142,9 @@ impl Family {
 enum PathKind {
     Cold,
     Refresh,
+    /// Durable-store round trip: commit, drop every handle, replay the
+    /// manifest, solve on the recovered snapshot.
+    Recover,
 }
 
 impl PathKind {
@@ -148,9 +152,13 @@ impl PathKind {
         match self {
             PathKind::Cold => "cold",
             PathKind::Refresh => "refresh",
+            PathKind::Recover => "recover",
         }
     }
 }
+
+/// Process-unique suffix for recovery-scenario scratch directories.
+static RECOVER_SERIAL: AtomicU64 = AtomicU64::new(0);
 
 /// Fixture size: `Sm` keeps PR CI fast; `Md` is the nightly tier's
 /// larger cut of the same distributions.
@@ -236,6 +244,7 @@ impl Scenario {
         match self.path {
             PathKind::Cold => self.execute_cold(),
             PathKind::Refresh => self.execute_refresh(),
+            PathKind::Recover => self.execute_recover(),
         }
     }
 
@@ -311,6 +320,50 @@ impl Scenario {
         counters.set("warm_matches_cold", legs.matches as u64);
         self.store_counters(&mut counters, warm_store.as_deref());
         ExecOut { counters, digest: legs.warm_digest }
+    }
+
+    /// Durability round trip as a cost-model workload: build a durable
+    /// store in a scratch directory (several commits with a deletion in
+    /// between), drop every handle, recover from the manifest alone, and
+    /// answer the MIPS workload on the recovered snapshot. The counters
+    /// pin what recovery reconstructed (rows, segments, version) next to
+    /// the solver's op total, so drift in either the durable write path
+    /// or manifest replay gates like any other cost change.
+    fn execute_recover(&self) -> ExecOut {
+        assert_eq!(self.family, Family::BanditMips, "recover scenarios are MIPS-only");
+        let (n, d, n_queries) = match self.scale {
+            Scale::Sm => (96, 2048, 3),
+            Scale::Md => (200, 8000, 4),
+        };
+        let (atoms, queries) = normal_custom(n, d, n_queries, 5);
+        let opts = self.backend.options(n * d * 4).expect("recover needs a columnar backend");
+        let serial = RECOVER_SERIAL.fetch_add(1, Ordering::Relaxed);
+        let scratch = format!("as_recover_{}_{serial}", std::process::id());
+        let dir = std::env::temp_dir().join(scratch);
+        let rows: Vec<usize> = (0..n).collect();
+        let third = n / 3;
+        {
+            let store = LiveStore::open(d, opts.clone(), &dir).expect("open durable store");
+            store.commit_batch(&atoms.take_rows(&rows[..third])).expect("commit 1");
+            store.commit_batch(&atoms.take_rows(&rows[third..2 * third])).expect("commit 2");
+            store.delete_rows(&[1, third as u64]).expect("delete");
+            store.commit_batch(&atoms.take_rows(&rows[2 * third..])).expect("commit 3");
+        }
+        let (store, report) = LiveStore::recover(&dir, opts).expect("recover");
+        let snap = store.pin();
+        let cfg = BanditMipsConfig { seed: 9, threads: self.threads, ..Default::default() };
+        let wl = MipsWorkload::new(queries, cfg);
+        let c = OpCounter::new();
+        let answers = wl.run(&*snap, &c);
+        drop(snap);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut counters = CounterSet::new();
+        counters.set("ops", c.get());
+        counters.set("recovered_rows", report.rows as u64);
+        counters.set("recovered_segments", report.segments as u64);
+        counters.set("recovered_version", report.version);
+        ExecOut { counters, digest: MipsWorkload::digest(&answers) }
     }
 
     fn pam_fixture(&self) -> (LabeledDataset, usize) {
@@ -420,6 +473,26 @@ pub fn registry() -> Vec<Scenario> {
             });
         }
     }
+    // …and the durability round trip: commit → crash → manifest replay →
+    // solve on the recovered snapshot. The nightly tier also covers the
+    // spilled i8 read path, whose chunks stream straight from the
+    // recovered segment file.
+    v.push(Scenario {
+        family: Family::BanditMips,
+        path: PathKind::Recover,
+        scale: Scale::Sm,
+        backend: Backend::ColumnF32,
+        threads: 1,
+        tier: Tier::Smoke,
+    });
+    v.push(Scenario {
+        family: Family::BanditMips,
+        path: PathKind::Recover,
+        scale: Scale::Sm,
+        backend: Backend::ColumnI8Spill,
+        threads: 1,
+        tier: Tier::Full,
+    });
     // Full (nightly) additions: refresh on the remaining backends,
     // threaded columnar cold runs, and medium-scale cuts.
     for &family in &families {

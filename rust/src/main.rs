@@ -11,6 +11,7 @@
 //! repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]
 //! repro trace [--scenario NAME] [--out FILE]   # traced scenario -> JSON
 //! repro metrics [--queries N] [--out FILE]     # serving workload -> registry snapshot
+//! repro recover <dir>                          # replay a durable store's manifest
 //! ```
 
 use std::sync::Arc;
@@ -34,9 +35,11 @@ fn main() {
         Some("bench") => cmd_bench(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("metrics") => cmd_metrics(&args[1..]),
+        Some("recover") => cmd_recover(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench|trace|metrics> [...]\n\
+                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench|trace|metrics\
+                 |recover> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
                  repro check-artifacts\n  \
@@ -44,7 +47,8 @@ fn main() {
                  [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]\n  \
                  repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]\n  \
                  repro trace [--scenario NAME] [--out FILE]\n  \
-                 repro metrics [--queries N] [--out FILE]"
+                 repro metrics [--queries N] [--out FILE]\n  \
+                 repro recover <dir>"
             );
             2
         }
@@ -174,7 +178,9 @@ fn cmd_serve(args: &[String]) -> i32 {
 ///   `--tolerance` (a fraction; default 0 = exact). A missing baseline
 ///   file fails too, unless `--allow-unstamped` is passed (the CI
 ///   bootstrap mode — otherwise deleting the baseline would silently
-///   disarm the gate).
+///   disarm the gate). A baseline carrying `"provisional": true` is
+///   compared and reported in full but never fails the gate: it was
+///   stamped off-CI and is waiting for the restamp job to arm it.
 /// * `list` — print the tier's scenario names.
 fn cmd_perfgate(args: &[String]) -> i32 {
     use adaptive_sampling::harness::{self, RecordSet, Tier};
@@ -278,6 +284,18 @@ fn cmd_perfgate(args: &[String]) -> i32 {
             };
             let report = harness::compare(&set, &baseline, tolerance);
             print!("{}", report.summary());
+            if baseline.provisional {
+                println!(
+                    "perfgate: PROVISIONAL — {} was stamped on an untrusted machine, so the\n\
+                     drift above is advisory and the gate is DISARMED. CI re-stamps\n\
+                     provisional baselines on the next push to main; to arm one by hand run\n\
+                     `repro perfgate baseline --tier {}` on a trusted machine and commit the\n\
+                     diff (see benches/baselines/README.md).",
+                    baseline_path.display(),
+                    tier.name()
+                );
+                return 0;
+            }
             if report.passed() {
                 0
             } else {
@@ -486,6 +504,44 @@ fn cmd_metrics(args: &[String]) -> i32 {
         }
         println!("metrics: wrote snapshot to {path}");
     }
+    0
+}
+
+/// `repro recover` — replay a durable store's manifest log to its last
+/// complete version and report what recovery found: the recovered
+/// version, live rows, segment count, the arrival counter, how many
+/// torn-tail bytes were truncated, and (if replay stopped early) why.
+/// The row width comes from the manifest header, so no flags are needed.
+fn cmd_recover(args: &[String]) -> i32 {
+    use adaptive_sampling::store::{DatasetView, LiveStore, StoreOptions};
+
+    let Some(dir) = args.first() else {
+        eprintln!("usage: repro recover <dir>");
+        return 2;
+    };
+    let (store, report) =
+        match LiveStore::recover(std::path::Path::new(dir), StoreOptions::default()) {
+            Ok(pair) => pair,
+            Err(e) => {
+                eprintln!("recover: {e:#}");
+                return 1;
+            }
+        };
+    let snap = store.pin();
+    println!(
+        "recovered {dir} to version {} ({} rows, {} segments, next id {})",
+        report.version,
+        report.rows,
+        report.segments,
+        report.next_id
+    );
+    if report.truncated_bytes > 0 {
+        println!("truncated {} torn-tail bytes off the manifest log", report.truncated_bytes);
+    }
+    if let Some(why) = &report.dropped {
+        println!("replay stopped early: {why}");
+    }
+    println!("pinned: version {}, {} rows, width {}", snap.version(), snap.len(), snap.d());
     0
 }
 

@@ -143,7 +143,7 @@ impl StoreOptions {
 /// lossless `F32` codec these are exact for the stored data too; for
 /// lossy codecs decoded values may exceed `[min, max]` by at most one
 /// rounding step.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChunkStats {
     pub min: f32,
     pub max: f32,
@@ -514,6 +514,55 @@ impl ColumnStore {
     /// Reservoir preview rows captured at ingest.
     pub fn preview(&self) -> &[Vec<f32>] {
         &self.preview
+    }
+
+    /// The raw [`StoreOptions::int_domain`] flag this store was built
+    /// with (unlike [`ColumnStore::int_domain`], which also folds in the
+    /// codec/backing preconditions). Persisted in segment headers so a
+    /// recovered store re-derives the exact same effective read path.
+    pub(crate) fn int_domain_flag(&self) -> bool {
+        self.int_domain
+    }
+
+    /// Encoded bytes of chunk `id` (= `col * n_blocks + block`), in the
+    /// exact on-disk/in-RAM codec framing — the payload the durability
+    /// layer writes into segment files. On the Decoded fast path the F32
+    /// codec re-encodes losslessly, so round-tripping through a segment
+    /// file is bit-exact for every backing.
+    pub(crate) fn chunk_bytes(&self, id: usize) -> crate::util::error::Result<Vec<u8>> {
+        match &self.backing {
+            Backing::Decoded(chunks) => {
+                let vals = chunks.get(id).ok_or_else(|| {
+                    crate::util::error::Error::corrupt(format!(
+                        "chunk id {id} out of range ({} decoded chunks)",
+                        chunks.len()
+                    ))
+                })?;
+                let mut out = Vec::new();
+                self.codec.encode(vals, &mut out);
+                Ok(out)
+            }
+            Backing::Encoded(bytes) => bytes.get(id).cloned().ok_or_else(|| {
+                crate::util::error::Error::corrupt(format!(
+                    "chunk id {id} out of range ({} encoded chunks)",
+                    bytes.len()
+                ))
+            }),
+            Backing::Spilled(f) => f.read(id),
+        }
+    }
+
+    /// Stats of chunk `id` in flat chunk-id order (persistence iterates
+    /// ids directly; the `(col, block)` accessor is
+    /// [`ColumnStore::chunk_stats`]).
+    pub(crate) fn chunk_stats_at(&self, id: usize) -> &ChunkStats {
+        &self.stats[id]
+    }
+
+    /// Values in chunk `id`'s block (the last block of a column may be
+    /// short).
+    pub(crate) fn chunk_len(&self, id: usize) -> usize {
+        self.block_len(id % self.n_blocks.max(1))
     }
 
     #[inline]

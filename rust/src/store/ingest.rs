@@ -195,6 +195,30 @@ impl StoreBuilder {
         Ok(())
     }
 
+    /// Discard every uncommitted row and any partially flushed block,
+    /// returning the builder to the state of a fresh
+    /// [`StoreBuilder::new`] while keeping buffer capacity. The
+    /// reservoir preview and stream counters restart too: the discarded
+    /// rows were never published, so they must not linger as warm-start
+    /// hints. A half-written spill scratch file is deleted, not leaked.
+    /// This is the live store's failed-commit / poisoned-lock recovery
+    /// primitive.
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.seen = 0;
+        self.staging.clear();
+        self.staged_rows = 0;
+        self.ram_blocks.clear();
+        self.decoded_blocks.clear();
+        self.stats_blocks.clear();
+        if let Some(w) = self.writer.take() {
+            w.abort();
+        }
+        self.preview.clear();
+        self.rng = Rng::new(self.opts.seed);
+        self.scratch.clear();
+    }
+
     /// Seal the rows pushed since the last commit into an immutable
     /// [`ColumnStore`] segment and reset for the next batch. The segment
     /// carries a clone of the stream-wide reservoir preview as of this
@@ -340,6 +364,37 @@ mod tests {
         // Preview survives finalize, for warm starts downstream.
         let cs = build().finalize().unwrap();
         assert_eq!(cs.preview().len(), 16);
+    }
+
+    #[test]
+    fn reset_discards_partial_state_and_spill_scratch() {
+        let dir = std::env::temp_dir().join(format!("as_reset_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = StoreOptions {
+            rows_per_chunk: 8,
+            spill_dir: Some(dir.clone()),
+            budget_bytes: 1024,
+            ..Default::default()
+        };
+        let m = demo_matrix(20, 3, 31);
+        let mut b = StoreBuilder::new(3, opts).unwrap();
+        b.push_batch(&m).unwrap();
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1, "scratch spill file exists");
+        b.reset();
+        assert_eq!((b.len(), b.seen()), (0, 0));
+        assert!(b.preview().is_empty());
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "reset deletes the scratch");
+        // The builder seals cleanly after the reset, as if freshly made.
+        b.push_batch(&m).unwrap();
+        let cs = b.finalize().unwrap();
+        assert_eq!(cs.n_rows(), 20);
+        let got = cs.to_matrix();
+        for (a, b) in m.data.iter().zip(&got.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        drop(cs);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

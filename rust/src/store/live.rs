@@ -31,19 +31,41 @@
 //! Deletes are **tombstones**: the data stays in its segment, but the row
 //! vanishes from the logical index, so it is unreachable through every
 //! [`DatasetView`] access method of later snapshots.
+//!
+//! ## Durability
+//!
+//! A store opened with [`LiveStore::open`] persists every published
+//! version under a data directory: each committed segment is written as
+//! a framed, checksummed segment file and the version transition is
+//! recorded in an fsynced append-only manifest log (formats in
+//! [`crate::store::persist`]). The manifest append is the commit point —
+//! a crash at any earlier byte leaves an orphan segment file and a
+//! possibly-torn manifest tail, both of which recovery
+//! ([`LiveStore::recover`]) detects by checksum and cleanly ignores,
+//! re-pinning a bit-exact snapshot of the last complete version.
+//! [`LiveStore::recover_snapshot`] replays the manifest to any still
+//! recorded historical version, which is what makes a served
+//! `(version, seed, warm_coords)` triple replayable across a restart
+//! (durable compaction rewrites the log and collapses that history to
+//! the compacted version). [`LiveStore::new`] keeps the old contract: a
+//! purely in-process store with no files.
 
 use std::collections::HashSet;
+use std::fs::OpenOptions;
+use std::io::Write;
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::data::distance::Metric;
 use crate::data::Matrix;
 use crate::exec::{Gate, GateSlot};
 use crate::store::column::{ColumnStore, StoreOptions};
+use crate::store::persist::{self, ManifestRecord};
 use crate::store::{DatasetView, StoreBuilder};
-use crate::util::error::Result;
+use crate::util::error::{Context, Error, Result};
 
 /// Copy-on-write row index of a snapshot with tombstones (or after a
 /// compaction). Both vectors are parallel over logical rows and strictly
@@ -357,12 +379,297 @@ impl DatasetView for LiveSnapshot {
 }
 
 /// Writer half of a [`LiveStore`]: one streaming builder (reservoir
-/// preview spans the whole stream) plus the version / stable-id counters.
+/// preview spans the whole stream) plus the version / stable-id counters
+/// and, for durable stores, the manifest-log handle.
 struct Writer {
     builder: StoreBuilder,
     version: u64,
     /// Next stable id to assign (== physical rows ever ingested).
     next_id: u64,
+    /// True while a commit is mutating the builder. A panic mid-seal
+    /// leaves it set (and the mutex poisoned); the next locker recovers
+    /// the lock and resets the builder before trusting it — the same
+    /// consistency rule the failed-commit path already enforces.
+    dirty: bool,
+    durable: Option<Durable>,
+}
+
+/// Manifest-log state of a durable [`LiveStore`] (guarded by the writer
+/// mutex, like every other mutation).
+struct Durable {
+    dir: PathBuf,
+    log: std::fs::File,
+    /// Bytes of complete, fsynced records in the log — the truncation
+    /// point if an append ever fails halfway.
+    log_len: u64,
+    /// Serial for the next `seg-<serial>.seg` file name.
+    next_seg: u64,
+    /// Durable file names backing the current snapshot's segments.
+    seg_names: Vec<String>,
+    /// Set when the log handle is known to be unusable (a failed append
+    /// that could not be rolled back); every further durable mutation
+    /// fails fast until the store is reopened.
+    broken: bool,
+}
+
+impl Durable {
+    /// Append one record and fsync it — the durable commit point.
+    fn append(&mut self, rec: &ManifestRecord) -> Result<()> {
+        if self.broken {
+            return Err(Error::recovery(
+                "manifest log is broken from an earlier failed append; reopen the store",
+            ));
+        }
+        let line = rec.to_line();
+        let res = self.log.write_all(line.as_bytes()).and_then(|()| self.log.sync_all());
+        match res {
+            Ok(()) => {
+                self.log_len += line.len() as u64;
+                Ok(())
+            }
+            Err(e) => {
+                // Strip any partially written bytes so a later append can
+                // never continue mid-record; if even that fails, poison
+                // the handle.
+                if self.log.set_len(self.log_len).is_err() {
+                    self.broken = true;
+                }
+                Err(Error::msg(format!("append manifest record: {e}")))
+            }
+        }
+    }
+
+    /// Write segment `seg` under the next serial and re-open it from the
+    /// durable bytes, so the published segment *is* the recovered one
+    /// (same backing kind, stats, and preview — bit-exact by
+    /// construction). Returns the re-opened segment and its file name;
+    /// the serial is only consumed by the caller once the manifest
+    /// records it.
+    fn write_segment(
+        &self,
+        seg: &ColumnStore,
+        opts: &StoreOptions,
+    ) -> Result<(ColumnStore, String)> {
+        let name = format!("seg-{}.seg", self.next_seg);
+        let path = self.dir.join(&name);
+        let res = (|| {
+            persist::write_segment(seg, &path)?;
+            persist::sync_dir(&self.dir)?;
+            persist::read_segment(&path, opts)
+        })();
+        match res {
+            Ok(s) => Ok((s, name)),
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                Err(e.prefix("durable segment"))
+            }
+        }
+    }
+}
+
+/// What [`LiveStore::recover`] found and did (also printed by the
+/// `repro recover` subcommand).
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Version the store recovered to.
+    pub version: u64,
+    /// Live (logical) rows at that version.
+    pub rows: usize,
+    /// Segments backing it.
+    pub segments: usize,
+    /// Arrival counter (next stable id to assign).
+    pub next_id: u64,
+    /// Torn-tail bytes truncated off the manifest log.
+    pub truncated_bytes: u64,
+    /// Why replay stopped before the end of the log (`None` when the
+    /// whole log replayed cleanly).
+    pub dropped: Option<String>,
+}
+
+/// Result of replaying a data directory's manifest (internal).
+struct Replayed {
+    /// Row width from the manifest header (`None` when the header line
+    /// itself was torn/corrupt).
+    d: Option<usize>,
+    version: u64,
+    next_id: u64,
+    n: usize,
+    segments: Vec<Arc<ColumnStore>>,
+    seg_names: Vec<String>,
+    offsets: Vec<usize>,
+    live: Option<(Vec<usize>, Vec<u64>)>,
+    /// Bytes of the manifest prefix the replayed state corresponds to.
+    valid_len: u64,
+    dropped: Option<String>,
+}
+
+impl Replayed {
+    fn into_snapshot(self, d: usize) -> LiveSnapshot {
+        LiveSnapshot {
+            version: self.version,
+            d,
+            n: self.n,
+            segments: self.segments,
+            offsets: self.offsets,
+            live: self.live.map(|(rows, ids)| Arc::new(LiveIndex { rows, ids })),
+        }
+    }
+}
+
+/// Replay the manifest under `dir` up to (and including) `up_to` — or
+/// the whole valid prefix when `None`. Per-record validation failures
+/// (torn tail, bad checksum, missing/corrupt segment, inconsistent
+/// versions or ids) *stop* the replay at the last good record; only
+/// failing to read the manifest file at all is an `Err`.
+fn replay_dir(dir: &Path, opts: &StoreOptions, up_to: Option<u64>) -> Result<Replayed> {
+    let manifest = persist::read_manifest(&dir.join(persist::MANIFEST_NAME))?;
+    let mut out = Replayed {
+        d: None,
+        version: 0,
+        next_id: 0,
+        n: 0,
+        segments: Vec::new(),
+        seg_names: Vec::new(),
+        offsets: vec![0],
+        live: None,
+        valid_len: 0,
+        dropped: manifest.torn,
+    };
+    let mut records = manifest.records.into_iter();
+    let d = match records.next() {
+        Some((ManifestRecord::Header { d }, _)) if d > 0 => {
+            out.valid_len = manifest.valid_len;
+            d as usize
+        }
+        Some((rec, _)) => {
+            out.dropped = Some(format!("first manifest record is not a valid header: {rec:?}"));
+            return Ok(out);
+        }
+        None => return Ok(out),
+    };
+    out.d = Some(d);
+    for (rec, offset) in records {
+        let v = match &rec {
+            ManifestRecord::Header { .. } => u64::MAX, // rejected below
+            ManifestRecord::Commit { version, .. }
+            | ManifestRecord::Delete { version, .. }
+            | ManifestRecord::Base { version, .. } => *version,
+        };
+        if let Some(stop) = up_to {
+            if v > stop {
+                // Clean stop for a historical pin: later records are
+                // valid, just not wanted — not a torn tail.
+                break;
+            }
+        }
+        if let Err(e) = apply_record(dir, opts, d, &rec, &mut out) {
+            out.dropped = Some(format!("record at byte {offset}: {e}"));
+            out.valid_len = offset;
+            break;
+        }
+    }
+    Ok(out)
+}
+
+fn apply_record(
+    dir: &Path,
+    opts: &StoreOptions,
+    d: usize,
+    rec: &ManifestRecord,
+    st: &mut Replayed,
+) -> Result<()> {
+    match rec {
+        ManifestRecord::Header { .. } => Err(Error::corrupt("header record after log start")),
+        ManifestRecord::Commit { version, seg, rows } => {
+            if *version != st.version + 1 {
+                return Err(Error::corrupt(format!(
+                    "commit version {version} after version {}",
+                    st.version
+                )));
+            }
+            let s = persist::read_segment(&dir.join(seg), opts)?;
+            if s.n_rows() as u64 != *rows || s.n_cols() != d {
+                return Err(Error::corrupt(format!(
+                    "segment {seg} is {}×{}, manifest says {rows}×{d}",
+                    s.n_rows(),
+                    s.n_cols()
+                )));
+            }
+            let phys_start = *st.offsets.last().unwrap();
+            if let Some((rows_ix, ids_ix)) = st.live.as_mut() {
+                for k in 0..s.n_rows() {
+                    rows_ix.push(phys_start + k);
+                    ids_ix.push(st.next_id + k as u64);
+                }
+            }
+            st.offsets.push(phys_start + s.n_rows());
+            st.n += s.n_rows();
+            st.next_id += rows;
+            st.segments.push(Arc::new(s));
+            st.seg_names.push(seg.clone());
+            st.version = *version;
+            Ok(())
+        }
+        ManifestRecord::Delete { version, ids } => {
+            if *version != st.version + 1 {
+                return Err(Error::corrupt(format!(
+                    "delete version {version} after version {}",
+                    st.version
+                )));
+            }
+            let dead: HashSet<u64> = ids.iter().copied().collect();
+            let n = st.n;
+            let (rows_ix, ids_ix) = st
+                .live
+                .get_or_insert_with(|| ((0..n).collect(), (0..n as u64).collect()));
+            let mut new_rows = Vec::with_capacity(rows_ix.len().saturating_sub(dead.len()));
+            let mut new_ids = Vec::with_capacity(new_rows.capacity());
+            for (r, &id) in ids_ix.iter().enumerate() {
+                if !dead.contains(&id) {
+                    new_rows.push(rows_ix[r]);
+                    new_ids.push(id);
+                }
+            }
+            if rows_ix.len() - new_rows.len() != dead.len() {
+                return Err(Error::corrupt(format!(
+                    "delete record at version {version} references ids not live"
+                )));
+            }
+            *rows_ix = new_rows;
+            *ids_ix = new_ids;
+            st.n = st.live.as_ref().unwrap().0.len();
+            st.version = *version;
+            Ok(())
+        }
+        ManifestRecord::Base { version, seg, rows, next_id, ids } => {
+            if !st.segments.is_empty() || st.version != 0 || *version == 0 {
+                return Err(Error::corrupt("base record not at the start of the log"));
+            }
+            let s = persist::read_segment(&dir.join(seg), opts)?;
+            if s.n_rows() as u64 != *rows || s.n_cols() != d || ids.len() as u64 != *rows {
+                return Err(Error::corrupt(format!(
+                    "base segment {seg} is {}×{} with {} ids, manifest says {rows}×{d}",
+                    s.n_rows(),
+                    s.n_cols(),
+                    ids.len()
+                )));
+            }
+            if !ids.windows(2).all(|w| w[0] < w[1]) {
+                return Err(Error::corrupt("base record ids are not strictly increasing"));
+            }
+            if ids.last().is_some_and(|&last| last >= *next_id) {
+                return Err(Error::corrupt("base record next_id does not cover its ids"));
+            }
+            st.n = s.n_rows();
+            st.offsets = vec![0, s.n_rows()];
+            st.live = Some(((0..s.n_rows()).collect(), ids.clone()));
+            st.segments.push(Arc::new(s));
+            st.seg_names.push(seg.clone());
+            st.next_id = *next_id;
+            st.version = *version;
+            Ok(())
+        }
+    }
 }
 
 /// A versioned, mutable dataset: append-chunk ingest and tombstone
@@ -382,18 +689,192 @@ pub struct LiveStore {
 }
 
 impl LiveStore {
-    /// An empty live store for rows of width `d` (version 0).
+    /// An empty live store for rows of width `d` (version 0), purely
+    /// in-process: nothing survives the process (see [`LiveStore::open`]
+    /// for the durable variant).
     pub fn new(d: usize, opts: StoreOptions) -> Result<LiveStore> {
+        Self::with_durable(d, opts, None)
+    }
+
+    fn with_durable(d: usize, opts: StoreOptions, durable: Option<Durable>) -> Result<LiveStore> {
         Ok(LiveStore {
             d,
             writer: Mutex::new(Writer {
                 builder: StoreBuilder::new(d, opts.clone())?,
                 version: 0,
                 next_id: 0,
+                dirty: false,
+                durable,
             }),
             opts,
             current: Mutex::new(Arc::new(LiveSnapshot::empty(d))),
         })
+    }
+
+    /// Open (create or recover) a durable store under `dir`. A fresh
+    /// directory is initialized with a manifest header; an existing one
+    /// is recovered exactly like [`LiveStore::recover`], with the row
+    /// width checked against `d`.
+    pub fn open(d: usize, opts: StoreOptions, dir: &Path) -> Result<LiveStore> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        if dir.join(persist::MANIFEST_NAME).exists() {
+            return Ok(Self::recover_with(Some(d), opts, dir)?.0);
+        }
+        let path = dir.join(persist::MANIFEST_NAME);
+        let mut log = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("create manifest {}", path.display()))?;
+        let line = ManifestRecord::Header { d: d as u64 }.to_line();
+        log.write_all(line.as_bytes()).context("write manifest header")?;
+        log.sync_all().context("fsync manifest header")?;
+        persist::sync_dir(dir)?;
+        Self::with_durable(
+            d,
+            opts,
+            Some(Durable {
+                dir: dir.to_path_buf(),
+                log,
+                log_len: line.len() as u64,
+                next_seg: 0,
+                seg_names: Vec::new(),
+                broken: false,
+            }),
+        )
+    }
+
+    /// Recover a durable store from `dir`: replay the manifest to the
+    /// last complete version, truncate any torn tail off the log, delete
+    /// orphan segment files (written but never logged), and re-pin the
+    /// recovered snapshot. The row width comes from the manifest header.
+    pub fn recover(dir: &Path, opts: StoreOptions) -> Result<(LiveStore, RecoveryReport)> {
+        Self::recover_with(None, opts, dir)
+    }
+
+    fn recover_with(
+        expect_d: Option<usize>,
+        opts: StoreOptions,
+        dir: &Path,
+    ) -> Result<(LiveStore, RecoveryReport)> {
+        let out = replay_dir(dir, &opts, None)?;
+        let d = match (out.d, expect_d) {
+            (Some(got), Some(want)) if got != want => {
+                return Err(Error::recovery(format!(
+                    "data dir {} holds rows of width {got}, store wants {want}",
+                    dir.display()
+                )));
+            }
+            (Some(got), _) => got,
+            // Header unreadable: with a caller-supplied width the dir can
+            // be re-initialized (it never logged a single commit); bare
+            // `recover` has nothing to go on.
+            (None, Some(want)) => want,
+            (None, None) => {
+                return Err(Error::recovery(format!(
+                    "manifest header unreadable in {} ({})",
+                    dir.display(),
+                    out.dropped.as_deref().unwrap_or("empty log"),
+                )));
+            }
+        };
+        let mpath = dir.join(persist::MANIFEST_NAME);
+        let flen = std::fs::metadata(&mpath)
+            .with_context(|| format!("stat {}", mpath.display()))?
+            .len();
+        let truncated_bytes = flen.saturating_sub(out.valid_len);
+        if truncated_bytes > 0 {
+            let f = OpenOptions::new()
+                .write(true)
+                .open(&mpath)
+                .with_context(|| format!("reopen manifest {}", mpath.display()))?;
+            f.set_len(out.valid_len).context("truncate torn manifest tail")?;
+            f.sync_all().context("fsync truncated manifest")?;
+        }
+        let mut log = OpenOptions::new()
+            .append(true)
+            .open(&mpath)
+            .with_context(|| format!("reopen manifest {}", mpath.display()))?;
+        let mut log_len = out.valid_len;
+        if log_len == 0 {
+            // The header itself was torn: restamp it before anything else
+            // is appended.
+            let line = ManifestRecord::Header { d: d as u64 }.to_line();
+            log.write_all(line.as_bytes()).context("restamp manifest header")?;
+            log.sync_all().context("fsync manifest header")?;
+            log_len = line.len() as u64;
+        }
+        // Sweep scratch and orphans; learn the next free segment serial
+        // from every seg file ever named (kept or not), so a recovered
+        // writer can never collide with a leftover name.
+        let keep: HashSet<&str> = out.seg_names.iter().map(String::as_str).collect();
+        let mut next_seg = 0u64;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("scan data dir {}", dir.display()))?
+        {
+            let entry = entry.with_context(|| format!("scan data dir {}", dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let serial = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".seg"))
+                .and_then(|s| s.parse::<u64>().ok());
+            if let Some(serial) = serial {
+                next_seg = next_seg.max(serial + 1);
+                if !keep.contains(name.as_str()) {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            } else if name == persist::MANIFEST_TMP_NAME {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        let report = RecoveryReport {
+            version: out.version,
+            rows: out.n,
+            segments: out.segments.len(),
+            next_id: out.next_id,
+            truncated_bytes,
+            dropped: out.dropped.clone(),
+        };
+        crate::obs::registry().counter("live.recoveries").incr();
+        let durable = Durable {
+            dir: dir.to_path_buf(),
+            log,
+            log_len,
+            next_seg,
+            seg_names: out.seg_names.clone(),
+            broken: false,
+        };
+        let writer = Writer {
+            builder: StoreBuilder::new(d, opts.clone())?,
+            version: out.version,
+            next_id: out.next_id,
+            dirty: false,
+            durable: Some(durable),
+        };
+        let snap = Arc::new(out.into_snapshot(d));
+        let store = LiveStore { d, opts, writer: Mutex::new(writer), current: Mutex::new(snap) };
+        Ok((store, report))
+    }
+
+    /// Re-pin the snapshot of a historical `version` straight from the
+    /// manifest, read-only (nothing is truncated or cleaned). Errors if
+    /// the version is not recorded in the log's valid prefix — e.g.
+    /// after a durable compaction, which collapses history to the
+    /// compacted version.
+    pub fn recover_snapshot(
+        dir: &Path,
+        opts: &StoreOptions,
+        version: u64,
+    ) -> Result<Arc<LiveSnapshot>> {
+        let out = replay_dir(dir, opts, Some(version))?;
+        let d = out.d.ok_or_else(|| Error::recovery("manifest header unreadable"))?;
+        if out.version != version {
+            return Err(Error::recovery(format!(
+                "version {version} not recoverable (manifest replays to {})",
+                out.version
+            )));
+        }
+        Ok(Arc::new(out.into_snapshot(d)))
     }
 
     /// Row width.
@@ -401,15 +882,38 @@ impl LiveStore {
         self.d
     }
 
+    /// Data directory of a durable store (`None` for [`LiveStore::new`]).
+    pub fn data_dir(&self) -> Option<PathBuf> {
+        let w = self.writer.lock().unwrap_or_else(PoisonError::into_inner);
+        w.durable.as_ref().map(|dur| dur.dir.clone())
+    }
+
     /// Pin the current version (cheap: lock + `Arc` clone).
+    ///
+    /// The current-snapshot mutex only ever guards a complete `Arc`
+    /// swap, so a poisoned lock (a reader panicked while pinning) is
+    /// recovered rather than cascaded.
     pub fn pin(&self) -> Arc<LiveSnapshot> {
-        self.current.lock().unwrap().clone()
+        self.current.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Lock the writer, recovering a poisoned lock. If the poisoning
+    /// panic (or an earlier unrecovered failure) left a commit half
+    /// sealed, the builder is reset first — the invariant every locker
+    /// can rely on is "the builder holds no partially flushed batch".
+    fn lock_writer(&self) -> Result<MutexGuard<'_, Writer>> {
+        let mut w = self.writer.lock().unwrap_or_else(PoisonError::into_inner);
+        if w.dirty {
+            w.builder.reset();
+            w.dirty = false;
+        }
+        Ok(w)
     }
 
     /// The stream-wide reservoir preview accumulated by ingest so far
     /// (bandit warm starts; capacity [`StoreOptions::preview_rows`]).
     pub fn preview(&self) -> Vec<Vec<f32>> {
-        self.writer.lock().unwrap().builder.preview().to_vec()
+        self.writer.lock().unwrap_or_else(PoisonError::into_inner).builder.preview().to_vec()
     }
 
     /// Publish `snap` as the current version. Writer lock must be held.
@@ -420,7 +924,7 @@ impl LiveStore {
         obs.gauge("live.version").set_max(snap.version);
         obs.gauge("live.rows").set(snap.n as u64);
         let snap = Arc::new(snap);
-        *self.current.lock().unwrap() = snap.clone();
+        *self.current.lock().unwrap_or_else(PoisonError::into_inner) = snap.clone();
         snap
     }
 
@@ -428,17 +932,18 @@ impl LiveStore {
     /// version. An empty batch is a no-op returning the current version.
     ///
     /// On error nothing is published, and the streaming builder is
-    /// replaced with a fresh one: a failed flush can leave a builder
+    /// [`reset`](StoreBuilder::reset): a failed flush can leave a builder
     /// half-flushed (e.g. some columns of a block already appended to its
     /// spill file), and sealing more rows on top of that state would
     /// publish misaligned chunks. The reset costs the reservoir preview
     /// accumulated so far — a warm-start hint, not data.
     pub fn commit_batch(&self, batch: &Matrix) -> Result<Arc<LiveSnapshot>> {
         let _span = crate::obs::span("ingest.commit");
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.lock_writer()?;
         if batch.n == 0 {
             return Ok(self.pin());
         }
+        w.dirty = true;
         let sealed = {
             let _span = crate::obs::span("ingest.seal");
             match w.builder.push_batch(batch) {
@@ -447,11 +952,39 @@ impl LiveStore {
             }
         };
         let seg = match sealed {
-            Ok(seg) => Arc::new(seg),
+            Ok(seg) => {
+                w.dirty = false;
+                seg
+            }
             Err(e) => {
-                w.builder = StoreBuilder::new(self.d, self.opts.clone())?;
+                w.builder.reset();
+                w.dirty = false;
                 return Err(e);
             }
+        };
+        // Durable stores write the segment file, fsync it and its
+        // directory, then log the manifest record (fsynced) — only after
+        // that does the version publish. A crash before the record lands
+        // leaves an orphan file recovery sweeps away; a crash after it
+        // replays to exactly this version. A durable failure here loses
+        // the sealed batch (it is not published and not logged) but the
+        // store stays consistent and later commits proceed.
+        let seg = if w.durable.is_none() {
+            Arc::new(seg)
+        } else {
+            let version = w.version + 1;
+            let rows = seg.n_rows() as u64;
+            let dur = w.durable.as_ref().unwrap();
+            let (durable_seg, name) = dur.write_segment(&seg, &self.opts)?;
+            let dur = w.durable.as_mut().unwrap();
+            let rec = ManifestRecord::Commit { version, seg: name.clone(), rows };
+            if let Err(e) = dur.append(&rec) {
+                let _ = std::fs::remove_file(dur.dir.join(&name));
+                return Err(e);
+            }
+            dur.next_seg += 1;
+            dur.seg_names.push(name);
+            Arc::new(durable_seg)
         };
         let obs = crate::obs::registry();
         obs.counter("live.commits").incr();
@@ -493,7 +1026,7 @@ impl LiveStore {
     /// something to paper over. An empty id list is a no-op.
     pub fn delete_rows(&self, ids: &[u64]) -> Result<Arc<LiveSnapshot>> {
         let _span = crate::obs::span("ingest.delete");
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.lock_writer()?;
         if ids.is_empty() {
             return Ok(self.pin());
         }
@@ -518,6 +1051,10 @@ impl LiveStore {
                 cur.version
             );
         }
+        if let Some(dur) = w.durable.as_mut() {
+            let rec = ManifestRecord::Delete { version: w.version + 1, ids: ids.to_vec() };
+            dur.append(&rec)?;
+        }
         w.version += 1;
         let snap = LiveSnapshot {
             version: w.version,
@@ -534,9 +1071,19 @@ impl LiveStore {
     /// the next version, preserving stable ids. Old segments stay alive
     /// only as long as older pinned snapshots reference them; once those
     /// drop, their caches and spill files retire with them.
+    ///
+    /// On a durable store the compacted segment is written to its own
+    /// file first, then the manifest is swapped **atomically** (write
+    /// `manifest.log.tmp`, fsync, rename over `manifest.log`, fsync the
+    /// directory) to a header + one `base` record — the same
+    /// copy-on-write discipline as snapshots, so a crash at any point
+    /// recovers either the old history or the compacted baseline, never
+    /// a blend. Old segment files are unlinked only after the new
+    /// version is published (pinned readers keep streaming from their
+    /// open handles).
     pub fn compact(&self) -> Result<Arc<LiveSnapshot>> {
         let _span = crate::obs::span("ingest.compact");
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.lock_writer()?;
         let cur = self.pin();
         if cur.segments.len() <= 1 && cur.live.is_none() {
             return Ok(cur); // already compact
@@ -552,8 +1099,41 @@ impl LiveStore {
             b.push_row(&row)?;
             ids.push(cur.stable_id(r));
         }
-        let seg = Arc::new(b.finalize()?);
-        w.version += 1;
+        let seg = b.finalize()?;
+        let version = w.version + 1;
+        let mut retired: Vec<String> = Vec::new();
+        let seg = if w.durable.is_none() {
+            Arc::new(seg)
+        } else {
+            let dur = w.durable.as_ref().unwrap();
+            let (durable_seg, name) = dur.write_segment(&seg, &self.opts)?;
+            let rows = durable_seg.n_rows() as u64;
+            let records = [
+                ManifestRecord::Header { d: self.d as u64 },
+                ManifestRecord::Base {
+                    version,
+                    seg: name.clone(),
+                    rows,
+                    next_id: w.next_id,
+                    ids: ids.clone(),
+                },
+            ];
+            let dur = w.durable.as_mut().unwrap();
+            match persist::rewrite_manifest(&dur.dir, &records) {
+                Ok((log, log_len)) => {
+                    dur.log = log;
+                    dur.log_len = log_len;
+                    retired = std::mem::replace(&mut dur.seg_names, vec![name]);
+                    dur.next_seg += 1;
+                }
+                Err(e) => {
+                    let _ = std::fs::remove_file(dur.dir.join(&name));
+                    return Err(e.prefix("compact manifest swap"));
+                }
+            }
+            Arc::new(durable_seg)
+        };
+        w.version = version;
         let n = seg.n_rows();
         let snap = LiveSnapshot {
             version: w.version,
@@ -564,7 +1144,27 @@ impl LiveStore {
             // Identity row map, but explicit ids: arrival ids survive.
             live: Some(Arc::new(LiveIndex { rows: (0..n).collect(), ids })),
         };
-        Ok(self.publish(snap))
+        let snap = self.publish(snap);
+        if let Some(dur) = w.durable.as_ref() {
+            for name in retired {
+                let _ = std::fs::remove_file(dur.dir.join(name));
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Run [`LiveStore::compact`] as a background
+    /// [`WorkerPool`](crate::exec::WorkerPool) task. Ingest and serving
+    /// proceed against the current version until the compacted snapshot
+    /// swaps in; [`CompactHandle::wait`] joins the task and returns what
+    /// the inline call would have.
+    pub fn compact_background(self: &Arc<Self>) -> CompactHandle {
+        let (tx, rx) = channel();
+        let store = self.clone();
+        crate::exec::WorkerPool::global().spawn(move || {
+            let _ = tx.send(store.compact());
+        });
+        CompactHandle { rx }
     }
 
     /// Spawn a dedicated ingest thread feeding this store. Submitted
@@ -655,6 +1255,22 @@ impl DatasetView for LiveStore {
 
     fn block_dot_bounds(&self, q: &[f32], rows: Range<usize>) -> Option<Vec<(Range<usize>, f64)>> {
         self.pin().block_dot_bounds(q, rows)
+    }
+}
+
+/// Join handle for a background compaction (see
+/// [`LiveStore::compact_background`]).
+pub struct CompactHandle {
+    rx: Receiver<Result<Arc<LiveSnapshot>>>,
+}
+
+impl CompactHandle {
+    /// Block until the compaction finishes and return what the inline
+    /// [`LiveStore::compact`] call would have. A worker that died
+    /// without reporting (the task panicked) surfaces as an error, not
+    /// a hang.
+    pub fn wait(self) -> Result<Arc<LiveSnapshot>> {
+        self.rx.recv().map_err(|_| Error::msg("background compaction ended without a result"))?
     }
 }
 
@@ -925,5 +1541,147 @@ mod tests {
         assert_snapshot_is(&snap, &stack(&[&a, &b]));
         assert!(snap.spill_reads() > 0, "tiny budget must stream from disk");
         assert!(snap.decode_ops() > 0);
+    }
+
+    fn durable_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("as_live_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn poisoned_writer_lock_is_recovered_and_the_store_stays_usable() {
+        let live = Arc::new(LiveStore::new(3, opts(16)).unwrap());
+        live.commit_batch(&testkit::gaussian(10, 3, 51)).unwrap();
+        let l2 = live.clone();
+        let _ = std::thread::spawn(move || {
+            let mut w = l2.writer.lock().unwrap();
+            w.dirty = true; // exactly what a commit dying mid-seal leaves
+            panic!("poison the writer lock");
+        })
+        .join();
+        assert!(live.writer.is_poisoned());
+        // Every mutation recovers the lock (resetting the dirty builder)
+        // instead of cascading the panic.
+        let snap = live.commit_batch(&testkit::gaussian(5, 3, 52)).unwrap();
+        assert_eq!(DatasetView::version(&*snap), 2);
+        assert_eq!(snap.n_rows(), 15);
+        live.delete_rows(&[0]).unwrap();
+        let snap = live.compact().unwrap();
+        assert_eq!(snap.n_rows(), 14);
+    }
+
+    #[test]
+    fn durable_store_recovers_bit_exact_after_reopen() {
+        let dir = durable_dir("roundtrip");
+        let a = testkit::gaussian(40, 4, 61);
+        let b = testkit::gaussian(25, 4, 62);
+        {
+            let live = LiveStore::open(4, opts(16), &dir).unwrap();
+            assert_eq!(live.data_dir().as_deref(), Some(dir.as_path()));
+            live.commit_batch(&a).unwrap();
+            live.commit_batch(&b).unwrap();
+            live.delete_rows(&[3, 41]).unwrap();
+        }
+        let (live, report) = LiveStore::recover(&dir, opts(16)).unwrap();
+        assert_eq!(report.version, 3);
+        assert_eq!(report.rows, 63);
+        assert_eq!(report.segments, 2);
+        assert_eq!(report.next_id, 65);
+        assert_eq!(report.truncated_bytes, 0);
+        assert!(report.dropped.is_none());
+        let snap = live.pin();
+        let keep: Vec<usize> = (0..65).filter(|r| *r != 3 && *r != 41).collect();
+        let want = stack(&[&a, &b]).take_rows(&keep);
+        assert_snapshot_is(&snap, &want);
+        assert_eq!(snap.locate(41), None);
+        assert_eq!(snap.stable_id(3), 4);
+        // The recovered store keeps ingesting with continuous stable ids.
+        let snap = live.commit_batch(&testkit::gaussian(5, 4, 63)).unwrap();
+        assert_eq!(DatasetView::version(&*snap), 4);
+        assert_eq!(snap.stable_id(snap.n_rows() - 1), 69);
+        // Re-opening with the wrong row width is refused.
+        assert!(LiveStore::open(5, opts(16), &dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_snapshot_replays_historical_versions() {
+        let dir = durable_dir("history");
+        let o = opts(16);
+        let a = testkit::gaussian(20, 3, 71);
+        let b = testkit::gaussian(10, 3, 72);
+        let live = LiveStore::open(3, o.clone(), &dir).unwrap();
+        let s1 = live.commit_batch(&a).unwrap();
+        let s2 = live.commit_batch(&b).unwrap();
+        let s3 = live.delete_rows(&[7]).unwrap();
+        for want in [&s1, &s2, &s3] {
+            let ver = DatasetView::version(&**want);
+            let again = LiveStore::recover_snapshot(&dir, &o, ver).unwrap();
+            testkit::assert_views_bit_identical(&*again, &**want);
+            assert_eq!(again.stable_id(0), want.stable_id(0));
+        }
+        assert!(LiveStore::recover_snapshot(&dir, &o, 9).is_err(), "future version");
+        // Durable compaction atomically collapses history to the
+        // compacted baseline…
+        let s4 = live.compact().unwrap();
+        assert!(LiveStore::recover_snapshot(&dir, &o, 2).is_err(), "history collapsed");
+        let again = LiveStore::recover_snapshot(&dir, &o, 4).unwrap();
+        testkit::assert_views_bit_identical(&*again, &*s4);
+        // …and the store keeps committing on top of it.
+        let s5 = live.commit_batch(&a).unwrap();
+        drop(live);
+        let (reliv, _) = LiveStore::recover(&dir, o.clone()).unwrap();
+        let back = reliv.pin();
+        testkit::assert_views_bit_identical(&*back, &*s5);
+        assert_eq!(back.stable_id(s5.n_rows() - 1), s5.stable_id(s5.n_rows() - 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_durable_commit_publishes_nothing_and_the_log_stays_clean() {
+        let dir = durable_dir("failed_commit");
+        let live = LiveStore::open(3, opts(16), &dir).unwrap();
+        live.commit_batch(&testkit::gaussian(8, 3, 81)).unwrap();
+        assert!(live.commit_batch(&testkit::gaussian(4, 2, 82)).is_err(), "width mismatch");
+        assert_eq!(DatasetView::version(&live), 1, "failed commit must not publish");
+        let snap = live.commit_batch(&testkit::gaussian(6, 3, 83)).unwrap();
+        assert_eq!(DatasetView::version(&*snap), 2);
+        drop(live);
+        let (re, report) = LiveStore::recover(&dir, opts(16)).unwrap();
+        assert_eq!(report.version, 2);
+        assert_eq!(re.pin().n_rows(), 14);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_spilled_i8_store_recovers_the_same_read_path() {
+        use crate::store::codec::Codec;
+        let dir = durable_dir("spill_i8");
+        let o = StoreOptions { rows_per_chunk: 32, codec: Codec::I8, ..Default::default() }
+            .spill_to_temp(1024);
+        let a = testkit::gaussian(256, 4, 95);
+        {
+            let live = LiveStore::open(4, o.clone(), &dir).unwrap();
+            live.commit_batch(&a).unwrap();
+        }
+        let (re, _) = LiveStore::recover(&dir, o).unwrap();
+        let snap = re.pin();
+        assert_snapshot_is(&snap, &a);
+        assert!(snap.spill_reads() > 0, "recovered segment must stream from its durable file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn background_compaction_publishes_like_inline() {
+        let live = Arc::new(LiveStore::new(3, opts(16)).unwrap());
+        live.commit_batch(&testkit::gaussian(30, 3, 91)).unwrap();
+        live.commit_batch(&testkit::gaussian(20, 3, 92)).unwrap();
+        live.delete_rows(&[5]).unwrap();
+        let before = live.pin().to_matrix();
+        let snap = live.compact_background().wait().unwrap();
+        assert_eq!(snap.n_segments(), 1);
+        assert_eq!(DatasetView::version(&*snap), 4);
+        assert_snapshot_is(&snap, &before);
     }
 }

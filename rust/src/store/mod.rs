@@ -13,6 +13,7 @@
 //! | [`spill`]  | file-backed chunk spill (`std::fs` only): datasets larger than the cache budget stream from disk |
 //! | [`ingest`] | [`StoreBuilder`]: streaming row-batch ingest with bounded staging memory + reservoir preview for bandit warm starts |
 //! | [`live`]   | [`LiveStore`]: versioned, mutable dataset — append-chunk ingest and tombstone deletes behind cheap copy-on-write [`LiveSnapshot`]s |
+//! | [`persist`] | durable segment files + the fsynced manifest log behind [`LiveStore::open`] / [`LiveStore::recover`] crash recovery |
 //!
 //! # The `DatasetView` contract
 //!
@@ -50,6 +51,7 @@ pub mod codec;
 pub mod column;
 pub mod ingest;
 pub mod live;
+pub mod persist;
 pub mod spill;
 
 use std::cell::RefCell;
@@ -64,7 +66,8 @@ use crate::util::error::Result;
 pub use codec::Codec;
 pub use column::{ChunkStats, ColumnStore, StoreOptions};
 pub use ingest::StoreBuilder;
-pub use live::{IngestHandle, LiveSnapshot, LiveStore};
+pub use live::{CompactHandle, IngestHandle, LiveSnapshot, LiveStore, RecoveryReport};
+pub use persist::{ManifestRecord, ManifestReplay};
 pub use spill::{SpillFile, SpillWriter};
 
 thread_local! {

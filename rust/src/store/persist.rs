@@ -1,0 +1,657 @@
+//! Durable segment files + the manifest log (`std::fs` only).
+//!
+//! This module is the on-disk half of the durable
+//! [`LiveStore`](crate::store::LiveStore): it owns the two file formats
+//! and their checksums, while `store/live.rs` owns the replay state
+//! machine that turns them back into a published snapshot.
+//!
+//! ## Segment files (`seg-<serial>.seg`)
+//!
+//! A sealed [`ColumnStore`] serialized as the spill chunk layout wrapped
+//! in the framing and checksums the raw spill format punts on:
+//!
+//! ```text
+//! magic   "ASEG0001"                                     8 B
+//! header  d:u32 n:u64 rows_per_chunk:u32                 16 B
+//!         codec:u8 backing:u8 int_domain:u8 rsvd:u8      4 B
+//!         preview_count:u32                              4 B
+//! hsum    FNV-1a over magic+header                       8 B
+//! preview preview_count rows × d × f32 LE, then FNV-1a   …+8 B
+//! frames  one per chunk id (col-major: id = col·B + b):
+//!         len:u32  min:f32 max:f32 sum:f64 count:u64     28 B
+//!         fsum: FNV-1a over frame header ‖ payload       8 B
+//!         payload: `len` encoded bytes (spill codec)     len B
+//! ```
+//!
+//! Chunk payloads are the exact per-chunk codec framing of
+//! [`crate::store::Codec`]; per-chunk [`ChunkStats`] are persisted
+//! because they are computed from pre-encode values and cannot be
+//! recomputed from a lossy payload. The backing tag records whether the
+//! source store held chunks in RAM or on disk, so recovery restores the
+//! same read path (this decides the integer-domain fast path, which is
+//! part of the bit-exactness envelope). A `spill`-tagged segment is
+//! re-read lazily: recovery indexes the payload spans and opens the
+//! segment file itself as a non-deleting
+//! [`SpillFile`](crate::store::SpillFile).
+//!
+//! Any validation failure — bad magic, checksum mismatch, short read,
+//! payload length disagreeing with the codec, trailing bytes — is an
+//! [`ErrorKind::Corrupt`](crate::util::error::ErrorKind) error, which
+//! the recovery replay treats as "stop before the record that
+//! referenced this file".
+//!
+//! ## Manifest log (`manifest.log`)
+//!
+//! An append-only text log, one checksummed record per line:
+//!
+//! ```text
+//! <16 hex FNV-1a of the JSON bytes> <compact JSON>\n
+//! ```
+//!
+//! The first record is a header (`{"kind":"live_manifest","schema":1,
+//! "d":…}`); each mutation appends `commit` / `delete` records, and a
+//! durable compaction atomically replaces the whole log (write
+//! `manifest.log.tmp`, fsync, rename, fsync dir) with a header + one
+//! `base` record. A record line is only appended after its segment file
+//! is fsynced, and the append itself is fsynced before the version is
+//! published — so a manifest record implies segment durability, and a
+//! torn tail (partial line, bad checksum, or a record whose segment
+//! fails validation) is cleanly ignored by recovery.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::store::codec::Codec;
+use crate::store::column::{Backing, ChunkStats, ColumnStore, StoreOptions};
+use crate::store::spill::SpillFile;
+use crate::store::DatasetView;
+use crate::util::digest::fnv1a_bytes;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// File name of the manifest log inside a data directory.
+pub const MANIFEST_NAME: &str = "manifest.log";
+/// Scratch name used by the atomic manifest rewrite.
+pub const MANIFEST_TMP_NAME: &str = "manifest.log.tmp";
+/// Bump when either on-disk layout changes incompatibly.
+pub const MANIFEST_SCHEMA: u64 = 1;
+
+const SEGMENT_MAGIC: &[u8; 8] = b"ASEG0001";
+/// Fixed prelude: magic + header fields (see module docs).
+const SEGMENT_HEADER_LEN: usize = 32;
+/// Frame header: len + min + max + sum + count (checksum follows).
+const FRAME_HEADER_LEN: usize = 28;
+
+/// Fsync a directory so a just-created/renamed entry survives a crash
+/// (no-op on platforms where directories cannot be opened).
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let f = File::open(dir).with_context(|| format!("open dir {}", dir.display()))?;
+        f.sync_all().with_context(|| format!("fsync dir {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+fn codec_tag(codec: Codec) -> u8 {
+    match codec {
+        Codec::F32 => 0,
+        Codec::F16 => 1,
+        Codec::I8 => 2,
+    }
+}
+
+fn codec_from_tag(tag: u8) -> Result<Codec> {
+    match tag {
+        0 => Ok(Codec::F32),
+        1 => Ok(Codec::F16),
+        2 => Ok(Codec::I8),
+        other => Err(Error::corrupt(format!("unknown segment codec tag {other}"))),
+    }
+}
+
+fn bool_from_tag(tag: u8, what: &str) -> Result<bool> {
+    match tag {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(Error::corrupt(format!("segment {what} tag {other} not in {{0,1}}"))),
+    }
+}
+
+/// Serialize a sealed segment into `path` and fsync the file (the
+/// caller fsyncs the directory — and only then logs the manifest
+/// record). Refuses to overwrite: segment files are immutable once
+/// named by the manifest.
+pub(crate) fn write_segment(seg: &ColumnStore, path: &Path) -> Result<()> {
+    let (n, d) = (seg.n_rows(), seg.n_cols());
+    let n_chunks = d * seg.n_blocks();
+    let mut buf = Vec::with_capacity(SEGMENT_HEADER_LEN + 8);
+    buf.extend_from_slice(SEGMENT_MAGIC);
+    buf.extend_from_slice(&(d as u32).to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&(seg.chunk_rows() as u32).to_le_bytes());
+    buf.push(codec_tag(seg.codec()));
+    buf.push(seg.spilled() as u8);
+    buf.push(seg.int_domain_flag() as u8);
+    buf.push(0);
+    buf.extend_from_slice(&(seg.preview().len() as u32).to_le_bytes());
+    debug_assert_eq!(buf.len(), SEGMENT_HEADER_LEN);
+    let hsum = fnv1a_bytes(buf.iter().copied());
+    buf.extend_from_slice(&hsum.to_le_bytes());
+
+    let mut pbytes = Vec::with_capacity(seg.preview().len() * d * 4);
+    for row in seg.preview() {
+        if row.len() != d {
+            return Err(Error::msg(format!("preview row width {} != d {d}", row.len())));
+        }
+        for &v in row {
+            pbytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let psum = fnv1a_bytes(pbytes.iter().copied());
+    buf.extend_from_slice(&pbytes);
+    buf.extend_from_slice(&psum.to_le_bytes());
+
+    for id in 0..n_chunks {
+        let payload = seg.chunk_bytes(id).map_err(|e| e.prefix(format!("export chunk {id}")))?;
+        let len = u32::try_from(payload.len())
+            .map_err(|_| Error::msg(format!("chunk {id}: {} bytes exceed u32", payload.len())))?;
+        let st = seg.chunk_stats_at(id);
+        let mut fh = [0u8; FRAME_HEADER_LEN];
+        fh[0..4].copy_from_slice(&len.to_le_bytes());
+        fh[4..8].copy_from_slice(&st.min.to_le_bytes());
+        fh[8..12].copy_from_slice(&st.max.to_le_bytes());
+        fh[12..20].copy_from_slice(&st.sum.to_le_bytes());
+        fh[20..28].copy_from_slice(&(st.count as u64).to_le_bytes());
+        let fsum = fnv1a_bytes(fh.iter().copied().chain(payload.iter().copied()));
+        buf.extend_from_slice(&fh);
+        buf.extend_from_slice(&fsum.to_le_bytes());
+        buf.extend_from_slice(&payload);
+    }
+
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(path)
+        .with_context(|| format!("create segment {}", path.display()))?;
+    f.write_all(&buf).with_context(|| format!("write segment {}", path.display()))?;
+    f.sync_all().with_context(|| format!("fsync segment {}", path.display()))?;
+    Ok(())
+}
+
+/// Byte cursor with corruption-typed bounds checking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            Error::corrupt(format!(
+                "truncated segment: {what} needs {len} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ))
+        })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+/// Deserialize a segment file, validating every checksum and frame.
+/// All failures are [`ErrorKind::Corrupt`](crate::util::error::ErrorKind)
+/// so recovery can treat the referencing manifest record as torn.
+pub(crate) fn read_segment(path: &Path, opts: &StoreOptions) -> Result<ColumnStore> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::corrupt(format!("read segment {}: {e}", path.display())))?;
+    read_segment_bytes(&bytes, path, opts).map_err(|e| e.prefix(format!("{}", path.display())))
+}
+
+fn read_segment_bytes(bytes: &[u8], path: &Path, opts: &StoreOptions) -> Result<ColumnStore> {
+    let mut cur = Cursor { buf: bytes, pos: 0 };
+    if cur.take(8, "magic")? != SEGMENT_MAGIC {
+        return Err(Error::corrupt("bad segment magic"));
+    }
+    let d = cur.u32("d")? as usize;
+    let n = cur.u64("n")? as usize;
+    let rpc = cur.u32("rows_per_chunk")? as usize;
+    let codec = codec_from_tag(cur.u8("codec tag")?)?;
+    let spilled = bool_from_tag(cur.u8("backing tag")?, "backing")?;
+    let int_domain = bool_from_tag(cur.u8("int_domain tag")?, "int_domain")?;
+    let _reserved = cur.u8("reserved")?;
+    let preview_count = cur.u32("preview count")? as usize;
+    let hsum = cur.u64("header checksum")?;
+    if hsum != fnv1a_bytes(bytes[..SEGMENT_HEADER_LEN].iter().copied()) {
+        return Err(Error::corrupt("segment header checksum mismatch"));
+    }
+    if d == 0 || rpc == 0 {
+        return Err(Error::corrupt(format!("degenerate segment header (d={d}, rpc={rpc})")));
+    }
+
+    let plen = preview_count
+        .checked_mul(d)
+        .and_then(|v| v.checked_mul(4))
+        .ok_or_else(|| Error::corrupt("preview size overflow"))?;
+    let pbytes = cur.take(plen, "preview rows")?;
+    if cur.u64("preview checksum")? != fnv1a_bytes(pbytes.iter().copied()) {
+        return Err(Error::corrupt("preview checksum mismatch"));
+    }
+    let preview: Vec<Vec<f32>> = (0..preview_count)
+        .map(|r| {
+            (0..d)
+                .map(|c| {
+                    let o = (r * d + c) * 4;
+                    f32::from_le_bytes(pbytes[o..o + 4].try_into().unwrap())
+                })
+                .collect()
+        })
+        .collect();
+
+    let n_blocks = if n == 0 { 0 } else { n.div_ceil(rpc) };
+    let n_chunks = d * n_blocks;
+    let mut stats = Vec::with_capacity(n_chunks);
+    let mut spans: Vec<(u64, u32)> = Vec::new();
+    let mut payloads: Vec<Vec<u8>> = Vec::new();
+    for id in 0..n_chunks {
+        let frame_start = cur.pos;
+        let len = cur.u32("frame length")? as usize;
+        let min = cur.f32("stats min")?;
+        let max = cur.f32("stats max")?;
+        let sum = cur.f64("stats sum")?;
+        let count = cur.u64("stats count")? as usize;
+        let fsum = cur.u64("frame checksum")?;
+        let payload = cur.take(len, "chunk payload")?;
+        let got = fnv1a_bytes(
+            bytes[frame_start..frame_start + FRAME_HEADER_LEN]
+                .iter()
+                .copied()
+                .chain(payload.iter().copied()),
+        );
+        if got != fsum {
+            return Err(Error::corrupt(format!("chunk {id}: frame checksum mismatch")));
+        }
+        let block = id % n_blocks;
+        let rows = if block + 1 < n_blocks { rpc } else { n - block * rpc };
+        if len != codec.encoded_len(rows) {
+            return Err(Error::corrupt(format!(
+                "chunk {id}: {len} payload bytes, want {} for {rows} {} values",
+                codec.encoded_len(rows),
+                codec.name()
+            )));
+        }
+        stats.push(ChunkStats { min, max, sum, count });
+        if spilled {
+            spans.push(((frame_start + FRAME_HEADER_LEN + 8) as u64, len as u32));
+        } else {
+            payloads.push(payload.to_vec());
+        }
+    }
+    if cur.pos != bytes.len() {
+        return Err(Error::corrupt(format!(
+            "{} trailing bytes after the last chunk frame",
+            bytes.len() - cur.pos
+        )));
+    }
+
+    // Restore the backing the writing store had, so the effective read
+    // path (Decoded fast path / fused integer domain / spill streaming)
+    // is identical after recovery.
+    let backing = if spilled {
+        Backing::Spilled(SpillFile::open_indexed(path, spans, false)?)
+    } else if codec == Codec::F32 {
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for (id, p) in payloads.iter().enumerate() {
+            let block = id % n_blocks;
+            let rows = if block + 1 < n_blocks { rpc } else { n - block * rpc };
+            let mut vals = Vec::with_capacity(rows);
+            codec.decode(p, rows, &mut vals);
+            chunks.push(Arc::new(vals));
+        }
+        Backing::Decoded(chunks)
+    } else {
+        Backing::Encoded(payloads)
+    };
+    Ok(ColumnStore::assemble(
+        n,
+        d,
+        rpc,
+        codec,
+        int_domain,
+        stats,
+        backing,
+        opts.budget_bytes,
+        preview,
+    ))
+}
+
+/// One manifest log record (see module docs for the line format).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ManifestRecord {
+    /// First line of every manifest.
+    Header { d: u64 },
+    /// Version `version` appended segment `seg` with `rows` rows.
+    Commit { version: u64, seg: String, rows: u64 },
+    /// Version `version` tombstoned these stable ids.
+    Delete { version: u64, ids: Vec<u64> },
+    /// Compaction baseline: the whole store is one segment holding
+    /// `rows` live rows with these stable ids; `next_id` preserves the
+    /// arrival counter across the rewrite.
+    Base { version: u64, seg: String, rows: u64, next_id: u64, ids: Vec<u64> },
+}
+
+fn ids_json(ids: &[u64]) -> String {
+    let mut out = String::from("[");
+    for (k, id) in ids.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&id.to_string());
+    }
+    out.push(']');
+    out
+}
+
+impl ManifestRecord {
+    fn json_text(&self) -> String {
+        match self {
+            ManifestRecord::Header { d } => {
+                format!("{{\"kind\":\"live_manifest\",\"schema\":{MANIFEST_SCHEMA},\"d\":{d}}}")
+            }
+            ManifestRecord::Commit { version, seg, rows } => format!(
+                "{{\"op\":\"commit\",\"version\":{version},\"seg\":\"{seg}\",\"rows\":{rows}}}"
+            ),
+            ManifestRecord::Delete { version, ids } => {
+                format!("{{\"op\":\"delete\",\"version\":{version},\"ids\":{}}}", ids_json(ids))
+            }
+            ManifestRecord::Base { version, seg, rows, next_id, ids } => format!(
+                "{{\"op\":\"base\",\"version\":{version},\"seg\":\"{seg}\",\"rows\":{rows},\"next_id\":{next_id},\"ids\":{}}}",
+                ids_json(ids)
+            ),
+        }
+    }
+
+    /// Full log line including the checksum prefix and trailing newline.
+    pub fn to_line(&self) -> String {
+        let json = self.json_text();
+        format!("{:016x} {json}\n", fnv1a_bytes(json.bytes()))
+    }
+
+    /// Parse one complete line (without its trailing newline). Every
+    /// failure is a corruption error — the caller treats it as the torn
+    /// tail of the log.
+    pub fn parse_line(line: &str) -> Result<ManifestRecord> {
+        if line.len() < 18 || line.as_bytes().get(16) != Some(&b' ') {
+            return Err(Error::corrupt("manifest line too short for checksum prefix"));
+        }
+        let want = u64::from_str_radix(&line[..16], 16)
+            .map_err(|_| Error::corrupt("manifest line checksum is not 16 hex digits"))?;
+        let json_text = &line[17..];
+        if fnv1a_bytes(json_text.bytes()) != want {
+            return Err(Error::corrupt("manifest line checksum mismatch"));
+        }
+        let json = Json::parse(json_text)
+            .map_err(|e| Error::corrupt(format!("manifest record is not JSON: {e}")))?;
+        let u = |key: &str| -> Result<u64> {
+            json.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::corrupt(format!("manifest record missing u64 {key:?}")))
+        };
+        let s = |key: &str| -> Result<String> {
+            json.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::corrupt(format!("manifest record missing string {key:?}")))
+        };
+        let id_list = |key: &str| -> Result<Vec<u64>> {
+            json.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::corrupt(format!("manifest record missing array {key:?}")))?
+                .iter()
+                .map(|v| v.as_u64().ok_or_else(|| Error::corrupt("non-u64 stable id")))
+                .collect()
+        };
+        if let Some("live_manifest") = json.get("kind").and_then(Json::as_str) {
+            if u("schema")? != MANIFEST_SCHEMA {
+                return Err(Error::corrupt(format!(
+                    "manifest schema {} != supported {MANIFEST_SCHEMA}",
+                    u("schema")?
+                )));
+            }
+            return Ok(ManifestRecord::Header { d: u("d")? });
+        }
+        match json.get("op").and_then(Json::as_str) {
+            Some("commit") => Ok(ManifestRecord::Commit {
+                version: u("version")?,
+                seg: s("seg")?,
+                rows: u("rows")?,
+            }),
+            Some("delete") => {
+                Ok(ManifestRecord::Delete { version: u("version")?, ids: id_list("ids")? })
+            }
+            Some("base") => Ok(ManifestRecord::Base {
+                version: u("version")?,
+                seg: s("seg")?,
+                rows: u("rows")?,
+                next_id: u("next_id")?,
+                ids: id_list("ids")?,
+            }),
+            other => Err(Error::corrupt(format!("unknown manifest op {other:?}"))),
+        }
+    }
+}
+
+/// The parsed valid prefix of a manifest log.
+pub struct ManifestReplay {
+    /// Every record of the valid prefix, with the byte offset its line
+    /// starts at (so a replay that rejects record `i` can truncate the
+    /// log right before it).
+    pub records: Vec<(ManifestRecord, u64)>,
+    /// Length of the valid prefix in bytes (== file length when clean).
+    pub valid_len: u64,
+    /// Why parsing stopped early (`None` when the whole log parsed).
+    pub torn: Option<String>,
+}
+
+/// Parse a manifest log, stopping cleanly at the first torn or corrupt
+/// line. Only I/O failure to read the file at all is an `Err`.
+pub fn read_manifest(path: &Path) -> Result<ManifestReplay> {
+    let bytes = std::fs::read(path).with_context(|| format!("read manifest {}", path.display()))?;
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    let mut torn = None;
+    while pos < bytes.len() {
+        let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+            torn = Some(format!("partial final line at byte {pos}"));
+            break;
+        };
+        let line = &bytes[pos..pos + nl];
+        let parsed = std::str::from_utf8(line)
+            .map_err(|_| Error::corrupt("manifest line is not UTF-8"))
+            .and_then(ManifestRecord::parse_line);
+        match parsed {
+            Ok(rec) => {
+                records.push((rec, pos as u64));
+                pos += nl + 1;
+            }
+            Err(e) => {
+                torn = Some(format!("line at byte {pos}: {e}"));
+                break;
+            }
+        }
+    }
+    Ok(ManifestReplay { records, valid_len: pos as u64, torn })
+}
+
+/// Atomically replace the manifest with `records` (write tmp, fsync,
+/// rename, fsync dir) and return a fresh append handle positioned at the
+/// end of the new log. Used by durable compaction.
+pub(crate) fn rewrite_manifest(dir: &Path, records: &[ManifestRecord]) -> Result<(File, u64)> {
+    let tmp = dir.join(MANIFEST_TMP_NAME);
+    let path = dir.join(MANIFEST_NAME);
+    let mut text = String::new();
+    for rec in records {
+        text.push_str(&rec.to_line());
+    }
+    let mut f = File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(text.as_bytes()).with_context(|| format!("write {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rename {} over {}", tmp.display(), path.display()))?;
+    sync_dir(dir)?;
+    let log = OpenOptions::new()
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("reopen manifest {}", path.display()))?;
+    Ok((log, text.len() as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("as_persist_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn round_trip(opts: StoreOptions, tag: &str) {
+        let m = testkit::gaussian(130, 5, 42);
+        let seg = ColumnStore::from_matrix(&m, &opts).unwrap();
+        let dir = tmp_dir(tag);
+        let path = dir.join("seg-0.seg");
+        write_segment(&seg, &path).unwrap();
+        let back = read_segment(&path, &opts).unwrap();
+        testkit::assert_views_bit_identical(&back, &seg);
+        assert_eq!(back.codec(), seg.codec());
+        assert_eq!(back.spilled(), seg.spilled());
+        assert_eq!(back.int_domain(), seg.int_domain());
+        assert_eq!(back.preview(), seg.preview());
+        for id in 0..seg.n_cols() * seg.n_blocks() {
+            assert_eq!(back.chunk_stats_at(id), seg.chunk_stats_at(id), "stats of chunk {id}");
+        }
+        drop(back);
+        assert!(path.exists(), "reading a segment must never delete it");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_round_trip_preserves_every_backing() {
+        round_trip(StoreOptions { rows_per_chunk: 32, ..Default::default() }, "f32");
+        round_trip(
+            StoreOptions { rows_per_chunk: 32, codec: Codec::I8, ..Default::default() },
+            "i8",
+        );
+        round_trip(
+            StoreOptions { rows_per_chunk: 32, codec: Codec::F16, ..Default::default() },
+            "f16",
+        );
+        round_trip(
+            StoreOptions { rows_per_chunk: 32, codec: Codec::I8, ..Default::default() }
+                .spill_to_temp(1024),
+            "i8_spill",
+        );
+    }
+
+    #[test]
+    fn truncated_segment_fails_with_corruption_at_every_boundary() {
+        let opts = StoreOptions { rows_per_chunk: 16, ..Default::default() };
+        let m = testkit::gaussian(40, 3, 7);
+        let seg = ColumnStore::from_matrix(&m, &opts).unwrap();
+        let dir = tmp_dir("trunc");
+        let path = dir.join("seg-0.seg");
+        write_segment(&seg, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.seg");
+        // Every prefix must fail *typed*, never panic; byte-level flips of
+        // the tail frame must be caught by the frame checksum.
+        for cut_at in 0..full.len() {
+            std::fs::write(&cut, &full[..cut_at]).unwrap();
+            let err = read_segment(&cut, &opts).unwrap_err();
+            assert!(err.is_corrupt(), "cut at {cut_at}: {err}");
+        }
+        let mut flipped = full.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&cut, &flipped).unwrap();
+        assert!(read_segment(&cut, &opts).unwrap_err().is_corrupt());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_records_round_trip_and_reject_mangling() {
+        let recs = [
+            ManifestRecord::Header { d: 64 },
+            ManifestRecord::Commit { version: 1, seg: "seg-0.seg".into(), rows: 400 },
+            ManifestRecord::Delete { version: 2, ids: vec![0, 17, 49] },
+            ManifestRecord::Base {
+                version: 3,
+                seg: "seg-1.seg".into(),
+                rows: 397,
+                next_id: 400,
+                ids: vec![1, 2, 3],
+            },
+        ];
+        for rec in &recs {
+            let line = rec.to_line();
+            assert!(line.ends_with('\n'));
+            let back = ManifestRecord::parse_line(line.trim_end_matches('\n')).unwrap();
+            assert_eq!(&back, rec);
+            // Any flipped byte in the JSON must fail the checksum.
+            let mangled = line.trim_end_matches('\n').replace("version", "versiom");
+            if mangled != line.trim_end_matches('\n') {
+                assert!(ManifestRecord::parse_line(&mangled).unwrap_err().is_corrupt());
+            }
+        }
+        assert!(ManifestRecord::parse_line("zz").unwrap_err().is_corrupt());
+    }
+
+    #[test]
+    fn manifest_reader_stops_at_torn_tail_with_exact_offset() {
+        let dir = tmp_dir("torn");
+        let path = dir.join(MANIFEST_NAME);
+        let a = ManifestRecord::Header { d: 3 }.to_line();
+        let b = ManifestRecord::Commit { version: 1, seg: "seg-0.seg".into(), rows: 8 }.to_line();
+        std::fs::write(&path, format!("{a}{b}")).unwrap();
+        let clean = read_manifest(&path).unwrap();
+        assert_eq!(clean.records.len(), 2);
+        assert_eq!(clean.valid_len, (a.len() + b.len()) as u64);
+        assert!(clean.torn.is_none());
+        // Truncate mid-second-record: valid prefix is exactly the header.
+        std::fs::write(&path, &format!("{a}{b}")[..a.len() + 10]).unwrap();
+        let torn = read_manifest(&path).unwrap();
+        assert_eq!(torn.records.len(), 1);
+        assert_eq!(torn.valid_len, a.len() as u64);
+        assert!(torn.torn.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,16 +8,22 @@
 //! decoded-chunk cache. The file is deleted when the store is dropped.
 //!
 //! Layout: chunks are written back-to-back in ingest order; an in-memory
-//! index maps chunk id → (offset, byte length). No framing or checksums —
-//! the file never outlives the process that wrote it.
+//! index maps chunk id → (offset, byte length). The raw spill layout
+//! carries no framing or checksums of its own: *ephemeral* spill files
+//! (the builder's scratch) still never outlive the process that wrote
+//! them, while *durable* segment files wrap this same layout in the
+//! framed, checksummed container of [`crate::store::persist`] — which
+//! also re-opens them through [`SpillFile::open_indexed`], with deletion
+//! on drop disabled, so a recovered store streams chunks from the very
+//! bytes the manifest committed.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 
 /// Process-unique suffix source for spill file names.
 static SPILL_SERIAL: AtomicU64 = AtomicU64::new(0);
@@ -51,11 +57,17 @@ impl SpillWriter {
 
     /// Append one encoded chunk; returns its index in write order.
     pub fn append(&mut self, bytes: &[u8]) -> Result<usize> {
+        // The framed length is a u32 on disk and is trusted verbatim by
+        // crash recovery — refuse to truncate rather than write a frame
+        // that lies about its payload.
+        let len = u32::try_from(bytes.len()).map_err(|_| {
+            Error::msg(format!("spill chunk of {} bytes exceeds the u32 frame limit", bytes.len()))
+        })?;
         self.file
             .write_all(bytes)
             .with_context(|| format!("write spill chunk to {}", self.path.display()))?;
-        self.offsets.push((self.pos, bytes.len() as u32));
-        self.pos += bytes.len() as u64;
+        self.offsets.push((self.pos, len));
+        self.pos += len as u64;
         Ok(self.offsets.len() - 1)
     }
 
@@ -68,13 +80,44 @@ impl SpillWriter {
         self.offsets.is_empty()
     }
 
+    /// Abandon the half-written spill file, deleting it from disk. A
+    /// `SpillWriter` has no `Drop` of its own (sealing moves its file
+    /// handle into the [`SpillFile`]), so a builder that aborts a
+    /// partially flushed segment must call this to avoid leaking the
+    /// scratch file until process exit.
+    pub fn abort(self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+
     /// Seal into a reader. `reorder[id]` gives the write-order index of
     /// chunk `id`, letting the caller re-key chunks (ingest writes in
     /// block-major order; the store reads in column-major chunk-id order).
+    ///
+    /// Flushes *and* fsyncs: `File::flush` alone only drains userspace
+    /// buffers, so a crash after "sealing" could still lose chunks the
+    /// in-memory index believes exist. Durable segment files additionally
+    /// need their parent directory fsynced — the persistence layer does
+    /// that (see [`crate::store::persist::sync_dir`]).
     pub fn finish(mut self, reorder: &[usize]) -> Result<SpillFile> {
         self.file.flush().context("flush spill file")?;
-        let index = reorder.iter().map(|&w| self.offsets[w]).collect();
-        Ok(SpillFile { file: Mutex::new(self.file), path: self.path.clone(), index })
+        self.file.sync_all().context("fsync spill file")?;
+        let index = reorder
+            .iter()
+            .map(|&w| {
+                self.offsets.get(w).copied().ok_or_else(|| {
+                    Error::msg(format!(
+                        "spill reorder index {w} out of range ({} chunks written)",
+                        self.offsets.len()
+                    ))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SpillFile {
+            file: Mutex::new(self.file),
+            path: self.path.clone(),
+            index,
+            delete_on_drop: true,
+        })
     }
 }
 
@@ -84,9 +127,28 @@ pub struct SpillFile {
     path: PathBuf,
     /// (offset, len) per chunk id.
     index: Vec<(u64, u32)>,
+    /// Ephemeral builder scratch deletes its file on drop; durable
+    /// segment files (owned by the manifest) must not.
+    delete_on_drop: bool,
 }
 
 impl SpillFile {
+    /// Re-open an existing file as a chunk reader with an externally
+    /// supplied chunk-id → (offset, len) index. Used by crash recovery
+    /// to stream chunks straight out of a durable segment file; such
+    /// files belong to the manifest, so `delete_on_drop` is false.
+    pub fn open_indexed(
+        path: &Path,
+        index: Vec<(u64, u32)>,
+        delete_on_drop: bool,
+    ) -> Result<SpillFile> {
+        let file = OpenOptions::new()
+            .read(true)
+            .open(path)
+            .with_context(|| format!("open spill-backed file {}", path.display()))?;
+        Ok(SpillFile { file: Mutex::new(file), path: path.to_path_buf(), index, delete_on_drop })
+    }
+
     /// Number of chunks.
     pub fn len(&self) -> usize {
         self.index.len()
@@ -107,10 +169,23 @@ impl SpillFile {
     }
 
     /// Read the encoded bytes of chunk `id`.
+    ///
+    /// Both failure paths that used to panic are typed errors now: an
+    /// out-of-range id is a [`Error::corrupt`] (the id came from an
+    /// index that disagrees with the file), and a poisoned file mutex is
+    /// recovered rather than propagated — the guarded state is only a
+    /// seek cursor, which the next `seek` overwrites, so a reader that
+    /// panicked mid-read cannot leave the file in a harmful state.
     pub fn read(&self, id: usize) -> Result<Vec<u8>> {
-        let (off, len) = self.index[id];
+        let &(off, len) = self.index.get(id).ok_or_else(|| {
+            Error::corrupt(format!(
+                "spill chunk id {id} out of range ({} chunks in {})",
+                self.index.len(),
+                self.path.display()
+            ))
+        })?;
         let mut buf = vec![0u8; len as usize];
-        let mut f = self.file.lock().unwrap();
+        let mut f = self.file.lock().unwrap_or_else(PoisonError::into_inner);
         f.seek(SeekFrom::Start(off))
             .with_context(|| format!("seek spill chunk {id}"))?;
         f.read_exact(&mut buf)
@@ -121,7 +196,9 @@ impl SpillFile {
 
 impl Drop for SpillFile {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        if self.delete_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -160,6 +237,41 @@ mod tests {
         assert!(path.exists());
         drop(f);
         assert!(!path.exists(), "spill file must be deleted on drop");
+    }
+
+    #[test]
+    fn out_of_range_reads_and_reorders_are_typed_errors_not_panics() {
+        let dir = std::env::temp_dir();
+        let mut w = SpillWriter::create(&dir).unwrap();
+        w.append(&[1, 2, 3]).unwrap();
+        // Reorder referencing a chunk that was never written.
+        assert!(w.finish(&[0, 7]).is_err());
+
+        let mut w = SpillWriter::create(&dir).unwrap();
+        w.append(&[1, 2, 3]).unwrap();
+        let f = w.finish(&[0]).unwrap();
+        let err = f.read(5).unwrap_err();
+        assert!(err.is_corrupt(), "bad chunk id must be a corruption error: {err}");
+        // The file stays readable after the failed read.
+        assert_eq!(f.read(0).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn open_indexed_reads_without_deleting() {
+        let dir = std::env::temp_dir();
+        let mut w = SpillWriter::create(&dir).unwrap();
+        w.append(&[9, 9]).unwrap();
+        w.append(&[7]).unwrap();
+        let f = w.finish(&[0, 1]).unwrap();
+        let path = f.path().to_path_buf();
+        // Independent reader over the same bytes, not owning the file.
+        let r = SpillFile::open_indexed(&path, vec![(0, 2), (2, 1)], false).unwrap();
+        assert_eq!(r.read(0).unwrap(), vec![9, 9]);
+        assert_eq!(r.read(1).unwrap(), vec![7]);
+        drop(r);
+        assert!(path.exists(), "non-owning reader must not delete the file");
+        drop(f);
+        assert!(!path.exists());
     }
 
     #[test]

@@ -4,16 +4,62 @@
 //! string-backed [`Error`], a [`Result`] alias defaulting to it, the
 //! [`anyhow!`](crate::anyhow) and [`bail!`](crate::bail) macros, and a
 //! [`Context`] extension trait for attaching context to fallible calls.
+//!
+//! Durability adds one refinement: an [`ErrorKind`] tag, so crash
+//! recovery can distinguish *corruption* (a torn tail or bad checksum —
+//! expected after a crash, recovery truncates and continues) from
+//! genuine I/O or logic failures that must abort. Wrapping through
+//! [`Context`] preserves the kind of an inner [`Error`] only via
+//! [`Error::prefix`]; the generic trait path erases it to
+//! [`ErrorKind::Generic`].
+
+/// Coarse failure class, checked by crash recovery and serving paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Everything that predates the durability layer.
+    Generic,
+    /// On-disk bytes failed validation (checksum, magic, framing, range).
+    Corrupt,
+    /// Recovery could not reach a usable state (not mere tail damage).
+    Recovery,
+}
 
 /// A string-backed error: cheap to build, `Display`s its message.
 #[derive(Debug, Clone)]
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
     pub fn msg(msg: impl Into<String>) -> Error {
-        Error { msg: msg.into() }
+        Error { msg: msg.into(), kind: ErrorKind::Generic }
+    }
+
+    /// A data-corruption error (bad checksum, torn frame, out-of-range
+    /// index into on-disk state).
+    pub fn corrupt(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), kind: ErrorKind::Corrupt }
+    }
+
+    /// A recovery-procedure error (manifest replay cannot proceed).
+    pub fn recovery(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), kind: ErrorKind::Recovery }
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    pub fn is_corrupt(&self) -> bool {
+        self.kind == ErrorKind::Corrupt
+    }
+
+    /// Prepend context while keeping the error's kind (the generic
+    /// [`Context`] impl cannot see through `E: Display` and resets the
+    /// kind to [`ErrorKind::Generic`]).
+    pub fn prefix(self, context: impl std::fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), kind: self.kind }
     }
 }
 
@@ -101,6 +147,19 @@ mod tests {
             Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
         let e = r.with_context(|| "loading artifacts").unwrap_err();
         assert_eq!(e.to_string(), "loading artifacts: boom");
+    }
+
+    #[test]
+    fn kinds_survive_prefix_but_not_generic_context() {
+        let e = Error::corrupt("bad frame checksum");
+        assert!(e.is_corrupt());
+        let p = e.prefix("segment seg-3.seg");
+        assert_eq!(p.to_string(), "segment seg-3.seg: bad frame checksum");
+        assert_eq!(p.kind(), ErrorKind::Corrupt);
+        assert_eq!(Error::recovery("no usable version").kind(), ErrorKind::Recovery);
+        // The Display-generic Context path erases the kind — documented.
+        let r: Result<()> = Err(Error::corrupt("x"));
+        assert_eq!(r.context("wrapped").unwrap_err().kind(), ErrorKind::Generic);
     }
 
     #[test]
