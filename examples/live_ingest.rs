@@ -79,12 +79,12 @@ fn main() {
     let server = MipsServer::start(live.clone(), cfg, Backend::NativeBandit);
 
     // Dedicated ingest thread: 20 append batches race the queries below.
-    let ingest = live.spawn_ingest(4);
+    let ingest = live.spawn_ingest(4).expect("spawn ingest");
     let feeder = {
         let batches: Vec<_> = (0..20u64).map(|b| lowrank_like(32, d, 15, 1_000 + b)).collect();
         std::thread::spawn(move || {
             for m in batches {
-                ingest.submit(m);
+                ingest.submit(m).expect("submit batch");
                 std::thread::sleep(std::time::Duration::from_micros(500));
             }
             ingest.close();

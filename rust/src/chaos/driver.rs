@@ -1,0 +1,310 @@
+//! The chaos random walk: seeded ingest/serve/kill/recover cycles over a
+//! durable [`LiveStore`], shared by `repro chaos` and `rust/tests/chaos.rs`.
+//!
+//! Each cycle: recover the data directory (faults OFF — recovery is the
+//! machinery under test, not a fault target here), install the fault
+//! schedule, commit batches and serve queries while faults fire, then
+//! clear chaos, simulate a crash (drop every handle; sometimes scribble
+//! a torn tail or an orphan segment, never the published prefix — the
+//! fsync contract is exactly that the prefix survives), recover twice,
+//! and check the invariants:
+//!
+//! 1. no panic escapes a public API (commit/serve/recover all return),
+//! 2. every commit that reported Ok is durable: recovery lands on that
+//!    version with a bit-exact fingerprint,
+//! 3. recovery is idempotent: the second pass truncates nothing and
+//!    drops nothing,
+//! 4. every served `(version, seed, warm_coords)` triple replays
+//!    bit-exact from the manifest alone,
+//! 5. no torn version is ever visible: a served or recovered snapshot's
+//!    version never exceeds the last Ok commit.
+//!
+//! Violations are collected, not asserted, so the CLI can print a
+//! reproducible report (`seed` + schedule JSON reproduce the walk).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::chaos::{self, FaultKind, Schedule, ScheduleGuard};
+use crate::coordinator::{Backend, MipsServer, ServerConfig};
+use crate::metrics::OpCounter;
+use crate::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use crate::store::{DatasetView, LiveStore, StoreOptions};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::testkit::{fingerprint_view, gaussian};
+
+/// Parameters of one random walk.
+#[derive(Clone, Debug)]
+pub struct WalkConfig {
+    pub seed: u64,
+    pub cycles: usize,
+    pub batches_per_cycle: usize,
+    pub queries_per_cycle: usize,
+    /// Dataset width.
+    pub d: usize,
+    /// Rows per committed batch.
+    pub batch_rows: usize,
+    /// Data directory (created if absent; the walk appends to whatever
+    /// durable history is already there).
+    pub dir: PathBuf,
+    /// `None` ⇒ [`default_schedule`] for `seed`.
+    pub schedule: Option<Schedule>,
+}
+
+impl WalkConfig {
+    /// The fixed-size smoke walk CI runs on every PR.
+    pub fn smoke(dir: PathBuf, seed: u64) -> WalkConfig {
+        WalkConfig {
+            seed,
+            cycles: 3,
+            batches_per_cycle: 4,
+            queries_per_cycle: 8,
+            d: 16,
+            batch_rows: 24,
+            dir,
+            schedule: None,
+        }
+    }
+}
+
+/// What happened, and whether the invariants held.
+#[derive(Clone, Debug, Default)]
+pub struct WalkReport {
+    pub cycles: u64,
+    pub commits_ok: u64,
+    pub commits_failed: u64,
+    pub queries_ok: u64,
+    pub queries_degraded: u64,
+    /// Queries whose batch task died to an injected panic before a
+    /// response could be sent; they were never served, so there is no
+    /// triple to replay.
+    pub queries_lost: u64,
+    pub recoveries: u64,
+    pub replayed: u64,
+    pub violations: Vec<String>,
+}
+
+impl WalkReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut out = Json::obj();
+        out.push("cycles", Json::U64(self.cycles));
+        out.push("commits_ok", Json::U64(self.commits_ok));
+        out.push("commits_failed", Json::U64(self.commits_failed));
+        out.push("queries_ok", Json::U64(self.queries_ok));
+        out.push("queries_degraded", Json::U64(self.queries_degraded));
+        out.push("queries_lost", Json::U64(self.queries_lost));
+        out.push("recoveries", Json::U64(self.recoveries));
+        out.push("replayed", Json::U64(self.replayed));
+        out.push(
+            "violations",
+            Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+        );
+        out
+    }
+}
+
+/// The schedule the walk uses when none is supplied: transient errors on
+/// every durable-write boundary (exercising retry + typed give-up),
+/// occasional injected corruption on spilled reads (exercising
+/// quarantine + degraded serving), rare worker panics and serve stalls
+/// (exercising containment and timeouts).
+pub fn default_schedule(seed: u64) -> Schedule {
+    Schedule::new(seed)
+        .prob("persist.manifest.append", FaultKind::Error, 0.10)
+        .prob("persist.manifest.fsync", FaultKind::Error, 0.10)
+        .prob("persist.segment.write", FaultKind::Error, 0.10)
+        .prob("spill.write", FaultKind::Error, 0.05)
+        .prob("live.commit", FaultKind::Error, 0.05)
+        .prob("spill.read", FaultKind::Corrupt, 0.02)
+        .prob("serve.query", FaultKind::Panic, 0.05)
+        .prob("serve.query", FaultKind::Stall(20), 0.05)
+        .prob("exec.task", FaultKind::Panic, 0.03)
+        .prob("exec.gate.stall", FaultKind::Stall(20), 0.03)
+}
+
+/// Run the walk. `Err` only for setup problems (bad schedule, unusable
+/// directory); invariant breaches land in `WalkReport::violations`.
+pub fn run_walk(cfg: &WalkConfig) -> Result<WalkReport> {
+    let schedule = cfg.schedule.clone().unwrap_or_else(|| default_schedule(cfg.seed));
+    // Validate the schedule once up front so a typo fails fast (the
+    // temporary guard clears chaos again immediately).
+    ScheduleGuard::install(schedule.clone())?;
+
+    let opts = StoreOptions { rows_per_chunk: 16, ..Default::default() };
+    let mut rng = Rng::new(cfg.seed ^ 0x77A1_4C0D);
+    let mut report = WalkReport::default();
+    let mut batch_serial = 0u64;
+    std::fs::create_dir_all(&cfg.dir)?;
+
+    let server_cfg = ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_timeout_us: 200,
+        validate_every: 0,
+        ..Default::default()
+    };
+
+    for cycle in 0..cfg.cycles {
+        report.cycles += 1;
+        // Open (create-or-recover) with chaos off; the first cycle
+        // bootstraps an empty directory.
+        chaos::clear();
+        let store = match LiveStore::open(cfg.d, opts.clone(), &cfg.dir) {
+            Ok(s) => Arc::new(s),
+            Err(e) => {
+                report.violations.push(format!("cycle {cycle}: open failed: {e}"));
+                break;
+            }
+        };
+        let mut last_ok_version = DatasetView::version(&*store.pin());
+
+        // ── Fault phase: ingest + serve under the schedule. ──────────
+        let guard = ScheduleGuard::install(schedule.clone())?;
+        let server = MipsServer::start(store.clone(), server_cfg.clone(), Backend::NativeBandit);
+        let commit_stride = (cfg.queries_per_cycle / cfg.batches_per_cycle.max(1)).max(1);
+        let mut pending = Vec::new();
+        for q in 0..cfg.queries_per_cycle {
+            if q % commit_stride == 0 {
+                let batch = gaussian(cfg.batch_rows, cfg.d, cfg.seed ^ batch_serial);
+                batch_serial += 1;
+                match store.commit_batch(&batch) {
+                    Ok(snap) => {
+                        report.commits_ok += 1;
+                        last_ok_version = DatasetView::version(&*snap);
+                    }
+                    Err(_) => report.commits_failed += 1,
+                }
+            }
+            let query: Vec<f32> = (0..cfg.d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let rx = server.submit(query.clone());
+            pending.push((query, rx));
+        }
+        let mut responses = Vec::new();
+        for (query, rx) in pending {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(resp) => responses.push((query, resp)),
+                Err(_) => report.queries_lost += 1,
+            }
+        }
+        server.shutdown();
+        drop(guard); // chaos off for verification
+
+        // ── Crash. Fingerprint the last published version first (the
+        // walk's oracle for what recovery must reproduce). ────────────
+        let snap = store.pin();
+        let live_version = DatasetView::version(&*snap);
+        if live_version != last_ok_version {
+            report.violations.push(format!(
+                "cycle {cycle}: pinned version {live_version} != last ok commit {last_ok_version}"
+            ));
+        }
+        let expect_fp = fingerprint_view(&*snap);
+        let expect_rows = snap.n_rows();
+        drop(snap);
+        drop(store);
+
+        // Sometimes scribble past the durable prefix, as a real torn
+        // write would: a partial manifest record, or an orphan segment.
+        match rng.below(3) {
+            0 => {}
+            1 => {
+                use std::io::Write;
+                let mut f = std::fs::OpenOptions::new()
+                    .append(true)
+                    .open(cfg.dir.join(crate::store::persist::MANIFEST_NAME))?;
+                f.write_all(b"0123beef {\"op\":\"commit\",\"torn")?;
+            }
+            _ => {
+                std::fs::write(
+                    cfg.dir.join(format!("seg-{}.seg", 900 + cycle)),
+                    b"ASEGtorn-not-a-real-segment",
+                )?;
+            }
+        }
+
+        // ── Recover twice; check durability and idempotence. ─────────
+        for pass in 0..2 {
+            match LiveStore::recover(&cfg.dir, opts.clone()) {
+                Err(e) => {
+                    report.violations.push(format!("cycle {cycle} pass {pass}: recover: {e}"));
+                    break;
+                }
+                Ok((again, r)) => {
+                    report.recoveries += 1;
+                    let snap = again.pin();
+                    if r.version != last_ok_version {
+                        report.violations.push(format!(
+                            "cycle {cycle} pass {pass}: recovered v{} != last ok v{}",
+                            r.version, last_ok_version
+                        ));
+                    }
+                    if snap.n_rows() != expect_rows || fingerprint_view(&*snap) != expect_fp {
+                        report.violations.push(format!(
+                            "cycle {cycle} pass {pass}: recovered v{} is not bit-exact",
+                            r.version
+                        ));
+                    }
+                    if pass == 1 && (r.truncated_bytes != 0 || r.dropped.is_some()) {
+                        report
+                            .violations
+                            .push(format!("cycle {cycle}: recovery not idempotent: {r:?}"));
+                    }
+                }
+            }
+        }
+
+        // ── Replay every served triple off the manifest alone. ───────
+        for (query, resp) in &responses {
+            if resp.error.is_some() {
+                report.queries_degraded += 1;
+                continue;
+            }
+            report.queries_ok += 1;
+            if resp.version > last_ok_version {
+                report.violations.push(format!(
+                    "cycle {cycle}: served v{} past last ok commit v{} (torn version visible)",
+                    resp.version, last_ok_version
+                ));
+                continue;
+            }
+            let snap = match LiveStore::recover_snapshot(&cfg.dir, &opts, resp.version) {
+                Ok(s) => s,
+                Err(e) => {
+                    report.violations.push(format!(
+                        "cycle {cycle}: served v{} unrecoverable: {e}",
+                        resp.version
+                    ));
+                    continue;
+                }
+            };
+            let mcfg = BanditMipsConfig {
+                delta: server_cfg.delta,
+                batch_size: 64,
+                strategy: SampleStrategy::Uniform,
+                sigma: None,
+                k: server_cfg.k,
+                seed: resp.seed,
+                threads: 1,
+            };
+            let counter = OpCounter::new();
+            let again = bandit_mips_warm(&*snap, query, &mcfg, &counter, &resp.warm_coords);
+            if again.atoms != resp.top_atoms || again.samples != resp.samples {
+                report.violations.push(format!(
+                    "cycle {cycle}: served v{} not bit-exact on replay",
+                    resp.version
+                ));
+            } else {
+                report.replayed += 1;
+            }
+        }
+    }
+    chaos::clear();
+    Ok(report)
+}

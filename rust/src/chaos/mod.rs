@@ -1,0 +1,485 @@
+//! Deterministic fault injection for the durable data plane.
+//!
+//! Named failpoints (`chaos::failpoint("persist.manifest.fsync")?`) are
+//! compiled into every fallible boundary of the store, the executor, and
+//! the serving path. When no schedule is installed the entire subsystem
+//! is **one relaxed atomic load** per site — the same no-perturbation
+//! contract `obs::enabled()` keeps, and `rust/tests/chaos.rs` enforces it
+//! the same way: every smoke-tier CostRecord must stay bit-identical
+//! with chaos compiled in but disabled.
+//!
+//! A [`Schedule`] is seeded and serializable (`util::json`, no deps):
+//! each [`Rule`] names a site from the canonical [`SITES`] registry, a
+//! [`FaultKind`] (typed error, corruption, panic, bounded stall), and a
+//! [`Trigger`] (fire on the Nth hit once, every Nth hit, or with a
+//! seeded per-rule probability). The same seed + schedule always fires
+//! the same faults in the same places — failures found by the random
+//! walk in `chaos::driver` replay exactly from the printed seed via
+//! `repro chaos --seed S`.
+//!
+//! Concurrency: the fast path is lock-free; when a schedule is active,
+//! rule state sits behind one mutex (poisoning is recovered, since an
+//! injected panic may unwind while the caller holds no lock — state is
+//! updated before the fault is executed).
+
+pub mod driver;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::util::digest::fnv1a_bytes;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Every registered failpoint site. Installing a schedule that names a
+/// site not in this list is a typed error — a misspelled site would
+/// otherwise silently never fire.
+pub const SITES: &[&str] = &[
+    "spill.write",
+    "spill.finish",
+    "spill.read",
+    "persist.segment.write",
+    "persist.segment.read",
+    "persist.manifest.append",
+    "persist.manifest.fsync",
+    "persist.manifest.rewrite",
+    "live.commit",
+    "live.ingest",
+    "live.delete",
+    "live.compact",
+    "exec.task",
+    "exec.gate.stall",
+    "serve.query",
+];
+
+/// Stalls are bounded so an injected hang can never wedge a test run.
+pub const MAX_STALL_MS: u64 = 2_000;
+
+/// What an armed failpoint does when its trigger fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return a typed `ErrorKind::Generic` error — models transient I/O
+    /// failure, so retry policies treat it as retryable.
+    Error,
+    /// Return a typed `ErrorKind::Corrupt` error — models bad bytes, so
+    /// retry policies give up and quarantine/recovery paths engage.
+    Corrupt,
+    /// Panic with a recognizable message — models a bug in flight.
+    Panic,
+    /// Sleep this many milliseconds (clamped to [`MAX_STALL_MS`]) —
+    /// models a wedged disk or descheduled thread.
+    Stall(u64),
+}
+
+/// When an armed failpoint fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Fire exactly once, on the Nth hit of the site (1-based).
+    Nth(u64),
+    /// Fire on every Nth hit, repeatedly (1 = every hit).
+    Every(u64),
+    /// Fire each hit with this probability, from a per-rule RNG seeded
+    /// by `(schedule.seed, site, rule index)` — deterministic given the
+    /// per-thread hit order.
+    Prob(f64),
+}
+
+/// One armed failpoint.
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub site: String,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+/// A seeded, serializable fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub seed: u64,
+    pub rules: Vec<Rule>,
+}
+
+impl Schedule {
+    pub fn new(seed: u64) -> Schedule {
+        Schedule { seed, rules: Vec::new() }
+    }
+
+    /// Arm `site` to fault once, on its `n`th hit (1-based).
+    pub fn one_shot(mut self, site: &str, kind: FaultKind, n: u64) -> Schedule {
+        self.rules.push(Rule { site: site.to_string(), kind, trigger: Trigger::Nth(n.max(1)) });
+        self
+    }
+
+    /// Arm `site` to fault on every `n`th hit, repeatedly.
+    pub fn every(mut self, site: &str, kind: FaultKind, n: u64) -> Schedule {
+        self.rules.push(Rule { site: site.to_string(), kind, trigger: Trigger::Every(n.max(1)) });
+        self
+    }
+
+    /// Arm `site` to fault with probability `p` per hit (seeded).
+    pub fn prob(mut self, site: &str, kind: FaultKind, p: f64) -> Schedule {
+        self.rules
+            .push(Rule { site: site.to_string(), kind, trigger: Trigger::Prob(p.clamp(0.0, 1.0)) });
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut rules = Vec::with_capacity(self.rules.len());
+        for rule in &self.rules {
+            let mut r = Json::obj();
+            r.push("site", Json::Str(rule.site.clone()));
+            let (kind, stall_ms) = match rule.kind {
+                FaultKind::Error => ("error", None),
+                FaultKind::Corrupt => ("corrupt", None),
+                FaultKind::Panic => ("panic", None),
+                FaultKind::Stall(ms) => ("stall", Some(ms)),
+            };
+            r.push("kind", Json::Str(kind.to_string()));
+            if let Some(ms) = stall_ms {
+                r.push("stall_ms", Json::U64(ms));
+            }
+            let mut t = Json::obj();
+            match rule.trigger {
+                Trigger::Nth(n) => t.push("nth", Json::U64(n)),
+                Trigger::Every(n) => t.push("every", Json::U64(n)),
+                Trigger::Prob(p) => t.push("prob", Json::F64(p)),
+            };
+            r.push("trigger", t);
+            rules.push(r);
+        }
+        let mut out = Json::obj();
+        out.push("schema", Json::Str(SCHEMA.to_string()));
+        out.push("seed", Json::U64(self.seed));
+        out.push("rules", Json::Arr(rules));
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Schedule> {
+        let json = Json::parse(text).map_err(|e| e.prefix("chaos schedule"))?;
+        let schema = json.get("schema").and_then(Json::as_str).unwrap_or(SCHEMA);
+        if schema != SCHEMA {
+            return Err(Error::msg(format!("chaos schedule: unknown schema {schema:?}")));
+        }
+        let seed = json
+            .get("seed")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::msg("chaos schedule: missing seed"))?;
+        let mut rules = Vec::new();
+        for (i, r) in json.get("rules").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            let site = r
+                .get("site")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg(format!("chaos schedule: rule {i} missing site")))?
+                .to_string();
+            let kind = match r.get("kind").and_then(Json::as_str) {
+                Some("error") => FaultKind::Error,
+                Some("corrupt") => FaultKind::Corrupt,
+                Some("panic") => FaultKind::Panic,
+                Some("stall") => {
+                    FaultKind::Stall(r.get("stall_ms").and_then(Json::as_u64).unwrap_or(10))
+                }
+                other => {
+                    return Err(Error::msg(format!(
+                        "chaos schedule: rule {i} has unknown kind {other:?}"
+                    )))
+                }
+            };
+            let t = r
+                .get("trigger")
+                .ok_or_else(|| Error::msg(format!("chaos schedule: rule {i} missing trigger")))?;
+            let trigger = if let Some(n) = t.get("nth").and_then(Json::as_u64) {
+                Trigger::Nth(n.max(1))
+            } else if let Some(n) = t.get("every").and_then(Json::as_u64) {
+                Trigger::Every(n.max(1))
+            } else if let Some(p) = t.get("prob").and_then(Json::as_f64) {
+                Trigger::Prob(p.clamp(0.0, 1.0))
+            } else {
+                return Err(Error::msg(format!("chaos schedule: rule {i} has unknown trigger")));
+            };
+            rules.push(Rule { site, kind, trigger });
+        }
+        Ok(Schedule { seed, rules })
+    }
+}
+
+const SCHEMA: &str = "chaos-schedule/1";
+
+/// Hit/fire counters for one rule, reported by [`report`].
+#[derive(Clone, Debug)]
+pub struct RuleReport {
+    pub site: String,
+    pub hits: u64,
+    pub fires: u64,
+}
+
+struct RuleState {
+    rule: Rule,
+    hits: u64,
+    fires: u64,
+    rng: Rng,
+}
+
+struct Active {
+    states: Vec<RuleState>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<Active>> = Mutex::new(None);
+
+fn active_lock() -> MutexGuard<'static, Option<Active>> {
+    // An injected panic can unwind through a caller while another thread
+    // holds this lock only during state bookkeeping (faults execute
+    // after the guard drops), but recover poisoning defensively anyway.
+    ACTIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// True when a fault schedule is installed. The only cost any failpoint
+/// pays when chaos is idle is this one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a schedule and arm every failpoint. Replaces any schedule
+/// already active. Fails (leaving chaos disabled) if a rule names a
+/// site missing from [`SITES`].
+pub fn install(schedule: Schedule) -> Result<()> {
+    let mut states = Vec::with_capacity(schedule.rules.len());
+    for (i, rule) in schedule.rules.into_iter().enumerate() {
+        if !SITES.contains(&rule.site.as_str()) {
+            clear();
+            return Err(Error::msg(format!(
+                "chaos: rule {i} names unregistered site {:?} (see chaos::SITES)",
+                rule.site
+            )));
+        }
+        let stream = fnv1a_bytes(rule.site.bytes()) ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let rng = Rng::new(schedule.seed ^ 0xC4A0_5CA0_5CA0_55ED).fork(stream);
+        states.push(RuleState { rule, hits: 0, fires: 0, rng });
+    }
+    *active_lock() = Some(Active { states });
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every failpoint and drop the schedule. Idempotent.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *active_lock() = None;
+}
+
+/// Per-rule hit/fire counts for the active schedule (empty when idle).
+pub fn report() -> Vec<RuleReport> {
+    active_lock()
+        .as_ref()
+        .map(|a| {
+            a.states
+                .iter()
+                .map(|s| RuleReport { site: s.rule.site.clone(), hits: s.hits, fires: s.fires })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Advance every rule watching `site` by one hit and return the fault to
+/// execute, if any (first firing rule wins; later rules still count the
+/// hit, so their triggers stay aligned with site traffic).
+fn check(site: &str) -> Option<FaultKind> {
+    let mut guard = active_lock();
+    let active = guard.as_mut()?;
+    let mut fire = None;
+    for state in active.states.iter_mut().filter(|s| s.rule.site == site) {
+        state.hits += 1;
+        let hit = match state.rule.trigger {
+            Trigger::Nth(n) => state.fires == 0 && state.hits == n,
+            Trigger::Every(n) => state.hits % n == 0,
+            Trigger::Prob(p) => state.rng.bernoulli(p),
+        };
+        if hit {
+            state.fires += 1;
+            if fire.is_none() {
+                fire = Some(state.rule.kind);
+            }
+        }
+    }
+    fire
+}
+
+fn injected_error(site: &str, kind: FaultKind) -> Error {
+    match kind {
+        FaultKind::Corrupt => Error::corrupt(format!("chaos: injected corruption at {site}")),
+        _ => Error::msg(format!("chaos: injected fault at {site}")),
+    }
+}
+
+/// The failpoint for `Result` contexts. Disabled: one relaxed load.
+/// Armed and firing: returns the injected typed error, panics, or
+/// stalls (bounded) per the matching rule.
+pub fn failpoint(site: &str) -> Result<()> {
+    if !enabled() {
+        return Ok(());
+    }
+    match check(site) {
+        None => Ok(()),
+        Some(FaultKind::Stall(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms.min(MAX_STALL_MS)));
+            Ok(())
+        }
+        Some(FaultKind::Panic) => panic!("chaos: injected panic at {site}"),
+        Some(kind) => Err(injected_error(site, kind)),
+    }
+}
+
+/// The failpoint for infallible contexts (no error channel): `Error` and
+/// `Corrupt` rules escalate to a panic here, which the surrounding
+/// isolation layer (worker `catch_unwind`, serve-path degradation) must
+/// contain — that containment is exactly what the chaos suite proves.
+pub fn perturb(site: &str) {
+    if !enabled() {
+        return;
+    }
+    match check(site) {
+        None => {}
+        Some(FaultKind::Stall(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms.min(MAX_STALL_MS)));
+        }
+        Some(_) => panic!("chaos: injected panic at {site}"),
+    }
+}
+
+/// Statement-form sugar for `Result` contexts:
+/// `failpoint!("persist.manifest.fsync");` early-returns the injected
+/// error via `?`.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr) => {
+        $crate::chaos::failpoint($site)?
+    };
+}
+
+/// RAII guard: installs a schedule on construction, clears chaos on
+/// drop — even when a test panics mid-walk. Tests serialize on their own
+/// process-global lock (chaos state is process-wide, like `obs`).
+pub struct ScheduleGuard(());
+
+impl ScheduleGuard {
+    pub fn install(schedule: Schedule) -> Result<ScheduleGuard> {
+        install(schedule)?;
+        Ok(ScheduleGuard(()))
+    }
+}
+
+impl Drop for ScheduleGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Chaos state is process-global; unit tests serialize on this.
+    fn lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_failpoints_are_free_and_ok() {
+        let _g = lock();
+        clear();
+        assert!(!enabled());
+        for site in SITES {
+            assert!(failpoint(site).is_ok());
+            perturb(site);
+        }
+        assert!(report().is_empty());
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = lock();
+        let _s =
+            ScheduleGuard::install(Schedule::new(7).one_shot("live.commit", FaultKind::Error, 3))
+                .unwrap();
+        let fails: Vec<bool> = (0..6).map(|_| failpoint("live.commit").is_err()).collect();
+        assert_eq!(fails, vec![false, false, true, false, false, false]);
+        let rep = report();
+        assert_eq!((rep[0].hits, rep[0].fires), (6, 1));
+    }
+
+    #[test]
+    fn every_trigger_repeats_and_corrupt_is_typed() {
+        let _g = lock();
+        let _s =
+            ScheduleGuard::install(Schedule::new(7).every("spill.read", FaultKind::Corrupt, 2))
+                .unwrap();
+        for i in 1..=6u64 {
+            match failpoint("spill.read") {
+                Ok(()) => assert!(i % 2 == 1, "hit {i} should have fired"),
+                Err(e) => {
+                    assert!(i % 2 == 0, "hit {i} fired early");
+                    assert!(e.is_corrupt(), "injected corruption must be typed: {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_per_seed() {
+        let _g = lock();
+        let run = |seed: u64| -> Vec<bool> {
+            let _s = ScheduleGuard::install(
+                Schedule::new(seed).prob("serve.query", FaultKind::Error, 0.5),
+            )
+            .unwrap();
+            (0..64).map(|_| failpoint("serve.query").is_err()).collect()
+        };
+        let a = run(0xA5);
+        let b = run(0xA5);
+        let c = run(0xA6);
+        assert_eq!(a, b, "same seed, same firing pattern");
+        assert_ne!(a, c, "different seed perturbs the pattern");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f), "p=0.5 mixes");
+    }
+
+    #[test]
+    fn unknown_site_is_rejected_and_leaves_chaos_disabled() {
+        let _g = lock();
+        let err = install(Schedule::new(1).one_shot("no.such.site", FaultKind::Error, 1))
+            .expect_err("unregistered site");
+        assert!(err.to_string().contains("no.such.site"));
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn schedule_json_round_trips() {
+        let _g = lock();
+        let s = Schedule::new(0xDEAD)
+            .one_shot("persist.manifest.fsync", FaultKind::Error, 2)
+            .every("spill.read", FaultKind::Corrupt, 3)
+            .prob("serve.query", FaultKind::Stall(25), 0.125)
+            .one_shot("exec.task", FaultKind::Panic, 1);
+        let text = s.to_json().to_pretty_string();
+        let back = Schedule::parse(&text).unwrap();
+        assert_eq!(back.seed, s.seed);
+        assert_eq!(back.rules.len(), s.rules.len());
+        for (a, b) in back.rules.iter().zip(&s.rules) {
+            assert_eq!(a.site, b.site);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.trigger, b.trigger);
+        }
+    }
+
+    #[test]
+    fn sites_registry_is_sorted_unique_per_prefix_group() {
+        let mut seen = std::collections::HashSet::new();
+        for site in SITES {
+            assert!(seen.insert(site), "duplicate site {site}");
+            assert!(site.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'));
+        }
+    }
+}

@@ -67,6 +67,12 @@ pub struct QueryResponse {
     /// answered with (empty when `ServerConfig::warm_coords` is 0 or the
     /// batch had a single request).
     pub warm_coords: Vec<usize>,
+    /// Set when this query was *degraded* rather than answered: the
+    /// solve panicked (a poisoned chunk, an injected fault) or an
+    /// armed failpoint fired on the serve path. `top_atoms` is empty,
+    /// the rest of the batch still gets real answers, and the server
+    /// stays up — a per-query error response, never a lost receiver.
+    pub error: Option<String>,
 }
 
 struct Request {
@@ -183,22 +189,41 @@ impl MipsServer {
     }
 
     /// Submit a query; returns the response receiver.
+    ///
+    /// Never panics: if the dispatcher is gone the request is dropped,
+    /// so the returned receiver disconnects (`recv` errors) instead of
+    /// the submitting thread dying. Callers already treat a
+    /// disconnected receiver as a lost query.
     pub fn submit(&self, query: Vec<f32>) -> Receiver<QueryResponse> {
         let (rtx, rrx) = channel();
         let req = Request { query, submitted: Instant::now(), respond: rtx };
-        self.tx.as_ref().expect("server running").send(req).expect("dispatcher alive");
+        if let Some(tx) = self.tx.as_ref() {
+            let _ = tx.send(req);
+        }
         rrx
     }
 
     /// Graceful shutdown: drain the queue, then wait for every in-flight
-    /// batch task on the shared pool to finish.
+    /// batch task on the shared pool to finish. Bounded: a wedged batch
+    /// task (stalled mid-serve) degrades shutdown into a reported
+    /// timeout after 30s instead of hanging the caller forever.
     pub fn shutdown(mut self) {
         drop(self.tx.take());
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        self.gate.wait_idle();
+        if !self.gate.wait_idle_timeout(Duration::from_secs(30)) {
+            eprintln!("mips server shutdown: batch tasks still in flight after 30s; detaching");
+        }
     }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
 }
 
 fn serve_batch(
@@ -244,8 +269,27 @@ fn serve_batch(
         // window deltas would overcount under concurrency.
         let local = OpCounter::new();
         let seed = cfg.seed ^ served ^ rng.next_u64();
-        let (top, validated) =
-            answer(&*pinned, cfg, backend, &req.query, &warm, served, seed, &local, stats);
+        // Degradation boundary: a panic while answering ONE query (a
+        // quarantined chunk, an injected fault) is contained here and
+        // downgraded to an error response — the rest of the batch still
+        // gets real answers and no receiver is ever left hanging.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::chaos::failpoint("serve.query")?;
+            Ok(answer(&*pinned, cfg, backend, &req.query, &warm, served, seed, &local, stats))
+        }))
+        .unwrap_or_else(|p| {
+            Err(crate::util::error::Error::msg(format!(
+                "query answer panicked: {}",
+                panic_message(&*p)
+            )))
+        });
+        let ((top, validated), error) = match outcome {
+            Ok(r) => (r, None),
+            Err(e) => {
+                obs.counter("serve.degraded").incr();
+                ((Vec::new(), None), Some(e.to_string()))
+            }
+        };
         stats.samples.add(local.get());
         queries_ctr.incr();
         samples_ctr.add(local.get());
@@ -259,6 +303,7 @@ fn serve_batch(
             version,
             seed,
             warm_coords: warm.clone(),
+            error,
         });
     }
 }

@@ -79,7 +79,12 @@ pub struct WorkerPool {
 fn run_task(task: Task) {
     // Detached tasks own their panics; scoped tasks are wrapped so the
     // latch always fires. Either way a panic must not kill the worker.
-    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    // The `exec.task` failpoint rides inside the same catch_unwind: an
+    // injected panic proves containment, never kills a pool thread.
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        crate::chaos::perturb("exec.task");
+        task();
+    }));
 }
 
 fn worker_loop(queue: Arc<Mutex<Receiver<Task>>>) {
@@ -247,6 +252,7 @@ impl Gate {
 
     /// Block until a slot is free, then take it.
     pub fn acquire(&self) {
+        crate::chaos::perturb("exec.gate.stall");
         let mut n = self.state.lock().unwrap();
         while *n >= self.max {
             n = self.cv.wait(n).unwrap();
@@ -267,6 +273,24 @@ impl Gate {
         while *n > 0 {
             n = self.cv.wait(n).unwrap();
         }
+    }
+
+    /// Like [`Gate::wait_idle`], but give up after `timeout`. Returns
+    /// `true` if the gate drained and `false` on timeout, so a wedged
+    /// task (a worker stalled while holding a slot) degrades shutdown
+    /// into a reported timeout instead of a hang.
+    pub fn wait_idle_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut n = self.state.lock().unwrap();
+        while *n > 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(n, deadline - now).unwrap();
+            n = guard;
+        }
+        true
     }
 
     /// Acquire a slot as an RAII guard: released on drop, so a panicking
@@ -372,6 +396,18 @@ mod tests {
         }
         gate.wait_idle();
         assert!(peak.load(Ordering::SeqCst) <= 2, "gate leaked: {:?}", peak);
+    }
+
+    #[test]
+    fn wait_idle_timeout_reports_wedged_then_drained() {
+        let gate = Arc::new(Gate::new(1));
+        gate.acquire();
+        assert!(
+            !gate.wait_idle_timeout(Duration::from_millis(20)),
+            "a held slot must surface as a timeout, not a hang"
+        );
+        gate.release();
+        assert!(gate.wait_idle_timeout(Duration::from_millis(20)));
     }
 
     #[test]

@@ -44,8 +44,19 @@
 //! trace` / `repro metrics`) — all under a test-enforced contract that
 //! enabling instrumentation changes no answer digest and no gated op
 //! count.
+//!
+//! Breaking it on purpose is [`chaos`]: deterministic fault injection.
+//! Named failpoints sit at every fallible boundary of the durable data
+//! plane (spill, manifest, commit, worker, serve), armed by seeded
+//! serializable schedules (`repro chaos`) and disabled down to one
+//! relaxed atomic load otherwise — the same no-perturbation contract as
+//! [`obs`], test-enforced. Injected faults prove the degradation story:
+//! bounded deterministic retries for transient I/O, quarantine of
+//! corrupt chunks with health gauges, typed give-up errors, and served
+//! answers that stay bit-exact replayable through it all.
 
 pub mod bandit;
+pub mod chaos;
 pub mod coordinator;
 pub mod data;
 pub mod exec;

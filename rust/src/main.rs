@@ -12,6 +12,7 @@
 //! repro trace [--scenario NAME] [--out FILE]   # traced scenario -> JSON
 //! repro metrics [--queries N] [--out FILE]     # serving workload -> registry snapshot
 //! repro recover <dir>                          # replay a durable store's manifest
+//! repro chaos [--seed S] [--cycles N] [--schedule F] [--dir D]
 //! ```
 
 use std::sync::Arc;
@@ -36,10 +37,11 @@ fn main() {
         Some("trace") => cmd_trace(&args[1..]),
         Some("metrics") => cmd_metrics(&args[1..]),
         Some("recover") => cmd_recover(&args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         _ => {
             eprintln!(
                 "usage: repro <list|exp|serve|check-artifacts|perfgate|bench|trace|metrics\
-                 |recover> [...]\n\
+                 |recover|chaos> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
                  repro check-artifacts\n  \
@@ -48,7 +50,8 @@ fn main() {
                  repro bench <run|list> [--tier smoke|full] [--out FILE] [--label TEXT]\n  \
                  repro trace [--scenario NAME] [--out FILE]\n  \
                  repro metrics [--queries N] [--out FILE]\n  \
-                 repro recover <dir>"
+                 repro recover <dir>\n  \
+                 repro chaos [--seed S] [--cycles N] [--schedule F] [--dir D]"
             );
             2
         }
@@ -512,6 +515,11 @@ fn cmd_metrics(args: &[String]) -> i32 {
 /// version, live rows, segment count, the arrival counter, how many
 /// torn-tail bytes were truncated, and (if replay stopped early) why.
 /// The row width comes from the manifest header, so no flags are needed.
+///
+/// Exit code: 0 for a clean (possibly tail-truncated) recovery; 1 when
+/// the directory was unrecoverable **or** replay dropped committed data
+/// on the floor — so scripts and CI can gate on data loss while the
+/// human-readable report still prints in full.
 fn cmd_recover(args: &[String]) -> i32 {
     use adaptive_sampling::store::{DatasetView, LiveStore, StoreOptions};
 
@@ -542,7 +550,76 @@ fn cmd_recover(args: &[String]) -> i32 {
         println!("replay stopped early: {why}");
     }
     println!("pinned: version {}, {} rows, width {}", snap.version(), snap.len(), snap.d());
+    if report.dropped.is_some() {
+        eprintln!("recover: incomplete — committed records were dropped (see above)");
+        return 1;
+    }
     0
+}
+
+/// `repro chaos` — the seeded fault-injection walk (see `chaos::driver`):
+/// ingest + serve a durable `LiveStore` under an armed fault schedule,
+/// crash, recover twice, and replay every served `(version, seed,
+/// warm_coords)` triple bit-exact from the manifest alone. Prints the
+/// walk report as JSON. Exit: 0 when every invariant held, 1 on any
+/// violation (the printed seed + schedule reproduce it exactly), 2 for
+/// setup errors. Without `--schedule F` (a `chaos-schedule/1` JSON
+/// file) the built-in mixed schedule is armed; `--dir D` walks over an
+/// existing data directory and keeps it (default: a scratch dir).
+fn cmd_chaos(args: &[String]) -> i32 {
+    use adaptive_sampling::chaos::{driver, Schedule};
+
+    let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(0xC4A05);
+    let cycles: usize = flag_value(args, "--cycles").and_then(|s| s.parse().ok()).unwrap_or(3);
+    let schedule = match flag_value(args, "--schedule") {
+        None => None,
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("chaos: read {path}: {e}");
+                    return 2;
+                }
+            };
+            match Schedule::parse(&text) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("chaos: {e:#}");
+                    return 2;
+                }
+            }
+        }
+    };
+    let (dir, scratch) = match flag_value(args, "--dir") {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => (
+            std::env::temp_dir().join(format!("as_chaos_{}_{seed:x}", std::process::id())),
+            true,
+        ),
+    };
+    let mut cfg = driver::WalkConfig::smoke(dir.clone(), seed);
+    cfg.cycles = cycles;
+    cfg.schedule = schedule;
+    println!("chaos: walking {} cycles with seed {seed:#x} over {}", cfg.cycles, dir.display());
+    let result = driver::run_walk(&cfg);
+    if scratch {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("chaos: {e:#}");
+            return 2;
+        }
+    };
+    println!("{}", report.to_json().to_pretty_string());
+    if report.ok() {
+        0
+    } else {
+        let n = report.violations.len();
+        eprintln!("chaos: {n} invariant violation(s) — rerun with --seed {seed}");
+        1
+    }
 }
 
 fn cmd_check_artifacts() -> i32 {

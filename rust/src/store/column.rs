@@ -32,7 +32,7 @@
 //! [`ColumnStore::cache_counters`]); on the Spilled backing they pin a
 //! cached chunk once per run so disk reads keep amortizing.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -228,7 +228,15 @@ impl ChunkCache {
     /// workers racing on the same missing chunk may both decode it; the
     /// values are identical, the second result wins the insert race, and
     /// the duplicate work only shows up in the diagnostic counters.
-    fn get_or_fill(&self, id: usize, fill: impl FnOnce() -> Vec<f32>) -> Arc<Vec<f32>> {
+    ///
+    /// `fill` is fallible (a spilled chunk's disk read can fail): an
+    /// error caches nothing and propagates to the caller, which decides
+    /// the degradation policy (see [`ColumnStore::try_chunk`]).
+    fn get_or_fill(
+        &self,
+        id: usize,
+        fill: impl FnOnce() -> crate::util::error::Result<Vec<f32>>,
+    ) -> crate::util::error::Result<Arc<Vec<f32>>> {
         {
             let mut g = self.inner.lock().unwrap();
             g.tick += 1;
@@ -236,18 +244,18 @@ impl ChunkCache {
             if let Some(e) = g.map.get_mut(&id) {
                 e.used = tick;
                 self.hits.incr();
-                return e.data.clone();
+                return Ok(e.data.clone());
             }
         }
         self.misses.incr();
-        let data = Arc::new(fill());
+        let data = Arc::new(fill()?);
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
         if let Some(e) = g.map.get_mut(&id) {
             // Lost a fill race: keep the incumbent (identical values).
             e.used = tick;
-            return e.data.clone();
+            return Ok(e.data.clone());
         }
         g.bytes += data.len() * 4;
         g.map.insert(id, CacheEntry { data: data.clone(), used: tick });
@@ -267,7 +275,7 @@ impl ChunkCache {
                 None => break,
             }
         }
-        data
+        Ok(data)
     }
 
     fn resident_bytes(&self) -> usize {
@@ -296,6 +304,10 @@ pub struct ColumnStore {
     /// backing — the "decode-free I8 serving" acceptance check.
     chunk_decodes: OpCounter,
     spill_reads: OpCounter,
+    /// Chunk ids whose spilled read failed: quarantined, failing fast on
+    /// every later access instead of re-reading known-bad bytes, while
+    /// every other chunk keeps serving (see [`ColumnStore::try_chunk`]).
+    quarantined: Mutex<HashSet<usize>>,
     /// Reservoir preview rows captured at ingest (warm starts).
     preview: Vec<Vec<f32>>,
 }
@@ -332,6 +344,7 @@ impl ColumnStore {
             decode_ops: OpCounter::new(),
             chunk_decodes: OpCounter::new(),
             spill_reads: OpCounter::new(),
+            quarantined: Mutex::new(HashSet::new()),
             preview,
         }
     }
@@ -649,28 +662,86 @@ impl ColumnStore {
         }
     }
 
-    /// Decoded chunk `(col, block)` — the one access primitive every
-    /// *scalar* `DatasetView` method funnels through (the batched hooks
-    /// go through [`ColumnStore::chunk_ref`] instead).
-    fn chunk(&self, col: usize, block: usize) -> Arc<Vec<f32>> {
+    /// Fallible decoded-chunk access — the typed face of the store's
+    /// degradation policy. A spilled chunk whose disk read (or decode
+    /// framing) fails is **quarantined**: the typed error (kind
+    /// preserved, usually [`crate::util::error::ErrorKind::Corrupt`])
+    /// propagates, the id is recorded so later touches fail fast
+    /// without re-reading known-bad bytes, and the `store.health` /
+    /// `store.quarantined_segments` gauges flip so operators see the
+    /// degradation — while every other chunk keeps serving.
+    pub(crate) fn try_chunk(
+        &self,
+        col: usize,
+        block: usize,
+    ) -> crate::util::error::Result<Arc<Vec<f32>>> {
         let id = col * self.n_blocks + block;
         match &self.backing {
-            Backing::Decoded(chunks) => chunks[id].clone(),
+            Backing::Decoded(chunks) => Ok(chunks[id].clone()),
             Backing::Encoded(bytes) => self
                 .cache
                 .as_ref()
                 .expect("encoded backing has a cache")
-                .get_or_fill(id, || self.decode_chunk(&bytes[id], self.block_len(block))),
-            Backing::Spilled(spill) => self
-                .cache
-                .as_ref()
-                .expect("spilled backing has a cache")
-                .get_or_fill(id, || {
-                    self.spill_reads.incr();
-                    let raw = spill.read(id).expect("spill chunk read");
-                    self.decode_chunk(&raw, self.block_len(block))
-                }),
+                .get_or_fill(id, || Ok(self.decode_chunk(&bytes[id], self.block_len(block)))),
+            Backing::Spilled(spill) => {
+                if self.quarantined.lock().unwrap().contains(&id) {
+                    return Err(crate::util::error::Error::corrupt(format!(
+                        "chunk id {id} is quarantined (an earlier read of {} failed)",
+                        spill.path().display()
+                    )));
+                }
+                let res = self
+                    .cache
+                    .as_ref()
+                    .expect("spilled backing has a cache")
+                    .get_or_fill(id, || {
+                        self.spill_reads.incr();
+                        let raw = spill.read(id)?;
+                        Ok(self.decode_chunk(&raw, self.block_len(block)))
+                    });
+                res.map_err(|e| {
+                    self.quarantine(id);
+                    e.prefix(format!("spilled chunk (col {col}, block {block})"))
+                })
+            }
         }
+    }
+
+    /// Record a failed chunk and flip the store's health instruments.
+    fn quarantine(&self, id: usize) {
+        let count = {
+            let mut q = self.quarantined.lock().unwrap();
+            q.insert(id);
+            q.len() as u64
+        };
+        let obs = crate::obs::registry();
+        obs.gauge("store.quarantined_segments").set_max(count);
+        obs.gauge("store.health").set(0);
+    }
+
+    /// Chunk ids quarantined so far (0 on a healthy store).
+    pub fn quarantined_chunks(&self) -> usize {
+        self.quarantined.lock().unwrap().len()
+    }
+
+    /// True while no chunk has been quarantined.
+    pub fn healthy(&self) -> bool {
+        self.quarantined.lock().unwrap().is_empty()
+    }
+
+    /// Decoded chunk `(col, block)` — the one access primitive every
+    /// *scalar* `DatasetView` method funnels through (the batched hooks
+    /// go through [`ColumnStore::chunk_ref`] instead). Infallible by
+    /// signature (`DatasetView` readers return values, not Results), so
+    /// an unavailable chunk panics — with the quarantine already
+    /// recorded by [`ColumnStore::try_chunk`] and the typed message
+    /// preserved. The serving layer contains that panic per query
+    /// (`coordinator::server` catches it into a degraded
+    /// `QueryResponse`); it never takes down a server or a worker.
+    fn chunk(&self, col: usize, block: usize) -> Arc<Vec<f32>> {
+        self.try_chunk(col, block).unwrap_or_else(|e| {
+            panic!("store chunk (col {col}, block {block}) unavailable: {e}")
+        })
     }
 }
 
@@ -998,6 +1069,44 @@ mod tests {
             }
         }
         assert!(cs.decode_ops() > 0, "lossy decode must be charged");
+    }
+
+    #[test]
+    fn failed_spill_read_quarantines_fails_fast_and_contains_the_panic() {
+        // Degradation policy: a chunk whose disk read fails gets a typed
+        // error and a quarantine record; later touches fail fast (no
+        // repeated reads of known-bad bytes), the infallible reader's
+        // panic carries the typed message, and other chunks keep serving.
+        let m = random_matrix(256, 4, 33);
+        let opts =
+            StoreOptions { rows_per_chunk: 64, ..Default::default() }.spill_to_temp(1024);
+        let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+        assert!(cs.spilled() && cs.healthy());
+        // Pin one chunk into the cache while the file is intact.
+        let good = cs.try_chunk(1, 0).unwrap().clone();
+        // Damage the backing file out from under the store: truncate it
+        // so every uncached chunk read hits EOF.
+        let path = match &cs.backing {
+            Backing::Spilled(f) => f.path().to_path_buf(),
+            _ => unreachable!("spilled store"),
+        };
+        std::fs::OpenOptions::new().write(true).open(&path).unwrap().set_len(4).unwrap();
+        let err = cs.try_chunk(0, 0).unwrap_err();
+        assert!(err.to_string().contains("spilled chunk"), "{err}");
+        assert!(!cs.healthy());
+        assert_eq!(cs.quarantined_chunks(), 1);
+        // Fail-fast: the second touch is a typed corruption error and
+        // performs no further disk read.
+        let reads = cs.spill_reads();
+        let err2 = cs.try_chunk(0, 0).unwrap_err();
+        assert!(err2.is_corrupt(), "quarantined access must be typed corrupt: {err2}");
+        assert_eq!(cs.spill_reads(), reads, "quarantined chunk must not be re-read");
+        // The infallible scalar path panics with the typed message —
+        // containable by the serving layer's per-query catch_unwind.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cs.get(0, 0)));
+        assert!(caught.is_err(), "unavailable chunk must panic, not return garbage");
+        // The cached chunk still serves.
+        assert_eq!(cs.try_chunk(1, 0).unwrap().as_slice(), good.as_slice());
     }
 
     #[test]

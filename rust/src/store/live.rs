@@ -414,6 +414,13 @@ struct Durable {
 
 impl Durable {
     /// Append one record and fsync it — the durable commit point.
+    ///
+    /// Transient failures (an interrupted write or fsync) are retried
+    /// with the bounded deterministic backoff of
+    /// [`persist::with_retry`]'s policy, rolling the log back to the
+    /// last complete record between attempts; persistent failure is a
+    /// typed give-up ([`ErrorKind::Exhausted`]
+    /// (crate::util::error::ErrorKind)) and the store stays consistent.
     fn append(&mut self, rec: &ManifestRecord) -> Result<()> {
         if self.broken {
             return Err(Error::recovery(
@@ -421,22 +428,42 @@ impl Durable {
             ));
         }
         let line = rec.to_line();
-        let res = self.log.write_all(line.as_bytes()).and_then(|()| self.log.sync_all());
-        match res {
-            Ok(()) => {
-                self.log_len += line.len() as u64;
-                Ok(())
+        let mut last: Option<Error> = None;
+        for attempt in 0..persist::RETRY_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1u64 << attempt));
             }
-            Err(e) => {
-                // Strip any partially written bytes so a later append can
-                // never continue mid-record; if even that fails, poison
-                // the handle.
-                if self.log.set_len(self.log_len).is_err() {
-                    self.broken = true;
+            let res = (|| {
+                crate::chaos::failpoint("persist.manifest.append")?;
+                self.log.write_all(line.as_bytes()).context("write manifest record")?;
+                crate::chaos::failpoint("persist.manifest.fsync")?;
+                self.log.sync_all().context("fsync manifest record")
+            })();
+            match res {
+                Ok(()) => {
+                    self.log_len += line.len() as u64;
+                    return Ok(());
                 }
-                Err(Error::msg(format!("append manifest record: {e}")))
+                Err(e) => {
+                    // Strip any partially written bytes so a retry (or a
+                    // later append) can never continue mid-record; if even
+                    // that fails, poison the handle.
+                    if self.log.set_len(self.log_len).is_err() {
+                        self.broken = true;
+                        return Err(Error::msg(format!("append manifest record: {e}")));
+                    }
+                    if e.is_corrupt() {
+                        return Err(e);
+                    }
+                    last = Some(e);
+                }
             }
         }
+        Err(Error::exhausted(format!(
+            "append manifest record: gave up after {} attempts: {}",
+            persist::RETRY_ATTEMPTS,
+            last.expect("RETRY_ATTEMPTS > 0"),
+        )))
     }
 
     /// Write segment `seg` under the next serial and re-open it from the
@@ -452,11 +479,20 @@ impl Durable {
     ) -> Result<(ColumnStore, String)> {
         let name = format!("seg-{}.seg", self.next_seg);
         let path = self.dir.join(&name);
-        let res = (|| {
-            persist::write_segment(seg, &path)?;
-            persist::sync_dir(&self.dir)?;
-            persist::read_segment(&path, opts)
-        })();
+        // Transient write/fsync/read-back failures retry as a unit (the
+        // partial file is deleted between attempts); corrupt read-backs
+        // and exhausted retries surface typed, with nothing left on disk.
+        let res = persist::with_retry(
+            "durable segment",
+            || {
+                persist::write_segment(seg, &path)?;
+                persist::sync_dir(&self.dir)?;
+                persist::read_segment(&path, opts)
+            },
+            || {
+                let _ = std::fs::remove_file(&path);
+            },
+        );
         match res {
             Ok(s) => Ok((s, name)),
             Err(e) => {
@@ -943,6 +979,7 @@ impl LiveStore {
         if batch.n == 0 {
             return Ok(self.pin());
         }
+        crate::chaos::failpoint("live.commit")?;
         w.dirty = true;
         let sealed = {
             let _span = crate::obs::span("ingest.seal");
@@ -1030,6 +1067,7 @@ impl LiveStore {
         if ids.is_empty() {
             return Ok(self.pin());
         }
+        crate::chaos::failpoint("live.delete")?;
         crate::obs::registry().counter("live.deletes").add(ids.len() as u64);
         let cur = self.pin();
         let dead: HashSet<u64> = ids.iter().copied().collect();
@@ -1088,6 +1126,7 @@ impl LiveStore {
         if cur.segments.len() <= 1 && cur.live.is_none() {
             return Ok(cur); // already compact
         }
+        crate::chaos::failpoint("live.compact")?;
         crate::obs::registry().counter("live.compactions").incr();
         // A separate one-shot builder: the streaming writer's reservoir
         // must keep sampling the *stream*, not re-sample compacted rows.
@@ -1174,7 +1213,11 @@ impl LiveStore {
     /// backpressure primitive). The thread is dedicated — not a
     /// [`crate::exec::WorkerPool`] worker — because it blocks on the
     /// channel and must never starve solver shards.
-    pub fn spawn_ingest(self: &Arc<Self>, max_pending: usize) -> IngestHandle {
+    ///
+    /// Thread creation is fallible (the OS can refuse); the failure is a
+    /// typed error, not a panic, so a caller under resource pressure can
+    /// degrade to inline [`LiveStore::commit_batch`] calls.
+    pub fn spawn_ingest(self: &Arc<Self>, max_pending: usize) -> Result<IngestHandle> {
         let gate = Arc::new(Gate::new(max_pending));
         let errors = Arc::new(AtomicU64::new(0));
         let (tx, rx) = channel::<(Matrix, GateSlot)>();
@@ -1191,8 +1234,8 @@ impl LiveStore {
                     drop(slot);
                 }
             })
-            .expect("spawn ingest thread");
-        IngestHandle { tx: Some(tx), join: Some(join), gate, errors }
+            .context("spawn ingest thread")?;
+        Ok(IngestHandle { tx: Some(tx), join: Some(join), gate, errors })
     }
 }
 
@@ -1287,13 +1330,20 @@ pub struct IngestHandle {
 impl IngestHandle {
     /// Enqueue a batch for commit; blocks while `max_pending` commits are
     /// already in flight (backpressure, not an unbounded queue).
-    pub fn submit(&self, batch: Matrix) {
+    ///
+    /// Errors instead of panicking when the handle was already closed or
+    /// the ingest thread died: the batch is returned to the caller's
+    /// control flow as a typed failure, and the store stays usable for
+    /// inline commits.
+    pub fn submit(&self, batch: Matrix) -> Result<()> {
+        crate::chaos::failpoint("live.ingest")?;
         let slot = Gate::acquire_slot(&self.gate);
-        self.tx
+        let tx = self
+            .tx
             .as_ref()
-            .expect("ingest handle open")
-            .send((batch, slot))
-            .expect("ingest thread alive");
+            .ok_or_else(|| Error::msg("ingest handle already closed"))?;
+        tx.send((batch, slot))
+            .map_err(|_| Error::msg("ingest thread is gone (receiver disconnected)"))
     }
 
     /// Commits that failed (details were logged by the ingest thread).
@@ -1492,10 +1542,10 @@ mod tests {
     #[test]
     fn ingest_thread_commits_in_order_with_backpressure() {
         let live = Arc::new(LiveStore::new(3, opts(16)).unwrap());
-        let handle = live.spawn_ingest(2);
+        let handle = live.spawn_ingest(2).unwrap();
         let batches: Vec<Matrix> = (0..12).map(|k| testkit::gaussian(10, 3, 100 + k)).collect();
         for m in &batches {
-            handle.submit(m.clone());
+            handle.submit(m.clone()).unwrap();
         }
         handle.close();
         assert_eq!(DatasetView::version(&*live), 12);

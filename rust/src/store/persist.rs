@@ -84,6 +84,40 @@ const SEGMENT_HEADER_LEN: usize = 32;
 /// Frame header: len + min + max + sum + count (checksum follows).
 const FRAME_HEADER_LEN: usize = 28;
 
+/// How many times [`with_retry`] attempts a transient-failure-prone
+/// operation before giving up with a typed exhaustion error.
+pub const RETRY_ATTEMPTS: u32 = 3;
+
+/// Bounded retry with deterministic backoff for transient I/O on the
+/// durable write path. Corrupt errors are never retried (bad bytes stay
+/// bad); anything else gets `RETRY_ATTEMPTS` tries with a fixed
+/// `1ms << attempt` sleep between them — deterministic, so injected
+/// fault schedules replay exactly. `reset` runs before each re-attempt
+/// to undo partial effects (delete a half-written file, roll back an
+/// append). On exhaustion the last error is returned re-typed as
+/// [`ErrorKind::Exhausted`](crate::util::error::ErrorKind) — the
+/// ingest commit path's typed give-up signal.
+pub(crate) fn with_retry<T>(
+    what: &str,
+    mut op: impl FnMut() -> Result<T>,
+    mut reset: impl FnMut(),
+) -> Result<T> {
+    let mut last: Option<Error> = None;
+    for attempt in 0..RETRY_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1u64 << attempt));
+            reset();
+        }
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_corrupt() => return Err(e),
+            Err(e) => last = Some(e),
+        }
+    }
+    let last = last.expect("RETRY_ATTEMPTS > 0");
+    Err(Error::exhausted(format!("{what}: gave up after {RETRY_ATTEMPTS} attempts: {last}")))
+}
+
 /// Fsync a directory so a just-created/renamed entry survives a crash
 /// (no-op on platforms where directories cannot be opened).
 pub fn sync_dir(dir: &Path) -> Result<()> {
@@ -127,6 +161,7 @@ fn bool_from_tag(tag: u8, what: &str) -> Result<bool> {
 /// record). Refuses to overwrite: segment files are immutable once
 /// named by the manifest.
 pub(crate) fn write_segment(seg: &ColumnStore, path: &Path) -> Result<()> {
+    crate::chaos::failpoint("persist.segment.write")?;
     let (n, d) = (seg.n_rows(), seg.n_cols());
     let n_chunks = d * seg.n_blocks();
     let mut buf = Vec::with_capacity(SEGMENT_HEADER_LEN + 8);
@@ -228,6 +263,7 @@ impl<'a> Cursor<'a> {
 /// All failures are [`ErrorKind::Corrupt`](crate::util::error::ErrorKind)
 /// so recovery can treat the referencing manifest record as torn.
 pub(crate) fn read_segment(path: &Path, opts: &StoreOptions) -> Result<ColumnStore> {
+    crate::chaos::failpoint("persist.segment.read")?;
     let bytes = std::fs::read(path)
         .map_err(|e| Error::corrupt(format!("read segment {}: {e}", path.display())))?;
     read_segment_bytes(&bytes, path, opts).map_err(|e| e.prefix(format!("{}", path.display())))
@@ -518,18 +554,29 @@ pub(crate) fn rewrite_manifest(dir: &Path, records: &[ManifestRecord]) -> Result
     for rec in records {
         text.push_str(&rec.to_line());
     }
-    let mut f = File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
-    f.write_all(text.as_bytes()).with_context(|| format!("write {}", tmp.display()))?;
-    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
-    drop(f);
-    std::fs::rename(&tmp, &path)
-        .with_context(|| format!("rename {} over {}", tmp.display(), path.display()))?;
-    sync_dir(dir)?;
-    let log = OpenOptions::new()
-        .append(true)
-        .open(&path)
-        .with_context(|| format!("reopen manifest {}", path.display()))?;
-    Ok((log, text.len() as u64))
+    // Everything up to the rename is undoable (the tmp file is scratch),
+    // so transient failures anywhere in the sequence retry as a unit.
+    with_retry(
+        "rewrite manifest",
+        || {
+            crate::chaos::failpoint("persist.manifest.rewrite")?;
+            let mut f = File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(text.as_bytes()).with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("rename {} over {}", tmp.display(), path.display()))?;
+            sync_dir(dir)?;
+            let log = OpenOptions::new()
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("reopen manifest {}", path.display()))?;
+            Ok((log, text.len() as u64))
+        },
+        || {
+            let _ = std::fs::remove_file(&tmp);
+        },
+    )
 }
 
 #[cfg(test)]

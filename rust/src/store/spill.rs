@@ -57,6 +57,7 @@ impl SpillWriter {
 
     /// Append one encoded chunk; returns its index in write order.
     pub fn append(&mut self, bytes: &[u8]) -> Result<usize> {
+        crate::chaos::failpoint("spill.write")?;
         // The framed length is a u32 on disk and is trusted verbatim by
         // crash recovery — refuse to truncate rather than write a frame
         // that lies about its payload.
@@ -99,6 +100,7 @@ impl SpillWriter {
     /// need their parent directory fsynced — the persistence layer does
     /// that (see [`crate::store::persist::sync_dir`]).
     pub fn finish(mut self, reorder: &[usize]) -> Result<SpillFile> {
+        crate::chaos::failpoint("spill.finish")?;
         self.file.flush().context("flush spill file")?;
         self.file.sync_all().context("fsync spill file")?;
         let index = reorder
@@ -177,6 +179,7 @@ impl SpillFile {
     /// seek cursor, which the next `seek` overwrites, so a reader that
     /// panicked mid-read cannot leave the file in a harmful state.
     pub fn read(&self, id: usize) -> Result<Vec<u8>> {
+        crate::chaos::failpoint("spill.read")?;
         let &(off, len) = self.index.get(id).ok_or_else(|| {
             Error::corrupt(format!(
                 "spill chunk id {id} out of range ({} chunks in {})",

@@ -22,6 +22,10 @@ pub enum ErrorKind {
     Corrupt,
     /// Recovery could not reach a usable state (not mere tail damage).
     Recovery,
+    /// A bounded retry policy gave up: the operation kept failing with
+    /// transient errors for every allowed attempt. The typed give-up
+    /// signal of the ingest commit path.
+    Exhausted,
 }
 
 /// A string-backed error: cheap to build, `Display`s its message.
@@ -47,12 +51,21 @@ impl Error {
         Error { msg: msg.into(), kind: ErrorKind::Recovery }
     }
 
+    /// A retries-exhausted error (bounded retry policy gave up).
+    pub fn exhausted(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), kind: ErrorKind::Exhausted }
+    }
+
     pub fn kind(&self) -> ErrorKind {
         self.kind
     }
 
     pub fn is_corrupt(&self) -> bool {
         self.kind == ErrorKind::Corrupt
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.kind == ErrorKind::Exhausted
     }
 
     /// Prepend context while keeping the error's kind (the generic

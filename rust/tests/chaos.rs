@@ -1,0 +1,494 @@
+//! Fault-injection acceptance tests for the `chaos` subsystem and the
+//! graceful-degradation contracts it exists to prove:
+//!
+//! - **No-perturbation**: chaos compiled in but idle (disabled, or armed
+//!   with rules that never fire) changes no answer digest and no gated
+//!   op count across the smoke-tier scenario registry.
+//! - **One-shot sweep**: every registered failpoint site fires exactly
+//!   once under a matching operation; no panic escapes a public API, the
+//!   typed error (or retry absorption) lands where documented, and
+//!   recovery replays the surviving state bit-exact and idempotently.
+//! - **Random walk**: `chaos::driver` runs ingest/serve/kill/recover
+//!   cycles under a probabilistic schedule and reports zero invariant
+//!   violations.
+//!
+//! Chaos state is process-global (like `obs`), so every test here
+//! serializes on [`chaos_lock`].
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use adaptive_sampling::chaos::{self, driver, FaultKind, Schedule, ScheduleGuard};
+use adaptive_sampling::coordinator::{Backend, MipsServer, ServerConfig};
+use adaptive_sampling::exec::{Gate, WorkerPool};
+use adaptive_sampling::harness::{scenarios_for, Tier};
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use adaptive_sampling::store::{ColumnStore, DatasetView, LiveStore, StoreOptions};
+use adaptive_sampling::util::rng::Rng;
+use common::*;
+
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static DIR_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+/// A process-unique scratch data directory under the system temp dir.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let serial = DIR_SERIAL.fetch_add(1, Ordering::Relaxed);
+    let name = format!("as_chaos_{tag}_{}_{serial}", std::process::id());
+    std::env::temp_dir().join(name)
+}
+
+/// Total fire count across active rules watching `site`.
+fn fires(site: &str) -> u64 {
+    chaos::report().iter().filter(|r| r.site == site).map(|r| r.fires).sum()
+}
+
+const D: usize = 4;
+const BATCH: usize = 16;
+
+fn small_opts() -> StoreOptions {
+    StoreOptions { rows_per_chunk: 8, ..Default::default() }
+}
+
+// Site coverage ledger: each sweep test below exercises the sites it
+// names; `every_registered_site_is_swept` asserts the union is exactly
+// `chaos::SITES`, so registering a new failpoint without extending the
+// sweep fails the suite.
+const COMMIT_PATH_SITES: &[&str] = &[
+    "persist.segment.write",
+    "persist.segment.read",
+    "persist.manifest.append",
+    "persist.manifest.fsync",
+    "live.commit",
+];
+const MUTATION_SITES: &[&str] = &["live.delete", "live.compact", "persist.manifest.rewrite"];
+const SPILL_SITES: &[&str] = &["spill.write", "spill.finish", "spill.read"];
+const INGEST_SITES: &[&str] = &["live.ingest"];
+const SERVE_SITES: &[&str] = &["serve.query"];
+const EXEC_SITES: &[&str] = &["exec.task", "exec.gate.stall"];
+
+#[test]
+fn every_registered_site_is_swept() {
+    let swept: BTreeSet<&str> = COMMIT_PATH_SITES
+        .iter()
+        .chain(MUTATION_SITES)
+        .chain(SPILL_SITES)
+        .chain(INGEST_SITES)
+        .chain(SERVE_SITES)
+        .chain(EXEC_SITES)
+        .copied()
+        .collect();
+    let registered: BTreeSet<&str> = chaos::SITES.iter().copied().collect();
+    assert_eq!(
+        swept, registered,
+        "the one-shot sweep must cover exactly the registered failpoint sites"
+    );
+}
+
+// ---------------------------------------------------------------------
+// The no-perturbation contract: with chaos disabled, and with chaos
+// armed by rules that never fire, every smoke-tier scenario produces a
+// bit-identical CostRecord (same counters, same answer digest). This is
+// the license to leave failpoints compiled into release builds.
+// ---------------------------------------------------------------------
+#[test]
+fn idle_chaos_perturbs_no_digest_or_op_count() {
+    let _g = chaos_lock();
+    chaos::clear();
+    let scenarios = scenarios_for(Tier::Smoke);
+    assert!(!scenarios.is_empty());
+    let off: Vec<_> = scenarios.iter().map(|s| s.run()).collect();
+
+    // Armed but empty: the enabled flag is set, no rule matches anything.
+    let _guard = ScheduleGuard::install(Schedule::new(7)).unwrap();
+    let armed_empty: Vec<_> = scenarios.iter().map(|s| s.run()).collect();
+    drop(_guard);
+
+    // Armed with a never-firing rule on a hot infallible site: hits are
+    // counted, the fault never executes.
+    let _guard = ScheduleGuard::install(
+        Schedule::new(7).one_shot("exec.task", FaultKind::Panic, u64::MAX),
+    )
+    .unwrap();
+    let armed_cold: Vec<_> = scenarios.iter().map(|s| s.run()).collect();
+    drop(_guard);
+
+    for ((a, b), c) in off.iter().zip(&armed_empty).zip(&armed_cold) {
+        assert_eq!(a, b, "{}: an empty chaos schedule perturbed the cost model", a.scenario);
+        assert_eq!(a, c, "{}: a never-firing chaos rule perturbed the cost model", a.scenario);
+    }
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, commit path: a single injected fault at each durable
+// commit site either (a) is absorbed by the bounded retry (transient
+// write/fsync/read-back errors) so the commit still succeeds, or (b)
+// surfaces as a typed error with nothing published. Either way the
+// store stays usable, shuts down clean, and recovers bit-exact twice.
+// ---------------------------------------------------------------------
+#[test]
+fn commit_path_one_shot_faults_recover_bit_exact() {
+    let _g = chaos_lock();
+    // (site, kind, absorbed-by-retry)
+    let cases: &[(&str, FaultKind, bool)] = &[
+        ("persist.segment.write", FaultKind::Error, true),
+        ("persist.segment.read", FaultKind::Error, true),
+        ("persist.segment.read", FaultKind::Corrupt, false), // corrupt read-back: never retried
+        ("persist.manifest.append", FaultKind::Error, true),
+        ("persist.manifest.fsync", FaultKind::Error, true),
+        ("live.commit", FaultKind::Error, false),
+    ];
+    for (i, &(site, kind, absorbed)) in cases.iter().enumerate() {
+        let dir = scratch_dir("commit_sweep");
+        let live = LiveStore::open(D, small_opts(), &dir).unwrap();
+        live.commit_batch(&gaussian(BATCH, D, 11)).unwrap();
+
+        let guard =
+            ScheduleGuard::install(Schedule::new(i as u64).one_shot(site, kind, 1)).unwrap();
+        let res = live.commit_batch(&gaussian(BATCH, D, 22));
+        assert!(fires(site) >= 1, "{site}: the commit path never hit the failpoint");
+        drop(guard);
+
+        let err_text = res.as_ref().err().map(|e| e.to_string()).unwrap_or_default();
+        assert_eq!(
+            res.is_ok(),
+            absorbed,
+            "{site}/{kind:?}: expected {} ({err_text})",
+            if absorbed { "retry absorption" } else { "a typed give-up" }
+        );
+        if let (FaultKind::Corrupt, Err(e)) = (kind, &res) {
+            assert!(e.is_corrupt(), "{site}: injected corruption lost its kind: {e}");
+        }
+
+        // Graceful degradation: the store is still usable after the fault.
+        live.commit_batch(&gaussian(BATCH, D, 33)).unwrap();
+        let want_version = DatasetView::version(&live);
+        assert_eq!(want_version, if absorbed { 3 } else { 2 }, "{site}: version accounting");
+        let want_fp = fingerprint_view(&*live.pin());
+        let want_rows = live.n_rows();
+        drop(live);
+
+        for pass in 0..2 {
+            let (store, report) = LiveStore::recover(&dir, small_opts()).unwrap();
+            assert_eq!(report.version, want_version, "{site} pass {pass}: version");
+            assert_eq!(report.rows as usize, want_rows, "{site} pass {pass}: rows");
+            assert!(report.dropped.is_none(), "{site} pass {pass}: nothing may be dropped");
+            assert_eq!(report.truncated_bytes, 0, "{site} pass {pass}: manifest must be clean");
+            assert_eq!(
+                fingerprint_view(&*store.pin()),
+                want_fp,
+                "{site} pass {pass}: recovered bits"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Exhausted retries are a typed give-up, not a panic and not a wedged
+// store: a persistent manifest-append failure errors with
+// ErrorKind::Exhausted, publishes nothing, leaves no orphan segment
+// file, and the very next commit (fault cleared) succeeds.
+// ---------------------------------------------------------------------
+#[test]
+fn exhausted_retries_give_up_typed_and_leave_the_store_usable() {
+    let _g = chaos_lock();
+    let dir = scratch_dir("exhausted");
+    let live = LiveStore::open(D, small_opts(), &dir).unwrap();
+    live.commit_batch(&gaussian(BATCH, D, 11)).unwrap();
+
+    let guard = ScheduleGuard::install(
+        Schedule::new(3).every("persist.manifest.append", FaultKind::Error, 1),
+    )
+    .unwrap();
+    let err = live
+        .commit_batch(&gaussian(BATCH, D, 22))
+        .err()
+        .expect("a persistent append failure must fail the commit");
+    assert!(err.is_exhausted(), "persistent append failure must exhaust: {err}");
+    drop(guard);
+
+    assert_eq!(DatasetView::version(&live), 1, "failed commit must not publish");
+    live.commit_batch(&gaussian(BATCH, D, 33)).unwrap();
+    let want_fp = fingerprint_view(&*live.pin());
+    drop(live);
+
+    let (store, report) = LiveStore::recover(&dir, small_opts()).unwrap();
+    assert_eq!(report.version, 2);
+    assert!(report.dropped.is_none(), "the abandoned segment file must have been removed");
+    assert_eq!(fingerprint_view(&*store.pin()), want_fp);
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, mutation path: delete and compact fail typed with
+// nothing published; a transient manifest-rewrite failure inside
+// compact is absorbed by the bounded retry. Recovery is bit-exact.
+// ---------------------------------------------------------------------
+#[test]
+fn mutation_one_shot_faults_recover_bit_exact() {
+    let _g = chaos_lock();
+    let dir = scratch_dir("mutation_sweep");
+    let live = LiveStore::open(D, small_opts(), &dir).unwrap();
+    live.commit_batch(&gaussian(BATCH, D, 11)).unwrap();
+
+    let guard =
+        ScheduleGuard::install(Schedule::new(1).one_shot("live.delete", FaultKind::Error, 1))
+            .unwrap();
+    assert!(live.delete_rows(&[1, 2]).is_err());
+    assert_eq!(fires("live.delete"), 1);
+    drop(guard);
+    assert_eq!(DatasetView::version(&live), 1, "failed delete must not publish");
+    live.delete_rows(&[1, 2]).unwrap();
+    live.commit_batch(&gaussian(BATCH, D, 22)).unwrap();
+
+    let guard =
+        ScheduleGuard::install(Schedule::new(2).one_shot("live.compact", FaultKind::Error, 1))
+            .unwrap();
+    assert!(live.compact().is_err());
+    assert_eq!(fires("live.compact"), 1);
+    drop(guard);
+    assert_eq!(DatasetView::version(&live), 3, "failed compact must not publish");
+
+    let guard = ScheduleGuard::install(
+        Schedule::new(3).one_shot("persist.manifest.rewrite", FaultKind::Error, 1),
+    )
+    .unwrap();
+    live.compact().unwrap();
+    assert_eq!(fires("persist.manifest.rewrite"), 1, "compact never hit the rewrite failpoint");
+    drop(guard);
+
+    let want_version = DatasetView::version(&live);
+    let want_fp = fingerprint_view(&*live.pin());
+    drop(live);
+    for pass in 0..2 {
+        let (store, report) = LiveStore::recover(&dir, small_opts()).unwrap();
+        assert_eq!(report.version, want_version, "pass {pass}");
+        assert!(report.dropped.is_none(), "pass {pass}");
+        assert_eq!(fingerprint_view(&*store.pin()), want_fp, "pass {pass}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, spill path: injected write/finish failures surface as
+// typed build errors (no panic); an injected corrupt read quarantines
+// the chunk — unhealthy store, fail-fast on re-touch with no extra disk
+// read, other chunks still served.
+// ---------------------------------------------------------------------
+#[test]
+fn spill_one_shot_faults_error_typed_and_quarantine() {
+    let _g = chaos_lock();
+    let opts = StoreOptions { rows_per_chunk: 64, ..Default::default() }.spill_to_temp(1024);
+    let m = gaussian(256, 8, 5);
+
+    for (seed, site) in [(1u64, "spill.write"), (2, "spill.finish")] {
+        let guard =
+            ScheduleGuard::install(Schedule::new(seed).one_shot(site, FaultKind::Error, 1))
+                .unwrap();
+        let res = ColumnStore::from_matrix(&m, &opts);
+        assert!(fires(site) >= 1, "{site}: the spilling build never hit the failpoint");
+        assert!(res.is_err(), "{site}: an injected spill fault must fail the build typed");
+        drop(guard);
+    }
+
+    // Build clean, then poison the first spilled read.
+    let cs = ColumnStore::from_matrix(&m, &opts).unwrap();
+    assert!(cs.spilled(), "fixture must actually spill");
+    let guard =
+        ScheduleGuard::install(Schedule::new(3).one_shot("spill.read", FaultKind::Corrupt, 1))
+            .unwrap();
+    let hit = catch_unwind(AssertUnwindSafe(|| cs.get(0, 0)));
+    assert!(hit.is_err(), "a corrupt spilled read must not return fabricated data");
+    assert_eq!(fires("spill.read"), 1);
+    drop(guard);
+
+    assert!(!cs.healthy(), "quarantine must mark the store degraded");
+    assert_eq!(cs.quarantined_chunks(), 1);
+    let reads_after_fault = cs.spill_reads();
+    let again = catch_unwind(AssertUnwindSafe(|| cs.get(0, 0)));
+    assert!(again.is_err(), "a quarantined chunk must fail fast on re-touch");
+    assert_eq!(cs.spill_reads(), reads_after_fault, "fail-fast must not re-read the disk");
+    // A different block is untouched by the quarantine.
+    let v = cs.get(64, 0);
+    assert!(v.is_finite());
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, ingest handle: an injected submit fault is a typed
+// error returned to the caller; the ingest thread survives and the next
+// submit commits durably.
+// ---------------------------------------------------------------------
+#[test]
+fn ingest_one_shot_fault_errors_typed_and_the_pipeline_survives() {
+    let _g = chaos_lock();
+    let dir = scratch_dir("ingest_sweep");
+    let live = Arc::new(LiveStore::open(D, small_opts(), &dir).unwrap());
+    let handle = live.spawn_ingest(2).unwrap();
+
+    let guard =
+        ScheduleGuard::install(Schedule::new(4).one_shot("live.ingest", FaultKind::Error, 1))
+            .unwrap();
+    assert!(handle.submit(gaussian(BATCH, D, 11)).is_err(), "injected submit fault must error");
+    assert_eq!(fires("live.ingest"), 1);
+    drop(guard);
+
+    handle.submit(gaussian(BATCH, D, 22)).unwrap();
+    handle.close();
+    assert_eq!(DatasetView::version(&*live), 1, "exactly the clean submit must have committed");
+    let want_fp = fingerprint_view(&*live.pin());
+    drop(live);
+    let (store, report) = LiveStore::recover(&dir, small_opts()).unwrap();
+    assert_eq!(report.version, 1);
+    assert_eq!(fingerprint_view(&*store.pin()), want_fp);
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, serve path: an injected panic inside query answering
+// degrades exactly that query (typed `error` field, empty answer) —
+// the batch, the server, and every other response survive, and the
+// surviving responses stay bit-exact replayable after recovery.
+// ---------------------------------------------------------------------
+#[test]
+fn serve_one_shot_panic_degrades_one_query_and_the_rest_replay() {
+    let _g = chaos_lock();
+    const DS: usize = 16;
+    let dir = scratch_dir("serve_sweep");
+    let opts = StoreOptions { rows_per_chunk: 16, ..Default::default() };
+    let live = Arc::new(LiveStore::open(DS, opts.clone(), &dir).unwrap());
+    live.commit_batch(&gaussian(64, DS, 5)).unwrap();
+
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_timeout_us: 200,
+        validate_every: 0,
+        ..Default::default()
+    };
+    let server = MipsServer::start(live.clone(), cfg.clone(), Backend::NativeBandit);
+    let guard =
+        ScheduleGuard::install(Schedule::new(5).one_shot("serve.query", FaultKind::Panic, 1))
+            .unwrap();
+    let mut rng = Rng::new(0xE0);
+    let mut responses = Vec::new();
+    for _ in 0..6 {
+        let q: Vec<f32> = (0..DS).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let rx = server.submit(q.clone());
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("degraded, not dropped");
+        responses.push((q, resp));
+    }
+    assert_eq!(fires("serve.query"), 1);
+    drop(guard);
+    server.shutdown();
+    drop(live); // the crash
+
+    let degraded: Vec<_> = responses.iter().filter(|(_, r)| r.error.is_some()).collect();
+    assert_eq!(degraded.len(), 1, "exactly the injected query must degrade");
+    assert!(degraded[0].1.top_atoms.is_empty(), "a degraded response carries no answer");
+    for (q, resp) in responses.iter().filter(|(_, r)| r.error.is_none()) {
+        assert!(!resp.top_atoms.is_empty());
+        let snap = LiveStore::recover_snapshot(&dir, &opts, resp.version).unwrap();
+        let mcfg = BanditMipsConfig {
+            delta: cfg.delta,
+            batch_size: 64,
+            strategy: SampleStrategy::Uniform,
+            sigma: None,
+            k: cfg.k,
+            seed: resp.seed,
+            threads: 1,
+        };
+        let c = OpCounter::new();
+        let again = bandit_mips_warm(&*snap, q, &mcfg, &c, &resp.warm_coords);
+        assert_eq!(
+            (&again.atoms, again.samples),
+            (&resp.top_atoms, resp.samples),
+            "survivor at v{} did not replay bit-exact",
+            resp.version
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, executor: an injected task panic is contained by the
+// worker (the pool survives and runs the next task); an injected gate
+// stall delays admission but corrupts nothing.
+// ---------------------------------------------------------------------
+#[test]
+fn exec_one_shot_faults_are_contained() {
+    let _g = chaos_lock();
+    let pool = WorkerPool::new(1);
+    let guard =
+        ScheduleGuard::install(Schedule::new(6).one_shot("exec.task", FaultKind::Panic, 1))
+            .unwrap();
+    let (tx, rx) = mpsc::channel();
+    let tx1 = tx.clone();
+    pool.spawn(move || {
+        let _ = tx1.send(1u32); // killed by the injected panic before it runs
+    });
+    let tx2 = tx.clone();
+    pool.spawn(move || {
+        let _ = tx2.send(2u32);
+    });
+    drop(tx);
+    let got = rx.recv_timeout(Duration::from_secs(30)).expect("worker died with the panic");
+    assert_eq!(got, 2, "the injected panic must kill only the injected task");
+    assert!(rx.recv_timeout(Duration::from_millis(200)).is_err(), "task 1 must never run");
+    assert_eq!(fires("exec.task"), 1);
+    drop(guard);
+
+    let guard = ScheduleGuard::install(
+        Schedule::new(7).one_shot("exec.gate.stall", FaultKind::Stall(150), 1),
+    )
+    .unwrap();
+    let gate = Gate::new(1);
+    let t0 = Instant::now();
+    gate.acquire();
+    assert!(t0.elapsed() >= Duration::from_millis(100), "the injected stall must delay admission");
+    gate.release();
+    assert_eq!(fires("exec.gate.stall"), 1);
+    drop(guard);
+}
+
+// ---------------------------------------------------------------------
+// The random walk: ingest/serve under a probabilistic fault schedule,
+// crash (plus deterministic manifest scribbling), recover twice, replay
+// every served triple. `WalkReport::ok()` is the tentpole invariant —
+// no panic escaped, recovery was idempotent, no torn version was
+// served, every survivor replayed bit-exact.
+// ---------------------------------------------------------------------
+#[test]
+fn random_walk_under_default_schedule_holds_every_invariant() {
+    let _g = chaos_lock();
+    let dir = scratch_dir("walk");
+    let cfg = driver::WalkConfig::smoke(dir.clone(), 0xA11CE);
+    let report = driver::run_walk(&cfg).unwrap();
+    assert!(
+        report.ok(),
+        "chaos walk violations (seed {:#x}):\n{}",
+        cfg.seed,
+        report.violations.join("\n")
+    );
+    assert_eq!(report.cycles as usize, cfg.cycles);
+    assert_eq!(report.recoveries, 2 * cfg.cycles as u64, "two recovery passes per cycle");
+    assert!(report.commits_ok + report.commits_failed > 0, "the walk must attempt commits");
+    assert!(
+        report.queries_ok + report.queries_degraded + report.queries_lost > 0,
+        "the walk must serve queries"
+    );
+    assert_eq!(report.replayed, report.queries_ok, "every surviving triple must be replayed");
+    let _ = std::fs::remove_dir_all(&dir);
+}

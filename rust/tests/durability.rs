@@ -205,7 +205,7 @@ fn served_triples_reproduce_bit_exact_from_the_recovered_manifest() {
             threads: 1,
         };
         let c = OpCounter::new();
-        let again = bandit_mips_warm(&**snap, q, &mcfg, &c, &resp.warm_coords);
+        let again = bandit_mips_warm(&*snap, q, &mcfg, &c, &resp.warm_coords);
         assert_eq!(
             (&again.atoms, again.samples),
             (&resp.top_atoms, resp.samples),
