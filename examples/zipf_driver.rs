@@ -1,0 +1,197 @@
+//! Zipf-distributed query driver for the TCP serving tier (`net/`),
+//! and the workload behind CI's `net-smoke` job.
+//!
+//! The driver regenerates the server's deterministic base corpus
+//! locally (`lowrank_like(rows, dim, 15, seed)` — the same corpus
+//! `repro serve --port` commits into a fresh store), aims each query at
+//! a Zipf-ranked corpus row plus Gaussian noise (rank 0 hottest), and
+//! interleaves a diurnal ingest pattern: every `--ingest-every` queries
+//! a wire `Ingest` commits a sinusoidally-sized batch, so answers span
+//! a moving version range exactly like a production feed.
+//!
+//! Every `Answer` carries the `(version, seed, warm_coords)` replay
+//! triple. With `--data-dir` pointing at the server's durable
+//! directory, the driver replays every non-degraded answer offline via
+//! [`adaptive_sampling::net::replay_answer`] and exits non-zero unless
+//! all of them are bit-exact — the end-to-end proof that a network
+//! answer is the same object as an in-process one.
+//!
+//! ```bash
+//! cargo run --release -- serve --port 7941 --shards 4 --data-dir /tmp/demo &
+//! cargo run --release --example zipf_driver -- --port 7941 \
+//!     --queries 64 --ingest-every 16 --data-dir /tmp/demo --shutdown
+//! ```
+
+use std::process::exit;
+
+use adaptive_sampling::data::synthetic::lowrank_like;
+use adaptive_sampling::net::{
+    replay_answer, ErrorCode, NetClient, Response, SolveConfig, WireAnswer,
+};
+use adaptive_sampling::store::StoreOptions;
+use adaptive_sampling::util::rng::Rng;
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(port) = flag_value(&args, "--port").and_then(|s| s.parse::<u16>().ok()) else {
+        eprintln!(
+            "usage: zipf_driver --port P [--host H] [--queries N] [--rows N] [--dim D]\n\
+             \u{20}                 [--seed S] [--zipf-s F] [--ingest-every N] \
+             [--data-dir DIR] [--shutdown]"
+        );
+        exit(2);
+    };
+    let host = flag_value(&args, "--host").unwrap_or("127.0.0.1");
+    let n_queries: usize =
+        flag_value(&args, "--queries").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let rows: usize = flag_value(&args, "--rows").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let dim: usize = flag_value(&args, "--dim").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seed: u64 = flag_value(&args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+    let zipf_s: f64 = flag_value(&args, "--zipf-s").and_then(|s| s.parse().ok()).unwrap_or(1.1);
+    let ingest_every: usize =
+        flag_value(&args, "--ingest-every").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let data_dir = flag_value(&args, "--data-dir").map(std::path::PathBuf::from);
+    let shutdown = args.iter().any(|a| a == "--shutdown");
+
+    let addr = format!("{host}:{port}");
+    let mut client = NetClient::connect(&addr, 30_000).unwrap_or_else(|e| {
+        eprintln!("zipf_driver: connect {addr}: {e:#}");
+        exit(1);
+    });
+    let welcome = client.hello("zipf_driver").unwrap_or_else(|e| {
+        eprintln!("zipf_driver: hello: {e:#}");
+        exit(1);
+    });
+    println!(
+        "connected: version {} — {} rows x {}, {} shards, k={}, delta={}, batch={}",
+        welcome.version,
+        welcome.rows,
+        welcome.d,
+        welcome.shards,
+        welcome.k,
+        welcome.delta,
+        welcome.batch_size
+    );
+    if welcome.d != dim {
+        eprintln!(
+            "zipf_driver: server corpus width {} != --dim {dim}; pass the server's \
+             --rows/--dim/--seed so the driver can regenerate the corpus it aims at",
+            welcome.d
+        );
+        exit(2);
+    }
+
+    // The server's deterministic base corpus, regenerated locally: rank r
+    // of the Zipf law maps to corpus row r, so popular queries really do
+    // hit the same hot atoms over and over.
+    let items = lowrank_like(rows, dim, 15, seed);
+    let mut cum: Vec<f64> = Vec::with_capacity(rows);
+    let mut acc = 0.0;
+    for r in 0..rows {
+        acc += 1.0 / ((r + 1) as f64).powf(zipf_s);
+        cum.push(acc);
+    }
+    let total = cum.last().copied().unwrap_or(1.0);
+
+    let mut rng = Rng::new(seed ^ 0x21BF);
+    let mut answers: Vec<(Vec<f32>, WireAnswer)> = Vec::new();
+    let (mut shed, mut quota, mut degraded, mut lost) = (0usize, 0usize, 0usize, 0usize);
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut ingest_serial = 0u64;
+
+    for i in 0..n_queries {
+        // Diurnal ingest: batch sizes follow one sinusoidal "day" across
+        // the run, committed over the wire mid-stream.
+        if ingest_every > 0 && i > 0 && i % ingest_every == 0 {
+            let phase = i as f64 / n_queries as f64 * std::f64::consts::TAU;
+            let batch = (8.0 + 6.0 * phase.sin()).round() as usize;
+            let m = lowrank_like(batch, dim, 15, seed ^ 0x00D1_0000 ^ ingest_serial);
+            ingest_serial += 1;
+            let batch_rows: Vec<Vec<f32>> = (0..batch).map(|r| m.row(r).to_vec()).collect();
+            match client.ingest(batch_rows) {
+                Ok((version, total_rows)) => {
+                    println!("  ingest +{batch} rows -> version {version} ({total_rows} rows)");
+                }
+                Err(e) => {
+                    eprintln!("zipf_driver: ingest: {e:#}");
+                    exit(1);
+                }
+            }
+        }
+
+        let u = rng.f64() * total;
+        let rank = cum.partition_point(|&c| c < u).min(rows.saturating_sub(1));
+        let q: Vec<f32> = items.row(rank).iter().map(|&v| v + 0.1 * rng.normal() as f32).collect();
+        match client.query(i as u64, &q) {
+            Ok(Response::Answer(a)) => {
+                latencies.push(a.latency_us);
+                if a.degraded {
+                    degraded += 1;
+                } else {
+                    answers.push((q, a));
+                }
+            }
+            Ok(Response::Error { code: ErrorCode::Overloaded, .. }) => shed += 1,
+            Ok(Response::Error { code: ErrorCode::Quota, .. }) => quota += 1,
+            Ok(other) => {
+                eprintln!("zipf_driver: query {i}: unexpected response {other:?}");
+                exit(1);
+            }
+            Err(e) => {
+                eprintln!("zipf_driver: query {i}: {e:#}");
+                lost += 1;
+            }
+        }
+    }
+
+    if shutdown {
+        if let Err(e) = client.shutdown_server() {
+            eprintln!("zipf_driver: shutdown: {e:#}");
+            exit(1);
+        }
+    }
+
+    println!(
+        "zipf driver: ok={} shed={shed} quota={quota} degraded={degraded} lost={lost}",
+        answers.len()
+    );
+    latencies.sort_unstable();
+    if !latencies.is_empty() {
+        let p = |f: usize| latencies[(latencies.len() * f / 100).min(latencies.len() - 1)];
+        println!("latency_us: p50={} p99={}", p(50), p(99));
+    }
+    if n_queries > 0 && answers.is_empty() {
+        eprintln!("zipf_driver: no query was answered");
+        exit(1);
+    }
+
+    // Offline replay of every returned triple: recover the exact version
+    // from the manifest alone, re-run the same scatter-gather with the
+    // answer's seed and warm start, demand bit-equality.
+    let Some(dir) = data_dir else {
+        println!("replay: skipped (no --data-dir)");
+        exit(0);
+    };
+    let scfg = SolveConfig { k: welcome.k, delta: welcome.delta, batch_size: welcome.batch_size };
+    let opts = StoreOptions::default();
+    let shards = welcome.shards;
+    let mut exact = 0usize;
+    for (i, (q, a)) in answers.iter().enumerate() {
+        match replay_answer(&dir, &opts, shards, &scfg, a.version, a.seed, &a.warm_coords, q) {
+            Ok(again) if again.top_atoms == a.top_atoms && again.samples == a.samples => {
+                exact += 1;
+            }
+            Ok(again) => eprintln!(
+                "replay MISMATCH at answer {i} (v{}): wire {:?}/{} vs offline {:?}/{}",
+                a.version, a.top_atoms, a.samples, again.top_atoms, again.samples
+            ),
+            Err(e) => eprintln!("replay FAILED at answer {i} (v{}): {e:#}", a.version),
+        }
+    }
+    println!("replay: {exact}/{} bit-exact", answers.len());
+    exit(if exact == answers.len() { 0 } else { 1 });
+}

@@ -110,6 +110,12 @@ impl WalkReport {
     }
 }
 
+/// Shard count and per-cycle TCP queries of the walk's net phase: small
+/// and fixed, so the replay leg (same shard count) is reproducible from
+/// the report alone.
+const NET_SHARDS: usize = 2;
+const NET_QUERIES_PER_CYCLE: usize = 3;
+
 /// The schedule the walk uses when none is supplied: transient errors on
 /// every durable-write boundary (exercising retry + typed give-up),
 /// occasional injected corruption on spilled reads (exercising
@@ -127,6 +133,9 @@ pub fn default_schedule(seed: u64) -> Schedule {
         .prob("serve.query", FaultKind::Stall(20), 0.05)
         .prob("exec.task", FaultKind::Panic, 0.03)
         .prob("exec.gate.stall", FaultKind::Stall(20), 0.03)
+        .prob("net.accept", FaultKind::Error, 0.05)
+        .prob("net.shard.rpc", FaultKind::Error, 0.05)
+        .prob("net.shard.rpc", FaultKind::Panic, 0.02)
 }
 
 /// Run the walk. `Err` only for setup problems (bad schedule, unusable
@@ -194,6 +203,58 @@ pub fn run_walk(cfg: &WalkConfig) -> Result<WalkReport> {
             }
         }
         server.shutdown();
+
+        // ── Net phase: a few queries over real TCP, still under the
+        // schedule. One connection per query, so an injected accept
+        // fault costs exactly that query (the client sees a reset). ──
+        let net_cfg = crate::net::NetConfig {
+            shards: NET_SHARDS,
+            k: server_cfg.k,
+            warm_coords: 8,
+            max_conns: 4,
+            max_inflight: 2,
+            read_timeout_ms: 10_000,
+            drain_timeout_ms: 5_000,
+            seed: cfg.seed ^ 0x4E45_5400 ^ cycle as u64,
+            ..Default::default()
+        };
+        let net_scfg = crate::net::SolveConfig {
+            k: net_cfg.k,
+            delta: net_cfg.delta,
+            batch_size: net_cfg.batch_size,
+        };
+        let mut net_answers: Vec<(Vec<f32>, crate::net::WireAnswer)> = Vec::new();
+        match crate::net::NetServer::start(
+            crate::net::ServeTarget::Live(store.clone()),
+            "127.0.0.1:0",
+            net_cfg,
+        ) {
+            Err(e) => report.violations.push(format!("cycle {cycle}: net start: {e}")),
+            Ok(net_server) => {
+                let addr = net_server.addr().to_string();
+                for wq in 0..NET_QUERIES_PER_CYCLE {
+                    let query: Vec<f32> = (0..cfg.d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                    let served = crate::net::NetClient::connect(&addr, 10_000)
+                        .and_then(|mut c| c.query(wq as u64, &query));
+                    match served {
+                        Ok(crate::net::Response::Answer(a)) => {
+                            if a.degraded {
+                                report.queries_degraded += 1;
+                            } else {
+                                net_answers.push((query, a));
+                            }
+                        }
+                        // A typed error frame (e.g. an internal panic
+                        // contained server-side) is a served denial, not
+                        // a lost query.
+                        Ok(_) => report.queries_degraded += 1,
+                        Err(_) => report.queries_lost += 1,
+                    }
+                }
+                net_server.shutdown();
+            }
+        }
+
         drop(guard); // chaos off for verification
 
         // ── Crash. Fingerprint the last published version first (the
@@ -302,6 +363,45 @@ pub fn run_walk(cfg: &WalkConfig) -> Result<WalkReport> {
                 ));
             } else {
                 report.replayed += 1;
+            }
+        }
+
+        // ── Replay every un-degraded wire answer the same way: recover
+        // the answer's version, rebuild the same shard partition, solve
+        // with the answer's (seed, warm_coords). ─────────────────────
+        for (query, ans) in &net_answers {
+            report.queries_ok += 1;
+            if ans.version > last_ok_version {
+                report.violations.push(format!(
+                    "cycle {cycle}: wire answer v{} past last ok commit v{last_ok_version}",
+                    ans.version
+                ));
+                continue;
+            }
+            match crate::net::replay_answer(
+                &cfg.dir,
+                &opts,
+                NET_SHARDS,
+                &net_scfg,
+                ans.version,
+                ans.seed,
+                &ans.warm_coords,
+                query,
+            ) {
+                Err(e) => report.violations.push(format!(
+                    "cycle {cycle}: wire answer v{} unrecoverable: {e}",
+                    ans.version
+                )),
+                Ok(again) => {
+                    if again.top_atoms != ans.top_atoms || again.samples != ans.samples {
+                        report.violations.push(format!(
+                            "cycle {cycle}: wire answer v{} not bit-exact on replay",
+                            ans.version
+                        ));
+                    } else {
+                        report.replayed += 1;
+                    }
+                }
             }
         }
     }

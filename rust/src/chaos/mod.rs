@@ -52,6 +52,8 @@ pub const SITES: &[&str] = &[
     "exec.task",
     "exec.gate.stall",
     "serve.query",
+    "net.accept",
+    "net.shard.rpc",
 ];
 
 /// Stalls are bounded so an injected hang can never wedge a test run.

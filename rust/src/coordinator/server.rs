@@ -218,8 +218,9 @@ impl MipsServer {
     }
 }
 
-/// Best-effort text of a caught panic payload.
-fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+/// Best-effort text of a caught panic payload (shared with the network
+/// tier's leg/query containment).
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
     p.downcast_ref::<&str>()
         .copied()
         .or_else(|| p.downcast_ref::<String>().map(String::as_str))

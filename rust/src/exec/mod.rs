@@ -293,12 +293,30 @@ impl Gate {
         true
     }
 
+    /// Take a slot only if one is free right now — the admission
+    /// control's non-blocking edge: callers shed (typed) instead of
+    /// queueing when saturated. No failpoint here: the shed path must
+    /// stay deterministic under chaos schedules.
+    pub fn try_acquire(&self) -> bool {
+        let mut n = self.state.lock().unwrap();
+        if *n >= self.max {
+            return false;
+        }
+        *n += 1;
+        true
+    }
+
     /// Acquire a slot as an RAII guard: released on drop, so a panicking
     /// task still returns its slot (no leaked capacity, no hung
     /// `wait_idle`).
     pub fn acquire_slot(gate: &Arc<Gate>) -> GateSlot {
         gate.acquire();
         GateSlot(gate.clone())
+    }
+
+    /// Non-blocking [`Gate::acquire_slot`]: `None` when the gate is full.
+    pub fn try_acquire_slot(gate: &Arc<Gate>) -> Option<GateSlot> {
+        gate.try_acquire().then(|| GateSlot(gate.clone()))
     }
 }
 

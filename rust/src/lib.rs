@@ -45,6 +45,17 @@
 //! enabling instrumentation changes no answer digest and no gated op
 //! count.
 //!
+//! Speaking to the world is [`net`]: a zero-dependency TCP serving
+//! tier. A [`net::ShardSet`] partitions one pinned snapshot into N
+//! engine shards; a scatter-gather front-end fans each query out,
+//! merges per-shard top-k deterministically (exact re-score, stable
+//! arm-id tie-break), and answers over length-prefixed checksummed
+//! frames with typed admission control (connection bound → per-client
+//! quota → in-flight gate). Every wire answer carries its `(version,
+//! seed, warm_coords)` replay triple, so any network result is
+//! bit-exact reproducible offline from the durable manifest — CI's
+//! `net-smoke` job replays an entire Zipf-driven run on every PR.
+//!
 //! Breaking it on purpose is [`chaos`]: deterministic fault injection.
 //! Named failpoints sit at every fallible boundary of the durable data
 //! plane (spill, manifest, commit, worker, serve), armed by seeded
@@ -67,6 +78,7 @@ pub mod kernels;
 pub mod kmedoids;
 pub mod metrics;
 pub mod mips;
+pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod store;

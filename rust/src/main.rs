@@ -5,6 +5,9 @@
 //! repro list                      # show all experiment ids
 //! repro exp <id>|all [--seed S]   # regenerate a paper table/figure
 //! repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]
+//! repro serve --port P [--host H] [--shards N] [--rows N] [--dim D]
+//!             [--seed S] [--k K] [--data-dir DIR]   # TCP scatter-gather tier
+//! repro query --port P [--host H] [--count N] [--seed S] [--shutdown]
 //! repro check-artifacts           # load + smoke-test the AOT bundle
 //! repro perfgate <run|baseline|check|list> [--tier smoke|full]
 //!               [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]
@@ -31,6 +34,7 @@ fn main() {
         Some("list") => cmd_list(),
         Some("exp") => cmd_exp(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("query") => cmd_query(&args[1..]),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("perfgate") => cmd_perfgate(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
@@ -40,10 +44,13 @@ fn main() {
         Some("chaos") => cmd_chaos(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|exp|serve|check-artifacts|perfgate|bench|trace|metrics\
+                "usage: repro <list|exp|serve|query|check-artifacts|perfgate|bench|trace|metrics\
                  |recover|chaos> [...]\n\
                  \n  repro list\n  repro exp <id>|all [--seed S]\n  \
                  repro serve [--config F] [--queries N] [--backend native|pjrt|hybrid]\n  \
+                 repro serve --port P [--host H] [--shards N] [--rows N] [--dim D] \
+                 [--seed S] [--k K] [--data-dir DIR]\n  \
+                 repro query --port P [--host H] [--count N] [--seed S] [--shutdown]\n  \
                  repro check-artifacts\n  \
                  repro perfgate <run|baseline|check|list> [--tier smoke|full] \
                  [--tolerance F] [--out FILE] [--dir DIR] [--allow-unstamped]\n  \
@@ -90,6 +97,9 @@ fn cmd_exp(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
+    if flag_value(args, "--port").is_some() {
+        return cmd_serve_net(args);
+    }
     let n_queries: usize =
         flag_value(args, "--queries").and_then(|s| s.parse().ok()).unwrap_or(200);
     let backend_name = flag_value(args, "--backend").unwrap_or("hybrid");
@@ -167,6 +177,147 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     server.shutdown();
     0
+}
+
+/// `repro serve --port P` — the network serving tier (see
+/// `rust/src/net/`): bind a multi-shard scatter-gather TCP front-end
+/// over a durable [`LiveStore`] and block until a `Shutdown` frame (or
+/// a signal) arrives. A fresh store is seeded with the deterministic
+/// corpus `lowrank_like(rows, dim, 15, seed)`, which drivers like
+/// `examples/zipf_driver.rs` regenerate locally to aim their queries;
+/// with `--data-dir` the corpus survives restarts and every served
+/// `(version, seed, warm_coords)` triple stays replayable offline.
+///
+/// [`LiveStore`]: adaptive_sampling::store::LiveStore
+fn cmd_serve_net(args: &[String]) -> i32 {
+    use adaptive_sampling::net::{NetConfig, NetServer, ServeTarget};
+    use adaptive_sampling::store::{DatasetView, LiveStore, StoreOptions};
+
+    let Some(port) = flag_value(args, "--port").and_then(|s| s.parse::<u16>().ok()) else {
+        eprintln!("serve: --port wants a TCP port number");
+        return 2;
+    };
+    let host = flag_value(args, "--host").unwrap_or("127.0.0.1");
+    let shards: usize = flag_value(args, "--shards").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let rows: usize = flag_value(args, "--rows").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let dim: usize = flag_value(args, "--dim").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+    let k: usize = flag_value(args, "--k").and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let store = match flag_value(args, "--data-dir") {
+        Some(dir) => LiveStore::open(dim, StoreOptions::default(), std::path::Path::new(dir)),
+        None => LiveStore::new(dim, StoreOptions::default()),
+    };
+    let store = match store {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            return 1;
+        }
+    };
+    if store.n_rows() == 0 {
+        if let Err(e) = store.commit_batch(&lowrank_like(rows, dim, 15, seed)) {
+            eprintln!("serve: initial corpus: {e:#}");
+            return 1;
+        }
+    }
+
+    let cfg = NetConfig { shards, k, ..Default::default() };
+    let addr = format!("{host}:{port}");
+    let server = match NetServer::start(ServeTarget::Live(store.clone()), &addr, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: bind {addr}: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "serving on {} — {} rows x {dim}, {shards} shards, k={k} (corpus seed {seed})",
+        server.addr(),
+        store.n_rows(),
+    );
+    server.wait();
+    println!("serve: drained and shut down");
+    0
+}
+
+/// `repro query` — a minimal client for `repro serve --port`: handshake,
+/// send `--count` deterministic queries, and print every wire answer
+/// with its `(version, seed, warm_coords)` replay triple. `--shutdown`
+/// asks the server to drain and exit afterwards.
+fn cmd_query(args: &[String]) -> i32 {
+    use adaptive_sampling::net::{NetClient, Response};
+
+    let Some(port) = flag_value(args, "--port").and_then(|s| s.parse::<u16>().ok()) else {
+        eprintln!("usage: repro query --port P [--host H] [--count N] [--seed S] [--shutdown]");
+        return 2;
+    };
+    let host = flag_value(args, "--host").unwrap_or("127.0.0.1");
+    let count: u64 = flag_value(args, "--count").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seed: u64 = flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+
+    let addr = format!("{host}:{port}");
+    let mut client = match NetClient::connect(&addr, 30_000) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("query: connect {addr}: {e:#}");
+            return 1;
+        }
+    };
+    let welcome = match client.hello("repro-query") {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("query: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "connected: version {} — {} rows x {}, {} shards, k={}",
+        welcome.version, welcome.rows, welcome.d, welcome.shards, welcome.k
+    );
+
+    let mut rng = Rng::new(seed);
+    let mut code = 0;
+    for id in 0..count {
+        let q: Vec<f32> = (0..welcome.d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        match client.query(id, &q) {
+            Ok(Response::Answer(a)) => {
+                println!(
+                    "  #{id}: top {:?}  (v{}, seed {:#x}, {} warm coords, {}/{} shards{}, \
+                     {} samples, {}us)",
+                    a.top_atoms,
+                    a.version,
+                    a.seed,
+                    a.warm_coords.len(),
+                    a.shards_ok,
+                    a.shards,
+                    if a.degraded { ", DEGRADED" } else { "" },
+                    a.samples,
+                    a.latency_us
+                );
+            }
+            Ok(Response::Error { code: c, msg }) => {
+                println!("  #{id}: server error [{}] {msg}", c.as_str());
+                code = 1;
+            }
+            Ok(other) => {
+                eprintln!("query: unexpected response {other:?}");
+                code = 1;
+            }
+            Err(e) => {
+                eprintln!("query: {e:#}");
+                return 1;
+            }
+        }
+    }
+    if args.iter().any(|a| a == "--shutdown") {
+        if let Err(e) = client.shutdown_server() {
+            eprintln!("query: shutdown: {e:#}");
+            return 1;
+        }
+        println!("server shutdown acknowledged");
+    }
+    code
 }
 
 /// The perf-gate CLI (see `rust/src/harness/`):
@@ -497,6 +648,24 @@ fn cmd_metrics(args: &[String]) -> i32 {
         let _ = rx.recv().expect("response");
     }
     server.shutdown();
+
+    // One scatter-gather leg over the same corpus so the per-shard
+    // serving histograms (`serve.latency_us{shard=i}`) land in the same
+    // snapshot as the coordinator's instruments — scatter skew is
+    // visible from `repro metrics` without standing up a TCP server.
+    {
+        use adaptive_sampling::metrics::OpCounter;
+        use adaptive_sampling::net::{ShardSet, SolveConfig};
+        let view: Arc<dyn adaptive_sampling::store::DatasetView> = live.pin();
+        let set = ShardSet::new(view, 4);
+        let scfg = SolveConfig { k: 2, delta: 1e-3, batch_size: 64 };
+        let counter = OpCounter::new();
+        for i in 0..n_queries.min(8) as u64 {
+            let base = items.row(rng.below(n0));
+            let q: Vec<f32> = base.iter().map(|&v| v + 0.3 * rng.normal() as f32).collect();
+            let _ = set.solve(&q, 0x4D455 ^ i, &[], &scfg, &counter);
+        }
+    }
 
     let snap = obs::registry().snapshot();
     print!("{}", snap.render());

@@ -1,0 +1,109 @@
+//! A small synchronous client for the frame protocol — what `repro
+//! query`, the Zipf driver, and the tests speak.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::frame::{self, FrameError};
+use super::proto::{Request, Response, Welcome, WireAnswer};
+
+/// One connection to a [`super::NetServer`]. Requests are synchronous:
+/// send a frame, read the reply frame.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect with a read deadline (so a dead server yields a typed
+    /// timeout, not a hang).
+    pub fn connect(addr: &str, timeout_ms: u64) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::msg(format!("net client: connect {addr}: {e}")))?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(timeout_ms.max(1))))
+            .map_err(|e| Error::msg(format!("net client: set timeout: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream })
+    }
+
+    /// Send one request frame and read one response frame.
+    pub fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        frame::write_frame(&mut self.stream, &req.to_json().to_pretty_string())
+            .map_err(frame_err)?;
+        let payload = frame::read_frame(&mut self.stream).map_err(frame_err)?;
+        let json = Json::parse(&payload).map_err(|e| e.prefix("net client: response"))?;
+        Response::from_json(&json).map_err(|e| Error::msg(format!("net client: {e}")))
+    }
+
+    /// Introduce the client; returns the server's replay parameters.
+    pub fn hello(&mut self, name: &str) -> Result<Welcome> {
+        match self.roundtrip(&Request::Hello { client: name.to_string() })? {
+            Response::Welcome(w) => Ok(w),
+            other => Err(unexpected("welcome", &other)),
+        }
+    }
+
+    /// One MIPS query. Admission denials ([`Response::Error`]) are part
+    /// of the protocol, so the full [`Response`] is returned — callers
+    /// match on `Answer` vs `Error{code, ..}`.
+    pub fn query(&mut self, id: u64, q: &[f32]) -> Result<Response> {
+        self.roundtrip(&Request::Query { id, q: q.to_vec() })
+    }
+
+    /// Like [`NetClient::query`], but unwraps to the answer (any other
+    /// reply is an error) — the convenient form when no shedding is
+    /// expected.
+    pub fn query_answer(&mut self, id: u64, q: &[f32]) -> Result<WireAnswer> {
+        match self.query(id, q)? {
+            Response::Answer(a) => Ok(a),
+            other => Err(unexpected("answer", &other)),
+        }
+    }
+
+    /// Append rows to the live corpus; returns `(version, total_rows)`.
+    pub fn ingest(&mut self, rows: Vec<Vec<f32>>) -> Result<(u64, u64)> {
+        match self.roundtrip(&Request::Ingest { rows })? {
+            Response::Ingested { version, rows } => Ok((version, rows)),
+            other => Err(unexpected("ingested", &other)),
+        }
+    }
+
+    /// The server's metrics snapshot, as JSON.
+    pub fn metrics(&mut self) -> Result<Json> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::Metrics(snap) => Ok(snap),
+            other => Err(unexpected("metrics", &other)),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    /// Ask the server to shut down gracefully (reply: `bye`).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Response::Bye => Ok(()),
+            other => Err(unexpected("bye", &other)),
+        }
+    }
+}
+
+fn frame_err(e: FrameError) -> Error {
+    Error::msg(format!("net client: {e}"))
+}
+
+fn unexpected(want: &str, got: &Response) -> Error {
+    match got {
+        Response::Error { code, msg } => {
+            Error::msg(format!("net client: server error {}: {msg}", code.as_str()))
+        }
+        other => Error::msg(format!("net client: expected {want}, got {other:?}")),
+    }
+}

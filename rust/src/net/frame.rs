@@ -1,0 +1,201 @@
+//! Length-prefixed frame codec for the TCP serving tier.
+//!
+//! One frame = a 16-byte header followed by a UTF-8 JSON payload:
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 4 | magic `b"ASN1"` |
+//! | 4  | 4 | payload length, u32 little-endian (≤ [`MAX_FRAME_BYTES`]) |
+//! | 8  | 8 | FNV-1a of the payload bytes, u64 little-endian |
+//! | 16 | n | payload (UTF-8 JSON, see [`crate::net::proto`]) |
+//!
+//! The length is validated against [`MAX_FRAME_BYTES`] *before* any
+//! allocation, so a hostile 4 GiB prefix costs nothing; the checksum
+//! catches torn writes the length prefix alone would mistake for a
+//! well-formed short frame. Every malformed input maps to a typed
+//! [`FrameError`] — never a panic, and (given the socket read timeout
+//! the server installs) never a hang. `rust/tests/net.rs` fuzzes every
+//! truncation offset the way `durability.rs` does for segment files.
+
+use std::io::{Read, Write};
+
+use crate::util::digest::fnv1a_bytes;
+
+/// Frame magic: "Adaptive Sampling Net, frame format 1".
+pub const MAGIC: [u8; 4] = *b"ASN1";
+
+/// Header size in bytes (magic + length + checksum).
+pub const HEADER_BYTES: usize = 16;
+
+/// Hard cap on payload size — larger prefixes are rejected before any
+/// buffer is allocated.
+pub const MAX_FRAME_BYTES: u32 = 8 * 1024 * 1024;
+
+/// Every way a frame read/write can fail, as a typed value the protocol
+/// layer can answer with (a `bad_frame` error frame) instead of tearing
+/// the process down.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Clean EOF at a frame boundary: the peer closed between frames.
+    Closed,
+    /// EOF inside a frame — `at` bytes of it had arrived.
+    Truncated { at: usize },
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`] (rejected pre-alloc).
+    Oversized { len: u32 },
+    /// Payload arrived but its FNV-1a digest disagrees with the header.
+    Checksum { want: u64, got: u64 },
+    /// Payload is not valid UTF-8.
+    BadUtf8,
+    /// The socket read timed out (server installs a read deadline so a
+    /// stalled peer can never wedge a handler thread).
+    Timeout,
+    /// Any other I/O failure, stringified.
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated { at } => write!(f, "frame truncated after {at} bytes"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            FrameError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds cap {MAX_FRAME_BYTES}")
+            }
+            FrameError::Checksum { want, got } => {
+                write!(f, "frame checksum mismatch (header {want:#x}, payload {got:#x})")
+            }
+            FrameError::BadUtf8 => write!(f, "frame payload is not UTF-8"),
+            FrameError::Timeout => write!(f, "frame read timed out"),
+            FrameError::Io(e) => write!(f, "frame I/O error: {e}"),
+        }
+    }
+}
+
+impl FrameError {
+    fn from_io(e: std::io::Error) -> FrameError {
+        match e.kind() {
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => FrameError::Timeout,
+            _ => FrameError::Io(e.to_string()),
+        }
+    }
+}
+
+/// Encode `payload` as one complete frame (header + body).
+pub fn encode(payload: &str) -> Vec<u8> {
+    let body = payload.as_bytes();
+    debug_assert!(body.len() as u64 <= MAX_FRAME_BYTES as u64);
+    let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a_bytes(body.iter().copied()).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one frame (single `write_all`: the whole frame or an error).
+pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<(), FrameError> {
+    w.write_all(&encode(payload)).map_err(FrameError::from_io)?;
+    w.flush().map_err(FrameError::from_io)
+}
+
+/// Fill `buf` from `r`. `offset` is how many bytes of the frame arrived
+/// before this call, so truncation errors report absolute positions; a
+/// clean EOF at `offset == 0` is [`FrameError::Closed`] (frame boundary),
+/// anywhere else [`FrameError::Truncated`].
+fn read_full(r: &mut impl Read, buf: &mut [u8], offset: usize) -> Result<(), FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if offset + got == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated { at: offset + got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::from_io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one complete frame and return its payload string.
+pub fn read_frame(r: &mut impl Read) -> Result<String, FrameError> {
+    let mut header = [0u8; HEADER_BYTES];
+    read_full(r, &mut header, 0)?;
+    if header[0..4] != MAGIC {
+        return Err(FrameError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversized { len });
+    }
+    let want = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let mut body = vec![0u8; len as usize];
+    read_full(r, &mut body, HEADER_BYTES)?;
+    let got = fnv1a_bytes(body.iter().copied());
+    if got != want {
+        return Err(FrameError::Checksum { want, got });
+    }
+    String::from_utf8(body).map_err(|_| FrameError::BadUtf8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_and_rejects_each_malformation() {
+        let frame = encode("{\"type\": \"ping\"}");
+        assert_eq!(read_frame(&mut &frame[..]).unwrap(), "{\"type\": \"ping\"}");
+
+        // Clean EOF before any byte: a frame boundary, not an error.
+        assert_eq!(read_frame(&mut &frame[..0]), Err(FrameError::Closed));
+
+        // EOF at every interior offset: always Truncated{at}, never a panic.
+        for cut in 1..frame.len() {
+            assert_eq!(
+                read_frame(&mut &frame[..cut]),
+                Err(FrameError::Truncated { at: cut }),
+                "cut at {cut}"
+            );
+        }
+
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(matches!(read_frame(&mut &bad[..]), Err(FrameError::BadMagic(_))));
+
+        // Oversized prefix is rejected before the body allocation.
+        let mut huge = frame.clone();
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(read_frame(&mut &huge[..]), Err(FrameError::Oversized { len: u32::MAX }));
+
+        let mut flipped = frame.clone();
+        *flipped.last_mut().unwrap() ^= 0x20;
+        assert!(matches!(read_frame(&mut &flipped[..]), Err(FrameError::Checksum { .. })));
+
+        let mut non_utf8 = encode("abcd");
+        let n = non_utf8.len();
+        non_utf8[n - 1] = 0xFF;
+        let body_len = 4u32;
+        let digest = fnv1a_bytes(non_utf8[HEADER_BYTES..].iter().copied());
+        non_utf8[4..8].copy_from_slice(&body_len.to_le_bytes());
+        non_utf8[8..16].copy_from_slice(&digest.to_le_bytes());
+        assert_eq!(read_frame(&mut &non_utf8[..]), Err(FrameError::BadUtf8));
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_sequence() {
+        let mut buf = encode("1");
+        buf.extend_from_slice(&encode("two"));
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), "1");
+        assert_eq!(read_frame(&mut r).unwrap(), "two");
+        assert_eq!(read_frame(&mut r), Err(FrameError::Closed));
+    }
+}

@@ -1,0 +1,57 @@
+//! The network serving tier: a zero-dependency (`std::net`) TCP
+//! front-end over the engine.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`frame`]  | length-prefixed frame codec (magic + length + FNV-1a checksum), typed [`frame::FrameError`]s |
+//! | [`proto`]  | the JSON request/response schema carried inside frames (over [`crate::util::json`]) |
+//! | [`shard`]  | [`ShardSet`]: scatter-gather over a contiguous partition of one pinned snapshot, exact-re-score merge, `degraded` partial results |
+//! | [`server`] | [`NetServer`]: accept loop, admission ladder (conn bound → quota → gate; every denial typed), graceful drain |
+//! | [`client`] | [`NetClient`]: the synchronous client the CLI, driver, and tests speak |
+//!
+//! The tier's contract is the same one the in-process server keeps:
+//! **every network answer is bit-exact replayable offline.** An answer
+//! frame carries the replay triple `(version, seed, warm_coords)`; this
+//! module's [`replay_answer`] recovers that snapshot version from the
+//! durable manifest and re-runs the identical scatter-gather solve, and
+//! CI's `net-smoke` job does exactly that for a whole Zipf-distributed
+//! driver run on every PR.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+pub mod shard;
+
+pub use client::NetClient;
+pub use proto::{ErrorCode, Request, Response, Welcome, WireAnswer};
+pub use server::{NetConfig, NetServer, ServeTarget};
+pub use shard::{ShardAnswer, ShardSet, ShardView, SolveConfig};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::metrics::OpCounter;
+use crate::store::{LiveStore, StoreOptions};
+use crate::util::error::Result;
+
+/// Replay one wire answer offline: recover snapshot `version` from the
+/// durable manifest in `dir`, rebuild the same shard partition, and
+/// re-run the scatter-gather solve with the answer's `(seed,
+/// warm_coords)`. The returned [`ShardAnswer`] must match the wire
+/// answer's `top_atoms` and `samples` bit for bit (for answers served
+/// un-degraded) — the contract `net-smoke` enforces in CI.
+pub fn replay_answer(
+    dir: &Path,
+    opts: &StoreOptions,
+    shards: usize,
+    cfg: &SolveConfig,
+    version: u64,
+    seed: u64,
+    warm_coords: &[usize],
+    q: &[f32],
+) -> Result<ShardAnswer> {
+    let snap = LiveStore::recover_snapshot(dir, opts, version)?;
+    let snap: Arc<dyn crate::store::DatasetView> = snap;
+    Ok(ShardSet::new(snap, shards).solve(q, seed, warm_coords, cfg, &OpCounter::new()))
+}

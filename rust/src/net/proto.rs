@@ -1,0 +1,421 @@
+//! The JSON request/response schema carried inside frames.
+//!
+//! Messages are [`crate::util::json::Json`] objects dispatched on a
+//! `"type"` member. Floats cross the wire as JSON numbers written with
+//! the codec's shortest-round-trip form: an `f32` widened to `f64`
+//! serializes and parses back to the identical `f64`, and narrowing
+//! recovers the original `f32` bit for bit — which is what makes the
+//! wire answers replayable offline (non-finite values serialize to
+//! `null` and are rejected as `bad_request`, so they cannot silently
+//! corrupt a query).
+//!
+//! Every answer carries the replay triple `(version, seed, warm_coords)`
+//! plus the shard accounting (`shards`, `shards_ok`, `degraded`): a
+//! client holding the triple and the corpus directory can reproduce the
+//! exact `top_atoms` and `samples` with [`crate::net::ShardSet`] over
+//! [`crate::store::LiveStore::recover_snapshot`].
+
+use crate::util::json::Json;
+
+/// Machine-readable error class of an [`Response::Error`] frame — the
+/// admission-control ladder's typed outcomes plus the parse failures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Admission denied: accept queue or in-flight gate is full (the
+    /// 429 of this protocol). Retry later; the connection stays usable.
+    Overloaded,
+    /// Admission denied: the per-client token bucket is empty.
+    Quota,
+    /// The frame itself was malformed (see [`super::frame::FrameError`]);
+    /// the connection closes after this reply, since stream state is
+    /// unknown.
+    BadFrame,
+    /// The frame was well-formed but the request inside was not.
+    BadRequest,
+    /// The query died server-side (caught panic); the connection stays
+    /// usable.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Quota => "quota",
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "overloaded" => ErrorCode::Overloaded,
+            "quota" => ErrorCode::Quota,
+            "bad_frame" => ErrorCode::BadFrame,
+            "bad_request" => ErrorCode::BadRequest,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Introduce the client; the reply is [`Response::Welcome`] with the
+    /// solver parameters needed to replay answers offline. The name is
+    /// also the token-bucket quota key (unnamed clients are keyed by
+    /// peer address).
+    Hello { client: String },
+    Ping,
+    /// One MIPS query; `id` is echoed in the answer so pipelined clients
+    /// can match responses.
+    Query { id: u64, q: Vec<f32> },
+    /// Append rows to the live corpus (row-major, each of width d).
+    Ingest { rows: Vec<Vec<f32>> },
+    /// Fetch the server's metrics snapshot.
+    Metrics,
+    /// Graceful shutdown: reply [`Response::Bye`], drain, exit.
+    Shutdown,
+}
+
+/// Everything the client needs to replay answers offline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Welcome {
+    pub version: u64,
+    pub rows: u64,
+    pub d: usize,
+    pub shards: usize,
+    pub k: usize,
+    pub delta: f64,
+    pub batch_size: usize,
+    pub warm_coords: usize,
+}
+
+/// One served answer plus its replay triple and shard accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireAnswer {
+    pub id: u64,
+    pub top_atoms: Vec<usize>,
+    /// Replay triple, part 1: the pinned snapshot version this answer
+    /// was computed against.
+    pub version: u64,
+    /// Replay triple, part 2: the per-query solver seed.
+    pub seed: u64,
+    /// Replay triple, part 3: the warm-start coordinate set.
+    pub warm_coords: Vec<usize>,
+    pub shards: usize,
+    pub shards_ok: usize,
+    /// True when at least one shard leg was lost (partial result).
+    pub degraded: bool,
+    pub samples: u64,
+    pub latency_us: u64,
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Welcome(Welcome),
+    Pong,
+    Answer(WireAnswer),
+    Ingested { version: u64, rows: u64 },
+    Metrics(Json),
+    Bye,
+    Error { code: ErrorCode, msg: String },
+}
+
+fn f32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::F64(v as f64)).collect())
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::U64(v as u64)).collect())
+}
+
+fn parse_f32_arr(j: &Json, what: &str) -> Result<Vec<f32>, String> {
+    let items = j.as_arr().ok_or_else(|| format!("{what}: not an array"))?;
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let v = item.as_f64().ok_or_else(|| format!("{what}[{i}]: not a finite number"))?;
+        out.push(v as f32);
+    }
+    Ok(out)
+}
+
+fn parse_usize_arr(j: &Json, what: &str) -> Result<Vec<usize>, String> {
+    let items = j.as_arr().ok_or_else(|| format!("{what}: not an array"))?;
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let v = item.as_u64().ok_or_else(|| format!("{what}[{i}]: not a u64"))?;
+        out.push(v as usize);
+    }
+    Ok(out)
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing u64 member {key:?}"))
+}
+
+fn need_bool(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(format!("missing bool member {key:?}")),
+    }
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Request::Hello { client } => {
+                o.push("type", Json::Str("hello".into()));
+                o.push("client", Json::Str(client.clone()));
+            }
+            Request::Ping => {
+                o.push("type", Json::Str("ping".into()));
+            }
+            Request::Query { id, q } => {
+                o.push("type", Json::Str("query".into()));
+                o.push("id", Json::U64(*id));
+                o.push("q", f32_arr(q));
+            }
+            Request::Ingest { rows } => {
+                o.push("type", Json::Str("ingest".into()));
+                o.push("rows", Json::Arr(rows.iter().map(|r| f32_arr(r)).collect()));
+            }
+            Request::Metrics => {
+                o.push("type", Json::Str("metrics".into()));
+            }
+            Request::Shutdown => {
+                o.push("type", Json::Str("shutdown".into()));
+            }
+        }
+        o
+    }
+
+    /// Parse a request payload. The error string becomes the
+    /// `bad_request` reply, so it names what was wrong.
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("hello") => Ok(Request::Hello {
+                client: j
+                    .get("client")
+                    .and_then(Json::as_str)
+                    .ok_or("hello: missing client")?
+                    .to_string(),
+            }),
+            Some("ping") => Ok(Request::Ping),
+            Some("query") => Ok(Request::Query {
+                id: need_u64(j, "id")?,
+                q: parse_f32_arr(j.get("q").ok_or("query: missing q")?, "q")?,
+            }),
+            Some("ingest") => {
+                let rows = j.get("rows").and_then(Json::as_arr).ok_or("ingest: missing rows")?;
+                let mut out = Vec::with_capacity(rows.len());
+                for (i, r) in rows.iter().enumerate() {
+                    out.push(parse_f32_arr(r, &format!("rows[{i}]"))?);
+                }
+                Ok(Request::Ingest { rows: out })
+            }
+            Some("metrics") => Ok(Request::Metrics),
+            Some("shutdown") => Ok(Request::Shutdown),
+            other => Err(format!("unknown request type {other:?}")),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Response::Welcome(w) => {
+                o.push("type", Json::Str("welcome".into()));
+                o.push("version", Json::U64(w.version));
+                o.push("rows", Json::U64(w.rows));
+                o.push("d", Json::U64(w.d as u64));
+                o.push("shards", Json::U64(w.shards as u64));
+                o.push("k", Json::U64(w.k as u64));
+                o.push("delta", Json::F64(w.delta));
+                o.push("batch_size", Json::U64(w.batch_size as u64));
+                o.push("warm_coords", Json::U64(w.warm_coords as u64));
+            }
+            Response::Pong => {
+                o.push("type", Json::Str("pong".into()));
+            }
+            Response::Answer(a) => {
+                o.push("type", Json::Str("answer".into()));
+                o.push("id", Json::U64(a.id));
+                o.push("top_atoms", usize_arr(&a.top_atoms));
+                o.push("version", Json::U64(a.version));
+                o.push("seed", Json::U64(a.seed));
+                o.push("warm_coords", usize_arr(&a.warm_coords));
+                o.push("shards", Json::U64(a.shards as u64));
+                o.push("shards_ok", Json::U64(a.shards_ok as u64));
+                o.push("degraded", Json::Bool(a.degraded));
+                o.push("samples", Json::U64(a.samples));
+                o.push("latency_us", Json::U64(a.latency_us));
+            }
+            Response::Ingested { version, rows } => {
+                o.push("type", Json::Str("ingested".into()));
+                o.push("version", Json::U64(*version));
+                o.push("rows", Json::U64(*rows));
+            }
+            Response::Metrics(snap) => {
+                o.push("type", Json::Str("metrics".into()));
+                o.push("snapshot", snap.clone());
+            }
+            Response::Bye => {
+                o.push("type", Json::Str("bye".into()));
+            }
+            Response::Error { code, msg } => {
+                o.push("type", Json::Str("error".into()));
+                o.push("code", Json::Str(code.as_str().into()));
+                o.push("msg", Json::Str(msg.clone()));
+            }
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("welcome") => Ok(Response::Welcome(Welcome {
+                version: need_u64(j, "version")?,
+                rows: need_u64(j, "rows")?,
+                d: need_u64(j, "d")? as usize,
+                shards: need_u64(j, "shards")? as usize,
+                k: need_u64(j, "k")? as usize,
+                delta: j
+                    .get("delta")
+                    .and_then(Json::as_f64)
+                    .ok_or("welcome: missing delta")?,
+                batch_size: need_u64(j, "batch_size")? as usize,
+                warm_coords: need_u64(j, "warm_coords")? as usize,
+            })),
+            Some("pong") => Ok(Response::Pong),
+            Some("answer") => Ok(Response::Answer(WireAnswer {
+                id: need_u64(j, "id")?,
+                top_atoms: parse_usize_arr(
+                    j.get("top_atoms").ok_or("answer: missing top_atoms")?,
+                    "top_atoms",
+                )?,
+                version: need_u64(j, "version")?,
+                seed: need_u64(j, "seed")?,
+                warm_coords: parse_usize_arr(
+                    j.get("warm_coords").ok_or("answer: missing warm_coords")?,
+                    "warm_coords",
+                )?,
+                shards: need_u64(j, "shards")? as usize,
+                shards_ok: need_u64(j, "shards_ok")? as usize,
+                degraded: need_bool(j, "degraded")?,
+                samples: need_u64(j, "samples")?,
+                latency_us: need_u64(j, "latency_us")?,
+            })),
+            Some("ingested") => Ok(Response::Ingested {
+                version: need_u64(j, "version")?,
+                rows: need_u64(j, "rows")?,
+            }),
+            Some("metrics") => {
+                Ok(Response::Metrics(j.get("snapshot").cloned().unwrap_or(Json::Null)))
+            }
+            Some("bye") => Ok(Response::Bye),
+            Some("error") => {
+                let code = j
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .and_then(ErrorCode::parse)
+                    .ok_or("error: missing/unknown code")?;
+                let msg = j.get("msg").and_then(Json::as_str).unwrap_or("").to_string();
+                Ok(Response::Error { code, msg })
+            }
+            other => Err(format!("unknown response type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip_with_f32_bit_exactness() {
+        // Awkward f32s: subnormal, large, negative-exact, plain.
+        let q = vec![1.5f32, -0.1, 3.4e38, 1.0e-40, 0.0, -0.0];
+        let reqs = vec![
+            Request::Hello { client: "driver".into() },
+            Request::Ping,
+            Request::Query { id: 7, q: q.clone() },
+            Request::Ingest { rows: vec![q.clone(), vec![2.0; 6]] },
+            Request::Metrics,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let text = req.to_json().to_pretty_string();
+            let back = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, req, "round trip of {req:?}");
+        }
+        // Bit-exactness, explicitly.
+        let text = Request::Query { id: 1, q: q.clone() }.to_json().to_pretty_string();
+        if let Request::Query { q: back, .. } =
+            Request::from_json(&Json::parse(&text).unwrap()).unwrap()
+        {
+            for (a, b) in q.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        } else {
+            panic!("not a query");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let resps = vec![
+            Response::Welcome(Welcome {
+                version: 3,
+                rows: 128,
+                d: 16,
+                shards: 4,
+                k: 3,
+                delta: 1e-3,
+                batch_size: 64,
+                warm_coords: 8,
+            }),
+            Response::Pong,
+            Response::Answer(WireAnswer {
+                id: 9,
+                top_atoms: vec![4, 0, 99],
+                version: 3,
+                seed: 0xDEADBEEF,
+                warm_coords: vec![1, 5],
+                shards: 4,
+                shards_ok: 3,
+                degraded: true,
+                samples: 12345,
+                latency_us: 250,
+            }),
+            Response::Ingested { version: 4, rows: 160 },
+            Response::Bye,
+            Response::Error { code: ErrorCode::Overloaded, msg: "inflight full".into() },
+        ];
+        for resp in resps {
+            let text = resp.to_json().to_pretty_string();
+            let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, resp, "round trip of {resp:?}");
+        }
+    }
+
+    #[test]
+    fn non_finite_query_values_are_rejected_not_smuggled() {
+        // f32 NaN serializes to null; the parser must refuse it.
+        let req = Request::Query { id: 1, q: vec![f32::NAN] };
+        let text = req.to_json().to_pretty_string();
+        assert!(Request::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn unknown_types_are_typed_errors() {
+        let j = Json::parse("{\"type\": \"warp\"}").unwrap();
+        assert!(Request::from_json(&j).is_err());
+        assert!(Response::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,505 @@
+//! The TCP front-end: accept loop, admission control, per-connection
+//! protocol handlers.
+//!
+//! Admission is a three-rung ladder, every rung typed and non-blocking
+//! (an overloaded server answers, it never hangs):
+//!
+//! 1. **connection bound** — at most `max_conns` handler threads; an
+//!    accept beyond that is shed with an `overloaded` error frame and
+//!    closed;
+//! 2. **per-client quota** — a token bucket per `hello` name (peer
+//!    address for anonymous clients); an empty bucket answers `quota`;
+//! 3. **in-flight bound** — at most `max_inflight` queries computing at
+//!    once, taken with [`Gate`] `try_acquire` (the non-blocking edge);
+//!    a saturated gate answers `overloaded` and the connection stays
+//!    usable.
+//!
+//! Shutdown is graceful: a `shutdown` frame (or [`NetServer::shutdown`])
+//! answers `bye`, stops the accept loop, and drains both gates via
+//! [`Gate::wait_idle_timeout`] so in-flight queries finish before the
+//! process exits — bounded, so a wedged handler degrades into a reported
+//! timeout instead of a hang.
+//!
+//! Chaos: `net.accept` fires per accepted connection (an injected fault
+//! drops the connection — the client sees a reset, not a half-served
+//! query), `net.shard.rpc` fires inside each scatter leg (see
+//! [`crate::net::ShardSet`]).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::exec::Gate;
+use crate::metrics::OpCounter;
+use crate::store::{DatasetView, LiveStore};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::frame::{self, FrameError};
+use super::proto::{ErrorCode, Request, Response, Welcome, WireAnswer};
+use super::shard::{ShardSet, SolveConfig};
+
+/// What the server serves: a mutable live corpus (wire ingest allowed)
+/// or a static snapshot (ingest answers `bad_request`).
+pub enum ServeTarget {
+    Live(Arc<LiveStore>),
+    Static(Arc<dyn DatasetView>),
+}
+
+/// Front-end configuration. Solver fields (`k`, `delta`, `batch_size`,
+/// `warm_coords`) are advertised in the Welcome frame so clients can
+/// replay answers offline with identical settings.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub shards: usize,
+    pub k: usize,
+    pub delta: f64,
+    pub batch_size: usize,
+    /// Warm-start coordinates drawn per query (echoed in the answer).
+    pub warm_coords: usize,
+    /// Ladder rung 1: concurrent connection handlers.
+    pub max_conns: usize,
+    /// Ladder rung 3: concurrent computing queries.
+    pub max_inflight: usize,
+    /// Ladder rung 2: token-bucket capacity per client (`∞` = no quota).
+    pub quota_burst: f64,
+    /// Token refill per second (0 with a finite burst = a hard cap, the
+    /// deterministic setting the tests pin).
+    pub quota_per_sec: f64,
+    /// Socket read deadline — a stalled peer can never wedge a handler.
+    pub read_timeout_ms: u64,
+    /// Bound on the shutdown drain.
+    pub drain_timeout_ms: u64,
+    /// Per-query solver seeds are derived from this.
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            shards: 4,
+            k: 1,
+            delta: 1e-3,
+            batch_size: 64,
+            warm_coords: 32,
+            max_conns: 64,
+            max_inflight: 32,
+            quota_burst: f64::INFINITY,
+            quota_per_sec: 0.0,
+            read_timeout_ms: 30_000,
+            drain_timeout_ms: 10_000,
+            seed: 0x4E45_5453, // "NETS"
+        }
+    }
+}
+
+/// Classic token bucket; `rate == 0` never refills, so tests get a
+/// deterministic "burst then deny" pattern.
+struct TokenBucket {
+    tokens: f64,
+    cap: f64,
+    rate: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(cap: f64, rate: f64) -> TokenBucket {
+        TokenBucket { tokens: cap, cap, rate, last: Instant::now() }
+    }
+
+    fn take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.cap);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct Shared {
+    cfg: NetConfig,
+    /// The servable view (the live store itself, or the static corpus);
+    /// pinned per query via [`crate::store::pin`].
+    view: Arc<dyn DatasetView>,
+    /// Kept separately for wire ingest.
+    live: Option<Arc<LiveStore>>,
+    addr: SocketAddr,
+    conn_gate: Arc<Gate>,
+    inflight: Arc<Gate>,
+    inflight_count: AtomicU64,
+    closing: AtomicBool,
+    serial: AtomicU64,
+    quotas: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl Shared {
+    fn begin_close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() so the loop observes `closing`.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running TCP front-end (accept thread + per-connection handlers).
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving.
+    pub fn start(target: ServeTarget, addr: &str, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::msg(format!("net: bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::msg(format!("net: local_addr: {e}")))?;
+        let (view, live): (Arc<dyn DatasetView>, Option<Arc<LiveStore>>) = match target {
+            ServeTarget::Live(store) => (store.clone(), Some(store)),
+            ServeTarget::Static(view) => (view, None),
+        };
+        let shared = Arc::new(Shared {
+            conn_gate: Arc::new(Gate::new(cfg.max_conns)),
+            inflight: Arc::new(Gate::new(cfg.max_inflight)),
+            inflight_count: AtomicU64::new(0),
+            closing: AtomicBool::new(false),
+            serial: AtomicU64::new(0),
+            quotas: Mutex::new(HashMap::new()),
+            cfg,
+            view,
+            live,
+            addr: local,
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| Error::msg(format!("net: spawn accept thread: {e}")))?;
+        Ok(NetServer { shared, accept: Some(accept) })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Block until a wire `shutdown` request stops the server, then
+    /// drain. The `repro serve` foreground mode.
+    pub fn wait(mut self) {
+        self.join_and_drain();
+    }
+
+    /// Stop accepting, drain in-flight work (bounded), return.
+    pub fn shutdown(mut self) {
+        self.shared.begin_close();
+        self.join_and_drain();
+    }
+
+    fn join_and_drain(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let drain = Duration::from_millis(self.shared.cfg.drain_timeout_ms);
+        if !self.shared.inflight.wait_idle_timeout(drain) {
+            eprintln!("net: queries still in flight after drain timeout; detaching");
+        }
+        if !self.shared.conn_gate.wait_idle_timeout(drain) {
+            eprintln!("net: connections still open after drain timeout; detaching");
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shared.begin_close();
+            self.join_and_drain();
+        }
+    }
+}
+
+fn send(stream: &mut TcpStream, resp: &Response) -> std::result::Result<(), FrameError> {
+    frame::write_frame(stream, &resp.to_json().to_pretty_string())
+}
+
+fn error_frame(code: ErrorCode, msg: impl Into<String>) -> Response {
+    Response::Error { code, msg: msg.into() }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let obs = crate::obs::registry();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break; // the begin_close() wake (or a straggler)
+                }
+                // Contain an injected Panic-kind fault: the accept loop
+                // must survive anything a failpoint does.
+                let admitted = catch_unwind(AssertUnwindSafe(|| {
+                    crate::chaos::failpoint("net.accept").is_ok()
+                }))
+                .unwrap_or(false);
+                if !admitted {
+                    obs.counter("net.accept_errors").incr();
+                    continue; // stream drops: the client sees a reset
+                }
+                obs.counter("net.accepted").incr();
+                match Gate::try_acquire_slot(&shared.conn_gate) {
+                    Some(slot) => {
+                        let conn_shared = shared.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("net-conn".into())
+                            .spawn(move || {
+                                let _slot = slot;
+                                handle_conn(conn_shared, stream);
+                            });
+                        if spawned.is_err() {
+                            obs.counter("net.shed").incr();
+                        }
+                    }
+                    None => {
+                        // Ladder rung 1: typed shed, never a hang.
+                        obs.counter("net.shed").incr();
+                        let mut stream = stream;
+                        let _ = send(
+                            &mut stream,
+                            &error_frame(ErrorCode::Overloaded, "connection limit reached"),
+                        );
+                        let _ = stream.flush();
+                    }
+                }
+            }
+            Err(_) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break;
+                }
+                obs.counter("net.accept_errors").incr();
+            }
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(shared.cfg.read_timeout_ms)));
+    // Quota key: peer address until a hello names the client.
+    let mut client_key = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".to_string());
+    loop {
+        let payload = match frame::read_frame(&mut stream) {
+            Ok(p) => p,
+            Err(FrameError::Closed) => break,
+            Err(FrameError::Timeout) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => {
+                // Framing is broken — answer typed, then close (stream
+                // state is unknowable after a torn frame).
+                let _ = send(&mut stream, &error_frame(ErrorCode::BadFrame, e.to_string()));
+                break;
+            }
+        };
+        let req = match Json::parse(&payload)
+            .map_err(|e| e.to_string())
+            .and_then(|j| Request::from_json(&j))
+        {
+            Ok(r) => r,
+            Err(msg) => {
+                if send(&mut stream, &error_frame(ErrorCode::BadRequest, msg)).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        let resp = match req {
+            Request::Hello { client } => {
+                client_key = format!("client:{client}");
+                let snap = crate::store::pin(&shared.view);
+                Response::Welcome(Welcome {
+                    version: snap.version(),
+                    rows: snap.n_rows() as u64,
+                    d: snap.n_cols(),
+                    shards: shared.cfg.shards,
+                    k: shared.cfg.k,
+                    delta: shared.cfg.delta,
+                    batch_size: shared.cfg.batch_size,
+                    warm_coords: shared.cfg.warm_coords,
+                })
+            }
+            Request::Ping => Response::Pong,
+            Request::Metrics => Response::Metrics(crate::obs::registry().snapshot().to_json()),
+            Request::Query { id, q } => handle_query(&shared, &client_key, id, q),
+            Request::Ingest { rows } => handle_ingest(&shared, rows),
+            Request::Shutdown => {
+                let _ = send(&mut stream, &Response::Bye);
+                shared.begin_close();
+                break;
+            }
+        };
+        if send(&mut stream, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+fn handle_query(shared: &Shared, client_key: &str, id: u64, q: Vec<f32>) -> Response {
+    let obs = crate::obs::registry();
+    // Ladder rung 2: per-client token bucket.
+    {
+        let mut quotas = shared.quotas.lock().unwrap_or_else(|e| e.into_inner());
+        let bucket = quotas
+            .entry(client_key.to_string())
+            .or_insert_with(|| TokenBucket::new(shared.cfg.quota_burst, shared.cfg.quota_per_sec));
+        if !bucket.take(Instant::now()) {
+            obs.counter("net.quota_denied").incr();
+            return error_frame(ErrorCode::Quota, format!("quota exhausted for {client_key}"));
+        }
+    }
+    // Ladder rung 3: non-blocking in-flight admission.
+    let _slot = match Gate::try_acquire_slot(&shared.inflight) {
+        Some(slot) => slot,
+        None => {
+            obs.counter("net.shed").incr();
+            return error_frame(ErrorCode::Overloaded, "in-flight query limit reached");
+        }
+    };
+    let inflight = shared.inflight_count.fetch_add(1, Ordering::SeqCst) + 1;
+    obs.gauge("net.inflight").set(inflight);
+    let resp = compute_answer(shared, id, &q);
+    let now = shared.inflight_count.fetch_sub(1, Ordering::SeqCst) - 1;
+    obs.gauge("net.inflight").set(now);
+    resp
+}
+
+fn compute_answer(shared: &Shared, id: u64, q: &[f32]) -> Response {
+    let obs = crate::obs::registry();
+    let snap = crate::store::pin(&shared.view);
+    let d = snap.n_cols();
+    if q.len() != d {
+        return error_frame(
+            ErrorCode::BadRequest,
+            format!("query width {} != corpus width {d}", q.len()),
+        );
+    }
+    // Per-query replay seed: unique per served query, reproducible from
+    // the answer alone.
+    let serial = shared.serial.fetch_add(1, Ordering::SeqCst);
+    let seed = shared.cfg.seed ^ serial.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let warm = if shared.cfg.warm_coords > 0 && d > 0 {
+        Rng::new(seed ^ 0x57A1_C0DE).sample_without_replacement(d, shared.cfg.warm_coords.min(d))
+    } else {
+        Vec::new()
+    };
+    let scfg = SolveConfig {
+        k: shared.cfg.k,
+        delta: shared.cfg.delta,
+        batch_size: shared.cfg.batch_size,
+    };
+    let t0 = Instant::now();
+    let solved = catch_unwind(AssertUnwindSafe(|| {
+        let set = ShardSet::new(snap.clone(), shared.cfg.shards);
+        set.solve(q, seed, &warm, &scfg, &OpCounter::new())
+    }));
+    let latency_us = t0.elapsed().as_micros() as u64;
+    match solved {
+        Ok(ans) => {
+            obs.counter("net.queries").incr();
+            obs.histogram("net.latency_us").record(latency_us);
+            if ans.degraded {
+                obs.counter("net.degraded").incr();
+            }
+            Response::Answer(WireAnswer {
+                id,
+                top_atoms: ans.top_atoms,
+                version: ans.version,
+                seed,
+                warm_coords: warm,
+                shards: ans.shards,
+                shards_ok: ans.shards_ok,
+                degraded: ans.degraded,
+                samples: ans.samples,
+                latency_us,
+            })
+        }
+        Err(p) => {
+            obs.counter("net.internal_errors").incr();
+            error_frame(ErrorCode::Internal, crate::coordinator::server::panic_message(&*p))
+        }
+    }
+}
+
+fn handle_ingest(shared: &Shared, rows: Vec<Vec<f32>>) -> Response {
+    let obs = crate::obs::registry();
+    let Some(live) = shared.live.as_ref() else {
+        return error_frame(ErrorCode::BadRequest, "corpus is static: ingest unavailable");
+    };
+    if rows.is_empty() {
+        return error_frame(ErrorCode::BadRequest, "ingest: no rows");
+    }
+    let batch = match crate::data::Matrix::from_rows(rows) {
+        Ok(m) => m,
+        Err(e) => return error_frame(ErrorCode::BadRequest, format!("ingest: {e}")),
+    };
+    if batch.d != live.width() {
+        return error_frame(
+            ErrorCode::BadRequest,
+            format!("ingest width {} != corpus width {}", batch.d, live.width()),
+        );
+    }
+    match live.commit_batch(&batch) {
+        Ok(snap) => {
+            obs.counter("net.ingests").incr();
+            Response::Ingested { version: snap.version(), rows: snap.n_rows() as u64 }
+        }
+        Err(e) => error_frame(ErrorCode::Internal, format!("ingest: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_burst_then_deny_with_zero_refill() {
+        let t = Instant::now();
+        let mut b = TokenBucket::new(2.0, 0.0);
+        assert!(b.take(t));
+        assert!(b.take(t));
+        assert!(!b.take(t));
+        assert!(!b.take(t + Duration::from_secs(3600)), "rate 0 never refills");
+        let mut unlimited = TokenBucket::new(f64::INFINITY, 0.0);
+        for _ in 0..10_000 {
+            assert!(unlimited.take(t));
+        }
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let t = Instant::now();
+        let mut b = TokenBucket::new(1.0, 2.0);
+        assert!(b.take(t));
+        assert!(!b.take(t));
+        assert!(b.take(t + Duration::from_secs(1)), "2 tok/s refills past 1");
+        // Refill is capped at the burst size.
+        let mut c = TokenBucket::new(1.0, 2.0);
+        assert!(c.take(t));
+        let late = t + Duration::from_secs(100);
+        assert!(c.take(late));
+        assert!(!c.take(late), "cap 1: only one token banked");
+    }
+}

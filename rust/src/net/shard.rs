@@ -1,0 +1,352 @@
+//! Scatter-gather sharding of one pinned snapshot.
+//!
+//! A [`ShardSet`] slices a [`crate::store::DatasetView`] into N
+//! contiguous row partitions and solves one MIPS query per shard (each
+//! leg an independent BanditMIPS run over an owned [`ShardView`]), then
+//! merges deterministically:
+//!
+//! 1. every leg returns its local top-k *candidates*;
+//! 2. each candidate is re-scored **exactly** (`view.dot`, the crate's
+//!    standard f32 lane reduction — identical arithmetic no matter which
+//!    shard the row landed in);
+//! 3. candidates merge sorted by `(exact score desc, arm id asc)` — the
+//!    stable tie-break — and truncate to k.
+//!
+//! Because step 2 is partition-independent, the merged answer is
+//! bit-identical for any shard count whenever every true global top-k
+//! row survives its shard's local top-k (guaranteed in the exact regime
+//! `batch_size ≥ d`, the fixture regime `rust/tests/net.rs` pins;
+//! adaptive-regime answers are deterministic and replayable per shard
+//! count, the same δ-probabilistic contract as the in-process server).
+//!
+//! Fault model: each leg runs behind the `net.shard.rpc` failpoint and
+//! its own `catch_unwind`; a lost leg drops its candidates and flags the
+//! merged answer `degraded` instead of failing the query — the serving
+//! tier's extension of the chaos degradation ladder.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::exec::WorkerPool;
+use crate::metrics::OpCounter;
+use crate::mips::banditmips::{bandit_mips_warm, BanditMipsConfig, SampleStrategy};
+use crate::store::{ColBlock, DatasetView};
+use crate::data::distance::Metric;
+
+/// An owned contiguous row window `[start, start+len)` of a base view —
+/// the per-shard substrate. Unlike [`crate::store::RowSubsetView`] it
+/// holds an `Arc`, so shard legs and server threads can share it without
+/// borrowing; every access method delegates with the row offset applied,
+/// so values (and the base store's chunk batching) are untouched.
+pub struct ShardView {
+    base: Arc<dyn DatasetView>,
+    start: usize,
+    len: usize,
+}
+
+impl ShardView {
+    pub fn new(base: Arc<dyn DatasetView>, start: usize, len: usize) -> ShardView {
+        debug_assert!(start + len <= base.n_rows());
+        ShardView { base, start, len }
+    }
+
+    /// Shard indices → base indices, in an arena buffer.
+    fn translate(&self, rows: &[usize]) -> crate::kernels::scratch::IdxBuf {
+        let mut t = crate::kernels::scratch::idx_buf(rows.len());
+        for (slot, &r) in t.iter_mut().zip(rows) {
+            *slot = self.start + r;
+        }
+        t
+    }
+}
+
+impl DatasetView for ShardView {
+    fn n_rows(&self) -> usize {
+        self.len
+    }
+
+    fn n_cols(&self) -> usize {
+        self.base.n_cols()
+    }
+
+    #[inline]
+    fn get(&self, row: usize, col: usize) -> f32 {
+        self.base.get(self.start + row, col)
+    }
+
+    fn read_row(&self, row: usize, out: &mut [f32]) {
+        self.base.read_row(self.start + row, out);
+    }
+
+    fn read_row_at(&self, row: usize, cols: &[usize], out: &mut [f32]) {
+        self.base.read_row_at(self.start + row, cols, out);
+    }
+
+    fn read_col(&self, col: usize, rows: &[usize], out: &mut [f32]) {
+        let translated = self.translate(rows);
+        self.base.read_col(col, &translated, out);
+    }
+
+    fn dist(&self, metric: Metric, i: usize, j: usize) -> f64 {
+        self.base.dist(metric, self.start + i, self.start + j)
+    }
+
+    fn dot(&self, row: usize, q: &[f32]) -> f64 {
+        self.base.dot(self.start + row, q)
+    }
+
+    fn dot_batch(&self, rows: &[usize], q: &[f32], out: &mut [f64]) {
+        let translated = self.translate(rows);
+        self.base.dot_batch(&translated, q, out);
+    }
+
+    fn dist_point_batch(&self, metric: Metric, x: &[f32], js: &[usize], out: &mut [f64]) {
+        let translated = self.translate(js);
+        self.base.dist_point_batch(metric, x, &translated, out);
+    }
+
+    fn gather_block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let translated = self.translate(rows);
+        self.base.gather_block(&translated, cols, out);
+    }
+
+    fn gather_rows(&self, rows: &[usize], out: &mut [f32]) {
+        let translated = self.translate(rows);
+        self.base.gather_rows(&translated, out);
+    }
+
+    fn for_each_col_block(&self, col: usize, rows: &[usize], f: &mut dyn FnMut(usize, &[f32])) {
+        let translated = self.translate(rows);
+        self.base.for_each_col_block(col, &translated, f);
+    }
+
+    fn for_each_col_block_quant(
+        &self,
+        col: usize,
+        rows: &[usize],
+        f: &mut dyn FnMut(usize, ColBlock),
+    ) {
+        let translated = self.translate(rows);
+        self.base.for_each_col_block_quant(col, &translated, f);
+    }
+
+    fn mips_fold_block(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        qw: &[f64],
+        out: &mut Vec<(f64, f64)>,
+    ) {
+        let translated = self.translate(rows);
+        self.base.mips_fold_block(&translated, cols, qw, out);
+    }
+
+    fn version(&self) -> u64 {
+        self.base.version()
+    }
+}
+
+/// Per-query solver parameters of one scatter-gather solve — the subset
+/// of [`BanditMipsConfig`] the wire protocol advertises in its Welcome
+/// frame, so clients can replay answers with identical settings.
+#[derive(Clone, Debug)]
+pub struct SolveConfig {
+    pub k: usize,
+    pub delta: f64,
+    pub batch_size: usize,
+}
+
+impl Default for SolveConfig {
+    fn default() -> Self {
+        SolveConfig { k: 1, delta: 1e-3, batch_size: 64 }
+    }
+}
+
+/// The merged result of one scatter-gather solve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardAnswer {
+    /// Global row ids, best first (exact-score order, ties → smaller id).
+    pub top_atoms: Vec<usize>,
+    /// Coordinate multiplications across all surviving legs (bandit
+    /// pulls + the exact re-score of each candidate) — replayed
+    /// bit-exactly alongside the atoms.
+    pub samples: u64,
+    pub shards: usize,
+    pub shards_ok: usize,
+    /// True when at least one leg was lost (its candidates are absent).
+    pub degraded: bool,
+    /// The snapshot version this answer was computed against.
+    pub version: u64,
+}
+
+/// N contiguous engine shards over one pinned snapshot.
+pub struct ShardSet {
+    snap: Arc<dyn DatasetView>,
+    bounds: Vec<(usize, usize)>,
+}
+
+impl ShardSet {
+    /// Partition `snap` (must be immutable — pin a live store first)
+    /// into `shards` near-equal contiguous row ranges. The count is
+    /// clamped to `[1, n_rows]` so no shard is empty; since the clamp
+    /// depends only on `(shards, n_rows)`, replaying against the same
+    /// snapshot version reconstructs identical bounds.
+    pub fn new(snap: Arc<dyn DatasetView>, shards: usize) -> ShardSet {
+        let n = snap.n_rows();
+        let shards = shards.clamp(1, n.max(1));
+        let (base, rem) = (n / shards, n % shards);
+        let mut bounds = Vec::with_capacity(shards);
+        let mut start = 0;
+        for i in 0..shards {
+            let len = base + usize::from(i < rem);
+            bounds.push((start, len));
+            start += len;
+        }
+        ShardSet { snap, bounds }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The pinned snapshot this set partitions.
+    pub fn snapshot(&self) -> &Arc<dyn DatasetView> {
+        &self.snap
+    }
+
+    /// Scatter `q` across every shard, gather, and merge (module docs).
+    /// `counter` receives the total coordinate multiplications, like the
+    /// in-process solvers.
+    pub fn solve(
+        &self,
+        q: &[f32],
+        seed: u64,
+        warm_coords: &[usize],
+        cfg: &SolveConfig,
+        counter: &OpCounter,
+    ) -> ShardAnswer {
+        let _span = crate::obs::span("net.scatter");
+        let shards = self.bounds.len();
+        let version = self.snap.version();
+        if self.snap.n_rows() == 0 {
+            return ShardAnswer {
+                top_atoms: Vec::new(),
+                samples: 0,
+                shards,
+                shards_ok: shards,
+                degraded: false,
+                version,
+            };
+        }
+        let d = self.snap.n_cols();
+        // One slot per leg: local top-k candidates with exact scores, or
+        // the reason the leg was lost.
+        type Leg = Result<(Vec<(f64, usize)>, u64), String>;
+        let mut legs: Vec<Option<Leg>> = (0..shards).map(|_| None).collect();
+        let obs = crate::obs::registry();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = legs
+            .iter_mut()
+            .zip(self.bounds.iter().enumerate())
+            .map(|(slot, (i, &(start, len)))| {
+                let snap = self.snap.clone();
+                let hist = obs.histogram_labeled("serve.latency_us", "shard", i);
+                Box::new(move || {
+                    // Inner catch_unwind: an injected (or real) panic in
+                    // one leg must degrade this query, not poison the
+                    // shared worker pool's batch.
+                    let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        crate::chaos::failpoint("net.shard.rpc")
+                            .map_err(|e| e.to_string())?;
+                        let t0 = Instant::now();
+                        let view = ShardView::new(snap.clone(), start, len);
+                        let mcfg = BanditMipsConfig {
+                            delta: cfg.delta,
+                            batch_size: cfg.batch_size,
+                            strategy: SampleStrategy::Uniform,
+                            sigma: None,
+                            k: cfg.k.min(len),
+                            seed,
+                            threads: 1,
+                        };
+                        let local = OpCounter::new();
+                        let ans = bandit_mips_warm(&view, q, &mcfg, &local, warm_coords);
+                        // Exact re-score on the *base* snapshot: the same
+                        // f32 lane reduction whatever the partition, so
+                        // merged ranks are shard-count independent.
+                        let mut scored = Vec::with_capacity(ans.atoms.len());
+                        for &a in &ans.atoms {
+                            let g = start + a;
+                            local.add(d as u64);
+                            scored.push((snap.dot(g, q), g));
+                        }
+                        hist.record(t0.elapsed().as_micros() as u64);
+                        Ok((scored, local.get()))
+                    }));
+                    *slot = Some(match got {
+                        Ok(r) => r,
+                        Err(p) => Err(crate::coordinator::server::panic_message(&*p).to_string()),
+                    });
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        WorkerPool::global().run(tasks);
+
+        let mut candidates: Vec<(f64, usize)> = Vec::new();
+        let mut samples = 0u64;
+        let mut shards_ok = 0usize;
+        for leg in legs.into_iter().flatten() {
+            if let Ok((scored, ops)) = leg {
+                shards_ok += 1;
+                samples += ops;
+                candidates.extend(scored);
+            }
+        }
+        // (exact score desc, arm id asc): total order, so the merge is
+        // deterministic for any candidate multiset.
+        candidates.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        candidates.truncate(cfg.k);
+        counter.add(samples);
+        ShardAnswer {
+            top_atoms: candidates.into_iter().map(|(_, id)| id).collect(),
+            samples,
+            shards,
+            shards_ok,
+            degraded: shards_ok < shards,
+            version,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::gaussian;
+
+    #[test]
+    fn shard_view_reads_bit_identically_to_the_base_window() {
+        let m = gaussian(30, 7, 11);
+        let want = m.take_rows(&(10..25).collect::<Vec<_>>());
+        let view = ShardView::new(Arc::new(m), 10, 15);
+        crate::util::testkit::assert_views_bit_identical(&view, &want);
+    }
+
+    #[test]
+    fn bounds_partition_exactly_and_clamp() {
+        let m = Arc::new(gaussian(10, 3, 1));
+        for shards in [1usize, 2, 3, 4, 10, 99] {
+            let set = ShardSet::new(m.clone(), shards);
+            assert_eq!(set.shards(), shards.min(10));
+            let mut next = 0;
+            for &(start, len) in &set.bounds {
+                assert_eq!(start, next);
+                assert!(len > 0);
+                next += len;
+            }
+            assert_eq!(next, 10);
+        }
+        let empty = ShardSet::new(Arc::new(crate::data::Matrix::zeros(0, 3)), 4);
+        assert_eq!(empty.shards(), 1);
+        let ans = empty.solve(&[0.0; 3], 1, &[], &SolveConfig::default(), &OpCounter::new());
+        assert!(ans.top_atoms.is_empty() && !ans.degraded);
+    }
+}

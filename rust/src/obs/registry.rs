@@ -90,6 +90,19 @@ impl MetricsRegistry {
         inner.hists.entry(name.to_string()).or_default().clone()
     }
 
+    /// Get-or-create a labeled histogram: `base{label=value}`. Unit
+    /// detection in [`MetricsSnapshot::render`] keys off the base name,
+    /// so `serve.latency_us{shard=3}` still renders as microseconds —
+    /// the per-shard labeling that makes scatter-gather skew visible.
+    pub fn histogram_labeled(
+        &self,
+        base: &str,
+        label: &str,
+        value: impl std::fmt::Display,
+    ) -> Arc<AtomicHistogram> {
+        self.histogram(&format!("{base}{{{label}={value}}}"))
+    }
+
     /// A point-in-time copy of every instrument, names sorted (the
     /// `BTreeMap` iteration order), so equal states serialize to equal
     /// bytes.
@@ -237,9 +250,12 @@ impl MetricsSnapshot {
             out.push_str("histograms:\n");
             let w = self.hists.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
             for (n, h) in &self.hists {
-                let unit = if n.ends_with("_us") {
+                // Unit suffix lives on the base name: a `{label=...}`
+                // qualifier must not hide it.
+                let base = n.split('{').next().unwrap_or(n);
+                let unit = if base.ends_with("_us") {
                     "µs"
-                } else if n.ends_with("_bytes") {
+                } else if base.ends_with("_bytes") {
                     "B"
                 } else {
                     ""
@@ -297,6 +313,19 @@ mod tests {
         assert!(text.contains("alpha"));
         assert!(text.contains("lat_us"));
         assert!(text.contains("µs"));
+    }
+
+    #[test]
+    fn labeled_histograms_keep_base_name_units() {
+        let r = MetricsRegistry::default();
+        r.histogram_labeled("serve.latency_us", "shard", 2).record(77);
+        // Same (base, label, value) resolves to the same instrument.
+        assert_eq!(r.histogram_labeled("serve.latency_us", "shard", 2).count(), 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.hists[0].0, "serve.latency_us{shard=2}");
+        let text = snap.render();
+        assert!(text.contains("serve.latency_us{shard=2}"));
+        assert!(text.contains("µs"), "unit must key off the base name:\n{text}");
     }
 
     #[test]

@@ -910,6 +910,9 @@ impl LiveStore {
                 out.version
             )));
         }
+        // Operational telemetry: wire-answer replay traffic lands here,
+        // so make it visible next to `live.recoveries`.
+        crate::obs::registry().counter("live.snapshot_recoveries").incr();
         Ok(Arc::new(out.into_snapshot(d)))
     }
 

@@ -76,6 +76,7 @@ const SPILL_SITES: &[&str] = &["spill.write", "spill.finish", "spill.read"];
 const INGEST_SITES: &[&str] = &["live.ingest"];
 const SERVE_SITES: &[&str] = &["serve.query"];
 const EXEC_SITES: &[&str] = &["exec.task", "exec.gate.stall"];
+const NET_SITES: &[&str] = &["net.accept", "net.shard.rpc"];
 
 #[test]
 fn every_registered_site_is_swept() {
@@ -86,6 +87,7 @@ fn every_registered_site_is_swept() {
         .chain(INGEST_SITES)
         .chain(SERVE_SITES)
         .chain(EXEC_SITES)
+        .chain(NET_SITES)
         .copied()
         .collect();
     let registered: BTreeSet<&str> = chaos::SITES.iter().copied().collect();
@@ -461,6 +463,73 @@ fn exec_one_shot_faults_are_contained() {
     gate.release();
     assert_eq!(fires("exec.gate.stall"), 1);
     drop(guard);
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, scatter-gather: an injected shard-RPC fault (typed
+// error or a panic inside the leg) loses exactly that shard — the
+// answer comes back flagged `degraded` with `shards_ok == shards - 1`,
+// no panic escapes, and with the fault cleared the same inputs produce
+// the clean (non-degraded) answer again.
+// ---------------------------------------------------------------------
+#[test]
+fn net_shard_rpc_one_shot_fault_degrades_to_partial_results() {
+    let _g = chaos_lock();
+    use adaptive_sampling::net::{ShardSet, SolveConfig};
+
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(32, 8, 9));
+    let set = ShardSet::new(view, 4);
+    let q: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+    let scfg = SolveConfig { k: 2, delta: 1e-3, batch_size: 64 };
+
+    for (seed, kind) in [(8u64, FaultKind::Error), (9, FaultKind::Panic)] {
+        let guard =
+            ScheduleGuard::install(Schedule::new(seed).one_shot("net.shard.rpc", kind, 1))
+                .unwrap();
+        let hit = set.solve(&q, 0xF00D, &[], &scfg, &OpCounter::new());
+        assert_eq!(fires("net.shard.rpc"), 1, "{kind:?}: the scatter never hit the failpoint");
+        drop(guard);
+        assert!(hit.degraded, "{kind:?}: a lost shard must flag the answer");
+        assert_eq!(hit.shards, 4);
+        assert_eq!(hit.shards_ok, 3, "{kind:?}: exactly one leg may be lost");
+    }
+
+    let clean = set.solve(&q, 0xF00D, &[], &scfg, &OpCounter::new());
+    assert!(!clean.degraded, "with chaos cleared the answer must be whole again");
+    assert_eq!(clean.shards_ok, 4);
+    assert_eq!(clean.top_atoms.len(), 2);
+}
+
+// ---------------------------------------------------------------------
+// One-shot sweep, accept path: an injected accept fault drops exactly
+// that connection (the client sees a reset, never a hang); the accept
+// loop survives and the very next connection is served normally.
+// ---------------------------------------------------------------------
+#[test]
+fn net_accept_one_shot_fault_drops_one_connection_and_the_listener_survives() {
+    let _g = chaos_lock();
+    use adaptive_sampling::net::{NetClient, NetConfig, NetServer, ServeTarget};
+
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(32, 8, 7));
+    let cfg = NetConfig { shards: 2, read_timeout_ms: 5_000, ..Default::default() };
+    let server = NetServer::start(ServeTarget::Static(view), "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+
+    let guard =
+        ScheduleGuard::install(Schedule::new(10).one_shot("net.accept", FaultKind::Error, 1))
+            .unwrap();
+    // The kernel completes the handshake, so connect succeeds; the
+    // injected fault then drops the stream before any frame is read.
+    let denied = NetClient::connect(&addr, 5_000).and_then(|mut c| c.hello("denied"));
+    assert!(denied.is_err(), "the faulted accept must reset the connection, got {denied:?}");
+    assert_eq!(fires("net.accept"), 1, "the accept loop never hit the failpoint");
+    drop(guard);
+
+    let welcome = NetClient::connect(&addr, 5_000)
+        .and_then(|mut c| c.hello("ok"))
+        .expect("the listener must survive the injected accept fault");
+    assert_eq!((welcome.rows, welcome.d, welcome.shards), (32, 8, 2));
+    server.shutdown();
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,446 @@
+//! Acceptance tests for the TCP serving tier (`net/`): the three
+//! tentpole contracts plus the frame-codec robustness discipline.
+//!
+//! - **Shard invariance**: scatter-gather top-k over {1, 2, 4, 8}
+//!   shards is bit-identical to single-shard (and to brute force) in
+//!   the exact regime — partitioning is an implementation detail, never
+//!   an answer change.
+//! - **Replay**: every wire answer's `(version, seed, warm_coords)`
+//!   triple reproduces the exact `top_atoms` and `samples` offline from
+//!   the durable directory alone, across mid-stream wire ingest.
+//! - **Graceful degradation**: overload sheds with typed `overloaded`
+//!   frames (admitted queries still replay bit-exact), a lost shard
+//!   yields a flagged partial result, quotas deny per client, shutdown
+//!   drains, and malformed bytes get typed `bad_frame` answers — never
+//!   a panic, never a hang.
+//!
+//! Chaos state is process-global, so fault-injecting tests serialize on
+//! [`net_chaos_lock`].
+
+mod common;
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use adaptive_sampling::chaos::{FaultKind, Schedule, ScheduleGuard};
+use adaptive_sampling::metrics::OpCounter;
+use adaptive_sampling::net::{
+    frame, replay_answer, ErrorCode, NetClient, NetConfig, NetServer, Request, Response,
+    ServeTarget, ShardSet, SolveConfig, Welcome, WireAnswer,
+};
+use adaptive_sampling::store::{DatasetView, LiveStore, StoreOptions};
+use adaptive_sampling::util::rng::Rng;
+use common::*;
+
+fn net_chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static DIR_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let serial = DIR_SERIAL.fetch_add(1, Ordering::Relaxed);
+    let name = format!("as_net_{tag}_{}_{serial}", std::process::id());
+    std::env::temp_dir().join(name)
+}
+
+/// Exact-regime fixture: `batch_size >= d` makes every per-shard bandit
+/// estimate exact, so the provable answer is the brute-force top-k.
+const N: usize = 96;
+const D: usize = 48;
+const K: usize = 3;
+
+fn solve_cfg() -> SolveConfig {
+    SolveConfig { k: K, delta: 1e-3, batch_size: 64 }
+}
+
+/// Brute-force top-k with the merge's exact ordering: score descending
+/// via `total_cmp`, arm id ascending on ties.
+fn exact_topk(view: &dyn DatasetView, q: &[f32], k: usize) -> Vec<usize> {
+    let mut scored: Vec<(f64, usize)> = (0..view.n_rows()).map(|i| (view.dot(i, q), i)).collect();
+    scored.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.truncate(k);
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+fn test_queries(n_queries: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n_queries).map(|_| (0..D).map(|_| rng.f32() * 4.0 - 2.0).collect()).collect()
+}
+
+/// A server config sized for tests: prompt read-timeout polling so
+/// shutdown drains fast, everything else at the tentpole defaults.
+fn test_cfg() -> NetConfig {
+    NetConfig {
+        shards: 4,
+        k: K,
+        batch_size: 64,
+        warm_coords: 16,
+        read_timeout_ms: 500,
+        drain_timeout_ms: 10_000,
+        ..Default::default()
+    }
+}
+
+fn replay_solve_cfg(w: &Welcome) -> SolveConfig {
+    SolveConfig { k: w.k, delta: w.delta, batch_size: w.batch_size }
+}
+
+/// Replays every `(query, answer)` pair offline from the durable
+/// directory alone and demands bit-equality on atoms and sample count.
+fn assert_replays(
+    dir: &Path,
+    opts: &StoreOptions,
+    shards: usize,
+    scfg: &SolveConfig,
+    answers: &[(Vec<f32>, WireAnswer)],
+) {
+    for (i, (q, a)) in answers.iter().enumerate() {
+        let again =
+            replay_answer(dir, opts, shards, scfg, a.version, a.seed, &a.warm_coords, q).unwrap();
+        assert_eq!(
+            (&again.top_atoms, again.samples),
+            (&a.top_atoms, a.samples),
+            "answer {i} (v{}) did not replay bit-exact",
+            a.version
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance (a): scatter-gather top-k over {1, 2, 4, 8} shards is
+// bit-identical to single-shard serving — and, in the exact regime, to
+// brute force — for the same seed and warm start.
+// ---------------------------------------------------------------------
+#[test]
+fn scatter_gather_topk_is_shard_count_invariant() {
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(N, D, 31));
+    let scfg = solve_cfg();
+    let warm: Vec<usize> = Rng::new(0x77).sample_without_replacement(D, 16);
+    for (qi, q) in test_queries(6, 0x51).iter().enumerate() {
+        let want = exact_topk(&*view, q, K);
+        for shards in [1usize, 2, 4, 8] {
+            let set = ShardSet::new(view.clone(), shards);
+            let got = set.solve(q, 0xBEEF ^ qi as u64, &warm, &scfg, &OpCounter::new());
+            assert!(!got.degraded);
+            assert_eq!(got.shards_ok, shards);
+            assert_eq!(
+                got.top_atoms, want,
+                "query {qi}: {shards}-shard answer drifted from brute force"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance proof over the wire: answers served via TCP across
+// mid-stream wire ingest replay bit-exact offline — the recovered
+// manifest, the answer's triple, and the Welcome's solver settings are
+// a complete replay recipe.
+// ---------------------------------------------------------------------
+#[test]
+fn tcp_answers_replay_bit_exact_across_wire_ingest() {
+    let dir = scratch_dir("replay");
+    let opts = StoreOptions::default();
+    let live = Arc::new(LiveStore::open(D, opts.clone(), &dir).unwrap());
+    live.commit_batch(&gaussian(N, D, 31)).unwrap();
+
+    let server =
+        NetServer::start(ServeTarget::Live(live.clone()), "127.0.0.1:0", test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, 5_000).unwrap();
+    let welcome = client.hello("replay-test").unwrap();
+    assert_eq!((welcome.rows as usize, welcome.d), (N, D));
+
+    let queries = test_queries(8, 0x52);
+    let mut answers: Vec<(Vec<f32>, WireAnswer)> = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        if i == 4 {
+            let extra = gaussian(8, D, 77);
+            let rows: Vec<Vec<f32>> = (0..8).map(|r| extra.row(r).to_vec()).collect();
+            let (version, total) = client.ingest(rows).unwrap();
+            assert_eq!(version, 2, "wire ingest must commit version 2");
+            assert_eq!(total as usize, N + 8);
+        }
+        let a = client.query_answer(i as u64, q).unwrap();
+        assert!(!a.degraded);
+        assert_eq!(a.version, if i < 4 { 1 } else { 2 }, "answers must pin the live version");
+        answers.push((q.clone(), a));
+    }
+    drop(client);
+    server.shutdown();
+
+    assert_replays(&dir, &opts, welcome.shards, &replay_solve_cfg(&welcome), &answers);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Acceptance (b): an overload burst is shed with typed `overloaded`
+// frames — no hang, no dropped connection — and every admitted query
+// still replays bit-exact afterwards.
+// ---------------------------------------------------------------------
+#[test]
+fn overload_burst_sheds_typed_and_admitted_queries_replay() {
+    let _g = net_chaos_lock();
+    let dir = scratch_dir("overload");
+    let opts = StoreOptions::default();
+    let live = Arc::new(LiveStore::open(D, opts.clone(), &dir).unwrap());
+    live.commit_batch(&gaussian(N, D, 31)).unwrap();
+
+    let cfg = NetConfig { shards: 2, max_inflight: 1, ..test_cfg() };
+    let server = NetServer::start(ServeTarget::Live(live.clone()), "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+
+    // Every scatter leg stalls 1.5s, so the single in-flight slot is
+    // still held while the staggered burst arrives.
+    let sched = Schedule::new(21).every("net.shard.rpc", FaultKind::Stall(1500), 1);
+    let guard = ScheduleGuard::install(sched).unwrap();
+    let queries = test_queries(4, 0x53);
+    let handles: Vec<_> = queries
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, q)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                if i > 0 {
+                    std::thread::sleep(Duration::from_millis(250));
+                }
+                let mut c = NetClient::connect(&addr, 30_000)?;
+                c.query(i as u64, &q)
+            })
+        })
+        .collect();
+    let mut answers: Vec<(Vec<f32>, WireAnswer)> = Vec::new();
+    let mut shed = 0usize;
+    for (h, q) in handles.into_iter().zip(&queries) {
+        match h.join().expect("client thread must not panic").unwrap() {
+            Response::Answer(a) => {
+                assert!(!a.degraded, "a stall delays, it must not degrade");
+                answers.push((q.clone(), a));
+            }
+            Response::Error { code: ErrorCode::Overloaded, .. } => shed += 1,
+            other => panic!("expected an answer or a typed shed, got {other:?}"),
+        }
+    }
+    drop(guard);
+    server.shutdown();
+
+    assert!(!answers.is_empty(), "the first query must be admitted");
+    assert!(shed >= 1, "the burst must shed at least one query");
+    assert_eq!(answers.len() + shed, queries.len(), "every query gets a typed outcome");
+    assert_replays(&dir, &opts, 2, &solve_cfg(), &answers);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Acceptance (c): killing a shard mid-query yields a flagged partial
+// result — `degraded`, `shards_ok == shards - 1` — with zero panics,
+// and the server keeps serving clean answers afterwards. Losing every
+// shard degrades to an empty answer, still typed, still no panic.
+// ---------------------------------------------------------------------
+#[test]
+fn lost_shard_flags_partial_results_over_tcp() {
+    let _g = net_chaos_lock();
+    let live = Arc::new(LiveStore::new(D, StoreOptions::default()).unwrap());
+    live.commit_batch(&gaussian(N, D, 31)).unwrap();
+    let server = NetServer::start(ServeTarget::Live(live), "127.0.0.1:0", test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, 30_000).unwrap();
+    let q = &test_queries(1, 0x54)[0];
+
+    let sched = Schedule::new(22).one_shot("net.shard.rpc", FaultKind::Panic, 1);
+    let guard = ScheduleGuard::install(sched).unwrap();
+    let partial = client.query_answer(1, q).unwrap();
+    drop(guard);
+    assert!(partial.degraded, "a lost shard must flag the answer");
+    assert_eq!((partial.shards, partial.shards_ok), (4, 3));
+    assert_eq!(partial.top_atoms.len(), K, "3 shards still cover k={K}");
+
+    let sched = Schedule::new(23).every("net.shard.rpc", FaultKind::Error, 1);
+    let guard = ScheduleGuard::install(sched).unwrap();
+    let empty = client.query_answer(2, q).unwrap();
+    drop(guard);
+    assert!(empty.degraded);
+    assert_eq!(empty.shards_ok, 0, "every leg lost");
+    assert!(empty.top_atoms.is_empty(), "no surviving shard, no fabricated answer");
+
+    let clean = client.query_answer(3, q).unwrap();
+    assert!(!clean.degraded, "the server must heal once the fault clears");
+    assert_eq!(clean.shards_ok, 4);
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Ladder rung 2: a zero-refill token bucket admits exactly the burst,
+// then answers typed `quota` frames — per client, so one greedy client
+// cannot starve another.
+// ---------------------------------------------------------------------
+#[test]
+fn per_client_quota_bursts_then_denies_without_cross_talk() {
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(N, D, 31));
+    let cfg = NetConfig { quota_burst: 2.0, quota_per_sec: 0.0, ..test_cfg() };
+    let server = NetServer::start(ServeTarget::Static(view), "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+    let q = &test_queries(1, 0x55)[0];
+
+    let mut greedy = NetClient::connect(&addr, 5_000).unwrap();
+    greedy.hello("greedy").unwrap();
+    for id in 0..2 {
+        let a = greedy.query_answer(id, q).unwrap();
+        assert!(!a.top_atoms.is_empty(), "the burst must be admitted");
+    }
+    match greedy.query(2, q).unwrap() {
+        Response::Error { code: ErrorCode::Quota, .. } => {}
+        other => panic!("an exhausted bucket must answer `quota`, got {other:?}"),
+    }
+
+    let mut modest = NetClient::connect(&addr, 5_000).unwrap();
+    modest.hello("modest").unwrap();
+    let a = modest.query_answer(0, q).unwrap();
+    assert!(!a.top_atoms.is_empty(), "another client's bucket must be untouched");
+    drop((greedy, modest));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain: shutdown stops the accept loop and the listener, so
+// later connections are refused rather than silently queued.
+// ---------------------------------------------------------------------
+#[test]
+fn shutdown_drains_and_stops_accepting() {
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(N, D, 31));
+    let server = NetServer::start(ServeTarget::Static(view), "127.0.0.1:0", test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, 5_000).unwrap();
+    client.ping().unwrap();
+    drop(client);
+    server.shutdown();
+    let refused = NetClient::connect(&addr, 1_000).and_then(|mut c| c.ping());
+    assert!(refused.is_err(), "a drained server must not accept new connections");
+}
+
+// ---------------------------------------------------------------------
+// Typed request errors: a static corpus refuses wire ingest, and a
+// width-mismatched query is `bad_request` — the connection survives
+// both.
+// ---------------------------------------------------------------------
+#[test]
+fn static_ingest_and_bad_width_answer_bad_request() {
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(N, D, 31));
+    let server = NetServer::start(ServeTarget::Static(view), "127.0.0.1:0", test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, 5_000).unwrap();
+
+    match client.roundtrip(&Request::Ingest { rows: vec![vec![1.0; D]] }).unwrap() {
+        Response::Error { code: ErrorCode::BadRequest, msg } => {
+            assert!(msg.contains("static"), "the error must say why: {msg}");
+        }
+        other => panic!("static ingest must be bad_request, got {other:?}"),
+    }
+    match client.query(0, &[1.0; 3]).unwrap() {
+        Response::Error { code: ErrorCode::BadRequest, msg } => {
+            assert!(msg.contains("width"), "the error must name the mismatch: {msg}");
+        }
+        other => panic!("a width mismatch must be bad_request, got {other:?}"),
+    }
+    client.ping().expect("typed request errors must not poison the connection");
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Frame-codec discipline at the public API: every truncation offset of
+// a valid frame is a typed `Truncated`, a flipped byte is `Checksum`,
+// an oversized prefix is `Oversized` (before any allocation), garbage
+// magic is `BadMagic` — never a panic.
+// ---------------------------------------------------------------------
+#[test]
+fn frame_codec_rejects_torn_and_corrupt_input_typed() {
+    let full = frame::encode("{\"type\": \"ping\"}");
+    assert_eq!(&full[..4], &frame::MAGIC[..]);
+    for cut in 0..full.len() {
+        let mut r = std::io::Cursor::new(full[..cut].to_vec());
+        match frame::read_frame(&mut r) {
+            Err(frame::FrameError::Closed) if cut == 0 => {}
+            Err(frame::FrameError::Truncated { at }) => {
+                assert_eq!(at, cut, "the error must report where the stream tore")
+            }
+            other => panic!("cut at {cut}: want a typed tear, got {other:?}"),
+        }
+    }
+    for flip in 0..full.len() {
+        let mut bytes = full.clone();
+        bytes[flip] ^= 0x40;
+        let mut r = std::io::Cursor::new(bytes);
+        assert!(frame::read_frame(&mut r).is_err(), "flipped byte {flip} must not pass");
+    }
+    let mut oversized = Vec::from(frame::MAGIC);
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    oversized.extend_from_slice(&0u64.to_le_bytes());
+    let mut r = std::io::Cursor::new(oversized);
+    assert!(matches!(
+        frame::read_frame(&mut r),
+        Err(frame::FrameError::Oversized { len: u32::MAX })
+    ));
+}
+
+// ---------------------------------------------------------------------
+// Malformed bytes on a live socket: bad magic and oversized prefixes
+// get a typed `bad_frame` answer; every-offset torn frames just close;
+// the server survives all of it and keeps serving.
+// ---------------------------------------------------------------------
+#[test]
+fn malformed_wire_bytes_get_typed_errors_and_the_server_survives() {
+    let view: Arc<dyn DatasetView> = Arc::new(gaussian(N, D, 31));
+    let server = NetServer::start(ServeTarget::Static(view), "127.0.0.1:0", test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+
+    let read_error_frame = |bytes: &[u8]| -> Response {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        raw.write_all(bytes).unwrap();
+        raw.flush().unwrap();
+        let payload = frame::read_frame(&mut raw).expect("a typed error frame, not a hang");
+        let json = adaptive_sampling::util::json::Json::parse(&payload).unwrap();
+        Response::from_json(&json).unwrap()
+    };
+
+    let mut bad_magic = vec![b'X'; frame::HEADER_BYTES];
+    bad_magic[4..8].copy_from_slice(&4u32.to_le_bytes());
+    match read_error_frame(&bad_magic) {
+        Response::Error { code: ErrorCode::BadFrame, .. } => {}
+        other => panic!("bad magic must answer bad_frame, got {other:?}"),
+    }
+
+    let mut oversized = Vec::from(frame::MAGIC);
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    oversized.extend_from_slice(&0u64.to_le_bytes());
+    match read_error_frame(&oversized) {
+        Response::Error { code: ErrorCode::BadFrame, msg } => {
+            assert!(msg.contains("exceeds cap"), "the error must name the cause: {msg}");
+        }
+        other => panic!("an oversized prefix must answer bad_frame, got {other:?}"),
+    }
+
+    // The durability discipline, on a socket: tear a valid frame at
+    // every byte offset; each tear costs only that connection.
+    let full = frame::encode(&Request::Ping.to_json().to_pretty_string());
+    for cut in 0..full.len() {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&full[..cut]).unwrap();
+        raw.flush().unwrap();
+        drop(raw);
+    }
+
+    let mut client = NetClient::connect(&addr, 5_000).unwrap();
+    client.ping().expect("the server must survive every torn frame");
+    drop(client);
+    server.shutdown();
+}
